@@ -1,0 +1,78 @@
+//! Figure-4 demo: fake-quant training forward (compiled HLO, both jnp and
+//! Pallas paths) vs the real-quant packed-4-bit Rust engine on identical
+//! inputs — the train/inference consistency check.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example kernel_consistency
+//! ```
+
+use attn_qat::attention::engine::attend_sage3_blocked;
+use attn_qat::attention::{attend, Variant};
+use attn_qat::rng::Rng;
+use attn_qat::runtime::{Runtime, Value};
+use attn_qat::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&Runtime::default_dir())?;
+    let (b, h, n, d) = (1usize, 4usize, 256usize, 64usize);
+    let mut rng = Rng::new(0xf14);
+    let numel = b * h * n * d;
+    let q = Tensor::new(vec![b, h, n, d], rng.normal_vec(numel, 0.0, 1.0))?;
+    let k = Tensor::new(vec![b, h, n, d], rng.normal_vec(numel, 0.0, 1.0))?;
+    let v = Tensor::new(vec![b, h, n, d], rng.normal_vec(numel, 0.0, 1.0))?;
+
+    println!("attention {b}x{h}x{n}x{d}; comparing per variant:\n");
+    println!(
+        "{:<8} {:<46} {:>12} {:>12} {:>10}",
+        "variant", "pair", "max abs", "mean abs", "cosine"
+    );
+    for variant in ["f32", "fp4", "sage3"] {
+        let fast = rt.run(
+            &format!("attn_{variant}_s{n}_d{d}"),
+            &[Value::F32(q.clone()), Value::F32(k.clone()), Value::F32(v.clone())],
+        )?;
+        let pallas = rt.run(
+            &format!("attn_{variant}_pallas_s{n}_d{d}"),
+            &[Value::F32(q.clone()), Value::F32(k.clone()), Value::F32(v.clone())],
+        )?;
+        let var = Variant::parse(variant).unwrap();
+        let mut native = Tensor::zeros(vec![b, h, n, d]);
+        for head in 0..h {
+            let off = head * n * d;
+            // block_q must match the artifact's tile (64) for sage3.
+            let out = if var == Variant::Sage3 {
+                attend_sage3_blocked(
+                    &q.data[off..off + n * d],
+                    &k.data[off..off + n * d],
+                    &v.data[off..off + n * d],
+                    n, n, d, false, 64,
+                )
+            } else {
+                attend(
+                    &q.data[off..off + n * d],
+                    &k.data[off..off + n * d],
+                    &v.data[off..off + n * d],
+                    n, d, false, var,
+                )
+            };
+            native.data[off..off + n * d].copy_from_slice(&out.o);
+        }
+        for (pair, a, bb) in [
+            ("fake-quant HLO (jnp) vs real-quant rust", &fast[0], &native),
+            ("fake-quant HLO (pallas) vs real-quant rust", &pallas[0], &native),
+            ("jnp vs pallas fake-quant", &fast[0], &pallas[0]),
+        ] {
+            println!(
+                "{:<8} {:<46} {:>12.3e} {:>12.3e} {:>10.6}",
+                variant,
+                pair,
+                a.max_abs_diff(bb),
+                a.mean_abs_diff(bb),
+                a.cosine_sim(bb)
+            );
+        }
+        println!();
+    }
+    println!("(paper's Fig. 4 claim: the two implementations are visually indistinguishable;\n here: cosine ~ 1 and max error at the quantization-noise scale for jnp-vs-real,\n tile-order effects only for pallas-vs-jnp)");
+    Ok(())
+}

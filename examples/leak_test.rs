@@ -1,0 +1,24 @@
+//! §Perf regression probe: RSS growth per train step must be ~0.
+//! (Guards the `execute_b` fix for the xla crate's literal-execute leak —
+//! see EXPERIMENTS.md §Perf.)
+use attn_qat::coordinator::{LrSchedule, Trainer};
+use attn_qat::data::corpus::Corpus;
+use attn_qat::runtime::Runtime;
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    for l in s.lines() { if l.starts_with("VmRSS") {
+        return l.split_whitespace().nth(1).unwrap().parse::<f64>().unwrap()/1024.0; } }
+    0.0
+}
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(std::path::Path::new("artifacts"))?;
+    let mut t = Trainer::new(&rt, "lm_init_tiny", "lm_train_f32_tiny", 1, LrSchedule::Constant(1e-3))?;
+    let mut c = Corpus::new(1);
+    let b = c.next_batch(2, 64);
+    let vals = vec![b.token_value(), b.mask_value()];
+    t.step(&vals)?;
+    let r0 = rss_mb();
+    for i in 0..200 { t.step(&vals)?; if i % 50 == 0 { println!("step {i}: rss {:.1} MB (+{:.2}/step)", rss_mb(), (rss_mb()-r0)/(i+1) as f64); } }
+    println!("final: +{:.3} MB/step", (rss_mb()-r0)/200.0);
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Quickstart: load compiled artifacts, run them, and cross-check the
+//! NVFP4 numeric formats between all three layers.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the public API surface in ~5 minutes of reading:
+//! `Runtime` (PJRT + registry), `formats` (software NVFP4), and the native
+//! attention engines — and proves the JAX-lowered HLO and the Rust format
+//! library agree **bit-exactly**.
+
+use attn_qat::attention::{attend, Variant};
+use attn_qat::formats::analysis::error_stats;
+use attn_qat::formats::block::nvfp4_fake_quant_row;
+use attn_qat::formats::PackedNvfp4;
+use attn_qat::rng::Rng;
+use attn_qat::runtime::{Runtime, Value};
+use attn_qat::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&Runtime::default_dir())?;
+    println!("registry: {} artifacts\n", rt.registry().len());
+
+    // --- 1. NVFP4 quantization: HLO (fake quant) vs formats lib ---------
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = rng.normal_vec(1024 * 64, 0.0, 1.5);
+    let t = Tensor::new(vec![1024, 64], x.clone())?;
+    let hlo_out = rt.run("quant_fake_1024x64", &[Value::F32(t.clone())])?;
+    let pallas_out = rt.run("quant_fake_pallas_1024x64", &[Value::F32(t)])?;
+
+    let mut rust_out = x.clone();
+    for row in rust_out.chunks_mut(64) {
+        nvfp4_fake_quant_row(row);
+    }
+    let diff_jnp = max_diff(&hlo_out[0].data, &rust_out);
+    let diff_pal = max_diff(&pallas_out[0].data, &rust_out);
+    println!("fake-quant agreement (65536 elements):");
+    println!("  jnp HLO    vs rust formats: max diff {diff_jnp:e}");
+    println!("  pallas HLO vs rust formats: max diff {diff_pal:e}");
+    assert_eq!(diff_jnp, 0.0);
+    assert_eq!(diff_pal, 0.0);
+
+    // --- 2. What FP4 costs: quantization error + storage ----------------
+    let stats = error_stats(&x, &rust_out, 1e-3);
+    let packed = PackedNvfp4::quantize(&x, 1024, 64)?;
+    println!("\nNVFP4 on N(0, 1.5) data:");
+    println!(
+        "  snr {:.1} dB | max abs err {:.3} | mse {:.2e}",
+        stats.snr_db, stats.max_abs, stats.mse
+    );
+    println!(
+        "  packed storage: {} bytes = {:.1} bits/elem ({:.1}x smaller than f32)",
+        packed.memory_bytes(),
+        packed.memory_bytes() as f32 * 8.0 / (1024.0 * 64.0),
+        packed.compression_vs_f32()
+    );
+
+    // --- 3. Attention: f32 vs real-quant FP4 vs Sage3 engines -----------
+    let (n, d) = (128usize, 64usize);
+    let q = rng.normal_vec(n * d, 0.0, 1.0);
+    let k = rng.normal_vec(n * d, 0.0, 1.0);
+    let v = rng.normal_vec(n * d, 0.0, 1.0);
+    let exact = attend(&q, &k, &v, n, d, false, Variant::F32);
+    println!("\nattention output error vs f32 ({n}x{d}, native engines):");
+    for variant in [Variant::Fp4, Variant::Sage3] {
+        let out = attend(&q, &k, &v, n, d, false, variant);
+        let s = error_stats(&exact.o, &out.o, 1e-3);
+        println!("  {variant:?}: snr {:.1} dB, max abs err {:.4}", s.snr_db, s.max_abs);
+    }
+
+    // --- 4. Run the compiled attention artifact -------------------------
+    let shape = vec![1usize, 4, 256, 64];
+    let numel: usize = shape.iter().product();
+    let mk = |r: &mut Rng| Tensor::new(shape.clone(), r.normal_vec(numel, 0.0, 1.0)).unwrap();
+    let (tq, tk, tv) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    let o = rt.run(
+        "attn_fp4_s256_d64",
+        &[Value::F32(tq), Value::F32(tk), Value::F32(tv)],
+    )?;
+    println!(
+        "\ncompiled FP4 attention artifact: output shape {:?}, first vals {:?}",
+        o[0].shape,
+        &o[0].data[..4]
+    );
+    println!("\nquickstart OK");
+    Ok(())
+}
+
+fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}

@@ -1,0 +1,102 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E run): continued-train the
+//! small byte-level LM with **Attn-QAT** on the synthetic corpus for a few
+//! hundred steps, logging the loss curve, then evaluate held-out
+//! perplexity and the benchmark suites in FP4.
+//!
+//! ```bash
+//! make artifacts
+//! cargo run --release --example train_llm            # ~300 steps
+//! STEPS=50 cargo run --release --example train_llm   # quicker
+//! ```
+//!
+//! Everything on the request path is Rust: data generation, batching, the
+//! train-step executions, metric logging, checkpointing, eval.
+
+use std::path::Path;
+
+use attn_qat::coordinator::{checkpoint, LrSchedule, Trainer};
+use attn_qat::data::corpus::Corpus;
+use attn_qat::data::tasks::MC_SUITES;
+use attn_qat::eval::{mc_accuracy, perplexity};
+use attn_qat::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::var("STEPS").ok().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let size = std::env::var("SIZE").unwrap_or_else(|_| "small".to_string());
+    let seed = 42u64;
+
+    let rt = Runtime::new(&Runtime::default_dir())?;
+    let train_art = format!("lm_train_qat_{size}");
+    let meta = rt.meta(&train_art)?;
+    let batch = meta.usize_field("batch").unwrap();
+    let seq = meta.raw.get("model").get("seq_len").as_usize().unwrap();
+    let n_params: usize = meta.param_names().len();
+    println!(
+        "Attn-QAT continued training: model '{size}' ({} param tensors), {steps} steps, batch {batch} x seq {seq}\n",
+        n_params
+    );
+
+    let mut trainer = Trainer::new(
+        &rt,
+        &format!("lm_init_{size}"),
+        &train_art,
+        seed as i32,
+        LrSchedule::Cosine { warmup: steps / 20 + 1, peak: 1e-3, total: steps, floor_frac: 0.1 },
+    )?;
+
+    let mut corpus = Corpus::new(seed);
+    let t0 = std::time::Instant::now();
+    trainer.run(
+        steps,
+        (steps / 25).max(1),
+        |_| {
+            let b = corpus.next_batch(batch, seq);
+            vec![b.token_value(), b.mask_value()]
+        },
+        |m| {
+            println!(
+                "step {:>5}  loss {:.4}  grad_norm {:>8.3}  lr {:.2e}  {:>6.0} ms/step",
+                m.step, m.loss, m.grad_norm, m.lr, m.wall_ms
+            );
+        },
+    )?;
+    let wall = t0.elapsed().as_secs_f64();
+    let toks = (steps * batch * seq) as f64;
+    println!(
+        "\ntrained {steps} steps ({:.0} tokens) in {:.1}s = {:.0} tok/s; diverged={}",
+        toks,
+        wall,
+        toks / wall,
+        trainer.diverged()
+    );
+
+    // Loss curve summary (the E2E evidence for EXPERIMENTS.md).
+    let h = &trainer.history;
+    println!("\nloss curve (every ~{} steps):", (steps / 12).max(1));
+    for m in h.iter().step_by((steps / 12).max(1)) {
+        let bar_len = ((m.loss.min(6.0) / 6.0) * 50.0) as usize;
+        println!("  {:>5} {:>8.4} {}", m.step, m.loss, "#".repeat(bar_len));
+    }
+
+    // Checkpoint.
+    let names = meta.param_names();
+    let named: Vec<(String, &attn_qat::tensor::Tensor)> = names
+        .iter()
+        .cloned()
+        .zip(trainer.state.params.iter())
+        .collect();
+    let ckpt = Path::new("results/ckpt/train_llm_example.ckpt");
+    checkpoint::save(ckpt, &named)?;
+    println!("\ncheckpoint -> {}", ckpt.display());
+
+    // FP4 evaluation (the trained model *serves* in FP4 attention).
+    let eval_art = format!("lm_eval_fp4_{size}");
+    let mut held_out = Corpus::new(seed ^ 0xeeee);
+    let ppl = perplexity(&rt, &eval_art, &trainer.state.params, &mut held_out, 3)?;
+    println!("\nheld-out perplexity (FP4 attention): {ppl:.4}");
+    for suite in MC_SUITES {
+        let acc = mc_accuracy(&rt, &eval_art, &trainer.state.params, suite, 30, seed + 9)?;
+        println!("  suite {suite:<8} accuracy {acc:.3}");
+    }
+    Ok(())
+}

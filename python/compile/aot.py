@@ -1,0 +1,593 @@
+"""AOT export: lower every artifact to HLO **text** + metadata JSON.
+
+This is the single python↔rust interchange point. Each artifact is a jitted
+function lowered once::
+
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir    = lowered.compiler_ir("stablehlo")
+    comp    = xla_client._xla.mlir.mlir_module_to_xla_computation(
+                  str(mlir), use_tuple_args=False, return_tuple=True)
+    text    = comp.as_hlo_text()
+
+HLO *text* (not serialized HloModuleProto) is required: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (behind the
+rust ``xla`` crate) rejects; the text parser reassigns ids and round-trips
+cleanly. ``return_tuple=True`` ⇒ the rust side unwraps one tuple literal.
+
+Artifacts are flat-tensor-list functions; ``<name>.meta.json`` records the
+ordered input/output names+shapes+dtypes and the model/variant config so the
+rust ``runtime::registry`` can bind them without any python at runtime.
+
+Caching: each artifact embeds a hash of the compile-path sources; unchanged
+artifacts are skipped (so ``make artifacts`` is a cheap no-op).
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts [--set core|all]
+[--force] [--only NAME_SUBSTR]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train as T
+from .attention import attention_fwd_full
+from .kernels import nvfp4
+from .kernels.ref import preset
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _source_hash() -> str:
+    """Hash of every compile-path source file (the cache key)."""
+    h = hashlib.sha256()
+    root = os.path.dirname(os.path.abspath(__file__))
+    for dirpath, _, files in os.walk(root):
+        for f in sorted(files):
+            if f.endswith(".py") and f != "aot.py":
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# --------------------------------------------------------------------------
+# Flat wrappers: dict-param functions -> ordered tensor lists
+# --------------------------------------------------------------------------
+
+
+def _flatten_io(shapes: dict) -> list[str]:
+    return sorted(shapes)
+
+
+def _opt_names(pnames: list[str]) -> list[str]:
+    return sorted([f"m__{n}" for n in pnames] + [f"v__{n}" for n in pnames])
+
+
+class Spec:
+    """One artifact: a flat function + named example inputs/outputs."""
+
+    def __init__(self, name, fn, inputs, out_names, tags=(), extra_meta=None):
+        self.name = name
+        self.fn = fn
+        self.inputs = inputs  # list[(name, ShapeDtypeStruct)]
+        self.out_names = out_names
+        self.tags = set(tags)
+        self.extra_meta = extra_meta or {}
+
+
+def _lm_batch_shape(c: M.LMConfig, batch: int):
+    return (batch, c.seq_len + 1)
+
+
+def lm_train_spec(size: str, variant: str, impl: str, batch: int, tags) -> Spec:
+    c = M.LM_SIZES[size]
+    bq = min(64, c.seq_len)
+    cfg = preset(variant, causal=True, block_q=bq, block_k=bq)
+    step = T.lm_train_step(c, cfg, impl)
+    shapes = M.lm_param_shapes(c)
+    pnames = _flatten_io(shapes)
+    onames = _opt_names(pnames)
+
+    def flat(*args):
+        i = 0
+        params = {n: a for n, a in zip(pnames, args[: len(pnames)])}
+        i += len(pnames)
+        opt = {n: a for n, a in zip(onames, args[i : i + len(onames)])}
+        i += len(onames)
+        stepc, lr, tokens, mask = args[i], args[i + 1], args[i + 2], args[i + 3]
+        new_p, new_o, loss, gnorm = step(params, opt, stepc, lr, tokens, mask)
+        return (
+            tuple(new_p[n] for n in pnames)
+            + tuple(new_o[n] for n in onames)
+            + (loss, gnorm)
+        )
+
+    def opt_shape(n):
+        return shapes[n.split("__", 1)[1]]
+
+    inputs = (
+        [(n, _sds(shapes[n])) for n in pnames]
+        + [(n, _sds(opt_shape(n))) for n in onames]
+        + [
+            ("step", _sds((), F32)),
+            ("lr", _sds((), F32)),
+            ("tokens", _sds(_lm_batch_shape(c, batch), I32)),
+            ("loss_mask", _sds((batch, c.seq_len), F32)),
+        ]
+    )
+    out_names = pnames + onames + ["loss", "grad_norm"]
+    suffix = "" if impl == "jnp" else f"_{impl}"
+    return Spec(
+        f"lm_train_{variant}{suffix}_{size}",
+        flat,
+        inputs,
+        out_names,
+        tags,
+        {"kind": "lm_train", "size": size, "variant": variant, "impl": impl,
+         "batch": batch, "model": c.__dict__, "param_names": pnames,
+         "opt_names": onames},
+    )
+
+
+def lm_init_spec(size: str, tags) -> Spec:
+    c = M.LM_SIZES[size]
+    shapes = M.lm_param_shapes(c)
+    pnames = _flatten_io(shapes)
+
+    def flat(seed):
+        p = M.lm_init(c, seed)
+        return tuple(p[n] for n in pnames)
+
+    return Spec(
+        f"lm_init_{size}", flat, [("seed", _sds((), I32))], pnames, tags,
+        {"kind": "lm_init", "size": size, "model": c.__dict__, "param_names": pnames},
+    )
+
+
+def lm_eval_spec(size: str, variant: str, impl: str, batch: int, tags) -> Spec:
+    c = M.LM_SIZES[size]
+    bq = min(64, c.seq_len)
+    cfg = preset(variant, causal=True, block_q=bq, block_k=bq)
+    ev = T.lm_eval_step(c, cfg, impl)
+    shapes = M.lm_param_shapes(c)
+    pnames = _flatten_io(shapes)
+
+    def flat(*args):
+        params = {n: a for n, a in zip(pnames, args[: len(pnames)])}
+        tokens, mask = args[len(pnames)], args[len(pnames) + 1]
+        return ev(params, tokens, mask)
+
+    inputs = [(n, _sds(shapes[n])) for n in pnames] + [
+        ("tokens", _sds(_lm_batch_shape(c, batch), I32)),
+        ("loss_mask", _sds((batch, c.seq_len), F32)),
+    ]
+    return Spec(
+        f"lm_eval_{variant}_{size}", flat, inputs, ["sum_nll", "n_tok"], tags,
+        {"kind": "lm_eval", "size": size, "variant": variant, "impl": impl,
+         "batch": batch, "model": c.__dict__, "param_names": pnames},
+    )
+
+
+def lm_serve_specs(size: str, batch: int, tags) -> list[Spec]:
+    """Per-layer decode-step graphs; Rust owns attention + the FP4 KV cache."""
+    c = M.LM_SIZES[size]
+    d, mlp, v = c.d_model, c.mlp_mult * c.d_model, c.vocab
+    specs = [
+        Spec(
+            f"lm_embed_{size}",
+            M.lm_embed_step,
+            [("tok_emb", _sds((v, d))), ("pos_emb", _sds((c.seq_len, d))),
+             ("tokens", _sds((batch,), I32)), ("pos", _sds((batch,), I32))],
+            ["h"], tags,
+            {"kind": "lm_serve", "size": size, "stage": "embed", "batch": batch,
+             "model": c.__dict__},
+        ),
+        Spec(
+            f"lm_layer_pre_{size}",
+            M.lm_layer_pre,
+            [("h", _sds((batch, d))), ("ln1_w", _sds((d,))), ("ln1_b", _sds((d,))),
+             ("wqkv", _sds((d, 3 * d))), ("bqkv", _sds((3 * d,)))],
+            ["q", "k", "v"], tags,
+            {"kind": "lm_serve", "size": size, "stage": "pre", "batch": batch},
+        ),
+        Spec(
+            f"lm_layer_post_{size}",
+            M.lm_layer_post,
+            [("h", _sds((batch, d))), ("attn_out", _sds((batch, d))),
+             ("wo", _sds((d, d))), ("bo", _sds((d,))),
+             ("ln2_w", _sds((d,))), ("ln2_b", _sds((d,))),
+             ("win", _sds((d, mlp))), ("bin", _sds((mlp,))),
+             ("wout", _sds((mlp, d))), ("bout", _sds((d,)))],
+            ["h"], tags,
+            {"kind": "lm_serve", "size": size, "stage": "post", "batch": batch},
+        ),
+        Spec(
+            f"lm_head_{size}",
+            M.lm_head_step,
+            [("h", _sds((batch, d))), ("lnf_w", _sds((d,))), ("lnf_b", _sds((d,))),
+             ("head", _sds((d, v)))],
+            ["logits"], tags,
+            {"kind": "lm_serve", "size": size, "stage": "head", "batch": batch},
+        ),
+    ]
+    return specs
+
+
+def diff_init_spec(size: str, tags) -> Spec:
+    c = M.DIFF_SIZES[size]
+    shapes = M.diff_param_shapes(c)
+    pnames = _flatten_io(shapes)
+
+    def flat(seed):
+        p = M.diff_init(c, seed)
+        return tuple(p[n] for n in pnames)
+
+    return Spec(
+        f"diff_init_{size}", flat, [("seed", _sds((), I32))], pnames, tags,
+        {"kind": "diff_init", "size": size, "model": c.__dict__, "param_names": pnames},
+    )
+
+
+def diff_train_spec(size: str, variant: str, impl: str, batch: int, tags) -> Spec:
+    c = M.DIFF_SIZES[size]
+    bq = min(16, c.frames)
+    cfg = preset(variant, causal=False, block_q=bq, block_k=bq)
+    step = T.diff_train_step(c, cfg, impl)
+    shapes = M.diff_param_shapes(c)
+    pnames = _flatten_io(shapes)
+    onames = _opt_names(pnames)
+    lat = (batch, c.frames, c.latent_dim)
+
+    def flat(*args):
+        i = len(pnames)
+        params = {n: a for n, a in zip(pnames, args[:i])}
+        opt = {n: a for n, a in zip(onames, args[i : i + len(onames)])}
+        i += len(onames)
+        stepc, lr, x0, noise, t = args[i : i + 5]
+        new_p, new_o, loss, gnorm = step(params, opt, stepc, lr, x0, noise, t)
+        return (
+            tuple(new_p[n] for n in pnames)
+            + tuple(new_o[n] for n in onames)
+            + (loss, gnorm)
+        )
+
+    def opt_shape(n):
+        return shapes[n.split("__", 1)[1]]
+
+    inputs = (
+        [(n, _sds(shapes[n])) for n in pnames]
+        + [(n, _sds(opt_shape(n))) for n in onames]
+        + [("step", _sds((), F32)), ("lr", _sds((), F32)),
+           ("x0", _sds(lat)), ("noise", _sds(lat)), ("t", _sds((batch,)))]
+    )
+    out_names = pnames + onames + ["loss", "grad_norm"]
+    return Spec(
+        f"diff_train_{variant}_{size}", flat, inputs, out_names, tags,
+        {"kind": "diff_train", "size": size, "variant": variant, "impl": impl,
+         "batch": batch, "model": c.__dict__, "param_names": pnames,
+         "opt_names": onames},
+    )
+
+
+def diff_eval_spec(size: str, variant: str, batch: int, tags) -> Spec:
+    c = M.DIFF_SIZES[size]
+    bq = min(16, c.frames)
+    cfg = preset(variant, causal=False, block_q=bq, block_k=bq)
+    ev = T.diff_eval_step(c, cfg, "jnp")
+    shapes = M.diff_param_shapes(c)
+    pnames = _flatten_io(shapes)
+    lat = (batch, c.frames, c.latent_dim)
+
+    def flat(*args):
+        params = {n: a for n, a in zip(pnames, args[: len(pnames)])}
+        x0, noise, t = args[len(pnames) :]
+        return (ev(params, x0, noise, t),)
+
+    inputs = [(n, _sds(shapes[n])) for n in pnames] + [
+        ("x0", _sds(lat)), ("noise", _sds(lat)), ("t", _sds((batch,))),
+    ]
+    return Spec(
+        f"diff_eval_{variant}_{size}", flat, inputs, ["loss"], tags,
+        {"kind": "diff_eval", "size": size, "variant": variant, "batch": batch,
+         "model": c.__dict__, "param_names": pnames},
+    )
+
+
+def diff_sample_spec(size: str, variant: str, batch: int, tags) -> Spec:
+    c = M.DIFF_SIZES[size]
+    bq = min(16, c.frames)
+    cfg = preset(variant, causal=False, block_q=bq, block_k=bq)
+    step = T.diff_sampler_step(c, cfg, "jnp")
+    shapes = M.diff_param_shapes(c)
+    pnames = _flatten_io(shapes)
+    lat = (batch, c.frames, c.latent_dim)
+
+    def flat(*args):
+        params = {n: a for n, a in zip(pnames, args[: len(pnames)])}
+        x, t, dt = args[len(pnames) :]
+        return (step(params, x, t, dt),)
+
+    inputs = [(n, _sds(shapes[n])) for n in pnames] + [
+        ("x", _sds(lat)), ("t", _sds((batch,))), ("dt", _sds((batch,))),
+    ]
+    return Spec(
+        f"diff_sample_{variant}_{size}", flat, inputs, ["x_next"], tags,
+        {"kind": "diff_sample", "size": size, "variant": variant, "batch": batch,
+         "model": c.__dict__, "param_names": pnames},
+    )
+
+
+def attn_spec(variant: str, impl: str, b: int, h: int, n: int, d: int, tags) -> Spec:
+    """Kernel microbench artifact: (q, k, v) -> o (Figure 5 / Figure 4)."""
+    bq = min(64, n)
+    cfg = preset(variant, causal=False, block_q=bq, block_k=bq)
+
+    def flat(q, k, v):
+        o, _, _ = attention_fwd_full(q, k, v, cfg, impl=impl)
+        return (o,)
+
+    shape = (b, h, n, d)
+    suffix = "" if impl == "jnp" else "_pallas"
+    return Spec(
+        f"attn_{variant}{suffix}_s{n}_d{d}",
+        flat,
+        [("q", _sds(shape)), ("k", _sds(shape)), ("v", _sds(shape))],
+        ["o"], tags,
+        {"kind": "attn_fwd", "variant": variant, "impl": impl,
+         "b": b, "h": h, "n": n, "d": d,
+         # analytical cost model inputs (perfmodel/):
+         "flops_qk": 2 * b * h * n * n * d, "flops_pv": 2 * b * h * n * n * d},
+    )
+
+
+def quant_spec(n: int, d: int, impl: str, tags) -> Spec:
+    """Standalone fake-quant artifact (Figure 4 cross-check vs rust formats)."""
+
+    def flat_jnp(x):
+        return (nvfp4.fake_quant(x, axis=-1),)
+
+    def flat_pallas(x):
+        from .kernels.attention_fwd import fake_quant_pallas
+
+        return (fake_quant_pallas(x, axis=-1),)
+
+    suffix = "" if impl == "jnp" else "_pallas"
+    return Spec(
+        f"quant_fake{suffix}_{n}x{d}",
+        flat_jnp if impl == "jnp" else flat_pallas,
+        [("x", _sds((n, d)))],
+        ["xq"], tags,
+        {"kind": "quant", "n": n, "d": d, "impl": impl},
+    )
+
+
+# --------------------------------------------------------------------------
+# Manifest
+# --------------------------------------------------------------------------
+
+
+def build_manifest() -> list[Spec]:
+    specs: list[Spec] = []
+    core = ("core",)
+    exp = ("exp",)
+    bench = ("bench",)
+
+    # --- LM ---------------------------------------------------------------
+    for size, batch, tags in [("tiny", 2, core), ("small", 8, exp), ("base", 4, exp)]:
+        specs.append(lm_init_spec(size, tags))
+        for variant in ["f32", "qat"]:
+            specs.append(lm_train_spec(size, variant, "jnp", batch, tags))
+        for variant in ["f32", "fp4", "qat"]:
+            specs.append(lm_eval_spec(size, variant, "jnp", batch, tags))
+    # drop-in naive QAT (Fig. 3 naive baseline) on the small LM
+    specs.append(lm_train_spec("small", "fp4", "jnp", 8, exp))
+    # three-layer composition proof: pallas kernels inside a train step
+    specs.append(lm_train_spec("tiny", "qat", "pallas", 2, core))
+    # serving graphs (rust-native FP4-KV decode)
+    specs += lm_serve_specs("tiny", 4, core)
+    specs += lm_serve_specs("small", 4, exp)
+
+    # --- Diffusion ----------------------------------------------------------
+    diff_train_variants = [
+        "f32", "qat", "fp4", "qat_smoothk", "qat_twolevel",
+        "qat_no_o_prime", "qat_no_fq_p",
+    ]
+    for size, batch, tags in [("tiny", 4, core), ("small", 8, exp), ("base", 8, exp)]:
+        specs.append(diff_init_spec(size, tags))
+        variants = diff_train_variants if size != "tiny" else ["f32", "qat"]
+        if size == "base":
+            variants = ["f32", "qat"]  # Table 1 needs only these two trained
+        for variant in variants:
+            specs.append(diff_train_spec(size, variant, "jnp", batch, tags))
+        for variant in ["f32", "fp4", "sage3", "qat_smoothk", "qat_twolevel"]:
+            if size == "tiny" and variant not in ("f32", "fp4"):
+                continue
+            specs.append(diff_eval_spec(size, variant, batch, tags))
+            specs.append(diff_sample_spec(size, variant, batch, tags))
+
+    # --- Kernel benches (Fig. 5) + consistency (Fig. 4) --------------------
+    for variant in ["f32", "fp4", "sage3"]:
+        for n in [128, 256, 512, 1024]:
+            for d in [64, 128]:
+                specs.append(attn_spec(variant, "jnp", 1, 4, n, d, bench))
+        specs.append(attn_spec(variant, "pallas", 1, 4, 256, 64, core + ("bench",)))
+        specs.append(attn_spec(variant, "jnp", 1, 4, 256, 64, core))
+    specs.append(quant_spec(1024, 64, "jnp", core))
+    specs.append(quant_spec(1024, 64, "pallas", core))
+
+    return specs
+
+
+# --------------------------------------------------------------------------
+# Golden vectors for the rust formats/attention cross-checks
+# --------------------------------------------------------------------------
+
+
+def write_golden(out_dir: str) -> None:
+    """Deterministic golden vectors pinning rust/src/formats to this module."""
+    rng = np.random.default_rng(20260710)
+    x = np.concatenate(
+        [
+            rng.normal(0, 1, 256).astype(np.float32),
+            rng.normal(0, 10, 128).astype(np.float32),
+            rng.uniform(-6, 6, 64).astype(np.float32),
+            np.array([0.0, -0.0, 0.25, -0.25, 0.75, 1.75, 2.5, 3.5, 5.0, 6.0,
+                      7.0, -7.0, 448.0, 1e-4, -1e-4, 2688.0], np.float32),
+        ]
+    )
+    e2 = np.asarray(nvfp4.e2m1_round(jnp.asarray(x)))
+    e4 = np.asarray(nvfp4.e4m3_round(jnp.asarray(x)))
+    blk = rng.normal(0, 2, (8, 32)).astype(np.float32)
+    q, s = nvfp4.nvfp4_quant(jnp.asarray(blk), axis=-1)
+    deq = nvfp4.nvfp4_dequant(q, s, axis=-1)
+    qm, sm = nvfp4.mxfp4_quant(jnp.asarray(blk), axis=-1)
+    golden = {
+        "input": x.tolist(),
+        "e2m1": e2.tolist(),
+        "e4m3": e4.tolist(),
+        "e4m3_codes": nvfp4.e4m3_encode(e4).tolist(),
+        "block_input": blk.reshape(-1).tolist(),
+        "block_rows": 8,
+        "block_cols": 32,
+        "nvfp4_q": np.asarray(q).reshape(-1).tolist(),
+        "nvfp4_scale": np.asarray(s).reshape(-1).tolist(),
+        "nvfp4_dequant": np.asarray(deq).reshape(-1).tolist(),
+        "mxfp4_q": np.asarray(qm).reshape(-1).tolist(),
+        "mxfp4_scale": np.asarray(sm).reshape(-1).tolist(),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "nvfp4_golden.json"), "w") as f:
+        json.dump(golden, f)
+
+    # Attention goldens: small cases per variant for the rust engine.
+    from .kernels import ref as R
+
+    cases = {}
+    for variant in ["f32", "fp4", "sage3"]:
+        for causal in [False, True]:
+            if variant == "sage3" and causal:
+                continue
+            n, d = 32, 16
+            q_ = rng.normal(0, 1, (n, d)).astype(np.float32)
+            k_ = rng.normal(0, 1, (n, d)).astype(np.float32)
+            v_ = rng.normal(0, 1, (n, d)).astype(np.float32)
+            cfg = preset(variant, causal=causal, block_q=16, block_k=16)
+            o, _, lse = R.naive_attention(
+                jnp.asarray(q_), jnp.asarray(k_), jnp.asarray(v_), cfg
+            )
+            cases[f"{variant}_{'causal' if causal else 'full'}"] = {
+                "n": n, "d": d,
+                "q": q_.reshape(-1).tolist(),
+                "k": k_.reshape(-1).tolist(),
+                "v": v_.reshape(-1).tolist(),
+                "o": np.asarray(o).reshape(-1).tolist(),
+                "lse": np.asarray(lse).tolist(),
+            }
+    with open(os.path.join(out_dir, "attention_golden.json"), "w") as f:
+        json.dump(cases, f)
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+
+def lower_spec(spec: Spec, out_dir: str, src_hash: str, force: bool) -> str:
+    hlo_path = os.path.join(out_dir, f"{spec.name}.hlo.txt")
+    meta_path = os.path.join(out_dir, f"{spec.name}.meta.json")
+    if not force and os.path.exists(hlo_path) and os.path.exists(meta_path):
+        try:
+            with open(meta_path) as f:
+                if json.load(f).get("src_hash") == src_hash:
+                    return "cached"
+        except (json.JSONDecodeError, OSError):
+            pass
+    args = [s for _, s in spec.inputs]
+    lowered = jax.jit(spec.fn).lower(*args)
+    text = to_hlo_text(lowered)
+    out_avals = jax.eval_shape(spec.fn, *args)
+    if not isinstance(out_avals, (tuple, list)):
+        out_avals = (out_avals,)
+    meta = {
+        "name": spec.name,
+        "src_hash": src_hash,
+        "inputs": [
+            {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+            for n, s in spec.inputs
+        ],
+        "outputs": [
+            {"name": n, "shape": list(o.shape), "dtype": str(o.dtype)}
+            for n, o in zip(spec.out_names, out_avals)
+        ],
+        "tags": sorted(spec.tags),
+        **spec.extra_meta,
+    }
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    return "built"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--set", default="all", choices=["core", "exp", "bench", "all"])
+    ap.add_argument("--only", default=None, help="substring filter on names")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    src_hash = _source_hash()
+    specs = build_manifest()
+    if args.set != "all":
+        specs = [s for s in specs if args.set in s.tags]
+    if args.only:
+        specs = [s for s in specs if args.only in s.name]
+
+    built = cached = 0
+    for spec in specs:
+        status = lower_spec(spec, args.out, src_hash, args.force)
+        if status == "built":
+            built += 1
+            print(f"  built  {spec.name}", flush=True)
+        else:
+            cached += 1
+
+    golden_dir = os.path.join(os.path.dirname(args.out), "rust", "tests", "golden")
+    write_golden(golden_dir)
+    # registry index for the rust side
+    index = sorted(
+        os.path.splitext(os.path.splitext(f)[0])[0]
+        for f in os.listdir(args.out)
+        if f.endswith(".meta.json")
+    )
+    with open(os.path.join(args.out, "index.json"), "w") as f:
+        json.dump({"artifacts": index, "src_hash": src_hash}, f, indent=1)
+    print(f"artifacts: {built} built, {cached} cached -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""L2 attention operator: `jax.custom_vjp` wiring Alg. 2 (fwd) to Alg. 3 (bwd).
+
+Public entry point::
+
+    o = attention(q, k, v, cfg, impl)   # q,k,v: (B, H, N, d)
+
+Two interchangeable implementations, verified equivalent by pytest:
+
+* ``impl="jnp"``  — the *fast* path: the same algorithms at whole-matrix
+  tile granularity as fused batched einsums. Quantization placement is
+  identical (φ on Q/K/V inputs, φ on the unnormalised P̃, high-precision O′,
+  the D = rowsum(dO ⊙ O′) correction); only the online-softmax tiling is
+  collapsed, which changes results by O(quantization noise) only. Used by
+  the big training artifacts so the experiment suite is CPU-feasible.
+* ``impl="pallas"`` — the L1 kernels (Alg. 1–3 tile-exact, interpret mode).
+  Used by the kernel artifacts, consistency checks, and the tiny train-step
+  smoke test, proving the full three-layer composition.
+
+Gradients follow the straight-through estimator (Eq. 7): the backward
+returns Alg. 3's dQ/dK/dV as the gradients of the *raw* inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import nvfp4
+from .kernels.attention_bwd import flash_backward_pallas
+from .kernels.attention_fwd import fake_quant_pallas, flash_forward_pallas
+from .kernels.ref import NEG_INF, QatConfig, preset
+
+
+def _flat(x):
+    """(B, H, N, d) -> (B*H, N, d)."""
+    b, h, n, d = x.shape
+    return x.reshape(b * h, n, d)
+
+
+def _mask(s, nq, nk):
+    qpos = jnp.arange(nq)[:, None] + (nk - nq)
+    kpos = jnp.arange(nk)[None, :]
+    return jnp.where(kpos <= qpos, s, NEG_INF)
+
+
+def _preprocess_batched(q, k, v, cfg: QatConfig):
+    """Batched smoothing + input fake-quant ((BH, N, d) tensors).
+
+    Mirrors ``ref.preprocess_qkv``; returns ``(qf, kf, vf, dsq)`` with
+    ``dsq`` the (BH, Tq, d) per-tile q̄ means (sage3 smooth-Q fixup only).
+    """
+    dsq = None
+    if cfg.smooth_k:
+        k = k - jnp.mean(k, axis=1, keepdims=True)
+    if cfg.smooth_q:
+        bh, nq, d = q.shape
+        bq = cfg.block_q
+        qt = q.reshape(bh, nq // bq, bq, d)
+        dsq = jnp.mean(qt, axis=2)  # (BH, Tq, d)
+        q = (qt - dsq[:, :, None, :]).reshape(bh, nq, d)
+    if cfg.quantize:
+        q = nvfp4.fake_quant(q, axis=-1)
+        k = nvfp4.fake_quant(k, axis=-1)
+        v = nvfp4.fake_quant(v, axis=1)
+    return q, k, v, dsq
+
+
+def _quantize_p_batched(p, cfg: QatConfig):
+    if not cfg.quantize:
+        return p
+    if cfg.two_level_p:
+        return nvfp4.two_level_quant_p(p, axis=-1)
+    return nvfp4.fake_quant(p, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Fast (jnp) forward / backward — whole-matrix tile granularity
+# --------------------------------------------------------------------------
+
+
+def _fwd_jnp(q, k, v, cfg: QatConfig):
+    """Alg. 2 at full-matrix granularity. Returns (o, o', lse)."""
+    _, nq, d = q.shape
+    nk = k.shape[1]
+    qf, kf, vf, dsq = _preprocess_batched(q, k, v, cfg)
+    s = jnp.einsum("bqd,bkd->bqk", qf, kf)
+    if dsq is not None:
+        fix = jnp.einsum("btd,bkd->btk", dsq, kf)  # high-precision ΔS
+        s = s + jnp.repeat(fix, cfg.block_q, axis=1)
+    s = s / jnp.sqrt(jnp.float32(d))
+    if cfg.causal:
+        s = _mask(s, nq, nk)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)  # unnormalised P̃, rowmax == 1 (Alg. 2 l.9)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    pf = _quantize_p_batched(p, cfg)  # Alg. 2 l.10
+    o = jnp.einsum("bqk,bkd->bqd", pf, vf) / l  # quantized-P path (l.12)
+    o_prime = jnp.einsum("bqk,bkd->bqd", p, vf) / l  # high-precision O' (l.13)
+    lse = (m + jnp.log(l)).squeeze(-1)
+    return o, o_prime, lse
+
+
+def _bwd_jnp(q, k, v, o, o_prime, lse, do, cfg: QatConfig):
+    """Alg. 3 at full-matrix granularity, with the ablation switches."""
+    _, nq, d = q.shape
+    nk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    if cfg.fq_inputs_bwd:
+        qb, kb, vb, _ = _preprocess_batched(q, k, v, cfg)
+    else:
+        qb, kb, vb = q, k, v
+
+    d_vec = jnp.sum(do * (o_prime if cfg.high_prec_o else o), axis=-1)  # l.3
+    s = jnp.einsum("bqd,bkd->bqk", qb, kb) * scale  # l.9
+    if cfg.causal:
+        s = _mask(s, nq, nk)
+    p = jnp.exp(s - lse[..., None])  # l.10 — normalised probabilities
+    pf = _quantize_p_batched(p, cfg) if cfg.fq_p_bwd else p  # l.11 (Fix A)
+    dv = jnp.einsum("bqk,bqd->bkd", pf, do)  # l.12
+    dp = jnp.einsum("bqd,bkd->bqk", do, vb)  # l.13
+    ds = p * (dp - d_vec[..., None]) * scale  # l.14 — high-precision P
+    dq = jnp.einsum("bqk,bkd->bqd", ds, kb)  # l.15
+    dk = jnp.einsum("bqk,bqd->bkd", ds, qb)  # l.16
+    return dq, dk, dv
+
+
+# --------------------------------------------------------------------------
+# Pallas-backed forward / backward (tile-exact Alg. 1–3)
+# --------------------------------------------------------------------------
+
+
+def _fwd_pallas(q, k, v, cfg: QatConfig):
+    qf, kf, vf, dsq = _preprocess_batched_pallas(q, k, v, cfg)
+    return flash_forward_pallas(qf, kf, vf, cfg, dsq=dsq)
+
+
+def _preprocess_batched_pallas(q, k, v, cfg: QatConfig):
+    """Same as `_preprocess_batched` but the fake-quant runs as L1 kernels."""
+    dsq = None
+    if cfg.smooth_k:
+        k = k - jnp.mean(k, axis=1, keepdims=True)
+    if cfg.smooth_q:
+        bh, nq, d = q.shape
+        bq = cfg.block_q
+        qt = q.reshape(bh, nq // bq, bq, d)
+        dsq = jnp.mean(qt, axis=2)
+        q = (qt - dsq[:, :, None, :]).reshape(bh, nq, d)
+    if cfg.quantize:
+        q = fake_quant_pallas(q, axis=-1)
+        k = fake_quant_pallas(k, axis=-1)
+        v = fake_quant_pallas(v, axis=1)
+    return q, k, v, dsq
+
+
+def _bwd_pallas(q, k, v, o, o_prime, lse, do, cfg: QatConfig):
+    if cfg.fq_inputs_bwd:
+        qb, kb, vb, _ = _preprocess_batched_pallas(q, k, v, cfg)
+    else:
+        qb, kb, vb = q, k, v
+    return flash_backward_pallas(qb, kb, vb, o, o_prime, lse, do, cfg)
+
+
+# --------------------------------------------------------------------------
+# custom_vjp assembly
+# --------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _make_attention(cfg: QatConfig, impl: str):
+    fwd_impl = _fwd_jnp if impl == "jnp" else _fwd_pallas
+    bwd_impl = _bwd_jnp if impl == "jnp" else _bwd_pallas
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        o, _, _ = fwd_impl(q, k, v, cfg)
+        return o
+
+    def attn_fwd(q, k, v):
+        o, o_prime, lse = fwd_impl(q, k, v, cfg)
+        # Residuals: raw q/k/v (bwd re-quantizes — mirrors the paper, which
+        # stores Q^F/K^F/V^F; re-deriving them is value-identical and lets
+        # the ablations flip `fq_inputs_bwd`), plus O, O', L.
+        return o, (q, k, v, o, o_prime, lse)
+
+    def attn_bwd(res, do):
+        q, k, v, o, o_prime, lse = res
+        dq, dk, dv = bwd_impl(q, k, v, o, o_prime, lse, do, cfg)
+        return dq, dk, dv  # STE: gradients pass straight to the raw inputs
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return attn
+
+
+def attention(q, k, v, cfg: QatConfig, impl: str = "jnp"):
+    """Multi-head Attn-QAT attention. ``q,k,v: (B, H, N, d)`` → ``(B, H, N, d)``.
+
+    ``cfg`` selects the variant (see ``ref.PRESETS``); ``impl`` selects the
+    fast-jnp or Pallas execution path.
+    """
+    if impl not in ("jnp", "pallas"):
+        raise ValueError(f"unknown impl {impl!r}")
+    b, h, n, d = q.shape
+    attn = _make_attention(cfg, impl)
+    o = attn(_flat(q), _flat(k), _flat(v))
+    return o.reshape(b, h, n, d)
+
+
+def attention_fwd_full(q, k, v, cfg: QatConfig, impl: str = "jnp"):
+    """Forward returning (o, o_prime, lse) — for tests and kernel artifacts."""
+    fwd_impl = _fwd_jnp if impl == "jnp" else _fwd_pallas
+    b, h, n, d = q.shape
+    o, op, lse = fwd_impl(_flat(q), _flat(k), _flat(v), cfg)
+    return o.reshape(b, h, n, d), op.reshape(b, h, n, d), lse.reshape(b, h, n)
+
+
+__all__ = ["attention", "attention_fwd_full", "QatConfig", "preset"]

@@ -1,0 +1,161 @@
+"""Pallas backward kernels for Attn-QAT (Algorithm 3).
+
+Follows the FlashAttention-2 split the paper's Triton kernels use:
+
+* ``dkv`` kernel — grid ``(BH, Tk)``; each step owns one K/V tile, loops
+  over the query tiles that can see it, and accumulates ``dK_j``/``dV_j``
+  in VMEM (Alg. 3 outer loop).
+* ``dq`` kernel  — grid ``(BH, Tq)``; each step owns one Q tile and loops
+  over its visible key tiles accumulating ``dQ_i``.
+
+Splitting avoids the cross-tile ``dQ`` accumulation the single-kernel
+formulation would need (atomics on GPU, a second pass on TPU) at the cost
+of recomputing ``S``/``P`` twice — the same trade FA2 makes.
+
+Ablation switches (which P the ``dV`` matmul sees, which O feeds ``D``,
+whether the recomputation uses quantized inputs) are threaded through
+``QatConfig`` exactly as in ``ref.flash_backward``; pytest pins the two
+implementations together bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .attention_fwd import INTERPRET, dvec_pallas
+from .ref import NEG_INF, QatConfig, quantize_p
+
+
+def _dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, dvec_ref, dk_ref, dv_ref,
+    *, cfg: QatConfig, nq: int, nk: int,
+):
+    bq, bk = cfg.block_q, cfg.block_k
+    d = k_ref.shape[2]
+    j = pl.program_id(1)
+    j0 = j * bk
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    kj = k_ref[0, :, :]
+    vj = v_ref[0, :, :]
+
+    if cfg.causal:
+        # Query tiles strictly above this key tile's diagonal see nothing.
+        first_q = jnp.maximum((j0 - (nk - nq)) // bq, 0)
+    else:
+        first_q = 0
+
+    def body(i, carry):
+        dkj, dvj = carry
+        i0 = i * bq
+        qi = pl.load(q_ref, (0, pl.ds(i0, bq), slice(None)))
+        doi = pl.load(do_ref, (0, pl.ds(i0, bq), slice(None)))
+        lse_i = pl.load(lse_ref, (0, pl.ds(i0, bq)))
+        d_i = pl.load(dvec_ref, (0, pl.ds(i0, bq)))
+        s = jnp.dot(qi, kj.T) * scale  # Alg.3 l.9
+        if cfg.causal:
+            qpos = i0 + jnp.arange(bq)[:, None] + (nk - nq)
+            kpos = j0 + jnp.arange(bk)[None, :]
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        p = jnp.exp(s - lse_i[:, None])  # Alg.3 l.10
+        pf = quantize_p(p, cfg) if cfg.fq_p_bwd else p  # Alg.3 l.11 (Fix A)
+        dvj = dvj + jnp.dot(pf.T, doi)  # Alg.3 l.12
+        dp = jnp.dot(doi, vj.T)  # Alg.3 l.13
+        ds = p * (dp - d_i[:, None]) * scale  # Alg.3 l.14 (high-precision P)
+        dkj = dkj + jnp.dot(ds.T, qi)  # Alg.3 l.16
+        return dkj, dvj
+
+    init = (jnp.zeros((bk, d), jnp.float32), jnp.zeros((bk, d), jnp.float32))
+    dkj, dvj = jax.lax.fori_loop(first_q, nq // bq, body, init)
+    dk_ref[0, :, :] = dkj
+    dv_ref[0, :, :] = dvj
+
+
+def _dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, dvec_ref, dq_ref,
+    *, cfg: QatConfig, nq: int, nk: int,
+):
+    bq, bk = cfg.block_q, cfg.block_k
+    d = q_ref.shape[2]
+    i = pl.program_id(1)
+    i0 = i * bq
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    qi = q_ref[0, :, :]
+    doi = do_ref[0, :, :]
+    lse_i = lse_ref[0, :]
+    d_i = dvec_ref[0, :]
+
+    if cfg.causal:
+        last_k = i0 + bq - 1 + (nk - nq)
+        num_j = jnp.minimum((last_k // bk) + 1, nk // bk)
+    else:
+        num_j = nk // bk
+
+    def body(j, dqi):
+        j0 = j * bk
+        kj = pl.load(k_ref, (0, pl.ds(j0, bk), slice(None)))
+        vj = pl.load(v_ref, (0, pl.ds(j0, bk), slice(None)))
+        s = jnp.dot(qi, kj.T) * scale
+        if cfg.causal:
+            qpos = i0 + jnp.arange(bq)[:, None] + (nk - nq)
+            kpos = j0 + jnp.arange(bk)[None, :]
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        p = jnp.exp(s - lse_i[:, None])
+        dp = jnp.dot(doi, vj.T)
+        ds = p * (dp - d_i[:, None]) * scale
+        return dqi + jnp.dot(ds, kj)  # Alg.3 l.15
+
+    dqi = jax.lax.fori_loop(0, num_j, body, jnp.zeros((bq, d), jnp.float32))
+    dq_ref[0, :, :] = dqi
+
+
+def flash_backward_pallas(qb, kb, vb, o, o_prime, lse, do, cfg: QatConfig):
+    """Alg. 3 as two Pallas kernels, batched over axis 0.
+
+    ``qb/kb/vb`` are the backward's recomputation inputs — Q^F/K^F/V^F when
+    ``cfg.fq_inputs_bwd`` (the caller quantizes), raw otherwise ("drop-in"
+    stock-FA backward). Returns ``(dq, dk, dv)`` w.r.t. those inputs; the
+    STE (Eq. 7) passes them unchanged to the raw tensors.
+    """
+    b, nq, d = qb.shape
+    nk = kb.shape[1]
+    bq, bk = cfg.block_q, cfg.block_k
+    if nq % bq or nk % bk:
+        raise ValueError(f"seq lens ({nq},{nk}) must divide tiles ({bq},{bk})")
+
+    dvec = dvec_pallas(do, o_prime if cfg.high_prec_o else o, bq)  # Alg.3 l.3
+
+    full_q = pl.BlockSpec((1, nq, d), lambda b_, t: (b_, 0, 0))
+    full_k = pl.BlockSpec((1, nk, d), lambda b_, t: (b_, 0, 0))
+    full_r = pl.BlockSpec((1, nq), lambda b_, t: (b_, 0))
+    tile_q = pl.BlockSpec((1, bq, d), lambda b_, t: (b_, t, 0))
+    tile_k = pl.BlockSpec((1, bk, d), lambda b_, t: (b_, t, 0))
+    tile_rq = pl.BlockSpec((1, bq), lambda b_, t: (b_, t))
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, cfg=cfg, nq=nq, nk=nk),
+        grid=(b, nk // bk),
+        in_specs=[full_q, tile_k, tile_k, full_q, full_r, full_r],
+        out_specs=[tile_k, tile_k],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nk, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, nk, d), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(qb, kb, vb, do, lse, dvec)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, cfg=cfg, nq=nq, nk=nk),
+        grid=(b, nq // bq),
+        in_specs=[tile_q, full_k, full_k, tile_q, tile_rq, tile_rq],
+        out_specs=tile_q,
+        out_shape=jax.ShapeDtypeStruct((b, nq, d), jnp.float32),
+        interpret=INTERPRET,
+    )(qb, kb, vb, do, lse, dvec)
+
+    return dq, dk, dv

@@ -1,0 +1,204 @@
+"""Pallas forward kernels for Attn-QAT (Algorithms 1 & 2).
+
+TPU-adapted layout (DESIGN.md §3): the paper's CUDA/Triton threadblock over
+(batch·head, q-tile) becomes the Pallas **grid** ``(BH, Tq)``; the Q tile is
+staged into VMEM by its BlockSpec while K/V tiles stream through an inner
+``fori_loop`` (``pl.ds`` dynamic slices) — the HBM↔VMEM schedule the paper
+expresses with shared-memory staging. Both matmuls per (i, j) tile pair hit
+the MXU; the extra high-precision accumulator ``O'`` of Alg. 2 line 13 is a
+second ``(Bq, d)`` f32 VMEM accumulator and costs no extra HBM traffic.
+
+``interpret=True`` is mandatory here: the CPU PJRT client cannot execute
+Mosaic custom-calls, and these kernels are lowered into the exported HLO
+artifacts that the Rust runtime loads.
+
+All kernels take pre-quantized inputs ``Q^F/K^F/V^F`` (Alg. 2 line 2 happens
+in its own fake-quant kernel below, mirroring the paper's separation of
+input quantization from the fused loop); the probability fake-quant happens
+**inside** the loop, as in Alg. 1 line 12 / Alg. 2 line 10.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import nvfp4
+from .ref import NEG_INF, QatConfig, quantize_p
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see module doc.
+
+
+# --------------------------------------------------------------------------
+# Fake-quantization kernel (Alg. 2 line 2)
+# --------------------------------------------------------------------------
+
+
+def _fake_quant_kernel(x_ref, o_ref, *, axis: int, block: int):
+    x = x_ref[...]
+    o_ref[...] = nvfp4.fake_quant(x, axis=axis, block=block)
+
+
+def fake_quant_pallas(x: jnp.ndarray, axis: int = -1, block: int = nvfp4.NVFP4_BLOCK):
+    """NVFP4 fake quantization φ⁻¹(φ(X)) as a Pallas kernel.
+
+    Grid over the leading axis; each step fake-quantizes one row-slab in
+    VMEM. ``axis`` is the micro-scaling block axis (must not be axis 0).
+    """
+    if x.ndim < 2:
+        raise ValueError("fake_quant_pallas expects >= 2-D input")
+    axis = axis % x.ndim
+    if axis == 0:
+        raise ValueError("block axis must not be the grid axis")
+    slab = (1,) + x.shape[1:]
+    return pl.pallas_call(
+        functools.partial(_fake_quant_kernel, axis=axis, block=block),
+        grid=(x.shape[0],),
+        in_specs=[pl.BlockSpec(slab, lambda i: (i,) + (0,) * (x.ndim - 1))],
+        out_specs=pl.BlockSpec(slab, lambda i: (i,) + (0,) * (x.ndim - 1)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=INTERPRET,
+    )(x)
+
+
+# --------------------------------------------------------------------------
+# Flash forward (Alg. 1 inference / Alg. 2 training)
+# --------------------------------------------------------------------------
+
+
+def _flash_fwd_kernel(
+    q_ref, k_ref, v_ref, *rest, cfg: QatConfig, nq: int, nk: int, smooth_q: bool
+):
+    if smooth_q:
+        # SageAttention3: ΔS_ij = q̄_i γ(K_j)ᵀ added back in high precision
+        # after the (emulated) FP4 matmul — q̄_i arrives as an extra input.
+        dsq_ref, o_ref, op_ref, lse_ref = rest
+    else:
+        dsq_ref = None
+        o_ref, op_ref, lse_ref = rest
+    bq, d = q_ref.shape[1], q_ref.shape[2]
+    bk = cfg.block_k
+    i = pl.program_id(1)
+    i0 = i * bq
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    qi = q_ref[0, :, :]  # (bq, d) — staged in VMEM by the BlockSpec
+    qbar = dsq_ref[0, 0, :] if smooth_q else None
+
+    if cfg.causal:
+        # Early exit: key tiles strictly above the diagonal contribute
+        # nothing; loop only over the tiles this q-tile can see.
+        last_k = i0 + bq - 1 + (nk - nq)
+        num_j = jnp.minimum((last_k // bk) + 1, nk // bk)
+    else:
+        num_j = nk // bk
+
+    def body(j, carry):
+        m_i, l_i, acc, acc_hp = carry
+        kj = pl.load(k_ref, (0, pl.ds(j * bk, bk), slice(None)))
+        vj = pl.load(v_ref, (0, pl.ds(j * bk, bk), slice(None)))
+        s = jnp.dot(qi, kj.T)  # MXU pass 1 (Alg.2 l.7)
+        if smooth_q:
+            s = s + jnp.broadcast_to(jnp.dot(qbar, kj.T), s.shape)
+        s = s * scale
+        if cfg.causal:
+            qpos = i0 + jnp.arange(bq)[:, None] + (nk - nq)
+            kpos = j * bk + jnp.arange(bk)[None, :]
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))  # Alg.2 l.8
+        alpha = jnp.exp(m_i - m_new)  # Alg.2 l.9
+        p = jnp.exp(s - m_new[:, None])
+        pf = quantize_p(p, cfg)  # Alg.2 l.10 (fused in VMEM)
+        l_i = alpha * l_i + jnp.sum(p, axis=-1)  # Alg.2 l.11
+        acc = alpha[:, None] * acc + jnp.dot(pf, vj)  # MXU pass 2 (l.12)
+        acc_hp = alpha[:, None] * acc_hp + jnp.dot(p, vj)  # O' accum (l.13)
+        return m_new, l_i, acc, acc_hp
+
+    init = (
+        jnp.full((bq,), NEG_INF, jnp.float32),
+        jnp.zeros((bq,), jnp.float32),
+        jnp.zeros((bq, d), jnp.float32),
+        jnp.zeros((bq, d), jnp.float32),
+    )
+    m_i, l_i, acc, acc_hp = jax.lax.fori_loop(0, num_j, body, init)
+    inv_l = 1.0 / l_i[:, None]
+    o_ref[0, :, :] = acc * inv_l  # Alg.2 l.15
+    op_ref[0, :, :] = acc_hp * inv_l
+    lse_ref[0, :] = m_i + jnp.log(l_i)
+
+
+def flash_forward_pallas(qf, kf, vf, cfg: QatConfig, dsq=None):
+    """Tiled flash forward over pre-quantized inputs, batched over axis 0.
+
+    Args: ``qf (B, Nq, d)``, ``kf/vf (B, Nk, d)`` — already fake-quantized
+    (or raw for the f32 variant); ``dsq (B, Tq, d)`` per-tile q̄ means for
+    the smooth-Q fixup (sage3 only). Returns ``(o, o_prime, lse)`` with
+    shapes ``(B, Nq, d)``, ``(B, Nq, d)``, ``(B, Nq)``.
+    """
+    b, nq, d = qf.shape
+    nk = kf.shape[1]
+    bq, bk = cfg.block_q, cfg.block_k
+    if nq % bq or nk % bk:
+        raise ValueError(f"seq lens ({nq},{nk}) must divide tiles ({bq},{bk})")
+    smooth_q = dsq is not None
+    grid = (b, nq // bq)
+    kernel = functools.partial(
+        _flash_fwd_kernel, cfg=cfg, nq=nq, nk=nk, smooth_q=smooth_q
+    )
+    in_specs = [
+        pl.BlockSpec((1, bq, d), lambda b_, i: (b_, i, 0)),
+        pl.BlockSpec((1, nk, d), lambda b_, i: (b_, 0, 0)),
+        pl.BlockSpec((1, nk, d), lambda b_, i: (b_, 0, 0)),
+    ]
+    args = [qf, kf, vf]
+    if smooth_q:
+        in_specs.append(pl.BlockSpec((1, 1, d), lambda b_, i: (b_, i, 0)))
+        args.append(dsq)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda b_, i: (b_, i, 0)),
+            pl.BlockSpec((1, bq, d), lambda b_, i: (b_, i, 0)),
+            pl.BlockSpec((1, bq), lambda b_, i: (b_, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nq, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, nq, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, nq), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(*args)
+
+
+# --------------------------------------------------------------------------
+# D = rowsum(dO ⊙ O') preprocess kernel (Alg. 3 line 3)
+# --------------------------------------------------------------------------
+
+
+def _dvec_kernel(do_ref, o_ref, d_ref):
+    d_ref[0, :] = jnp.sum(do_ref[0, :, :] * o_ref[0, :, :], axis=-1)
+
+
+def dvec_pallas(do: jnp.ndarray, o_for_d: jnp.ndarray, block_q: int):
+    """The FlashAttention-style backward preprocess: ``D = rowsum(dO ⊙ O*)``.
+
+    ``o_for_d`` is ``O'`` under Fix B (Alg. 3 line 3) or the low-precision
+    ``O`` in the Exp. 7 ablation — the caller picks.
+    """
+    b, nq, _ = do.shape
+    return pl.pallas_call(
+        _dvec_kernel,
+        grid=(b, nq // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, do.shape[2]), lambda b_, i: (b_, i, 0)),
+            pl.BlockSpec((1, block_q, do.shape[2]), lambda b_, i: (b_, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q), lambda b_, i: (b_, i)),
+        out_shape=jax.ShapeDtypeStruct((b, nq), jnp.float32),
+        interpret=INTERPRET,
+    )(do, o_for_d)

@@ -1,0 +1,299 @@
+"""NVFP4 / MXFP4 micro-scaling quantization (L1 numeric-format substrate).
+
+Implements the block floating-point schemes the paper builds on (§2.1):
+
+* **E2M1** — the FP4 element format: 1 sign / 2 exponent / 1 mantissa bits,
+  15 distinct finite values ``±{0, .5, 1, 1.5, 2, 3, 4, 6}``.
+* **E4M3** — the FP8 scale format used by NVFP4 (bias 7, max 448, finite).
+* **E8M0** — the power-of-two scale format used by MXFP4.
+* **NVFP4** — blocks of 16 contiguous elements along a chosen axis share one
+  E4M3 scale ``s = amax/6`` (Eq. 1); elements are stored as E2M1 codes.
+* **MXFP4** — blocks of 32 share one E8M0 scale (OCP MX spec v1.0).
+* **two-level quantization** — SageAttention3's per-row rescale of the
+  probability matrix ``P`` into ``[0, 448*6]`` before NVFP4 quantization.
+
+All rounding is round-to-nearest with ties-to-even **on the code lattice**,
+matching the hardware ``cvt.rn.satfinite.e2m1x2.f32`` semantics, and is
+implemented with a vectorised midpoint-``searchsorted`` so the same exact
+arithmetic runs inside Pallas kernels (interpret mode) and plain jnp.
+
+The Rust side (``rust/src/formats``) re-implements these codecs bit-exactly;
+``python/compile/gen_golden.py`` emits the golden vectors that pin the two
+implementations together.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# Lattices
+# --------------------------------------------------------------------------
+
+#: Non-negative representable E2M1 magnitudes, by code 0..7.
+E2M1_VALUES = np.array([0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0], np.float32)
+E2M1_MAX = 6.0
+
+#: NVFP4 block size (elements sharing one E4M3 scale).
+NVFP4_BLOCK = 16
+#: MXFP4 block size (elements sharing one E8M0 scale).
+MXFP4_BLOCK = 32
+
+#: E4M3 (fp8e4m3fn) maximum finite value.
+E4M3_MAX = 448.0
+#: Two-level quantization target row maximum (SageAttention3): 448 * 6.
+TWO_LEVEL_RMAX = E4M3_MAX * E2M1_MAX
+
+
+def _e4m3_lattice() -> np.ndarray:
+    """All non-negative finite E4M3 values in code order (codes 0x00..0x7E).
+
+    value(code): exp = code>>3, man = code&7;
+      exp == 0  -> man/8 * 2^-6                  (subnormals, incl. zero)
+      exp >  0  -> (1 + man/8) * 2^(exp-7)
+    Code 0x7F is NaN and excluded, so the lattice has 127 entries and is
+    strictly increasing => lattice index == code, and index parity == the
+    parity RNE tie-breaking needs.
+    """
+    vals = []
+    for code in range(0x7F):
+        exp = code >> 3
+        man = code & 7
+        if exp == 0:
+            vals.append(man / 8.0 * 2.0 ** (-6))
+        else:
+            vals.append((1.0 + man / 8.0) * 2.0 ** (exp - 7))
+    return np.array(vals, np.float32)
+
+
+E4M3_VALUES = _e4m3_lattice()
+
+# Midpoints used for RNE rounding. All are exactly representable in f32
+# (they need one extra mantissa bit relative to the target format).
+_E2M1_MID = ((E2M1_VALUES[1:] + E2M1_VALUES[:-1]) / 2.0).astype(np.float32)
+_E4M3_MID = ((E4M3_VALUES[1:] + E4M3_VALUES[:-1]) / 2.0).astype(np.float32)
+
+
+def _rne_binade(mag: jnp.ndarray, mant_bits: int, min_binade: int, max_val: float):
+    """Round non-negative ``mag`` to a (sign-free) mini-float lattice, RNE.
+
+    The lattice is "``mant_bits`` mantissa bits, normal binades ≥
+    ``min_binade``, subnormal spacing below, saturate at ``max_val``".
+    Closed form (no table captures — required inside Pallas kernels, and
+    ~30× faster than a searchsorted lattice lookup):
+
+        a = m·2^e (frexp, exact)  ⇒  binade b = e−1
+        step = 2^(max(b, min_binade) − mant_bits)
+        q = round_half_even(a / step) · step, clamped to max_val
+
+    Half-way cases land exactly on ``.5`` multiples of ``step`` and
+    ``jnp.round``'s banker's rounding picks the even quotient — which is
+    precisely the even-mantissa-code convention of IEEE RNE (the pytest
+    suite cross-checks this against an explicit lattice oracle).
+    """
+    _, e = jnp.frexp(mag)
+    b = jnp.maximum(e - 1, min_binade)
+    step = jnp.exp2((b - mant_bits).astype(jnp.float32))
+    q = jnp.round(mag / step) * step
+    return jnp.minimum(q, max_val)
+
+
+def e2m1_round(x: jnp.ndarray) -> jnp.ndarray:
+    """Round to the nearest E2M1 value (signed, saturating at ±6, RNE)."""
+    mag = _rne_binade(jnp.abs(x), mant_bits=1, min_binade=0, max_val=E2M1_MAX)
+    return jnp.sign(x) * mag
+
+
+def e2m1_code(x: jnp.ndarray) -> jnp.ndarray:
+    """E2M1 4-bit code (sign<<3 | magnitude code) as uint8 — storage form."""
+    mag = _rne_binade(jnp.abs(x), mant_bits=1, min_binade=0, max_val=E2M1_MAX)
+    code = jnp.searchsorted(jnp.asarray(E2M1_VALUES), mag).astype(jnp.uint8)
+    sign = (x < 0).astype(jnp.uint8)
+    return (sign << 3) | code
+
+
+def e4m3_round(x: jnp.ndarray) -> jnp.ndarray:
+    """Round to the nearest finite E4M3 value (signed, saturating, RNE)."""
+    mag = _rne_binade(jnp.abs(x), mant_bits=3, min_binade=-6, max_val=E4M3_MAX)
+    return jnp.sign(x) * mag
+
+
+def _round_to_lattice_np(mag: np.ndarray, lattice: np.ndarray, mid: np.ndarray) -> np.ndarray:
+    """Numpy lattice oracle for RNE rounding (tests + packed encoders).
+
+    Double searchsorted over midpoints; exact midpoints pick the even
+    lattice index (== even code). Saturates at the lattice maximum.
+    """
+    lo = np.searchsorted(mid, mag, side="left")
+    hi = np.searchsorted(mid, mag, side="right")
+    tie_even = np.where(lo % 2 == 0, lo, lo + 1)
+    idx = np.where(lo == hi, lo, tie_even)
+    idx = np.clip(idx, 0, len(lattice) - 1)
+    return lattice[idx]
+
+
+def e2m1_round_np(x: np.ndarray) -> np.ndarray:
+    """Numpy lattice-oracle version of :func:`e2m1_round`."""
+    x = np.asarray(x, np.float32)
+    mag = _round_to_lattice_np(np.abs(x), E2M1_VALUES, _E2M1_MID)
+    return (np.sign(x) * mag).astype(np.float32)
+
+
+def e4m3_round_np(x: np.ndarray) -> np.ndarray:
+    """Numpy lattice-oracle version of :func:`e4m3_round`."""
+    x = np.asarray(x, np.float32)
+    mag = _round_to_lattice_np(np.abs(x), E4M3_VALUES, _E4M3_MID)
+    return (np.sign(x) * mag).astype(np.float32)
+
+
+def e8m0_round_scale(amax: jnp.ndarray) -> jnp.ndarray:
+    """MX E8M0 shared scale: 2^(floor(log2(amax)) - emax_elem), emax_elem=2.
+
+    Per OCP MX v1.0 the shared scale for an e2m1 element format is the power
+    of two that maps the block amax under the largest element exponent.
+    amax == 0 maps to scale 1 (block is all zeros anyway).
+    """
+    safe = jnp.where(amax > 0, amax, 1.0)
+    e = jnp.floor(jnp.log2(safe)) - 2.0
+    e = jnp.clip(e, -127.0, 127.0)
+    return jnp.where(amax > 0, jnp.exp2(e), 1.0)
+
+
+# --------------------------------------------------------------------------
+# Block quantization
+# --------------------------------------------------------------------------
+
+
+def _to_blocks(x: jnp.ndarray, block: int, axis: int):
+    """Reshape ``x`` so ``axis`` is split into (n_blocks, block) trailing dims.
+
+    Returns (blocked array with shape (..., n_blocks, block), inverse fn).
+    """
+    axis = axis % x.ndim
+    x = jnp.moveaxis(x, axis, -1)
+    shp = x.shape
+    if shp[-1] % block != 0:
+        raise ValueError(f"axis length {shp[-1]} not divisible by block {block}")
+    xb = x.reshape(*shp[:-1], shp[-1] // block, block)
+
+    def un_block(yb: jnp.ndarray) -> jnp.ndarray:
+        y = yb.reshape(*shp)
+        return jnp.moveaxis(y, -1, axis)
+
+    return xb, un_block
+
+
+def nvfp4_quant(x: jnp.ndarray, axis: int = -1, block: int = NVFP4_BLOCK):
+    """NVFP4 quantization φ(X) (Eq. 1): per-block E4M3 scale + E2M1 codes.
+
+    Returns ``(q, s)`` where ``q`` holds the *decoded* E2M1 values (shape of
+    ``x``) and ``s`` the E4M3-rounded scales with shape
+    ``x.shape`` with ``axis`` replaced by ``len/block``.
+    Zero blocks get scale 1 so dequantization is exact.
+    """
+    xb, un_block = _to_blocks(x, block, axis)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    raw = amax / E2M1_MAX
+    s = e4m3_round(raw)
+    s = jnp.where(s > 0, s, 1.0)  # all-zero (or fully underflowed) blocks
+    qb = e2m1_round(xb / s[..., None])
+    return un_block(qb), s
+
+
+def nvfp4_dequant(q: jnp.ndarray, s: jnp.ndarray, axis: int = -1, block: int = NVFP4_BLOCK):
+    """φ⁻¹(X̂, s) (Eq. 2): multiply decoded codes by their block scale."""
+    qb, un_block = _to_blocks(q, block, axis)
+    return un_block(qb * s[..., None])
+
+
+def mxfp4_quant(x: jnp.ndarray, axis: int = -1, block: int = MXFP4_BLOCK):
+    """MXFP4 quantization: per-block E8M0 (power-of-two) scale + E2M1 codes."""
+    xb, un_block = _to_blocks(x, block, axis)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    s = e8m0_round_scale(amax)
+    qb = e2m1_round(xb / s[..., None])
+    return un_block(qb), s
+
+
+def fake_quant(x: jnp.ndarray, axis: int = -1, block: int = NVFP4_BLOCK) -> jnp.ndarray:
+    """φ⁻¹(φ(X)) — the QAT fake-quantization operator (Eq. 6), no STE.
+
+    Pure function of ``x``; gradients flow through the rounding (which is
+    piecewise constant => zero almost everywhere). Use :func:`fake_quant_ste`
+    inside training graphs.
+    """
+    q, s = nvfp4_quant(x, axis=axis, block=block)
+    return nvfp4_dequant(q, s, axis=axis, block=block)
+
+
+def fake_quant_ste(x: jnp.ndarray, axis: int = -1, block: int = NVFP4_BLOCK) -> jnp.ndarray:
+    """Fake quantization with a straight-through estimator (Eq. 7).
+
+    Forward value is ``fake_quant(x)``; the backward pass sees identity.
+    """
+    return x + jax.lax.stop_gradient(fake_quant(x, axis=axis, block=block) - x)
+
+
+def two_level_quant_p(p: jnp.ndarray, axis: int = -1, block: int = NVFP4_BLOCK) -> jnp.ndarray:
+    """SageAttention3 two-level fake quantization of the probability matrix.
+
+    Each row of ``P`` (values in [0, 1], row = last axis before blocking is
+    the key axis) is rescaled so its maximum hits ``448 * 6`` — the largest
+    value an (E4M3 scale × E2M1 element) pair can express — then NVFP4
+    fake-quantized, then scaled back. This recovers the dynamic range FP4
+    would otherwise waste on [0, 1] inputs (§2.1).
+    """
+    rmax = jnp.max(p, axis=axis, keepdims=True)
+    factor = jnp.where(rmax > 0, TWO_LEVEL_RMAX / rmax, 1.0)
+    return fake_quant(p * factor, axis=axis, block=block) / factor
+
+
+# --------------------------------------------------------------------------
+# Packed storage helpers (build-time mirrors of rust/src/formats)
+# --------------------------------------------------------------------------
+
+
+def pack_e2m1(codes: np.ndarray) -> np.ndarray:
+    """Pack uint8 4-bit E2M1 codes pairwise into bytes (low nibble first)."""
+    flat = np.asarray(codes, np.uint8).reshape(-1)
+    if flat.size % 2 != 0:
+        flat = np.concatenate([flat, np.zeros(1, np.uint8)])
+    return (flat[0::2] | (flat[1::2] << 4)).astype(np.uint8)
+
+
+def unpack_e2m1(packed: np.ndarray, n: int) -> np.ndarray:
+    """Inverse of :func:`pack_e2m1`; returns ``n`` 4-bit codes."""
+    p = np.asarray(packed, np.uint8)
+    lo = p & 0xF
+    hi = p >> 4
+    out = np.empty(p.size * 2, np.uint8)
+    out[0::2] = lo
+    out[1::2] = hi
+    return out[:n]
+
+
+def e2m1_decode_code(code: np.ndarray) -> np.ndarray:
+    """Decode 4-bit E2M1 codes (sign<<3 | mag) to float32 values."""
+    code = np.asarray(code, np.uint8)
+    mag = E2M1_VALUES[code & 0x7]
+    return np.where(code & 0x8, -mag, mag).astype(np.float32)
+
+
+def e4m3_encode(x: np.ndarray) -> np.ndarray:
+    """Encode f32 to the nearest E4M3 byte (sign<<7 | code), numpy-side."""
+    x = np.asarray(x, np.float32)
+    mag = _round_to_lattice_np(np.abs(x), E4M3_VALUES, _E4M3_MID)
+    code = np.searchsorted(E4M3_VALUES, mag).astype(np.uint8)
+    sign = (x < 0).astype(np.uint8)
+    return (sign << 7) | code
+
+
+def e4m3_decode(byte: np.ndarray) -> np.ndarray:
+    """Decode E4M3 bytes (sign<<7 | code) to f32. Code 0x7F treated as NaN."""
+    byte = np.asarray(byte, np.uint8)
+    code = byte & 0x7F
+    mag = np.where(code == 0x7F, np.nan, E4M3_VALUES[np.minimum(code, 0x7E)])
+    return np.where(byte & 0x80, -mag, mag).astype(np.float32)

@@ -1,0 +1,347 @@
+"""Pure-jnp correctness oracles for the Attn-QAT kernels.
+
+Two levels of reference:
+
+1. ``naive_*`` — the mathematical definition (materialise S and P), used to
+   validate the tiled implementations.
+2. ``flash_*`` — tile-exact replicas of Algorithms 1–3 written with python
+   loops over tiles. The Pallas kernels must match these **bit-for-bit**
+   (same op order, same fake-quant placement); pytest enforces it.
+
+All functions operate on unbatched ``(N, d)`` tensors; batching is added by
+``vmap`` at the call sites (and by the grid in the Pallas kernels).
+
+Quantization-axis convention (matches FP4MM's micro-scaling layout, which
+scales along the **contraction** dimension):
+  * ``Q``, ``K`` — blocks along the head dimension ``d`` (contraction of QKᵀ)
+  * ``P``       — blocks along the key axis (contraction of P·V)
+  * ``V``       — blocks along the token/key axis (contraction of P·V)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import nvfp4
+
+NEG_INF = -1e30  # finite -inf stand-in: keeps exp()/max() NaN-free on tiles
+
+
+@dataclass(frozen=True)
+class QatConfig:
+    """Variant switches for the attention forward/backward (paper §2.3, §3.2).
+
+    The named presets used across the repo:
+
+    ===================  ============================================================
+    ``f32``              no quantization anywhere (the paper's "BF16" baseline)
+    ``fp4``              fake-quant fwd, *stock* FlashAttention bwd ("drop-in", unstable)
+    ``qat``              Attn-QAT: fake-quant fwd + matched bwd (Alg. 2 + Alg. 3)
+    ``qat_smoothk``      qat + K smoothing (Table 2 Exp. 5)
+    ``qat_twolevel``     qat + two-level P quantization (Table 2 Exp. 6)
+    ``qat_no_o_prime``   qat w/o the high-precision O' in bwd (Table 2 Exp. 7)
+    ``qat_no_fq_p``      qat w/o fake-quant of recomputed P in bwd (Table 2 Exp. 8)
+    ``sage3``            inference-only SageAttention3 emulation (K/Q smoothing +
+                         two-level P; no bwd)
+    ===================  ============================================================
+    """
+
+    quantize: bool = True          # fake-quantize Q/K/V/P in the forward
+    smooth_k: bool = False         # subtract the global key mean before φ(K)
+    smooth_q: bool = False         # per-tile Q smoothing + high-prec ΔS fixup
+    two_level_p: bool = False      # SageAttention3 two-level quantization of P
+    # Backward switches (the paper's two key fixes):
+    fq_p_bwd: bool = True          # Fix A: fake-quant the recomputed P (Alg.3 l.11)
+    high_prec_o: bool = True       # Fix B: D = rowsum(dO ⊙ O') (Alg.3 l.3)
+    fq_inputs_bwd: bool = True     # bwd uses Q^F/K^F/V^F (False = stock FA bwd)
+    causal: bool = False
+    block_q: int = 64
+    block_k: int = 64
+
+
+PRESETS = {
+    "f32": QatConfig(quantize=False),
+    "fp4": QatConfig(fq_p_bwd=False, high_prec_o=False, fq_inputs_bwd=False),
+    "qat": QatConfig(),
+    "qat_smoothk": QatConfig(smooth_k=True),
+    "qat_twolevel": QatConfig(two_level_p=True),
+    "qat_no_o_prime": QatConfig(high_prec_o=False),
+    "qat_no_fq_p": QatConfig(fq_p_bwd=False),
+    "sage3": QatConfig(smooth_k=True, smooth_q=True, two_level_p=True),
+}
+
+
+def preset(name: str, causal: bool = False, block_q: int = 64, block_k: int = 64) -> QatConfig:
+    """Look up a preset and apply the run-time shape knobs."""
+    import dataclasses
+
+    return dataclasses.replace(
+        PRESETS[name], causal=causal, block_q=block_q, block_k=block_k
+    )
+
+
+# --------------------------------------------------------------------------
+# Smoothing + fake-quant preprocessing (shared by ref / pallas / custom_vjp)
+# --------------------------------------------------------------------------
+
+
+def preprocess_qkv(q, k, v, cfg: QatConfig):
+    """Apply smoothing + fake quantization to Q/K/V per the variant.
+
+    Returns ``(qf, kf, vf, dsq)`` where ``dsq`` is the high-precision
+    per-(q-tile) mean vector ``q̄`` needed for the smooth-Q ΔS fixup
+    (``None`` unless ``cfg.smooth_q``).
+
+    K smoothing subtracts the global key mean ``k̄`` (Eq. 4). The dropped
+    rank-1 term ``Q k̄ᵀ`` is constant per row of S and cancels in softmax,
+    so no fixup is needed — this is why the paper ablates Smooth-K only.
+    """
+    dsq = None
+    if cfg.smooth_k:
+        k = k - jnp.mean(k, axis=0, keepdims=True)
+    if cfg.smooth_q:
+        # γ(Q_i) = Q_i - mean(Q_i) per query tile; S gets the high-precision
+        # correction ΔS_ij = q̄_i γ(K_j)ᵀ added back after the FP4 matmul.
+        nq = q.shape[0]
+        bq = cfg.block_q
+        means = []
+        rows = []
+        for i0 in range(0, nq, bq):
+            tile = q[i0 : i0 + bq]
+            mu = jnp.mean(tile, axis=0, keepdims=True)
+            means.append(mu)
+            rows.append(tile - mu)
+        q = jnp.concatenate(rows, axis=0)
+        dsq = jnp.concatenate(means, axis=0)  # (Tq, d)
+    if cfg.quantize:
+        qf = nvfp4.fake_quant(q, axis=-1)
+        kf = nvfp4.fake_quant(k, axis=-1)
+        vf = nvfp4.fake_quant(v, axis=0)
+    else:
+        qf, kf, vf = q, k, v
+    return qf, kf, vf, dsq
+
+
+def quantize_p(p, cfg: QatConfig):
+    """Fake-quantize a probability tile along the key axis per the variant."""
+    if not cfg.quantize:
+        return p
+    if cfg.two_level_p:
+        return nvfp4.two_level_quant_p(p, axis=-1)
+    return nvfp4.fake_quant(p, axis=-1)
+
+
+def _causal_mask(nq: int, nk: int, i0: int, j0: int, bq: int, bk: int):
+    """Mask for block (i0, j0): True where the position is attendable.
+
+    Causality is defined on absolute positions assuming aligned ends
+    (query i attends keys j with j <= i + (nk - nq)), the standard
+    convention for self-attention / decode.
+    """
+    qi = i0 + jnp.arange(bq)[:, None] + (nk - nq)
+    kj = j0 + jnp.arange(bk)[None, :]
+    return kj <= qi
+
+
+# --------------------------------------------------------------------------
+# Level-1 oracle: naive attention
+# --------------------------------------------------------------------------
+
+
+def naive_attention(q, k, v, cfg: QatConfig):
+    """Materialised attention with the variant's fake quantization.
+
+    Returns ``(o, o_prime, lse)``: the (fake-quantized-path) output, the
+    high-precision-P output O' (Alg. 2 line 13), and the row logsumexp L.
+    """
+    nq, d = q.shape
+    nk = k.shape[0]
+    qf, kf, vf, dsq = preprocess_qkv(q, k, v, cfg)
+    s = qf @ kf.T
+    if dsq is not None:
+        # ΔS fixup, computed per query tile in high precision.
+        bq = cfg.block_q
+        fix_rows = []
+        for t in range(dsq.shape[0]):
+            rows = min(bq, nq - t * bq)
+            fix_rows.append(jnp.broadcast_to(dsq[t] @ kf.T, (rows, nk)))
+        s = s + jnp.concatenate(fix_rows, axis=0)
+    s = s / jnp.sqrt(jnp.float32(d))
+    if cfg.causal:
+        mask = _causal_mask(nq, nk, 0, 0, nq, nk)
+        s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)  # unnormalised, rowmax == 1 — matches Alg. 1/2 P̃
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    pf = quantize_p(p, cfg)
+    o = (pf @ vf) / l
+    o_prime = (p @ vf) / l
+    lse = (m + jnp.log(l)).squeeze(-1)
+    return o, o_prime, lse
+
+
+# --------------------------------------------------------------------------
+# Level-2 oracle: tiled flash forward (Algorithms 1 & 2)
+# --------------------------------------------------------------------------
+
+
+def flash_forward(q, k, v, cfg: QatConfig):
+    """Tile-exact replica of Alg. 2 (training forward).
+
+    Equals Alg. 1 (inference) when the O'/L outputs are ignored — the
+    arithmetic on the O path is identical because FP4MM(Â, ŝ_A, B̂, ŝ_B)
+    ≡ MM(φ⁻¹(φ(A)), φ⁻¹(φ(B))) with f32 accumulation (Eq. 6).
+
+    A deliberate subtlety replicated from Alg. 1/2: ``P̃`` is fake-quantized
+    **pre-normalisation** (its row maximum is exp(0) = 1), and ``l``
+    accumulates the *unquantized* rowsum (line 11) while the O accumulator
+    consumes the quantized ``P̃^F`` (line 12).
+    """
+    nq, d = q.shape
+    nk = k.shape[0]
+    bq, bk = cfg.block_q, cfg.block_k
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    qf, kf, vf, dsq = preprocess_qkv(q, k, v, cfg)
+
+    o_rows, op_rows, l_rows = [], [], []
+    for ti, i0 in enumerate(range(0, nq, bq)):
+        qi = qf[i0 : i0 + bq]
+        m_i = jnp.full((qi.shape[0],), NEG_INF, jnp.float32)
+        l_i = jnp.zeros((qi.shape[0],), jnp.float32)
+        acc = jnp.zeros((qi.shape[0], d), jnp.float32)
+        acc_hp = jnp.zeros((qi.shape[0], d), jnp.float32)
+        for j0 in range(0, nk, bk):
+            kj = kf[j0 : j0 + bk]
+            vj = vf[j0 : j0 + bk]
+            s = qi @ kj.T
+            if dsq is not None:
+                s = s + jnp.broadcast_to(dsq[ti] @ kj.T, s.shape)
+            s = s * scale
+            if cfg.causal:
+                mask = _causal_mask(nq, nk, i0, j0, qi.shape[0], kj.shape[0])
+                s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m_i - m_new)
+            p = jnp.exp(s - m_new[:, None])
+            pf = quantize_p(p, cfg)
+            l_i = alpha * l_i + jnp.sum(p, axis=-1)
+            m_i = m_new
+            acc = alpha[:, None] * acc + pf @ vj
+            acc_hp = alpha[:, None] * acc_hp + p @ vj
+        o_rows.append(acc / l_i[:, None])
+        op_rows.append(acc_hp / l_i[:, None])
+        l_rows.append(m_i + jnp.log(l_i))
+    return (
+        jnp.concatenate(o_rows, axis=0),
+        jnp.concatenate(op_rows, axis=0),
+        jnp.concatenate(l_rows, axis=0),
+    )
+
+
+# --------------------------------------------------------------------------
+# Level-2 oracle: tiled flash backward (Algorithm 3)
+# --------------------------------------------------------------------------
+
+
+def flash_backward(q, k, v, o, o_prime, lse, do, cfg: QatConfig):
+    """Tile-exact replica of Alg. 3 with the ablation switches.
+
+    * ``cfg.high_prec_o``   — D = rowsum(dO ⊙ O′) vs rowsum(dO ⊙ O) (Fix B)
+    * ``cfg.fq_p_bwd``      — fake-quant the recomputed P before dV (Fix A)
+    * ``cfg.fq_inputs_bwd`` — recompute S from Q^F/K^F and propagate through
+      V^F (True) vs raw Q/K/V (False; combined with the two flags above this
+      is the "drop-in" stock-FA backward the paper shows explodes)
+
+    Gradients are with respect to the *raw* q/k/v via the straight-through
+    estimator (Eq. 7): dQ ≈ dQ^F etc.
+    """
+    nq, d = q.shape
+    nk = k.shape[0]
+    bq, bk = cfg.block_q, cfg.block_k
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    if cfg.fq_inputs_bwd:
+        qb, kb, vb, dsq = preprocess_qkv(q, k, v, cfg)
+    else:
+        qb, kb, vb, dsq = q, k, v, None
+
+    d_vec = jnp.sum(do * (o_prime if cfg.high_prec_o else o), axis=-1)  # Alg.3 l.3
+
+    dq = jnp.zeros_like(qb)
+    dk = jnp.zeros_like(kb)
+    dv = jnp.zeros_like(vb)
+    for j0 in range(0, nk, bk):
+        kj = kb[j0 : j0 + bk]
+        vj = vb[j0 : j0 + bk]
+        dkj = jnp.zeros_like(kj)
+        dvj = jnp.zeros_like(vj)
+        for ti, i0 in enumerate(range(0, nq, bq)):
+            qi = qb[i0 : i0 + bq]
+            doi = do[i0 : i0 + bq]
+            s = qi @ kj.T
+            if dsq is not None:
+                s = s + jnp.broadcast_to(dsq[ti] @ kj.T, s.shape)
+            s = s * scale
+            if cfg.causal:
+                mask = _causal_mask(nq, nk, i0, j0, qi.shape[0], kj.shape[0])
+                s = jnp.where(mask, s, NEG_INF)
+            p = jnp.exp(s - lse[i0 : i0 + bq, None])  # normalised probabilities
+            pf = quantize_p(p, cfg) if cfg.fq_p_bwd else p  # Alg.3 l.11 (Fix A)
+            dvj = dvj + pf.T @ doi  # Alg.3 l.12
+            dp = doi @ vj.T  # Alg.3 l.13
+            ds = p * (dp - d_vec[i0 : i0 + bq, None]) * scale  # Alg.3 l.14 (hi-prec P)
+            dq = dq.at[i0 : i0 + bq].add(ds @ kj)  # Alg.3 l.15
+            dkj = dkj + ds.T @ qi  # Alg.3 l.16
+        dk = dk.at[j0 : j0 + bk].add(dkj)
+        dv = dv.at[j0 : j0 + bk].add(dvj)
+    return dq, dk, dv
+
+
+# --------------------------------------------------------------------------
+# Autodiff oracle for the full QAT gradient (used to validate Alg. 3)
+# --------------------------------------------------------------------------
+
+
+def qat_loss_grads_autodiff(q, k, v, do, cfg: QatConfig):
+    """Oracle gradients: differentiate <naive fake-quant attention, do>.
+
+    Builds the *mathematical* function the STE pretends we differentiate:
+    attention over fake-quantized inputs where every φ⁻¹(φ(·)) is replaced
+    by identity in the backward (STE), with the probability fake-quant also
+    handled by STE. Under exact arithmetic this equals Alg. 3 with both
+    fixes enabled; pytest checks the match to fp tolerance.
+    """
+
+    def ste(x, axis):
+        if not cfg.quantize:
+            return x
+        return x + jax.lax.stop_gradient(nvfp4.fake_quant(x, axis=axis) - x)
+
+    def f(q, k, v):
+        d = q.shape[-1]
+        kk = k - jnp.mean(k, axis=0, keepdims=True) if cfg.smooth_k else k
+        if cfg.smooth_k:
+            # STE through the smoothing too: value path uses smoothed K,
+            # gradient path is identity (matches Alg.3, which recomputes S
+            # from the saved K^F and never differentiates the mean).
+            kk = k + jax.lax.stop_gradient(kk - k)
+        qf, kf, vf = ste(q, -1), ste(kk, -1), ste(v, 0)
+        s = (qf @ kf.T) / jnp.sqrt(jnp.float32(d))
+        if cfg.causal:
+            mask = _causal_mask(q.shape[0], k.shape[0], 0, 0, q.shape[0], k.shape[0])
+            s = jnp.where(mask, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        if cfg.quantize:
+            if cfg.two_level_p:
+                pf = p + jax.lax.stop_gradient(nvfp4.two_level_quant_p(p, axis=-1) - p)
+            else:
+                pf = ste(p, -1)
+        else:
+            pf = p
+        return pf @ vf
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(do)

@@ -1,0 +1,333 @@
+"""L2 models: transformer LM and the diffusion-proxy rectified-flow model.
+
+Both models route *all* attention through :mod:`compile.attention`, so the
+precision variant (f32 / fp4 / qat / ablations — see ``ref.PRESETS``) is a
+constructor argument and the rest of the network stays in high precision,
+exactly as in the paper ("all non-attention components remain in high
+precision", §3.1).
+
+Parameters are a flat ``dict[str, Array]`` with **stacked per-layer
+weights** (leading axis = layer) consumed by ``lax.scan``: the artifact
+interface stays a fixed, small, ordered list of named tensors regardless of
+depth, and the lowered HLO stays compact. Ordering = sorted key order —
+mirrored by the Rust runtime via each artifact's metadata JSON.
+
+Model sizes (DESIGN.md §2): byte-level vocab (V=256) LMs at tiny/small/base
+plus a "large" (~110M) config for real hardware; diffusion-proxy models are
+time-conditioned non-causal transformers over (frames × latent-dim) synthetic
+video latents with a rectified-flow objective (Wan-2.1 stand-ins).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention
+from .kernels.ref import QatConfig, preset
+
+# --------------------------------------------------------------------------
+# Configs
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    """Decoder-only byte-level transformer."""
+
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    seq_len: int = 256
+    mlp_mult: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+@dataclass(frozen=True)
+class DiffusionConfig:
+    """Time-conditioned non-causal transformer over video latents."""
+
+    latent_dim: int = 16
+    frames: int = 32
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    mlp_mult: int = 4
+    time_feats: int = 32  # sinusoidal time-embedding features
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+LM_SIZES = {
+    # tiny: smoke tests + the pallas-impl train-step artifact
+    "tiny": LMConfig(d_model=64, n_layers=2, n_heads=2, seq_len=64),
+    # small: Table 2 / Table 4-"Qwen3-14B" stand-in (~1M params)
+    "small": LMConfig(d_model=128, n_layers=4, n_heads=4, seq_len=256),
+    # base: Table 4-"Llama-70B" stand-in (~6.5M params)
+    "base": LMConfig(d_model=256, n_layers=8, n_heads=8, seq_len=256),
+    # large: ~110M config for real hardware (not run by the CPU suite)
+    "large": LMConfig(d_model=768, n_layers=12, n_heads=12, seq_len=512),
+}
+
+DIFF_SIZES = {
+    "tiny": DiffusionConfig(d_model=64, n_layers=2, n_heads=2, frames=16),
+    # small: Wan-2.1-1.3B stand-in (Table 2)
+    "small": DiffusionConfig(d_model=128, n_layers=4, n_heads=4, frames=32),
+    # base: Wan-2.1-14B stand-in (Table 1)
+    "base": DiffusionConfig(d_model=256, n_layers=6, n_heads=8, frames=32),
+}
+
+
+# --------------------------------------------------------------------------
+# Shared transformer block (stacked params + lax.scan)
+# --------------------------------------------------------------------------
+
+
+def _layer_norm(x, w, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * w + b
+
+
+def block_param_shapes(d: int, mlp: int) -> dict:
+    """Per-layer (unstacked) parameter shapes of one pre-LN block."""
+    return {
+        "ln1_w": (d,), "ln1_b": (d,),
+        "wqkv": (d, 3 * d), "bqkv": (3 * d,),
+        "wo": (d, d), "bo": (d,),
+        "ln2_w": (d,), "ln2_b": (d,),
+        "win": (d, mlp * d), "bin": (mlp * d,),
+        "wout": (mlp * d, d), "bout": (d,),
+    }
+
+
+def _block(h, lp, n_heads: int, cfg: QatConfig, impl: str):
+    """One pre-LN transformer block; ``lp`` holds this layer's params."""
+    b, n, d = h.shape
+    hd = d // n_heads
+    x = _layer_norm(h, lp["ln1_w"], lp["ln1_b"])
+    qkv = x @ lp["wqkv"] + lp["bqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):  # (B, N, D) -> (B, H, N, hd)
+        return t.reshape(b, n, n_heads, hd).transpose(0, 2, 1, 3)
+
+    o = attention(heads(q), heads(k), heads(v), cfg, impl)  # the QAT hot-spot
+    o = o.transpose(0, 2, 1, 3).reshape(b, n, d)
+    h = h + o @ lp["wo"] + lp["bo"]
+    x = _layer_norm(h, lp["ln2_w"], lp["ln2_b"])
+    x = jax.nn.gelu(x @ lp["win"] + lp["bin"])
+    return h + x @ lp["wout"] + lp["bout"]
+
+
+def _scan_blocks(h, params, n_layers: int, n_heads: int, cfg: QatConfig, impl: str):
+    block_keys = sorted(block_param_shapes(1, 1).keys())
+    stacked = {k: params[k] for k in block_keys}
+
+    def body(h, lp):
+        return _block(h, lp, n_heads, cfg, impl), None
+
+    h, _ = jax.lax.scan(body, h, stacked, length=n_layers)
+    return h
+
+
+# --------------------------------------------------------------------------
+# Language model
+# --------------------------------------------------------------------------
+
+
+def lm_param_shapes(c: LMConfig) -> dict:
+    """Flat name -> shape map (stacked blocks), the artifact interface."""
+    d, mlp = c.d_model, c.mlp_mult
+    shapes = {k: (c.n_layers,) + s for k, s in block_param_shapes(d, mlp).items()}
+    shapes.update(
+        tok_emb=(c.vocab, d),
+        pos_emb=(c.seq_len, d),
+        lnf_w=(d,), lnf_b=(d,),
+        head=(d, c.vocab),
+    )
+    return shapes
+
+
+def lm_init(c: LMConfig, seed: jnp.ndarray) -> dict:
+    """GPT-2-style init, exported as its own artifact (seed -> params)."""
+    shapes = lm_param_shapes(c)
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name in sorted(shapes):
+        shp = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith(("_b", "bqkv", "bo", "bin", "bout")) or name in ("lnf_b",):
+            params[name] = jnp.zeros(shp, jnp.float32)
+        elif name.endswith("_w") or name in ("lnf_w",):
+            params[name] = jnp.ones(shp, jnp.float32)
+        else:
+            fan_in = shp[-2] if len(shp) >= 2 else shp[-1]
+            std = 0.02 if name in ("tok_emb", "pos_emb") else 1.0 / jnp.sqrt(fan_in)
+            params[name] = std * jax.random.normal(sub, shp, jnp.float32)
+    # zero-init residual-out projections: stabilises deep-ish stacks
+    params["wo"] = params["wo"] * 0.1
+    params["wout"] = params["wout"] * 0.1
+    return params
+
+
+def lm_logits(params: dict, tokens: jnp.ndarray, c: LMConfig, cfg: QatConfig, impl: str):
+    """Token logits. ``tokens (B, N) int32`` -> ``(B, N, V)``."""
+    n = tokens.shape[1]
+    h = params["tok_emb"][tokens] + params["pos_emb"][:n]
+    h = _scan_blocks(h, params, c.n_layers, c.n_heads, cfg, impl)
+    h = _layer_norm(h, params["lnf_w"], params["lnf_b"])
+    return h @ params["head"]
+
+
+def lm_loss(params, tokens, targets, loss_mask, c: LMConfig, cfg: QatConfig, impl: str):
+    """Mean masked cross-entropy (f32 log-softmax).
+
+    ``loss_mask`` weights each target position (1 = train on it); lets the
+    same graph serve LM pretraining (all ones) and SFT (answer-only masks).
+    """
+    logits = lm_logits(params, tokens, c, cfg, impl)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1).squeeze(-1)
+    total = jnp.sum(nll * loss_mask)
+    count = jnp.maximum(jnp.sum(loss_mask), 1.0)
+    return total / count
+
+
+def lm_seq_nll(params, tokens, targets, loss_mask, c: LMConfig, cfg: QatConfig, impl: str):
+    """Per-sequence (sum-NLL, token-count) — the eval-artifact core.
+
+    Supports perplexity (mask = all ones) and multiple-choice scoring
+    (mask = continuation region) with one compiled graph.
+    """
+    logits = lm_logits(params, tokens, c, cfg, impl)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1).squeeze(-1)
+    return jnp.sum(nll * loss_mask, axis=-1), jnp.sum(loss_mask, axis=-1)
+
+
+# ---- Serving graphs (per-layer, weights as explicit inputs) ---------------
+# The decode path splits the model so Rust can own the KV cache (NVFP4,
+# paged) and run attention natively on quantized KV; see rust/src/serve.
+
+
+def lm_embed_step(tok_emb, pos_emb, tokens, pos):
+    """(B,) token + (B,) position -> (B, D) hidden."""
+    return tok_emb[tokens] + pos_emb[pos]
+
+
+def lm_layer_pre(h, ln1_w, ln1_b, wqkv, bqkv):
+    """Pre-attention half of a block for one token: h (B, D) -> q,k,v (B, D)."""
+    x = _layer_norm(h, ln1_w, ln1_b)
+    qkv = x @ wqkv + bqkv
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    return q, k, v
+
+
+def lm_layer_post(h, attn_out, wo, bo, ln2_w, ln2_b, win, bin_, wout, bout):
+    """Post-attention half of a block for one token."""
+    h = h + attn_out @ wo + bo
+    x = _layer_norm(h, ln2_w, ln2_b)
+    x = jax.nn.gelu(x @ win + bin_)
+    return h + x @ wout + bout
+
+
+def lm_head_step(h, lnf_w, lnf_b, head):
+    """Final LN + unembedding for one token: (B, D) -> (B, V)."""
+    return _layer_norm(h, lnf_w, lnf_b) @ head
+
+
+# --------------------------------------------------------------------------
+# Diffusion-proxy model (rectified flow over synthetic video latents)
+# --------------------------------------------------------------------------
+
+
+def diff_param_shapes(c: DiffusionConfig) -> dict:
+    d, mlp = c.d_model, c.mlp_mult
+    shapes = {k: (c.n_layers,) + s for k, s in block_param_shapes(d, mlp).items()}
+    shapes.update(
+        in_w=(c.latent_dim, d), in_b=(d,),
+        t_w1=(2 * c.time_feats, d), t_b1=(d,),
+        t_w2=(d, d), t_b2=(d,),
+        pos_emb=(c.frames, d),
+        lnf_w=(d,), lnf_b=(d,),
+        out_w=(d, c.latent_dim), out_b=(c.latent_dim,),
+    )
+    return shapes
+
+
+def diff_init(c: DiffusionConfig, seed: jnp.ndarray) -> dict:
+    shapes = diff_param_shapes(c)
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name in sorted(shapes):
+        shp = shapes[name]
+        key, sub = jax.random.split(key)
+        if name.endswith("_b") or name in ("bqkv", "bo", "bin", "bout"):
+            params[name] = jnp.zeros(shp, jnp.float32)
+        elif name in ("ln1_w", "ln2_w", "lnf_w"):
+            params[name] = jnp.ones(shp, jnp.float32)
+        else:
+            fan_in = shp[-2] if len(shp) >= 2 else shp[-1]
+            std = 0.02 if name == "pos_emb" else 1.0 / jnp.sqrt(fan_in)
+            params[name] = std * jax.random.normal(sub, shp, jnp.float32)
+    params["wo"] = params["wo"] * 0.1
+    params["wout"] = params["wout"] * 0.1
+    params["out_w"] = params["out_w"] * 0.1
+    return params
+
+
+def _time_embed(t: jnp.ndarray, feats: int):
+    """Sinusoidal features of t ∈ [0, 1]: (B,) -> (B, 2·feats)."""
+    freqs = jnp.exp(jnp.linspace(0.0, jnp.log(1000.0), feats))
+    ang = t[:, None] * freqs[None, :] * jnp.pi
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def diff_velocity(params, x, t, c: DiffusionConfig, cfg: QatConfig, impl: str):
+    """Velocity field v(x, t). ``x (B, T, Dl)``, ``t (B,)`` -> ``(B, T, Dl)``."""
+    h = x @ params["in_w"] + params["in_b"] + params["pos_emb"][None, : x.shape[1]]
+    te = _time_embed(t, (params["t_w1"].shape[0]) // 2)
+    te = jax.nn.gelu(te @ params["t_w1"] + params["t_b1"])
+    te = te @ params["t_w2"] + params["t_b2"]
+    h = h + te[:, None, :]  # broadcast time conditioning over frames
+    h = _scan_blocks(h, params, c.n_layers, c.n_heads, cfg, impl)
+    h = _layer_norm(h, params["lnf_w"], params["lnf_b"])
+    return h @ params["out_w"] + params["out_b"]
+
+
+def diff_loss(params, x0, noise, t, c: DiffusionConfig, cfg: QatConfig, impl: str):
+    """Rectified-flow matching loss (the Wan-2.1 objective, §B.1).
+
+    ``x_t = (1−t)·x0 + t·x1`` with ``x1 = noise``; target velocity
+    ``x1 − x0``; all randomness (noise, t) supplied by the Rust data
+    pipeline so training is reproducible end to end.
+    """
+    t_b = t[:, None, None]
+    xt = (1.0 - t_b) * x0 + t_b * noise
+    v_target = noise - x0
+    v_pred = diff_velocity(params, xt, t, c, cfg, impl)
+    return jnp.mean((v_pred - v_target) ** 2)
+
+
+def diff_sample_step(params, x, t, dt, c: DiffusionConfig, cfg: QatConfig, impl: str):
+    """One Euler ODE step from noise (t=1) toward data (t=0): x ← x − dt·v."""
+    v = diff_velocity(params, x, t, c, cfg, impl)
+    return x - dt[:, None, None] * v
+
+
+__all__ = [
+    "LMConfig", "DiffusionConfig", "LM_SIZES", "DIFF_SIZES",
+    "lm_param_shapes", "lm_init", "lm_logits", "lm_loss", "lm_seq_nll",
+    "lm_embed_step", "lm_layer_pre", "lm_layer_post", "lm_head_step",
+    "diff_param_shapes", "diff_init", "diff_velocity", "diff_loss",
+    "diff_sample_step", "preset", "QatConfig",
+]

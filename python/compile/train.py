@@ -1,0 +1,150 @@
+"""L2 training graphs: AdamW, gradient clipping, train/eval steps.
+
+Every function here is lowered by ``aot.py`` into a self-contained HLO
+artifact whose inputs/outputs are **flat, name-sorted tensor lists** (the
+params dict flattens in sorted key order; optimizer state as ``m__<name>``
+/ ``v__<name>``). The Rust coordinator threads the state through repeated
+executions — python never runs at training time.
+
+Hyperparameters that the paper sweeps or schedules (learning rate) enter as
+scalar *inputs*; fixed ones (betas, weight decay, clip) are compile-time
+constants mirroring Appendix B (AdamW β₁=0.9 β₂=0.999, wd=0.01, global-norm
+clip 1.0).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .kernels.ref import QatConfig
+
+BETA1, BETA2, EPS = 0.9, 0.999, 1e-8
+WEIGHT_DECAY = 0.01
+CLIP_NORM = 1.0
+
+
+# --------------------------------------------------------------------------
+# AdamW on flat dict params
+# --------------------------------------------------------------------------
+
+
+def _decay_mask(name: str) -> bool:
+    """Apply weight decay to matrices only (skip LN scales, biases, embeds)."""
+    if name.startswith(("ln", "lnf", "b", "t_b", "in_b", "out_b")):
+        return False
+    if name in ("tok_emb", "pos_emb"):
+        return False
+    return True
+
+
+def adamw_init(params: dict) -> dict:
+    """Zeroed first/second moments, keyed ``m__<name>`` / ``v__<name>``."""
+    state = {}
+    for k, p in params.items():
+        state[f"m__{k}"] = jnp.zeros_like(p)
+        state[f"v__{k}"] = jnp.zeros_like(p)
+    return state
+
+
+def global_norm(grads: dict) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in grads.values()))
+
+
+def adamw_update(params: dict, grads: dict, opt: dict, step: jnp.ndarray, lr: jnp.ndarray):
+    """One AdamW step with global-norm clipping.
+
+    ``step`` is the 1-based iteration counter (f32 scalar, threaded through
+    the artifact I/O); returns (new_params, new_opt, grad_norm_preclip).
+    """
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, CLIP_NORM / (gnorm + 1e-12))
+    bc1 = 1.0 - BETA1**step
+    bc2 = 1.0 - BETA2**step
+    new_params, new_opt = {}, {}
+    for k, p in params.items():
+        g = grads[k] * scale
+        m = BETA1 * opt[f"m__{k}"] + (1.0 - BETA1) * g
+        v = BETA2 * opt[f"v__{k}"] + (1.0 - BETA2) * g * g
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + EPS)
+        if _decay_mask(k):
+            upd = upd + WEIGHT_DECAY * p
+        new_params[k] = p - lr * upd
+        new_opt[f"m__{k}"] = m
+        new_opt[f"v__{k}"] = v
+    return new_params, new_opt, gnorm
+
+
+# --------------------------------------------------------------------------
+# LM steps
+# --------------------------------------------------------------------------
+
+
+def lm_train_step(c: M.LMConfig, cfg: QatConfig, impl: str):
+    """Build ``(params, opt, step, lr, tokens, loss_mask) -> (params', opt', loss, gnorm)``.
+
+    ``tokens (B, N+1) int32``: position ``t`` predicts ``t+1``;
+    ``loss_mask (B, N)``: 1 where the target participates in the loss
+    (all-ones for continued pretraining, answer-spans for SFT — Table 3/4
+    share this graph).
+    """
+
+    def step_fn(params, opt, step, lr, tokens, loss_mask):
+        inp, tgt = tokens[:, :-1], tokens[:, 1:]
+
+        def loss_fn(p):
+            return M.lm_loss(p, inp, tgt, loss_mask, c, cfg, impl)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params, new_opt, gnorm = adamw_update(params, grads, opt, step, lr)
+        return new_params, new_opt, loss, gnorm
+
+    return step_fn
+
+
+def lm_eval_step(c: M.LMConfig, cfg: QatConfig, impl: str):
+    """Build ``(params, tokens, loss_mask) -> (sum_nll (B,), n_tok (B,))``."""
+
+    def eval_fn(params, tokens, loss_mask):
+        inp, tgt = tokens[:, :-1], tokens[:, 1:]
+        return M.lm_seq_nll(params, inp, tgt, loss_mask, c, cfg, impl)
+
+    return eval_fn
+
+
+# --------------------------------------------------------------------------
+# Diffusion steps
+# --------------------------------------------------------------------------
+
+
+def diff_train_step(c: M.DiffusionConfig, cfg: QatConfig, impl: str):
+    """Build ``(params, opt, step, lr, x0, noise, t) -> (params', opt', loss, gnorm)``."""
+
+    def step_fn(params, opt, step, lr, x0, noise, t):
+        def loss_fn(p):
+            return M.diff_loss(p, x0, noise, t, c, cfg, impl)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params, new_opt, gnorm = adamw_update(params, grads, opt, step, lr)
+        return new_params, new_opt, loss, gnorm
+
+    return step_fn
+
+
+def diff_eval_step(c: M.DiffusionConfig, cfg: QatConfig, impl: str):
+    """Build ``(params, x0, noise, t) -> loss`` (validation flow-matching loss)."""
+
+    def eval_fn(params, x0, noise, t):
+        return M.diff_loss(params, x0, noise, t, c, cfg, impl)
+
+    return eval_fn
+
+
+def diff_sampler_step(c: M.DiffusionConfig, cfg: QatConfig, impl: str):
+    """Build ``(params, x, t, dt) -> x'`` — one Euler ODE step (Rust drives)."""
+
+    def step_fn(params, x, t, dt):
+        return M.diff_sample_step(params, x, t, dt, c, cfg, impl)
+
+    return step_fn

@@ -1,0 +1,206 @@
+"""Attention kernel correctness: Pallas vs tile-exact refs vs naive oracle,
+Alg. 3 gradients vs autodiff-STE, and the paper's ablation behaviours."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile import attention as att
+from compile.kernels import ref
+
+F32 = np.float32
+
+
+def rand_qkv(rng, b, h, n, d):
+    return tuple(
+        jnp.asarray(rng.normal(size=(b, h, n, d)).astype(F32)) for _ in range(3)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Forward: pallas == tile-exact flash ref; flash ≈ naive
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", ["f32", "fp4", "qat", "qat_twolevel", "sage3"])
+@pytest.mark.parametrize("causal", [False, True])
+def test_pallas_matches_flash_ref(variant, causal):
+    if variant == "sage3" and causal:
+        pytest.skip("sage3 is inference-only, non-causal in the paper")
+    rng = np.random.default_rng(0)
+    b, h, n, d = 1, 2, 64, 32
+    q, k, v = rand_qkv(rng, b, h, n, d)
+    cfg = ref.preset(variant, causal=causal, block_q=16, block_k=16)
+    o_p, op_p, lse_p = att.attention_fwd_full(q, k, v, cfg, impl="pallas")
+    for head in range(h):
+        o_r, op_r, lse_r = ref.flash_forward(q[0, head], k[0, head], v[0, head], cfg)
+        np.testing.assert_allclose(np.asarray(o_p[0, head]), np.asarray(o_r), atol=2e-6)
+        np.testing.assert_allclose(np.asarray(op_p[0, head]), np.asarray(op_r), atol=2e-6)
+        np.testing.assert_allclose(np.asarray(lse_p[0, head]), np.asarray(lse_r), atol=2e-6)
+
+
+@pytest.mark.parametrize("variant", ["f32", "qat", "sage3"])
+def test_flash_ref_close_to_naive(variant):
+    # Tiled online-softmax quantization vs full-row quantization: equal for
+    # f32, equal up to FP4 noise otherwise.
+    rng = np.random.default_rng(1)
+    n, d = 64, 32
+    q = jnp.asarray(rng.normal(size=(n, d)).astype(F32))
+    k = jnp.asarray(rng.normal(size=(n, d)).astype(F32))
+    v = jnp.asarray(rng.normal(size=(n, d)).astype(F32))
+    cfg = ref.preset(variant, block_q=16, block_k=16)
+    o_f, _, lse_f = ref.flash_forward(q, k, v, cfg)
+    o_n, _, lse_n = ref.naive_attention(q, k, v, cfg)
+    tol = 1e-5 if variant == "f32" else 0.12
+    assert float(jnp.max(jnp.abs(o_f - o_n))) < tol
+    np.testing.assert_allclose(np.asarray(lse_f), np.asarray(lse_n), atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([32, 64, 96]),
+    d=st.sampled_from([16, 32, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fast_jnp_fwd_matches_naive_hypothesis(n, d, causal, seed):
+    # The fast batched path IS the naive oracle at full-matrix granularity.
+    rng = np.random.default_rng(seed)
+    q, k, v = rand_qkv(rng, 1, 1, n, d)
+    cfg = ref.preset("qat", causal=causal, block_q=16, block_k=16)
+    o, op, lse = att.attention_fwd_full(q, k, v, cfg, impl="jnp")
+    o_n, op_n, lse_n = ref.naive_attention(q[0, 0], k[0, 0], v[0, 0], cfg)
+    np.testing.assert_allclose(np.asarray(o[0, 0]), np.asarray(o_n), atol=3e-6)
+    np.testing.assert_allclose(np.asarray(op[0, 0]), np.asarray(op_n), atol=3e-6)
+
+
+def test_fwd_finite_with_extreme_inputs():
+    # Outlier-heavy inputs (the paper's motivation) must not produce NaNs.
+    rng = np.random.default_rng(2)
+    n, d = 64, 32
+    q = rng.normal(size=(1, 1, n, d)).astype(F32)
+    q[0, 0, 3, :] *= 100.0  # token outlier
+    q = jnp.asarray(q)
+    k = jnp.asarray(rng.normal(size=(1, 1, n, d)).astype(F32) * 50.0)
+    v = jnp.asarray(rng.normal(size=(1, 1, n, d)).astype(F32))
+    for variant in ["fp4", "sage3"]:
+        cfg = ref.preset(variant, block_q=16, block_k=16)
+        o, _, _ = att.attention_fwd_full(q, k, v, cfg, impl="jnp")
+        assert bool(jnp.all(jnp.isfinite(o))), variant
+
+
+# ---------------------------------------------------------------------------
+# Backward: Alg. 3 vs autodiff-STE oracle; pallas bwd vs ref bwd
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", ["f32", "qat", "qat_smoothk"])
+@pytest.mark.parametrize("causal", [False, True])
+def test_alg3_matches_autodiff_ste(variant, causal):
+    rng = np.random.default_rng(3)
+    n, d = 64, 32
+    q = jnp.asarray(rng.normal(size=(n, d)).astype(F32))
+    k = jnp.asarray(rng.normal(size=(n, d)).astype(F32))
+    v = jnp.asarray(rng.normal(size=(n, d)).astype(F32))
+    do = jnp.asarray(rng.normal(size=(n, d)).astype(F32))
+    cfg = ref.preset(variant, causal=causal, block_q=16, block_k=16)
+    o, op, lse = ref.naive_attention(q, k, v, cfg)
+    dq, dk, dv = ref.flash_backward(q, k, v, o, op, lse, do, cfg)
+    dq2, dk2, dv2 = ref.qat_loss_grads_autodiff(q, k, v, do, cfg)
+    np.testing.assert_allclose(np.asarray(dq), np.asarray(dq2), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dk2), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(dv), np.asarray(dv2), atol=3e-5)
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_custom_vjp_grads_match_ref_bwd(impl):
+    rng = np.random.default_rng(4)
+    b, h, n, d = 1, 2, 64, 32
+    q, k, v = rand_qkv(rng, b, h, n, d)
+    do = jnp.asarray(rng.normal(size=(h, n, d)).astype(F32))
+    cfg = ref.preset("qat", causal=True, block_q=16, block_k=16)
+    attn = att._make_attention(cfg, impl)
+    _, vjp = jax.vjp(attn, q[0], k[0], v[0])
+    dq, dk, dv = vjp(do)
+    for head in range(h):
+        o_r, op_r, lse_r = ref.flash_forward(q[0, head], k[0, head], v[0, head], cfg)
+        dq_r, dk_r, dv_r = ref.flash_backward(
+            q[0, head], k[0, head], v[0, head], o_r, op_r, lse_r, do[head], cfg
+        )
+        np.testing.assert_allclose(np.asarray(dq[head]), np.asarray(dq_r), atol=5e-5)
+        np.testing.assert_allclose(np.asarray(dk[head]), np.asarray(dk_r), atol=5e-5)
+        np.testing.assert_allclose(np.asarray(dv[head]), np.asarray(dv_r), atol=5e-5)
+
+
+def test_ablation_no_o_prime_changes_gradients():
+    # Exp. 7: dropping O' changes dQ/dK (the D term) but leaves dV intact.
+    rng = np.random.default_rng(5)
+    n, d = 64, 32
+    q = jnp.asarray(rng.normal(size=(n, d)).astype(F32))
+    k = jnp.asarray(rng.normal(size=(n, d)).astype(F32))
+    v = jnp.asarray(rng.normal(size=(n, d)).astype(F32))
+    do = jnp.asarray(rng.normal(size=(n, d)).astype(F32))
+    good = ref.preset("qat", block_q=16, block_k=16)
+    bad = ref.preset("qat_no_o_prime", block_q=16, block_k=16)
+    o, op, lse = ref.naive_attention(q, k, v, good)
+    dq_g, dk_g, dv_g = ref.flash_backward(q, k, v, o, op, lse, do, good)
+    dq_b, dk_b, dv_b = ref.flash_backward(q, k, v, o, op, lse, do, bad)
+    assert float(jnp.max(jnp.abs(dq_g - dq_b))) > 1e-5
+    assert float(jnp.max(jnp.abs(dk_g - dk_b))) > 1e-5
+    np.testing.assert_allclose(np.asarray(dv_g), np.asarray(dv_b), atol=1e-7)
+
+
+def test_ablation_no_fq_p_changes_dv_only():
+    # Exp. 8: un-quantized P in bwd perturbs dV (and only dV).
+    rng = np.random.default_rng(6)
+    n, d = 64, 32
+    q = jnp.asarray(rng.normal(size=(n, d)).astype(F32))
+    k = jnp.asarray(rng.normal(size=(n, d)).astype(F32))
+    v = jnp.asarray(rng.normal(size=(n, d)).astype(F32))
+    do = jnp.asarray(rng.normal(size=(n, d)).astype(F32))
+    good = ref.preset("qat", block_q=16, block_k=16)
+    bad = ref.preset("qat_no_fq_p", block_q=16, block_k=16)
+    o, op, lse = ref.naive_attention(q, k, v, good)
+    dq_g, dk_g, dv_g = ref.flash_backward(q, k, v, o, op, lse, do, good)
+    dq_b, dk_b, dv_b = ref.flash_backward(q, k, v, o, op, lse, do, bad)
+    np.testing.assert_allclose(np.asarray(dq_g), np.asarray(dq_b), atol=1e-7)
+    np.testing.assert_allclose(np.asarray(dk_g), np.asarray(dk_b), atol=1e-7)
+    assert float(jnp.max(jnp.abs(dv_g - dv_b))) > 1e-5
+
+
+def test_smooth_k_invariant_to_common_offset():
+    # The whole point of K smoothing: a shared K offset must (nearly)
+    # vanish before quantization.
+    rng = np.random.default_rng(7)
+    n, d = 64, 32
+    q = jnp.asarray(rng.normal(size=(1, 1, n, d)).astype(F32))
+    k0 = rng.normal(size=(1, 1, n, d)).astype(F32)
+    v = jnp.asarray(rng.normal(size=(1, 1, n, d)).astype(F32))
+    cfg = ref.preset("qat_smoothk", block_q=16, block_k=16)
+    o_base, _, _ = att.attention_fwd_full(q, jnp.asarray(k0), v, cfg, impl="jnp")
+    o_off, _, _ = att.attention_fwd_full(q, jnp.asarray(k0 + 7.0), v, cfg, impl="jnp")
+    np.testing.assert_allclose(np.asarray(o_base), np.asarray(o_off), atol=1e-5)
+
+
+def test_f32_variant_matches_plain_softmax_autodiff():
+    # With quantization off, the custom_vjp must equal jax's own gradient.
+    rng = np.random.default_rng(8)
+    b, h, n, d = 1, 1, 32, 16
+    q, k, v = rand_qkv(rng, b, h, n, d)
+    cfg = ref.preset("f32", causal=True, block_q=16, block_k=16)
+
+    def plain(q, k, v):
+        s = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(jnp.float32(d))
+        mask = jnp.tril(jnp.ones((n, n), bool))
+        s = jnp.where(mask, s, ref.NEG_INF)
+        return jnp.einsum("hqk,hkd->hqd", jax.nn.softmax(s, axis=-1), v)
+
+    attn = att._make_attention(cfg, "jnp")
+    do = jnp.asarray(rng.normal(size=(h, n, d)).astype(F32))
+    _, vjp_c = jax.vjp(attn, q[0], k[0], v[0])
+    _, vjp_p = jax.vjp(plain, q[0], k[0], v[0])
+    for g_c, g_p in zip(vjp_c(do), vjp_p(do)):
+        np.testing.assert_allclose(np.asarray(g_c), np.asarray(g_p), atol=1e-5)

@@ -1,0 +1,209 @@
+"""Model/train-graph tests: shapes, init statistics, loss behaviour under a
+few optimizer steps, masking semantics, sampler step, serve-path equality."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile import train as T
+from compile.kernels.ref import preset
+
+F32 = np.float32
+
+
+@pytest.fixture(scope="module")
+def lm_cfg():
+    return M.LM_SIZES["tiny"]
+
+
+@pytest.fixture(scope="module")
+def lm_params(lm_cfg):
+    return M.lm_init(lm_cfg, jnp.int32(0))
+
+
+def test_lm_param_shapes_match_init(lm_cfg, lm_params):
+    shapes = M.lm_param_shapes(lm_cfg)
+    assert set(shapes) == set(lm_params)
+    for k, s in shapes.items():
+        assert lm_params[k].shape == s, k
+
+
+def test_lm_init_statistics(lm_cfg, lm_params):
+    # LN scales at 1, biases at 0, matrices roughly fan-in scaled.
+    assert np.allclose(np.asarray(lm_params["ln1_w"]), 1.0)
+    assert np.allclose(np.asarray(lm_params["bqkv"]), 0.0)
+    wqkv = np.asarray(lm_params["wqkv"])
+    assert abs(wqkv.std() - 1.0 / np.sqrt(lm_cfg.d_model)) < 0.02
+
+
+def test_lm_logits_shape_and_initial_loss(lm_cfg, lm_params):
+    rng = np.random.default_rng(0)
+    b, n = 2, lm_cfg.seq_len
+    tokens = jnp.asarray(rng.integers(0, 256, (b, n)), jnp.int32)
+    cfg = preset("f32", causal=True, block_q=32, block_k=32)
+    logits = M.lm_logits(lm_params, tokens, lm_cfg, cfg, "jnp")
+    assert logits.shape == (b, n, lm_cfg.vocab)
+    mask = jnp.ones((b, n - 1), jnp.float32)
+    loss = M.lm_loss(lm_params, tokens[:, :-1], tokens[:, 1:], mask, lm_cfg, cfg, "jnp")
+    # Fresh init ≈ uniform over 256 bytes.
+    assert abs(float(loss) - np.log(256)) < 0.5
+
+
+@pytest.mark.parametrize("variant", ["f32", "qat"])
+def test_lm_train_step_decreases_loss(lm_cfg, variant):
+    params = M.lm_init(lm_cfg, jnp.int32(1))
+    cfg = preset(variant, causal=True, block_q=32, block_k=32)
+    step_fn = jax.jit(T.lm_train_step(lm_cfg, cfg, "jnp"))
+    opt = T.adamw_init(params)
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(97, 105, (4, lm_cfg.seq_len + 1)), jnp.int32)
+    mask = jnp.ones((4, lm_cfg.seq_len), jnp.float32)
+    losses = []
+    for i in range(8):
+        params, opt, loss, gnorm = step_fn(
+            params, opt, jnp.float32(i + 1), jnp.float32(3e-3), tokens, mask
+        )
+        assert np.isfinite(float(loss)) and np.isfinite(float(gnorm))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses  # memorises the fixed batch
+
+
+def test_loss_mask_zeroes_contributions(lm_cfg, lm_params):
+    rng = np.random.default_rng(2)
+    b, n = 2, lm_cfg.seq_len
+    tokens = jnp.asarray(rng.integers(0, 256, (b, n + 1)), jnp.int32)
+    cfg = preset("f32", causal=True, block_q=32, block_k=32)
+    ev = T.lm_eval_step(lm_cfg, cfg, "jnp")
+    full_nll, full_cnt = ev(lm_params, tokens, jnp.ones((b, n), jnp.float32))
+    half_mask = jnp.concatenate(
+        [jnp.ones((b, n // 2)), jnp.zeros((b, n - n // 2))], axis=1
+    ).astype(jnp.float32)
+    half_nll, half_cnt = ev(lm_params, tokens, half_mask)
+    assert np.all(np.asarray(half_cnt) == n // 2)
+    assert np.all(np.asarray(half_nll) < np.asarray(full_nll))
+
+
+def test_adamw_decay_mask():
+    assert T._decay_mask("wqkv")
+    assert T._decay_mask("head")
+    assert not T._decay_mask("ln1_w")
+    assert not T._decay_mask("bqkv")
+    assert not T._decay_mask("tok_emb")
+
+
+def test_grad_clip_bounds_update():
+    # A pathological gradient must be clipped to CLIP_NORM.
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    opt = T.adamw_init(params)
+    grads = {"w": jnp.full((4,), 1e6, jnp.float32)}
+    new_p, _, gnorm = T.adamw_update(params, grads, opt, jnp.float32(1), jnp.float32(0.1))
+    assert float(gnorm) > 1e6  # reported pre-clip
+    assert float(jnp.max(jnp.abs(new_p["w"] - params["w"]))) < 0.5
+
+
+# ---------------------------------------------------------------------------
+# Diffusion model
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def diff_cfg():
+    return M.DIFF_SIZES["tiny"]
+
+
+def test_diff_shapes_and_loss(diff_cfg):
+    params = M.diff_init(diff_cfg, jnp.int32(0))
+    rng = np.random.default_rng(3)
+    b = 3
+    x0 = jnp.asarray(rng.normal(size=(b, diff_cfg.frames, diff_cfg.latent_dim)).astype(F32))
+    noise = jnp.asarray(rng.normal(size=x0.shape).astype(F32))
+    t = jnp.asarray(rng.uniform(size=(b,)).astype(F32))
+    cfg = preset("f32", block_q=16, block_k=16)
+    v = M.diff_velocity(params, x0, t, diff_cfg, cfg, "jnp")
+    assert v.shape == x0.shape
+    loss = M.diff_loss(params, x0, noise, t, diff_cfg, cfg, "jnp")
+    assert np.isfinite(float(loss))
+
+
+def test_diff_train_step_decreases_loss(diff_cfg):
+    params = M.diff_init(diff_cfg, jnp.int32(1))
+    cfg = preset("qat", block_q=16, block_k=16)
+    step_fn = jax.jit(T.diff_train_step(diff_cfg, cfg, "jnp"))
+    opt = T.adamw_init(params)
+    rng = np.random.default_rng(4)
+    b = 4
+    x0 = jnp.asarray(rng.normal(size=(b, diff_cfg.frames, diff_cfg.latent_dim)).astype(F32))
+    noise = jnp.asarray(rng.normal(size=x0.shape).astype(F32))
+    t = jnp.asarray(rng.uniform(size=(b,)).astype(F32))
+    losses = []
+    for i in range(8):
+        params, opt, loss, _ = step_fn(
+            params, opt, jnp.float32(i + 1), jnp.float32(1e-2), x0, noise, t
+        )
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_sampler_step_moves_toward_velocity(diff_cfg):
+    params = M.diff_init(diff_cfg, jnp.int32(2))
+    rng = np.random.default_rng(5)
+    b = 2
+    x = jnp.asarray(rng.normal(size=(b, diff_cfg.frames, diff_cfg.latent_dim)).astype(F32))
+    t = jnp.full((b,), 0.9, jnp.float32)
+    dt = jnp.full((b,), 0.1, jnp.float32)
+    cfg = preset("f32", block_q=16, block_k=16)
+    v = M.diff_velocity(params, x, t, diff_cfg, cfg, "jnp")
+    x2 = M.diff_sample_step(params, x, t, dt, diff_cfg, cfg, "jnp")
+    np.testing.assert_allclose(np.asarray(x2), np.asarray(x - 0.1 * v), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Serve-path graphs == full forward
+# ---------------------------------------------------------------------------
+
+
+def test_serve_path_matches_full_forward(lm_cfg, lm_params):
+    """Running the per-layer decode graphs token by token with exact (f32)
+    attention must reproduce lm_logits (the serve decomposition is lossless
+    up to attention precision, which Rust then intentionally quantizes)."""
+    rng = np.random.default_rng(6)
+    n = 8
+    tokens = jnp.asarray(rng.integers(0, 256, (1, n)), jnp.int32)
+    cfg = preset("f32", causal=True, block_q=32, block_k=32)
+    want = M.lm_logits(lm_params, tokens, lm_cfg, cfg, "jnp")  # (1, n, V)
+
+    hd = lm_cfg.head_dim
+    h_layers_k = [[] for _ in range(lm_cfg.n_layers)]
+    h_layers_v = [[] for _ in range(lm_cfg.n_layers)]
+    got_last = None
+    for pos in range(n):
+        h = M.lm_embed_step(
+            lm_params["tok_emb"], lm_params["pos_emb"], tokens[:, pos], jnp.asarray([pos])
+        )
+        for l in range(lm_cfg.n_layers):
+            lw = {k: lm_params[k][l] for k in
+                  ["ln1_w", "ln1_b", "wqkv", "bqkv", "wo", "bo", "ln2_w", "ln2_b",
+                   "win", "bin", "wout", "bout"]}
+            q, k_, v_ = M.lm_layer_pre(h, lw["ln1_w"], lw["ln1_b"], lw["wqkv"], lw["bqkv"])
+            h_layers_k[l].append(k_)
+            h_layers_v[l].append(v_)
+            ks = jnp.stack(h_layers_k[l], axis=1)  # (1, t, D)
+            vs = jnp.stack(h_layers_v[l], axis=1)
+            outs = []
+            for head in range(lm_cfg.n_heads):
+                qh = q[:, head * hd:(head + 1) * hd]  # (1, hd)
+                kh = ks[:, :, head * hd:(head + 1) * hd][0]  # (t, hd)
+                vh = vs[:, :, head * hd:(head + 1) * hd][0]
+                s = (qh @ kh.T) / jnp.sqrt(jnp.float32(hd))
+                p = jax.nn.softmax(s, axis=-1)
+                outs.append(p @ vh)
+            attn = jnp.concatenate(outs, axis=-1)
+            h = M.lm_layer_post(h, attn, lw["wo"], lw["bo"], lw["ln2_w"], lw["ln2_b"],
+                                lw["win"], lw["bin"], lw["wout"], lw["bout"])
+        got_last = M.lm_head_step(h, lm_params["lnf_w"], lm_params["lnf_b"], lm_params["head"])
+        np.testing.assert_allclose(
+            np.asarray(got_last[0]), np.asarray(want[0, pos]), atol=2e-4
+        )

@@ -1,0 +1,61 @@
+//! Figure-5 bench: compiled attention artifact throughput per variant and
+//! shape (the measured half), plus the modeled RTX-5090 table.
+//!
+//! ```bash
+//! cargo bench --bench fig5_kernels
+//! ```
+
+use attn_qat::bench::{bench_units, Reporter};
+use attn_qat::config::Config;
+use attn_qat::perfmodel::{speedup, Hw, Kernel};
+use attn_qat::rng::Rng;
+use attn_qat::runtime::{Runtime, Value};
+use attn_qat::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&Runtime::default_dir())?;
+    let mut rep = Reporter::new("fig5_kernels");
+    let mut rng = Rng::new(5);
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let seqs: &[usize] = if quick { &[128, 256] } else { &[128, 256, 512, 1024] };
+    for &d in &[64usize, 128] {
+        for &n in seqs {
+            let (b, h) = (1usize, 4usize);
+            let numel = b * h * n * d;
+            let q = Tensor::new(vec![b, h, n, d], rng.normal_vec(numel, 0.0, 1.0))?;
+            let k = Tensor::new(vec![b, h, n, d], rng.normal_vec(numel, 0.0, 1.0))?;
+            let v = Tensor::new(vec![b, h, n, d], rng.normal_vec(numel, 0.0, 1.0))?;
+            for variant in ["f32", "fp4", "sage3"] {
+                let name = format!("attn_{variant}_s{n}_d{d}");
+                if rt.meta(&name).is_err() {
+                    continue;
+                }
+                let inputs = [Value::F32(q.clone()), Value::F32(k.clone()), Value::F32(v.clone())];
+                rt.run(&name, &inputs)?; // compile + warm
+                let flops = 4.0 * (b * h) as f64 * (n * n * d) as f64;
+                let iters = if n >= 1024 { 3 } else { 5 };
+                rep.push(bench_units(&name, 1, iters, flops, "flop", || {
+                    rt.run(&name, &inputs).expect("run");
+                }));
+            }
+        }
+    }
+    rep.save()?;
+
+    // Modeled RTX-5090 speedup shape (the paper's headline numbers).
+    let hw = Hw::default();
+    println!("\nmodeled RTX-5090 speedups (batch 16, 16 heads):");
+    println!("{:<18} {:>14} {:>14}", "shape", "QAT/Sage3", "QAT/FA2-BF16");
+    for d in [64usize, 128] {
+        for n in [1024usize, 4096, 16384] {
+            println!(
+                "hd={d:<4} seq={n:<6} {:>13.2}x {:>13.2}x",
+                speedup(Kernel::AttnQat, Kernel::Sage3, &hw, 16, 16, n, d),
+                speedup(Kernel::AttnQat, Kernel::Fa2Bf16, &hw, 16, 16, n, d)
+            );
+        }
+    }
+    // Also regenerate the results/ table via the experiment driver.
+    attn_qat::experiments::kernels::fig5(&rt, &Config::default())?;
+    Ok(())
+}

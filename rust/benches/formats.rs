@@ -1,0 +1,75 @@
+//! Numeric-format microbench: quantize / dequantize / fake-quant hot paths
+//! (the L3-side §Perf targets — these run on the KV-cache seal path and in
+//! the real-quant engine).
+
+use attn_qat::bench::{bench_units, Reporter};
+use attn_qat::formats::block::nvfp4_fake_quant_row;
+use attn_qat::formats::PackedNvfp4;
+use attn_qat::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rep = Reporter::new("formats");
+    let mut rng = Rng::new(1);
+    for &n in &[4096usize, 65536, 1 << 20] {
+        let x = rng.normal_vec(n, 0.0, 2.0);
+        let cols = 64;
+        let rows = n / cols;
+
+        rep.push(bench_units(
+            &format!("nvfp4_quantize_pack_{n}"),
+            2,
+            10,
+            n as f64,
+            "elem",
+            || {
+                let p = PackedNvfp4::quantize(&x, rows, cols).unwrap();
+                std::hint::black_box(p.memory_bytes());
+            },
+        ));
+
+        let packed = PackedNvfp4::quantize(&x, rows, cols)?;
+        rep.push(bench_units(
+            &format!("nvfp4_dequantize_{n}"),
+            2,
+            10,
+            n as f64,
+            "elem",
+            || {
+                std::hint::black_box(packed.dequantize().len());
+            },
+        ));
+
+        let mut row_buf = vec![0.0f32; cols];
+        rep.push(bench_units(
+            &format!("nvfp4_dequant_row_{n}"),
+            2,
+            10,
+            n as f64,
+            "elem",
+            || {
+                for r in 0..rows {
+                    packed.dequant_row_into(r, &mut row_buf);
+                }
+                std::hint::black_box(row_buf[0]);
+            },
+        ));
+
+        let mut y = x.clone();
+        rep.push(bench_units(
+            &format!("nvfp4_fake_quant_{n}"),
+            2,
+            10,
+            n as f64,
+            "elem",
+            || {
+                y.copy_from_slice(&x);
+                for row in y.chunks_mut(16) {
+                    nvfp4_fake_quant_row(row);
+                }
+                std::hint::black_box(y[0]);
+            },
+        ));
+    }
+    rep.save()?;
+    Ok(())
+}

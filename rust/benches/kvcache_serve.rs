@@ -1,0 +1,103 @@
+//! Serving-path bench: KV-cache append/gather hot loops and end-to-end
+//! decode throughput of the FP4-KV server on the tiny model.
+
+use attn_qat::bench::{bench_units, Reporter};
+use attn_qat::kvcache::PagedKvCache;
+use attn_qat::rng::Rng;
+use attn_qat::runtime::{Runtime, Value};
+use attn_qat::serve::{DecodeServer, Request};
+use attn_qat::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let mut rep = Reporter::new("kvcache_serve");
+    let mut rng = Rng::new(3);
+
+    // KV cache: append (with page sealing) and gather.
+    let d = 64;
+    let tokens = 512;
+    let kv: Vec<(Vec<f32>, Vec<f32>)> = (0..tokens)
+        .map(|_| (rng.normal_vec(d, 0.0, 1.0), rng.normal_vec(d, 0.0, 1.0)))
+        .collect();
+    rep.push(bench_units(
+        &format!("kv_append_seal_{tokens}tok_d{d}"),
+        1,
+        10,
+        tokens as f64,
+        "tok",
+        || {
+            let mut c = PagedKvCache::new(1, 1, d);
+            c.add_seq(1);
+            for (k, v) in &kv {
+                c.append(1, 0, 0, k, v).unwrap();
+            }
+            std::hint::black_box(c.seq_len(1));
+        },
+    ));
+
+    let mut cache = PagedKvCache::new(1, 1, d);
+    cache.add_seq(1);
+    for (k, v) in &kv {
+        cache.append(1, 0, 0, k, v)?;
+    }
+    rep.push(bench_units(
+        &format!("kv_gather_{tokens}tok_d{d}"),
+        1,
+        10,
+        tokens as f64,
+        "tok",
+        || {
+            let (k, _v) = cache.gather(1, 0, 0).unwrap();
+            std::hint::black_box(k.len());
+        },
+    ));
+
+    // Decode attention over the cache (1 query token).
+    let q = rng.normal_vec(d, 0.0, 1.0);
+    rep.push(bench_units(
+        &format!("kv_decode_attend_{tokens}tok_d{d}"),
+        1,
+        10,
+        1.0,
+        "tok",
+        || {
+            let (k, v) = cache.gather(1, 0, 0).unwrap();
+            let out = attn_qat::attention::flash::attend_f32(&q, &k, &v, 1, tokens, d, false);
+            std::hint::black_box(out.o[0]);
+        },
+    ));
+
+    // End-to-end decode server (needs core artifacts).
+    if let Ok(rt) = Runtime::new(&Runtime::default_dir()) {
+        if rt.meta("lm_embed_tiny").is_ok() {
+            let names = rt.meta("lm_init_tiny")?.param_names();
+            let params = rt.run("lm_init_tiny", &[Value::scalar_i32(1)])?;
+            let weights: Vec<(String, Tensor)> = names.into_iter().zip(params).collect();
+            // warmup/compile outside the measurement
+            {
+                let mut s = DecodeServer::new(&rt, "tiny", weights.clone())?;
+                s.submit(Request { id: 1, prompt: b"C:ab#".to_vec(), max_new_tokens: 2, temperature: 0.0 });
+                s.run()?;
+            }
+            let mut decoded = 0usize;
+            let r = bench_units("serve_decode_8req_x16tok_tiny", 0, 3, 0.0, "", || {
+                let mut s = DecodeServer::new(&rt, "tiny", weights.clone()).unwrap();
+                for i in 0..8 {
+                    s.submit(Request {
+                        id: i + 1,
+                        prompt: b"C:abcd#".to_vec(),
+                        max_new_tokens: 16,
+                        temperature: 0.0,
+                    });
+                }
+                s.run().unwrap();
+                decoded = s.stats.tokens_decoded;
+            });
+            let mut r = r;
+            r.units_per_iter = decoded as f64;
+            r.unit = "tok";
+            rep.push(r);
+        }
+    }
+    rep.save()?;
+    Ok(())
+}

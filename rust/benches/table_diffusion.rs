@@ -1,0 +1,80 @@
+//! Diffusion pipeline bench (the Table-1/2 cost drivers): per-variant
+//! train-step wall time (QAT overhead vs f32) and sampler-step time.
+
+use attn_qat::bench::{bench_units, Reporter};
+use attn_qat::coordinator::{LrSchedule, Trainer};
+use attn_qat::data::latents::LatentGen;
+use attn_qat::runtime::{Runtime, Value};
+use attn_qat::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&Runtime::default_dir())?;
+    let mut rep = Reporter::new("table_diffusion");
+    let size = std::env::var("SIZE").unwrap_or_else(|_| "small".to_string());
+    let variants: &[&str] = &["f32", "qat", "qat_smoothk", "qat_twolevel"];
+    for variant in variants {
+        let artifact = format!("diff_train_{variant}_{size}");
+        if rt.meta(&artifact).is_err() {
+            eprintln!("skipping {artifact} (export the exp artifact set)");
+            continue;
+        }
+        let meta = rt.meta(&artifact)?;
+        let batch = meta.usize_field("batch").unwrap();
+        let model = meta.raw.get("model").clone();
+        let frames = model.get("frames").as_usize().unwrap();
+        let dl = model.get("latent_dim").as_usize().unwrap();
+        let mut trainer = Trainer::new(
+            &rt,
+            &format!("diff_init_{size}"),
+            &artifact,
+            1,
+            LrSchedule::Constant(1e-3),
+        )?;
+        let mut gen = LatentGen::new(1, frames, dl);
+        let b = gen.next_batch(batch);
+        let vals = b.values().to_vec();
+        trainer.step(&vals)?; // warmup/compile
+        rep.push(bench_units(
+            &format!("diff_train_step_{variant}_{size}"),
+            1,
+            5,
+            batch as f64,
+            "clip",
+            || {
+                trainer.step(&vals).expect("step");
+            },
+        ));
+    }
+
+    // Sampler step per inference variant.
+    for variant in ["f32", "fp4", "sage3"] {
+        let artifact = format!("diff_sample_{variant}_{size}");
+        if rt.meta(&artifact).is_err() {
+            continue;
+        }
+        let meta = rt.meta(&artifact)?;
+        let batch = meta.usize_field("batch").unwrap();
+        let model = meta.raw.get("model").clone();
+        let frames = model.get("frames").as_usize().unwrap();
+        let dl = model.get("latent_dim").as_usize().unwrap();
+        let params = rt.run(&format!("diff_init_{size}"), &[Value::scalar_i32(1)])?;
+        let mut gen = LatentGen::new(2, frames, dl);
+        let mut inputs: Vec<Value> = params.into_iter().map(Value::F32).collect();
+        inputs.push(Value::F32(Tensor::new(vec![batch, frames, dl], gen.noise_batch(batch))?));
+        inputs.push(Value::F32(Tensor::new(vec![batch], vec![1.0; batch])?));
+        inputs.push(Value::F32(Tensor::new(vec![batch], vec![0.1; batch])?));
+        rt.run(&artifact, &inputs)?;
+        rep.push(bench_units(
+            &format!("diff_sample_step_{variant}_{size}"),
+            1,
+            5,
+            batch as f64,
+            "clip",
+            || {
+                rt.run(&artifact, &inputs).expect("sample");
+            },
+        ));
+    }
+    rep.save()?;
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! LLM train/eval-step bench (the Table-3/4 pipeline cost): per-variant
+//! train-step and eval-step wall time on the small model, plus coordinator
+//! overhead (literal round-trips vs artifact compute).
+
+use attn_qat::bench::{bench_units, Reporter};
+use attn_qat::coordinator::{LrSchedule, Trainer};
+use attn_qat::data::corpus::Corpus;
+use attn_qat::runtime::{Runtime, Value};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&Runtime::default_dir())?;
+    let mut rep = Reporter::new("table_llm");
+    let size = std::env::var("SIZE").unwrap_or_else(|_| "small".to_string());
+    for variant in ["f32", "qat"] {
+        let artifact = format!("lm_train_{variant}_{size}");
+        if rt.meta(&artifact).is_err() {
+            eprintln!("skipping {artifact} (export the exp artifact set)");
+            continue;
+        }
+        let meta = rt.meta(&artifact)?;
+        let batch = meta.usize_field("batch").unwrap();
+        let seq = meta.raw.get("model").get("seq_len").as_usize().unwrap();
+        let mut trainer = Trainer::new(
+            &rt,
+            &format!("lm_init_{size}"),
+            &artifact,
+            1,
+            LrSchedule::Constant(1e-3),
+        )?;
+        let mut corpus = Corpus::new(1);
+        let b = corpus.next_batch(batch, seq);
+        let batch_vals = vec![b.token_value(), b.mask_value()];
+        trainer.step(&batch_vals)?; // compile warmup
+        let toks = (batch * seq) as f64;
+        rep.push(bench_units(
+            &format!("lm_train_step_{variant}_{size}"),
+            1,
+            5,
+            toks,
+            "tok",
+            || {
+                trainer.step(&batch_vals).expect("step");
+            },
+        ));
+
+        // Eval step.
+        let eval_art = format!(
+            "lm_eval_{}_{size}",
+            if variant == "f32" { "f32" } else { "fp4" }
+        );
+        let params = trainer.state.params.clone();
+        let mut inputs: Vec<Value> = params.into_iter().map(Value::F32).collect();
+        inputs.push(b.token_value());
+        inputs.push(b.mask_value());
+        rt.run(&eval_art, &inputs)?;
+        rep.push(bench_units(
+            &format!("lm_eval_step_{}_{size}", if variant == "f32" { "f32" } else { "fp4" }),
+            1,
+            5,
+            toks,
+            "tok",
+            || {
+                rt.run(&eval_art, &inputs).expect("eval");
+            },
+        ));
+    }
+    rep.save()?;
+    Ok(())
+}

@@ -1,0 +1,337 @@
+//! Real-quant NVFP4 attention engines (single head).
+//!
+//! Numerics contract (pinned by `rust/tests/golden/attention_golden.json`,
+//! generated from the JAX oracle): identical to the fake-quant forward —
+//!
+//! * Q, K quantized along the head dimension (contraction of QKᵀ),
+//! * V quantized along the token axis (contraction of P·V),
+//! * P̃ = exp(S − rowmax) quantized per row along the key axis,
+//! * all matmuls accumulate in f32 over dequantized E2M1×E4M3 values —
+//!   exactly the FP4MM hardware semantics (§2.1).
+//!
+//! The inputs really are packed to 4-bit storage ([`PackedNvfp4`]) before
+//! being consumed: this is the paper's *inference* kernel (Alg. 1), and the
+//! Figure-4 "real quant" comparator for the fake-quant HLO path.
+
+use crate::formats::block::{nvfp4_fake_quant_row, NVFP4_BLOCK};
+use crate::formats::tensor4::PackedNvfp4;
+
+/// Attention output: `o (nq × d)` + per-row logsumexp.
+#[derive(Clone, Debug)]
+pub struct AttnOutput {
+    pub o: Vec<f32>,
+    pub lse: Vec<f32>,
+    pub nq: usize,
+    pub d: usize,
+}
+
+/// Pad `rows × cols` to a column count that's a multiple of 16 (zero fill).
+fn pad_cols(data: &[f32], rows: usize, cols: usize) -> (Vec<f32>, usize) {
+    let padded = cols.div_ceil(NVFP4_BLOCK) * NVFP4_BLOCK;
+    if padded == cols {
+        return (data.to_vec(), cols);
+    }
+    let mut out = vec![0.0f32; rows * padded];
+    for r in 0..rows {
+        out[r * padded..r * padded + cols].copy_from_slice(&data[r * cols..(r + 1) * cols]);
+    }
+    (out, padded)
+}
+
+/// Transpose `rows × cols` row-major.
+fn transpose(data: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = data[r * cols + c];
+        }
+    }
+    out
+}
+
+/// Quantize through real packed storage and hand back dequantized f32.
+///
+/// (Quantize → pack to 4-bit → unpack → dequantize; the round trip through
+/// [`PackedNvfp4`] is the point — it exercises the storage format.)
+fn through_fp4(data: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let (padded, pc) = pad_cols(data, rows, cols);
+    let packed = PackedNvfp4::quantize(&padded, rows, pc).expect("quantize");
+    let deq = packed.dequantize();
+    if pc == cols {
+        deq
+    } else {
+        let mut out = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            out[r * cols..(r + 1) * cols].copy_from_slice(&deq[r * pc..r * pc + cols]);
+        }
+        out
+    }
+}
+
+/// Core quantized attention with optional smoothing / two-level P.
+#[allow(clippy::too_many_arguments)]
+fn attend_quantized(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    causal: bool,
+    smooth: bool,
+    two_level_p: bool,
+    block_q: usize,
+) -> AttnOutput {
+    // --- preprocessing (Alg. 1 l.4 + SageAttention3 Eq. 4) ---------------
+    let mut k_in = k.to_vec();
+    let mut q_in = q.to_vec();
+    let mut q_means: Vec<f32> = Vec::new(); // per-tile q̄ (nq/block_q × d)
+    if smooth {
+        // K smoothing: subtract the global per-column key mean.
+        for c in 0..d {
+            let mean: f32 = (0..nk).map(|j| k[j * d + c]).sum::<f32>() / nk as f32;
+            for j in 0..nk {
+                k_in[j * d + c] -= mean;
+            }
+        }
+        // Q smoothing per query tile; means kept for the high-prec ΔS.
+        for i0 in (0..nq).step_by(block_q) {
+            let rows = block_q.min(nq - i0);
+            for c in 0..d {
+                let mean: f32 =
+                    (i0..i0 + rows).map(|i| q[i * d + c]).sum::<f32>() / rows as f32;
+                q_means.push(mean);
+                for i in i0..i0 + rows {
+                    q_in[i * d + c] -= mean;
+                }
+            }
+        }
+    }
+    let qf = through_fp4(&q_in, nq, d); // blocks along d
+    let kf = through_fp4(&k_in, nk, d); // blocks along d
+    // V: blocks along the token axis -> quantize the transpose.
+    let vt = transpose(v, nk, d);
+    let vft = through_fp4(&vt, d, nk);
+    let vf = transpose(&vft, d, nk);
+
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut o = vec![0.0f32; nq * d];
+    let mut lse = vec![0.0f32; nq];
+    let mut s_row = vec![0.0f32; nk];
+    let mut p_row = vec![0.0f32; nk.div_ceil(NVFP4_BLOCK) * NVFP4_BLOCK];
+
+    for i in 0..nq {
+        let qi = &qf[i * d..(i + 1) * d];
+        let tile = i / block_q;
+        let limit = if causal { (i + nk - nq + 1).min(nk) } else { nk };
+        let mut m = f32::NEG_INFINITY;
+        for j in 0..limit {
+            let kj = &kf[j * d..(j + 1) * d];
+            let mut acc = 0.0f32; // emulated FP4MM: f32 accumulate (l.8)
+            for c in 0..d {
+                acc += qi[c] * kj[c];
+            }
+            if smooth {
+                // high-precision ΔS = q̄_tile · γ(K_j) (Eq. 5)
+                let qm = &q_means[tile * d..(tile + 1) * d];
+                for c in 0..d {
+                    acc += qm[c] * kf[j * d + c];
+                }
+            }
+            let s = acc * scale;
+            s_row[j] = s;
+            m = m.max(s);
+        }
+        let mut l = 0.0f32;
+        for j in 0..limit {
+            let p = (s_row[j] - m).exp();
+            p_row[j] = p;
+            l += p;
+        }
+        for p in p_row[limit..].iter_mut() {
+            *p = 0.0;
+        }
+        // --- P quantization (Alg. 1 l.12 / SageAttention3 two-level) -----
+        let quant_len = p_row.len();
+        if two_level_p {
+            let rmax = p_row[..limit].iter().fold(0.0f32, |a, &b| a.max(b));
+            let factor = if rmax > 0.0 { 448.0 * 6.0 / rmax } else { 1.0 };
+            for p in p_row[..quant_len].iter_mut() {
+                *p *= factor;
+            }
+            nvfp4_fake_quant_row(&mut p_row[..quant_len]);
+            for p in p_row[..quant_len].iter_mut() {
+                *p /= factor;
+            }
+        } else {
+            nvfp4_fake_quant_row(&mut p_row[..quant_len]);
+        }
+        // --- O = P^F · V^F / l (FP4MM #2, f32 accumulate) ------------------
+        let orow = &mut o[i * d..(i + 1) * d];
+        for j in 0..limit {
+            let p = p_row[j];
+            if p == 0.0 {
+                continue;
+            }
+            let vj = &vf[j * d..(j + 1) * d];
+            for c in 0..d {
+                orow[c] += p * vj[c];
+            }
+        }
+        let inv = 1.0 / l;
+        for c in orow.iter_mut() {
+            *c *= inv;
+        }
+        lse[i] = m + l.ln();
+    }
+    AttnOutput { o, lse, nq, d }
+}
+
+/// Plain NVFP4 attention (the Attn-QAT inference forward, Alg. 1).
+pub fn attend_fp4(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    causal: bool,
+) -> AttnOutput {
+    attend_quantized(q, k, v, nq, nk, d, causal, false, false, 16)
+}
+
+/// SageAttention3 emulation: Q/K smoothing + two-level P quantization.
+pub fn attend_sage3(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    causal: bool,
+) -> AttnOutput {
+    attend_quantized(q, k, v, nq, nk, d, causal, true, true, 16)
+}
+
+/// [`attend_sage3`] with an explicit Q-smoothing tile size (must match the
+/// compiled artifact's `block_q` for bit-level comparisons, e.g. Fig. 4).
+pub fn attend_sage3_blocked(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    causal: bool,
+    block_q: usize,
+) -> AttnOutput {
+    attend_quantized(q, k, v, nq, nk, d, causal, true, true, block_q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::flash::attend_f32;
+    use crate::rng::Rng;
+
+    fn rand_qkv(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (
+            rng.normal_vec(n * d, 0.0, 1.0),
+            rng.normal_vec(n * d, 0.0, 1.0),
+            rng.normal_vec(n * d, 0.0, 1.0),
+        )
+    }
+
+    #[test]
+    fn fp4_close_to_f32_but_not_equal() {
+        let (n, d) = (32, 16);
+        let (q, k, v) = rand_qkv(n, d, 1);
+        let exact = attend_f32(&q, &k, &v, n, n, d, false);
+        let quant = attend_fp4(&q, &k, &v, n, n, d, false);
+        let max_diff = exact
+            .o
+            .iter()
+            .zip(&quant.o)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff > 1e-4, "quantization should perturb: {max_diff}");
+        assert!(max_diff < 0.5, "but not destroy: {max_diff}");
+    }
+
+    #[test]
+    fn sage3_beats_fp4_on_outliers() {
+        // Inject a large common K offset: smoothing should absorb it.
+        let (n, d) = (32, 16);
+        let (q, mut k, v) = rand_qkv(n, d, 2);
+        for j in 0..n {
+            for c in 0..d {
+                k[j * d + c] += 4.0; // large shared outlier component
+            }
+        }
+        let exact = attend_f32(&q, &k, &v, n, n, d, false);
+        let e_fp4 = attend_fp4(&q, &k, &v, n, n, d, false);
+        let e_sage = attend_sage3(&q, &k, &v, n, n, d, false);
+        let err = |o: &AttnOutput| {
+            o.o.iter()
+                .zip(&exact.o)
+                .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                .sum::<f64>()
+        };
+        assert!(
+            err(&e_sage) < err(&e_fp4),
+            "sage {:.4e} fp4 {:.4e}",
+            err(&e_sage),
+            err(&e_fp4)
+        );
+    }
+
+    #[test]
+    fn causal_matches_f32_structure() {
+        let (n, d) = (16, 16);
+        let (q, k, v) = rand_qkv(n, d, 3);
+        let out = attend_fp4(&q, &k, &v, n, n, d, true);
+        // First row attends only the first key -> o ≈ fq(v0).
+        let mut v0 = v[..d].to_vec();
+        // v quantized along token axis: with a single attended token the
+        // value still passes through the e2m1 lattice; compare loosely.
+        let err: f32 = out.o[..d]
+            .iter()
+            .zip(&mut v0)
+            .map(|(a, b)| (*a - *b).abs())
+            .fold(0.0, f32::max);
+        assert!(err < 0.6, "err {err}");
+    }
+
+    #[test]
+    fn cross_attention_shapes() {
+        let (nq, nk, d) = (4, 32, 16);
+        let mut rng = Rng::new(4);
+        let q = rng.normal_vec(nq * d, 0.0, 1.0);
+        let k = rng.normal_vec(nk * d, 0.0, 1.0);
+        let v = rng.normal_vec(nk * d, 0.0, 1.0);
+        let out = attend_fp4(&q, &k, &v, nq, nk, d, false);
+        assert_eq!(out.o.len(), nq * d);
+        assert_eq!(out.lse.len(), nq);
+        assert!(out.o.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn non_multiple_of_16_keys() {
+        // nk = 19 exercises the padding path for P and V quantization.
+        let (nq, nk, d) = (3, 19, 16);
+        let mut rng = Rng::new(5);
+        let q = rng.normal_vec(nq * d, 0.0, 1.0);
+        let k = rng.normal_vec(nk * d, 0.0, 1.0);
+        let v = rng.normal_vec(nk * d, 0.0, 1.0);
+        let out = attend_fp4(&q, &k, &v, nq, nk, d, false);
+        let exact = attend_f32(&q, &k, &v, nq, nk, d, false);
+        let max_diff = exact
+            .o
+            .iter()
+            .zip(&out.o)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 0.6, "max_diff {max_diff}");
+    }
+}

@@ -1,0 +1,111 @@
+//! f32 reference attention (single head) — the engine-side baseline.
+//!
+//! Materialises S row-by-row with a numerically-stable softmax; O(n·d)
+//! memory. This is the oracle the quantized engines are compared against
+//! and the high-precision fallback of the decode path.
+
+use super::engine::AttnOutput;
+
+/// Single-head attention: `q (nq × d)`, `k/v (nk × d)` row-major.
+///
+/// Causality uses aligned ends (query i sees keys j ≤ i + nk − nq).
+pub fn attend_f32(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    causal: bool,
+) -> AttnOutput {
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut o = vec![0.0f32; nq * d];
+    let mut lse = vec![0.0f32; nq];
+    let mut s_row = vec![0.0f32; nk];
+    for i in 0..nq {
+        let qi = &q[i * d..(i + 1) * d];
+        let limit = if causal { (i + nk - nq + 1).min(nk) } else { nk };
+        let mut m = f32::NEG_INFINITY;
+        for j in 0..limit {
+            let kj = &k[j * d..(j + 1) * d];
+            let mut acc = 0.0f32;
+            for c in 0..d {
+                acc += qi[c] * kj[c];
+            }
+            let s = acc * scale;
+            s_row[j] = s;
+            m = m.max(s);
+        }
+        let mut l = 0.0f32;
+        let orow = &mut o[i * d..(i + 1) * d];
+        for j in 0..limit {
+            let p = (s_row[j] - m).exp();
+            l += p;
+            let vj = &v[j * d..(j + 1) * d];
+            for c in 0..d {
+                orow[c] += p * vj[c];
+            }
+        }
+        let inv = 1.0 / l;
+        for c in orow.iter_mut() {
+            *c *= inv;
+        }
+        lse[i] = m + l.ln();
+    }
+    AttnOutput { o, lse, nq, d }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn uniform_keys_average_values() {
+        // q ⟂ all keys -> uniform attention -> output = mean(v).
+        let (n, d) = (4, 8);
+        let q = vec![0.0; n * d];
+        let k = vec![0.0; n * d];
+        let mut rng = Rng::new(1);
+        let v = rng.normal_vec(n * d, 0.0, 1.0);
+        let out = attend_f32(&q, &k, &v, n, n, d, false);
+        for c in 0..d {
+            let mean: f32 = (0..n).map(|j| v[j * d + c]).sum::<f32>() / n as f32;
+            for i in 0..n {
+                assert!((out.o[i * d + c] - mean).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn causal_first_row_copies_first_value() {
+        let (n, d) = (3, 4);
+        let mut rng = Rng::new(2);
+        let q = rng.normal_vec(n * d, 0.0, 1.0);
+        let k = rng.normal_vec(n * d, 0.0, 1.0);
+        let v = rng.normal_vec(n * d, 0.0, 1.0);
+        let out = attend_f32(&q, &k, &v, n, n, d, true);
+        for c in 0..d {
+            assert!((out.o[c] - v[c]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_shift_invariance() {
+        // Adding a constant to all scores (e.g. via k offset along a
+        // direction q is constant on) must not change the output.
+        let (n, d) = (5, 16);
+        let mut rng = Rng::new(3);
+        let q = rng.normal_vec(n * d, 0.0, 1.0);
+        let k = rng.normal_vec(n * d, 0.0, 1.0);
+        let v = rng.normal_vec(n * d, 0.0, 1.0);
+        let a = attend_f32(&q, &k, &v, n, n, d, false);
+        let scale = 100.0f32;
+        let q2: Vec<f32> = q.iter().map(|x| x * scale).collect();
+        let k2: Vec<f32> = k.iter().map(|x| x / scale).collect();
+        let b = attend_f32(&q2, &k2, &v, n, n, d, false);
+        for (x, y) in a.o.iter().zip(&b.o) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Native Rust attention engines — the "real quant" side of the system.
+//!
+//! Where the JAX/Pallas layers *fake-quantize* (Eq. 6), these engines run
+//! attention on **actually packed** NVFP4 tensors (4-bit codes + E4M3
+//! scales), dequantizing block-wise into the f32 accumulator exactly like
+//! Blackwell's FP4MM. Uses:
+//!
+//! * Figure 4 — fake-quant (compiled HLO) vs real-quant (this module)
+//!   agreement on identical inputs;
+//! * the serving decode path — attention over the FP4 paged KV cache
+//!   (`kvcache`), where the per-token query is f32 and K/V live in NVFP4;
+//! * a reference f32 flash implementation for baseline comparisons.
+//!
+//! Variants mirror `python/compile/kernels/ref.PRESETS` forward semantics:
+//! `F32`, `Fp4` (plain NVFP4, the Attn-QAT inference kernel), `Sage3`
+//! (K/Q smoothing + two-level P quantization).
+
+pub mod engine;
+pub mod flash;
+
+pub use engine::{attend_fp4, attend_sage3, AttnOutput};
+pub use flash::attend_f32;
+
+/// Forward-variant selector for the native engines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    F32,
+    Fp4,
+    Sage3,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s {
+            "f32" | "bf16" => Some(Variant::F32),
+            "fp4" | "qat" => Some(Variant::Fp4),
+            "sage3" => Some(Variant::Sage3),
+            _ => None,
+        }
+    }
+}
+
+/// Dispatch an (n × d) single-head attention over the chosen variant.
+pub fn attend(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    causal: bool,
+    variant: Variant,
+) -> AttnOutput {
+    match variant {
+        Variant::F32 => attend_f32(q, k, v, n, n, d, causal),
+        Variant::Fp4 => attend_fp4(q, k, v, n, n, d, causal),
+        Variant::Sage3 => attend_sage3(q, k, v, n, n, d, causal),
+    }
+}

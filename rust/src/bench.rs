@@ -1,0 +1,181 @@
+//! In-tree micro-benchmark harness (substrate; criterion is unavailable in
+//! the offline build).
+//!
+//! Measures wall time per iteration with warmup, reports median / p10 /
+//! p90, and appends JSON lines to `results/bench/<group>.jsonl` so bench
+//! runs accumulate a comparable history (the §Perf before/after log).
+
+use std::io::Write;
+use std::time::Instant;
+
+use crate::json::Json;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    /// Optional work units per iteration (flops, tokens, elements...)
+    pub units_per_iter: f64,
+    pub unit: &'static str,
+}
+
+impl BenchResult {
+    /// Units per second at the median time.
+    pub fn throughput(&self) -> f64 {
+        if self.units_per_iter > 0.0 {
+            self.units_per_iter / (self.median_ns * 1e-9)
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("median_ns", Json::Num(self.median_ns)),
+            ("p10_ns", Json::Num(self.p10_ns)),
+            ("p90_ns", Json::Num(self.p90_ns)),
+            ("units_per_iter", Json::Num(self.units_per_iter)),
+            ("unit", Json::Str(self.unit.to_string())),
+            ("throughput", Json::Num(self.throughput())),
+        ])
+    }
+}
+
+/// Time `f` with `warmup` throwaway and `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> BenchResult {
+    bench_units(name, warmup, iters, 0.0, "", f)
+}
+
+/// Like [`bench`] but records `units_per_iter` for throughput reporting.
+pub fn bench_units<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    units_per_iter: f64,
+    unit: &'static str,
+    mut f: F,
+) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median_ns: pct(0.5),
+        p10_ns: pct(0.1),
+        p90_ns: pct(0.9),
+        units_per_iter,
+        unit,
+    }
+}
+
+/// Collects results, prints a table, persists JSONL under `results/bench/`.
+pub struct Reporter {
+    group: String,
+    results: Vec<BenchResult>,
+}
+
+impl Reporter {
+    pub fn new(group: &str) -> Reporter {
+        println!("== bench group: {group} ==");
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>16}",
+            "name", "median", "p10", "p90", "throughput"
+        );
+        Reporter { group: group.to_string(), results: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: BenchResult) {
+        let tput = if r.units_per_iter > 0.0 {
+            format!("{:.3e} {}/s", r.throughput(), r.unit)
+        } else {
+            "-".to_string()
+        };
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>16}",
+            r.name,
+            fmt_ns(r.median_ns),
+            fmt_ns(r.p10_ns),
+            fmt_ns(r.p90_ns),
+            tput
+        );
+        self.results.push(r);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Append all results to `results/bench/<group>.jsonl`.
+    pub fn save(&self) -> std::io::Result<()> {
+        let dir = std::path::Path::new("results/bench");
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(dir.join(format!("{}.jsonl", self.group)))?;
+        for r in &self.results {
+            writeln!(f, "{}", r.to_json())?;
+        }
+        Ok(())
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let r = bench("spin", 1, 5, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i);
+            }
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.p10_ns <= r.median_ns && r.median_ns <= r.p90_ns);
+        assert!(acc > 0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            median_ns: 1e9,
+            p10_ns: 1e9,
+            p90_ns: 1e9,
+            units_per_iter: 100.0,
+            unit: "tok",
+        };
+        assert!((r.throughput() - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,243 @@
+//! Config system (substrate): a TOML-subset parser + typed experiment
+//! configs with CLI `section.key=value` overrides.
+//!
+//! Supported TOML subset (all the repo needs): `[section]` headers, `key =
+//! value` with string/int/float/bool/homogeneous-scalar-array values, `#`
+//! comments. Files under `configs/` define experiment presets; every value
+//! can be overridden from the CLI (`repro exp table2 -c configs/fast.toml
+//! -s train.steps=50`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A scalar or array config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CfgValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<CfgValue>),
+}
+
+impl CfgValue {
+    fn parse(tok: &str) -> Result<CfgValue> {
+        let t = tok.trim();
+        if t.starts_with('"') && t.ends_with('"') && t.len() >= 2 {
+            return Ok(CfgValue::Str(t[1..t.len() - 1].to_string()));
+        }
+        if t == "true" {
+            return Ok(CfgValue::Bool(true));
+        }
+        if t == "false" {
+            return Ok(CfgValue::Bool(false));
+        }
+        if t.starts_with('[') && t.ends_with(']') {
+            let inner = &t[1..t.len() - 1];
+            let items = split_top(inner)?;
+            return Ok(CfgValue::Arr(
+                items.iter().map(|s| CfgValue::parse(s)).collect::<Result<_>>()?,
+            ));
+        }
+        if let Ok(i) = t.parse::<i64>() {
+            return Ok(CfgValue::Int(i));
+        }
+        if let Ok(f) = t.parse::<f64>() {
+            return Ok(CfgValue::Float(f));
+        }
+        // bare word = string (lenient; convenient for CLI overrides)
+        if !t.is_empty() && t.chars().all(|c| c.is_alphanumeric() || "_-.".contains(c)) {
+            return Ok(CfgValue::Str(t.to_string()));
+        }
+        bail!("cannot parse value: {t:?}")
+    }
+}
+
+fn split_top(s: &str) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    Ok(out)
+}
+
+/// Parsed config: `section.key -> value` (top-level keys have section "").
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    map: BTreeMap<String, CfgValue>,
+}
+
+impl Config {
+    pub fn parse(src: &str) -> Result<Config> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            map.insert(key, CfgValue::parse(v).with_context(|| format!("line {}", lineno + 1))?);
+        }
+        Ok(Config { map })
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        let src = std::fs::read_to_string(path).with_context(|| format!("{path:?}"))?;
+        Config::parse(&src)
+    }
+
+    /// Apply a `section.key=value` CLI override.
+    pub fn set(&mut self, assignment: &str) -> Result<()> {
+        let (k, v) = assignment
+            .split_once('=')
+            .ok_or_else(|| anyhow!("override must be key=value: {assignment:?}"))?;
+        self.map.insert(k.trim().to_string(), CfgValue::parse(v)?);
+        Ok(())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&CfgValue> {
+        self.map.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        match self.map.get(key) {
+            Some(CfgValue::Str(s)) => s.clone(),
+            _ => default.to_string(),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        match self.map.get(key) {
+            Some(CfgValue::Int(i)) => *i as usize,
+            Some(CfgValue::Float(f)) => *f as usize,
+            _ => default,
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        match self.map.get(key) {
+            Some(CfgValue::Float(f)) => *f as f32,
+            Some(CfgValue::Int(i)) => *i as f32,
+            _ => default,
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.map.get(key) {
+            Some(CfgValue::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        match self.map.get(key) {
+            Some(CfgValue::Int(i)) => *i as u64,
+            _ => default,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let src = r#"
+            # experiment preset
+            top = 1
+            [train]
+            steps = 200
+            lr = 1e-4          # peak
+            variant = "qat"
+            ablate = true
+            seqs = [64, 128]
+        "#;
+        let c = Config::parse(src).unwrap();
+        assert_eq!(c.usize_or("top", 0), 1);
+        assert_eq!(c.usize_or("train.steps", 0), 200);
+        assert!((c.f32_or("train.lr", 0.0) - 1e-4).abs() < 1e-9);
+        assert_eq!(c.str_or("train.variant", ""), "qat");
+        assert!(c.bool_or("train.ablate", false));
+        match c.get("train.seqs") {
+            Some(CfgValue::Arr(a)) => assert_eq!(a.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::parse("[a]\nx = 1\n").unwrap();
+        c.set("a.x=5").unwrap();
+        c.set("a.name=hello").unwrap();
+        assert_eq!(c.usize_or("a.x", 0), 5);
+        assert_eq!(c.str_or("a.name", ""), "hello");
+        assert!(c.set("garbage").is_err());
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let c = Config::default();
+        assert_eq!(c.usize_or("nope", 7), 7);
+        assert_eq!(c.str_or("nope", "d"), "d");
+    }
+
+    #[test]
+    fn comments_inside_strings() {
+        let c = Config::parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(c.str_or("k", ""), "a#b");
+    }
+}

@@ -1,0 +1,114 @@
+//! Checkpoint format (substrate): a simple self-describing binary container
+//! for named f32 tensors — magic, version, then per-tensor
+//! `name_len|name|rank|dims|f32 data` records (little endian).
+//!
+//! Used to persist trained parameters between experiment phases (continued
+//! pretraining → SFT → serving) without re-running training.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"AQATCKPT";
+const VERSION: u32 = 1;
+
+/// Write named tensors to `path`.
+pub fn save(path: &Path, named: &[(String, &Tensor)]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut w = BufWriter::new(File::create(path).with_context(|| format!("{path:?}"))?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(named.len() as u32).to_le_bytes())?;
+    for (name, t) in named {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &x in &t.data {
+            w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Read all tensors back, in file order.
+pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>> {
+    let mut r = BufReader::new(File::open(path).with_context(|| format!("{path:?}"))?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a checkpoint file: {path:?}");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let rank = read_u32(&mut r)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut data = vec![0.0f32; n];
+        let mut buf = [0u8; 4];
+        for x in data.iter_mut() {
+            r.read_exact(&mut buf)?;
+            *x = f32::from_le_bytes(buf);
+        }
+        out.push((String::from_utf8(name)?, Tensor::new(shape, data)?));
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("attn_qat_ckpt_test");
+        let path = dir.join("a.ckpt");
+        let t1 = Tensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]).unwrap();
+        let t2 = Tensor::scalar(42.0);
+        save(&path, &[("w".into(), &t1), ("b".into(), &t2)]).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, "w");
+        assert_eq!(back[0].1, t1);
+        assert_eq!(back[1].1, t2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("attn_qat_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"NOTACKPTxxxx").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

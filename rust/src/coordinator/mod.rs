@@ -1,0 +1,242 @@
+//! Training orchestrator (L3): drives compiled train-step artifacts.
+//!
+//! The paper's contribution lives at L1/L2, so L3 is a *driver* — but a
+//! real one: state threading across steps, LR schedules, metric logging
+//! (loss + pre-clip grad-norm time series, the Figure-3 signals),
+//! checkpointing, periodic eval hooks, and divergence detection (the
+//! "exploding gradients" the paper reports for drop-in QAT must be
+//! *observable*, not fatal).
+
+pub mod checkpoint;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Tensor;
+
+/// Learning-rate schedule (constant or linear-warmup cosine).
+#[derive(Clone, Copy, Debug)]
+pub enum LrSchedule {
+    Constant(f32),
+    /// warmup steps, peak lr, total steps, final fraction
+    Cosine { warmup: usize, peak: f32, total: usize, floor_frac: f32 },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f32 {
+        match *self {
+            LrSchedule::Constant(lr) => lr,
+            LrSchedule::Cosine { warmup, peak, total, floor_frac } => {
+                if step < warmup {
+                    peak * (step + 1) as f32 / warmup as f32
+                } else {
+                    let t = (step - warmup) as f32 / (total.saturating_sub(warmup)).max(1) as f32;
+                    let cos = 0.5 * (1.0 + (std::f32::consts::PI * t.min(1.0)).cos());
+                    peak * (floor_frac + (1.0 - floor_frac) * cos)
+                }
+            }
+        }
+    }
+}
+
+/// Per-step metrics (the Figure-3 time series).
+#[derive(Clone, Copy, Debug)]
+pub struct StepMetrics {
+    pub step: usize,
+    pub loss: f32,
+    pub grad_norm: f32,
+    pub lr: f32,
+    pub wall_ms: f64,
+}
+
+/// Model + optimizer state as host tensors, threaded between executions.
+pub struct TrainState {
+    /// Parameter tensors, artifact input order.
+    pub params: Vec<Tensor>,
+    /// Optimizer tensors (m__*/v__*), artifact input order.
+    pub opt: Vec<Tensor>,
+    pub step: usize,
+}
+
+/// Orchestrates one training run over a `*_train_*` artifact.
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    pub train_artifact: String,
+    pub schedule: LrSchedule,
+    pub state: TrainState,
+    pub history: Vec<StepMetrics>,
+    n_params: usize,
+    n_opt: usize,
+    n_batch_inputs: usize,
+    /// Consider the run diverged when |loss| or grad_norm exceeds this (or
+    /// goes non-finite). The run continues — divergence is data here.
+    pub divergence_threshold: f32,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Initialise from an `*_init_*` artifact (params) + zeroed optimizer.
+    pub fn new(
+        rt: &'rt Runtime,
+        init_artifact: &str,
+        train_artifact: &str,
+        seed: i32,
+        schedule: LrSchedule,
+    ) -> Result<Trainer<'rt>> {
+        let params = rt.run(init_artifact, &[Value::scalar_i32(seed)])?;
+        let meta = rt.meta(train_artifact)?;
+        let n_params = meta.param_names().len();
+        let n_opt = meta.opt_names().len();
+        if n_params == 0 || n_opt == 0 {
+            bail!("{train_artifact} metadata missing param/opt names");
+        }
+        if params.len() != n_params {
+            bail!(
+                "init artifact produced {} params, train step wants {}",
+                params.len(),
+                n_params
+            );
+        }
+        // step/lr + batch tensors follow params+opt in the input list.
+        let n_batch_inputs = meta.inputs.len() - n_params - n_opt - 2;
+        let opt = meta.inputs[n_params..n_params + n_opt]
+            .iter()
+            .map(|spec| Tensor::zeros(spec.shape.clone()))
+            .collect();
+        Ok(Trainer {
+            rt,
+            train_artifact: train_artifact.to_string(),
+            schedule,
+            state: TrainState { params, opt, step: 0 },
+            history: Vec::new(),
+            n_params,
+            n_opt,
+            n_batch_inputs,
+            divergence_threshold: 1e6,
+        })
+    }
+
+    /// Resume with existing parameters (e.g. SFT from a pretrained state).
+    pub fn with_params(mut self, params: Vec<Tensor>) -> Result<Self> {
+        if params.len() != self.n_params {
+            bail!("expected {} params, got {}", self.n_params, params.len());
+        }
+        self.state.params = params;
+        Ok(self)
+    }
+
+    /// One optimizer step on the supplied batch values (tokens+mask for
+    /// LM, x0+noise+t for diffusion). Returns the step's metrics.
+    pub fn step(&mut self, batch: &[Value]) -> Result<StepMetrics> {
+        if batch.len() != self.n_batch_inputs {
+            bail!(
+                "train step wants {} batch inputs, got {}",
+                self.n_batch_inputs,
+                batch.len()
+            );
+        }
+        let lr = self.schedule.at(self.state.step);
+        let t0 = std::time::Instant::now();
+        let mut inputs: Vec<Value> =
+            Vec::with_capacity(self.n_params + self.n_opt + 2 + batch.len());
+        for p in &self.state.params {
+            inputs.push(Value::F32(p.clone()));
+        }
+        for o in &self.state.opt {
+            inputs.push(Value::F32(o.clone()));
+        }
+        inputs.push(Value::scalar_f32((self.state.step + 1) as f32));
+        inputs.push(Value::scalar_f32(lr));
+        inputs.extend_from_slice(batch);
+
+        let mut outputs = self.rt.run(&self.train_artifact, &inputs)?;
+        let grad_norm = outputs
+            .pop()
+            .ok_or_else(|| anyhow!("missing grad_norm output"))?
+            .item();
+        let loss = outputs
+            .pop()
+            .ok_or_else(|| anyhow!("missing loss output"))?
+            .item();
+        let opt = outputs.split_off(self.n_params);
+        self.state.params = outputs;
+        self.state.opt = opt;
+        self.state.step += 1;
+        let m = StepMetrics {
+            step: self.state.step,
+            loss,
+            grad_norm,
+            lr,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        };
+        self.history.push(m);
+        Ok(m)
+    }
+
+    /// Run `steps` optimizer steps pulling batches from `next_batch`.
+    /// Calls `on_log` every `log_every` steps (and on the last step).
+    pub fn run(
+        &mut self,
+        steps: usize,
+        log_every: usize,
+        mut next_batch: impl FnMut(usize) -> Vec<Value>,
+        mut on_log: impl FnMut(&StepMetrics),
+    ) -> Result<()> {
+        for i in 0..steps {
+            let batch = next_batch(i);
+            let m = self.step(&batch)?;
+            if log_every > 0 && (i % log_every == 0 || i + 1 == steps) {
+                on_log(&m);
+            }
+        }
+        Ok(())
+    }
+
+    /// True if any recorded step exceeded the divergence threshold.
+    pub fn diverged(&self) -> bool {
+        self.history.iter().any(|m| {
+            !m.loss.is_finite()
+                || !m.grad_norm.is_finite()
+                || m.loss.abs() > self.divergence_threshold
+                || m.grad_norm > self.divergence_threshold
+        })
+    }
+
+    /// Mean loss over the last `n` steps (NaN-safe; for result tables).
+    pub fn tail_loss(&self, n: usize) -> f32 {
+        let tail: Vec<f32> = self
+            .history
+            .iter()
+            .rev()
+            .take(n)
+            .map(|m| m.loss)
+            .filter(|l| l.is_finite())
+            .collect();
+        if tail.is_empty() {
+            f32::NAN
+        } else {
+            tail.iter().sum::<f32>() / tail.len() as f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_schedule_shape() {
+        let s = LrSchedule::Cosine { warmup: 10, peak: 1.0, total: 110, floor_frac: 0.1 };
+        assert!(s.at(0) < s.at(9));
+        assert!((s.at(9) - 1.0).abs() < 0.11);
+        assert!(s.at(60) < 1.0);
+        assert!(s.at(109) >= 0.1 - 1e-6);
+        assert!(s.at(500) >= 0.1 - 1e-6); // clamps past total
+    }
+
+    #[test]
+    fn constant_schedule() {
+        let s = LrSchedule::Constant(3e-4);
+        assert_eq!(s.at(0), 3e-4);
+        assert_eq!(s.at(1000), 3e-4);
+    }
+}

@@ -1,0 +1,64 @@
+//! Synthetic data pipeline (substrate; replaces C4 / Dolci / Wan latents).
+//!
+//! Everything the experiments train and evaluate on is generated here, in
+//! Rust, on the request path — deterministically from config seeds:
+//!
+//! * [`corpus`]  — a byte-level synthetic language (Markov filler + PCFG-ish
+//!   sentences with **long-range topic recall**, so attention quality is
+//!   measurable) standing in for C4 continued-pretraining data.
+//! * [`tasks`]   — instruction tasks (copy/reverse/case/sort/lookup) with
+//!   answer-masked SFT batches standing in for Dolci-Instruct, plus five
+//!   multiple-choice suites standing in for the lm-eval-harness benchmarks.
+//! * [`latents`] — smooth low-rank "video" latent trajectories standing in
+//!   for Wan-2.1 latents, with known structure the VBench-proxy metrics in
+//!   `eval::video` can measure.
+
+pub mod corpus;
+pub mod latents;
+pub mod tasks;
+
+use crate::runtime::Value;
+use crate::tensor::Tensor;
+
+/// One LM training/eval batch: `tokens (B, N+1) i32` + `loss_mask (B, N)`.
+#[derive(Clone, Debug)]
+pub struct LmBatch {
+    pub batch: usize,
+    pub seq: usize,
+    pub tokens: Vec<i32>,
+    pub mask: Vec<f32>,
+}
+
+impl LmBatch {
+    pub fn token_value(&self) -> Value {
+        Value::I32(self.tokens.clone(), vec![self.batch, self.seq + 1])
+    }
+
+    pub fn mask_value(&self) -> Value {
+        Value::F32(
+            Tensor::new(vec![self.batch, self.seq], self.mask.clone()).expect("mask shape"),
+        )
+    }
+}
+
+/// One diffusion batch: clean latents + noise + times.
+#[derive(Clone, Debug)]
+pub struct DiffBatch {
+    pub batch: usize,
+    pub frames: usize,
+    pub latent_dim: usize,
+    pub x0: Vec<f32>,
+    pub noise: Vec<f32>,
+    pub t: Vec<f32>,
+}
+
+impl DiffBatch {
+    pub fn values(&self) -> [Value; 3] {
+        let shape = vec![self.batch, self.frames, self.latent_dim];
+        [
+            Value::F32(Tensor::new(shape.clone(), self.x0.clone()).expect("x0")),
+            Value::F32(Tensor::new(shape, self.noise.clone()).expect("noise")),
+            Value::F32(Tensor::new(vec![self.batch], self.t.clone()).expect("t")),
+        ]
+    }
+}

@@ -1,0 +1,323 @@
+//! Instruction tasks (Dolci-Instruct stand-in) and multiple-choice suites
+//! (lm-eval-harness stand-ins).
+//!
+//! SFT task format (byte-level): `<OP>:<payload>#<answer>$` — the loss mask
+//! covers `<answer>$` only, mirroring answer-only SFT. Ops:
+//!
+//! | op | answer                       | paper-benchmark proxy (Table 3) |
+//! |----|------------------------------|---------------------------------|
+//! | C  | copy payload                 | IFEval (instruction following)  |
+//! | R  | reverse payload              | MATH-500 (symbol manipulation)  |
+//! | U  | uppercase payload            | MMLU-Redux (rule application)   |
+//! | S  | sort payload bytes           | GSM8K (algorithmic)             |
+//! | Q  | value lookup in k=v list     | GPQA (retrieval + reasoning)    |
+//!
+//! Multiple-choice items (Table 4 proxies) are scored by ranking summed
+//! continuation NLL with the compiled `lm_eval_*` artifact — the same
+//! mechanism lm-eval-harness uses.
+
+use crate::rng::Rng;
+
+use super::LmBatch;
+
+/// SFT task operations.
+pub const SFT_OPS: [(u8, &str); 5] = [
+    (b'C', "copy"),
+    (b'R', "reverse"),
+    (b'U', "upper"),
+    (b'S', "sort"),
+    (b'Q', "lookup"),
+];
+
+fn payload(rng: &mut Rng, len: usize) -> Vec<u8> {
+    (0..len).map(|_| b'a' + rng.below(26) as u8).collect()
+}
+
+/// Generate one task; returns (prompt_bytes, answer_bytes).
+pub fn gen_task(rng: &mut Rng, op: u8) -> (Vec<u8>, Vec<u8>) {
+    match op {
+        b'C' => {
+            let len = 4 + rng.below(8);
+            let p = payload(rng, len);
+            (wrap(b'C', &p), p)
+        }
+        b'R' => {
+            let len = 4 + rng.below(8);
+            let p = payload(rng, len);
+            let mut a = p.clone();
+            a.reverse();
+            (wrap(b'R', &p), a)
+        }
+        b'U' => {
+            let len = 4 + rng.below(8);
+            let p = payload(rng, len);
+            let a = p.iter().map(|b| b.to_ascii_uppercase()).collect();
+            (wrap(b'U', &p), a)
+        }
+        b'S' => {
+            let len = 4 + rng.below(6);
+            let p = payload(rng, len);
+            let mut a = p.clone();
+            a.sort();
+            (wrap(b'S', &p), a)
+        }
+        b'Q' => {
+            // payload: k1=v1,k2=v2,k3=v3 ; question: one of the keys.
+            // Keys must be distinct or the answer is ambiguous.
+            let n = 3;
+            let mut keys = payload(rng, n);
+            while keys[0] == keys[1] || keys[1] == keys[2] || keys[0] == keys[2] {
+                keys = payload(rng, n);
+            }
+            let vals = payload(rng, n);
+            let qi = rng.below(n);
+            let mut p = Vec::new();
+            for i in 0..n {
+                p.push(keys[i]);
+                p.push(b'=');
+                p.push(vals[i]);
+                p.push(b',');
+            }
+            p.push(b'?');
+            p.push(keys[qi]);
+            (wrap(b'Q', &p), vec![vals[qi]])
+        }
+        _ => panic!("unknown op"),
+    }
+}
+
+fn wrap(op: u8, payload: &[u8]) -> Vec<u8> {
+    let mut out = vec![op, b':'];
+    out.extend_from_slice(payload);
+    out.push(b'#');
+    out
+}
+
+/// Build an SFT batch: tasks packed into fixed windows with answer-only
+/// loss masks; remainder padded with spaces (mask 0).
+pub fn sft_batch(rng: &mut Rng, batch: usize, seq: usize) -> LmBatch {
+    let mut tokens = Vec::with_capacity(batch * (seq + 1));
+    let mut mask = Vec::with_capacity(batch * seq);
+    for _ in 0..batch {
+        let mut row = Vec::with_capacity(seq + 1);
+        let mut row_mask = Vec::with_capacity(seq + 1);
+        while row.len() < seq + 1 {
+            let op = SFT_OPS[rng.below(SFT_OPS.len())].0;
+            let (prompt, answer) = gen_task(rng, op);
+            for &b in &prompt {
+                row.push(b as i32);
+                row_mask.push(0.0);
+            }
+            for &b in &answer {
+                row.push(b as i32);
+                row_mask.push(1.0);
+            }
+            row.push(b'$' as i32);
+            row_mask.push(1.0);
+        }
+        row.truncate(seq + 1);
+        row_mask.truncate(seq + 1);
+        // Position t's mask refers to target token t+1: shift left.
+        tokens.extend_from_slice(&row);
+        mask.extend_from_slice(&row_mask[1..]);
+    }
+    LmBatch { batch, seq, tokens, mask }
+}
+
+/// One multiple-choice item: shared context, four continuations, index of
+/// the correct one.
+#[derive(Clone, Debug)]
+pub struct McItem {
+    pub context: Vec<u8>,
+    pub choices: [Vec<u8>; 4],
+    pub correct: usize,
+}
+
+/// The five benchmark suites (Table 4 proxies).
+pub const MC_SUITES: [&str; 5] = ["topic", "markov", "copy", "sort", "lookup"];
+
+/// Generate one item of the given suite.
+pub fn gen_mc(rng: &mut Rng, suite: &str, corpus: &mut super::corpus::Corpus) -> McItem {
+    match suite {
+        // WinoGrande proxy: which topic byte closes the sentence?
+        "topic" => {
+            let mut ctx = Vec::new();
+            corpus.sentence(&mut ctx);
+            // ctx ends "<topic>. " — strip the closer, choices are topics.
+            let topic = ctx[ctx.len() - 3];
+            ctx.truncate(ctx.len() - 3);
+            let mut choices = [vec![topic, b'.'], vec![], vec![], vec![]];
+            for c in choices.iter_mut().skip(1) {
+                loop {
+                    let alt = b'A' + rng.below(26) as u8;
+                    if alt != topic {
+                        *c = vec![alt, b'.'];
+                        break;
+                    }
+                }
+            }
+            shuffle_item(rng, ctx, choices)
+        }
+        // HellaSwag proxy: plausible vs shuffled Markov continuation.
+        "markov" => {
+            let stream = corpus.stream(48);
+            let (ctx, cont) = stream.split_at(32);
+            let good = cont.to_vec();
+            let mut choices = [good.clone(), good.clone(), good.clone(), good];
+            for c in choices.iter_mut().skip(1) {
+                rng.shuffle(c);
+            }
+            shuffle_item(rng, ctx.to_vec(), choices)
+        }
+        // IFEval/ARC proxy: correct copy vs corrupted copies.
+        "copy" => {
+            let (prompt, answer) = gen_task(rng, b'C');
+            let mut choices = [answer.clone(), answer.clone(), answer.clone(), answer];
+            for c in choices.iter_mut().skip(1) {
+                corrupt(rng, c);
+            }
+            shuffle_item(rng, prompt, choices)
+        }
+        // GSM8K/PIQA proxy: correctly sorted vs corrupted.
+        "sort" => {
+            let (prompt, answer) = gen_task(rng, b'S');
+            let mut choices = [answer.clone(), answer.clone(), answer.clone(), answer];
+            for c in choices.iter_mut().skip(1) {
+                corrupt(rng, c);
+            }
+            shuffle_item(rng, prompt, choices)
+        }
+        // MMLU proxy: key-value lookup with distractor values.
+        "lookup" => {
+            let (prompt, answer) = gen_task(rng, b'Q');
+            let mut choices = [answer.clone(), answer.clone(), answer.clone(), answer];
+            for c in choices.iter_mut().skip(1) {
+                corrupt(rng, c);
+            }
+            shuffle_item(rng, prompt, choices)
+        }
+        _ => panic!("unknown suite {suite}"),
+    }
+}
+
+fn corrupt(rng: &mut Rng, bytes: &mut [u8]) {
+    if bytes.is_empty() {
+        return;
+    }
+    loop {
+        let i = rng.below(bytes.len());
+        let replacement = b'a' + rng.below(26) as u8;
+        if bytes[i] != replacement {
+            bytes[i] = replacement;
+            return;
+        }
+    }
+}
+
+fn shuffle_item(rng: &mut Rng, context: Vec<u8>, mut choices: [Vec<u8>; 4]) -> McItem {
+    let mut order = [0usize, 1, 2, 3];
+    rng.shuffle(&mut order);
+    let correct = order.iter().position(|&o| o == 0).unwrap();
+    choices = [
+        choices[order[0]].clone(),
+        choices[order[1]].clone(),
+        choices[order[2]].clone(),
+        choices[order[3]].clone(),
+    ];
+    McItem { context, choices, correct }
+}
+
+/// Render an MC (context, choice) pair into an eval row: tokens padded to
+/// `seq`+1, mask covering only the continuation positions.
+pub fn mc_row(item: &McItem, choice: usize, seq: usize) -> (Vec<i32>, Vec<f32>) {
+    let mut row: Vec<i32> = item.context.iter().map(|&b| b as i32).collect();
+    let ctx_len = row.len();
+    row.extend(item.choices[choice].iter().map(|&b| b as i32));
+    row.truncate(seq + 1);
+    let used = row.len();
+    row.resize(seq + 1, b' ' as i32);
+    // Mask targets: position t predicts token t+1. Continuation tokens sit
+    // at [ctx_len, used); they are targets of positions [ctx_len-1, used-1).
+    let mut mask = vec![0.0f32; seq];
+    for t in ctx_len.saturating_sub(1)..used.saturating_sub(1).min(seq) {
+        mask[t] = 1.0;
+    }
+    (row, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::Corpus;
+
+    #[test]
+    fn tasks_have_correct_answers() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let (p, a) = gen_task(&mut rng, b'R');
+            let payload: Vec<u8> = p[2..p.len() - 1].to_vec();
+            let mut rev = payload.clone();
+            rev.reverse();
+            assert_eq!(a, rev);
+            let (_, a) = gen_task(&mut rng, b'S');
+            assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+
+    #[test]
+    fn lookup_answers_match() {
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let (p, a) = gen_task(&mut rng, b'Q');
+            // prompt: Q:k=v,k=v,k=v,?<key>#
+            let s = &p[2..p.len() - 1];
+            let qpos = s.iter().position(|&b| b == b'?').unwrap();
+            let key = s[qpos + 1];
+            let mut found = None;
+            for chunk in s[..qpos].split(|&b| b == b',') {
+                if chunk.len() == 3 && chunk[0] == key {
+                    found = Some(chunk[2]);
+                }
+            }
+            assert_eq!(found, Some(a[0]));
+        }
+    }
+
+    #[test]
+    fn sft_batch_mask_covers_answers_only() {
+        let mut rng = Rng::new(3);
+        let b = sft_batch(&mut rng, 2, 128);
+        assert_eq!(b.tokens.len(), 2 * 129);
+        assert_eq!(b.mask.len(), 2 * 128);
+        let frac: f32 = b.mask.iter().sum::<f32>() / b.mask.len() as f32;
+        assert!(frac > 0.15 && frac < 0.8, "answer fraction {frac}");
+    }
+
+    #[test]
+    fn mc_items_unique_correct() {
+        let mut rng = Rng::new(4);
+        let mut corpus = Corpus::new(4);
+        for suite in MC_SUITES {
+            let item = gen_mc(&mut rng, suite, &mut corpus);
+            let correct = &item.choices[item.correct];
+            let dups = item
+                .choices
+                .iter()
+                .enumerate()
+                .filter(|(i, c)| *i != item.correct && *c == correct)
+                .count();
+            assert_eq!(dups, 0, "suite {suite} has duplicate correct answer");
+        }
+    }
+
+    #[test]
+    fn mc_row_mask_bounds() {
+        let mut rng = Rng::new(5);
+        let mut corpus = Corpus::new(5);
+        let item = gen_mc(&mut rng, "topic", &mut corpus);
+        let (row, mask) = mc_row(&item, 0, 64);
+        assert_eq!(row.len(), 65);
+        assert_eq!(mask.len(), 64);
+        assert!(mask.iter().sum::<f32>() >= 1.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! LM evaluation over compiled `lm_eval_*` artifacts: perplexity and
+//! multiple-choice accuracy by likelihood ranking — the same mechanism
+//! lm-eval-harness uses for the paper's Table 3/4 benchmarks.
+
+use anyhow::{anyhow, Result};
+
+use crate::data::corpus::Corpus;
+use crate::data::tasks::{gen_mc, mc_row, McItem};
+use crate::data::LmBatch;
+use crate::rng::Rng;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Tensor;
+
+/// Run the eval artifact on one batch; returns (sum_nll, n_tok) per row.
+fn eval_batch(
+    rt: &Runtime,
+    artifact: &str,
+    params: &[Tensor],
+    batch: &LmBatch,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let mut inputs: Vec<Value> = params.iter().cloned().map(Value::F32).collect();
+    inputs.push(batch.token_value());
+    inputs.push(batch.mask_value());
+    let out = rt.run(artifact, &inputs)?;
+    Ok((out[0].data.clone(), out[1].data.clone()))
+}
+
+/// Held-out perplexity over `n_batches` fresh corpus batches.
+///
+/// The corpus seed should differ from the training seed — the generator is
+/// the "dataset", so a different stream seed is the held-out split.
+pub fn perplexity(
+    rt: &Runtime,
+    artifact: &str,
+    params: &[Tensor],
+    corpus: &mut Corpus,
+    n_batches: usize,
+) -> Result<f64> {
+    let meta = rt.meta(artifact)?;
+    let batch = meta.usize_field("batch").ok_or_else(|| anyhow!("no batch in meta"))?;
+    let seq = meta
+        .raw
+        .get("model")
+        .get("seq_len")
+        .as_usize()
+        .ok_or_else(|| anyhow!("no seq_len in meta"))?;
+    let mut total_nll = 0.0f64;
+    let mut total_tok = 0.0f64;
+    for _ in 0..n_batches {
+        let b = corpus.next_batch(batch, seq);
+        let (nll, tok) = eval_batch(rt, artifact, params, &b)?;
+        total_nll += nll.iter().map(|&x| x as f64).sum::<f64>();
+        total_tok += tok.iter().map(|&x| x as f64).sum::<f64>();
+    }
+    Ok((total_nll / total_tok.max(1.0)).exp())
+}
+
+/// Multiple-choice accuracy on `n_items` generated items of `suite`.
+///
+/// Each item contributes 4 rows (one per choice); rows are packed into the
+/// artifact's batch size, padded with repeats, and the choice with the
+/// lowest summed continuation NLL wins.
+pub fn mc_accuracy(
+    rt: &Runtime,
+    artifact: &str,
+    params: &[Tensor],
+    suite: &str,
+    n_items: usize,
+    seed: u64,
+) -> Result<f64> {
+    let meta = rt.meta(artifact)?;
+    let batch = meta.usize_field("batch").ok_or_else(|| anyhow!("no batch in meta"))?;
+    let seq = meta
+        .raw
+        .get("model")
+        .get("seq_len")
+        .as_usize()
+        .ok_or_else(|| anyhow!("no seq_len in meta"))?;
+
+    let mut rng = Rng::new(seed).split(suite);
+    let mut corpus = Corpus::new(seed ^ 0x5eed);
+    let items: Vec<McItem> = (0..n_items).map(|_| gen_mc(&mut rng, suite, &mut corpus)).collect();
+
+    // Flatten to rows.
+    let mut rows: Vec<(Vec<i32>, Vec<f32>)> = Vec::with_capacity(items.len() * 4);
+    for item in &items {
+        for c in 0..4 {
+            rows.push(mc_row(item, c, seq));
+        }
+    }
+    // Score in batches.
+    let mut scores = Vec::with_capacity(rows.len());
+    for chunk in rows.chunks(batch) {
+        let mut tokens = Vec::with_capacity(batch * (seq + 1));
+        let mut mask = Vec::with_capacity(batch * seq);
+        for r in 0..batch {
+            let (t, m) = &chunk[r.min(chunk.len() - 1)]; // pad w/ repeats
+            tokens.extend_from_slice(t);
+            mask.extend_from_slice(m);
+        }
+        let b = LmBatch { batch, seq, tokens, mask };
+        let (nll, _) = eval_batch(rt, artifact, params, &b)?;
+        scores.extend_from_slice(&nll[..chunk.len()]);
+    }
+    // Rank.
+    let mut correct = 0usize;
+    for (i, item) in items.iter().enumerate() {
+        let s = &scores[i * 4..(i + 1) * 4];
+        let best = (0..4)
+            .min_by(|&a, &b| s[a].partial_cmp(&s[b]).unwrap())
+            .unwrap();
+        if best == item.correct {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / items.len() as f64)
+}
+
+/// Exact-match accuracy on SFT tasks via greedy argmax decoding with the
+/// logits... scored through the eval artifact by likelihood instead:
+/// a generated answer is "correct" when the true answer is the argmin-NLL
+/// continuation against 3 corrupted alternatives (a strictly harder check
+/// than teacher-forced loss, cheaper than autoregressive decode).
+pub fn sft_task_accuracy(
+    rt: &Runtime,
+    artifact: &str,
+    params: &[Tensor],
+    op: u8,
+    n_items: usize,
+    seed: u64,
+) -> Result<f64> {
+    // Reuse the MC machinery with per-op suites.
+    let suite = match op {
+        b'C' => "copy",
+        b'S' => "sort",
+        b'Q' => "lookup",
+        _ => "copy",
+    };
+    mc_accuracy(rt, artifact, params, suite, n_items, seed)
+}

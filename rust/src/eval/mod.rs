@@ -1,0 +1,9 @@
+//! Evaluation harness: LM metrics, VBench-proxy video metrics, judge.
+
+pub mod judge;
+pub mod lm;
+pub mod video;
+
+pub use judge::{judge_pairwise, JudgeOutcome};
+pub use lm::{mc_accuracy, perplexity};
+pub use video::{video_metrics, VideoMetrics, VideoRefStats};

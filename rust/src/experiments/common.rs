@@ -1,0 +1,212 @@
+//! Shared experiment machinery: markdown/JSON result writers, pretrained
+//! "base model" preparation with checkpoint caching, batch providers.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::coordinator::{checkpoint, LrSchedule, StepMetrics, Trainer};
+use crate::data::corpus::Corpus;
+use crate::data::latents::LatentGen;
+use crate::json::Json;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+pub fn results_dir() -> PathBuf {
+    let dir = PathBuf::from("results");
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+/// Write a markdown table + JSON twin under `results/`.
+pub fn write_table(
+    name: &str,
+    title: &str,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> Result<()> {
+    let dir = results_dir();
+    let mut md = format!("# {title}\n\n|");
+    for h in header {
+        md.push_str(&format!(" {h} |"));
+    }
+    md.push_str("\n|");
+    for _ in header {
+        md.push_str("---|");
+    }
+    md.push('\n');
+    for row in rows {
+        md.push('|');
+        for cell in row {
+            md.push_str(&format!(" {cell} |"));
+        }
+        md.push('\n');
+    }
+    std::fs::write(dir.join(format!("{name}.md")), &md)?;
+    let json = Json::obj(vec![
+        ("title", Json::Str(title.to_string())),
+        (
+            "header",
+            Json::Arr(header.iter().map(|h| Json::Str(h.to_string())).collect()),
+        ),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(dir.join(format!("{name}.json")), json.to_string())?;
+    println!("{md}");
+    println!("-> results/{name}.md");
+    Ok(())
+}
+
+/// Persist a metric history (Figure-3 style time series).
+pub fn write_history(name: &str, series: &[(String, Vec<StepMetrics>)]) -> Result<()> {
+    let obj = Json::Obj(
+        series
+            .iter()
+            .map(|(label, hist)| {
+                (
+                    label.clone(),
+                    Json::obj(vec![
+                        (
+                            "loss",
+                            Json::arr_f32(&hist.iter().map(|m| m.loss).collect::<Vec<_>>()),
+                        ),
+                        (
+                            "grad_norm",
+                            Json::arr_f32(&hist.iter().map(|m| m.grad_norm).collect::<Vec<_>>()),
+                        ),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    std::fs::write(results_dir().join(format!("{name}.json")), obj.to_string())?;
+    Ok(())
+}
+
+fn ckpt_path(tag: &str) -> PathBuf {
+    results_dir().join("ckpt").join(format!("{tag}.ckpt"))
+}
+
+/// Load cached params if present (names must match the artifact order).
+pub fn load_cached(tag: &str, names: &[String]) -> Option<Vec<Tensor>> {
+    let path = ckpt_path(tag);
+    if !path.exists() {
+        return None;
+    }
+    let loaded = checkpoint::load(&path).ok()?;
+    if loaded.len() != names.len() || loaded.iter().zip(names).any(|((n, _), e)| n != e) {
+        return None;
+    }
+    Some(loaded.into_iter().map(|(_, t)| t).collect())
+}
+
+pub fn save_cached(tag: &str, names: &[String], params: &[Tensor]) -> Result<()> {
+    let named: Vec<(String, &Tensor)> = names
+        .iter()
+        .cloned()
+        .zip(params.iter())
+        .collect();
+    checkpoint::save(&ckpt_path(tag), &named)
+}
+
+/// Train (or load cached) the f32 "pretrained base" LM for `size`.
+///
+/// Stands in for the released Qwen3/Llama checkpoints the paper starts
+/// from: every Table-3/4 run branches off these parameters.
+pub fn ensure_lm_base(rt: &Runtime, size: &str, cfg: &Config) -> Result<Vec<Tensor>> {
+    let train_art = format!("lm_train_f32_{size}");
+    let meta = rt.meta(&train_art)?;
+    let names = meta.param_names();
+    let tag = format!("lm_base_{size}");
+    if !cfg.bool_or("force_retrain", false) {
+        if let Some(p) = load_cached(&tag, &names) {
+            println!("[base] loaded cached {tag}");
+            return Ok(p);
+        }
+    }
+    let steps = cfg.usize_or("pretrain.steps", 300);
+    let lr = cfg.f32_or("pretrain.lr", 1e-3);
+    let seed = cfg.u64_or("seed", 42);
+    let batch = meta.usize_field("batch").ok_or_else(|| anyhow!("batch"))?;
+    let seq = meta.raw.get("model").get("seq_len").as_usize().unwrap();
+    println!("[base] pretraining {size} LM for {steps} steps (f32)...");
+    let mut trainer = Trainer::new(
+        rt,
+        &format!("lm_init_{size}"),
+        &train_art,
+        seed as i32,
+        LrSchedule::Cosine { warmup: steps / 10 + 1, peak: lr, total: steps, floor_frac: 0.1 },
+    )?;
+    let mut corpus = Corpus::new(seed);
+    trainer.run(
+        steps,
+        (steps / 10).max(1),
+        |_| {
+            let b = corpus.next_batch(batch, seq);
+            vec![b.token_value(), b.mask_value()]
+        },
+        |m| println!("  step {:>5} loss {:.4} gnorm {:.3}", m.step, m.loss, m.grad_norm),
+    )?;
+    save_cached(&tag, &names, &trainer.state.params)?;
+    Ok(trainer.state.params)
+}
+
+/// Train (or load cached) the f32 "pretrained base" diffusion model.
+pub fn ensure_diff_base(rt: &Runtime, size: &str, cfg: &Config) -> Result<Vec<Tensor>> {
+    let train_art = format!("diff_train_f32_{size}");
+    let meta = rt.meta(&train_art)?;
+    let names = meta.param_names();
+    let tag = format!("diff_base_{size}");
+    if !cfg.bool_or("force_retrain", false) {
+        if let Some(p) = load_cached(&tag, &names) {
+            println!("[base] loaded cached {tag}");
+            return Ok(p);
+        }
+    }
+    let steps = cfg.usize_or("diff_pretrain.steps", 400);
+    let lr = cfg.f32_or("diff_pretrain.lr", 1e-3);
+    let seed = cfg.u64_or("seed", 42);
+    let batch = meta.usize_field("batch").ok_or_else(|| anyhow!("batch"))?;
+    let model = meta.raw.get("model").clone();
+    let frames = model.get("frames").as_usize().unwrap();
+    let latent_dim = model.get("latent_dim").as_usize().unwrap();
+    println!("[base] pretraining {size} diffusion model for {steps} steps (f32)...");
+    let mut trainer = Trainer::new(
+        rt,
+        &format!("diff_init_{size}"),
+        &train_art,
+        seed as i32,
+        LrSchedule::Cosine { warmup: steps / 10 + 1, peak: lr, total: steps, floor_frac: 0.1 },
+    )?;
+    let mut gen = LatentGen::new(seed, frames, latent_dim);
+    trainer.run(
+        steps,
+        (steps / 10).max(1),
+        |_| gen.next_batch(batch).values().to_vec(),
+        |m| println!("  step {:>5} loss {:.4} gnorm {:.3}", m.step, m.loss, m.grad_norm),
+    )?;
+    save_cached(&tag, &names, &trainer.state.params)?;
+    Ok(trainer.state.params)
+}
+
+/// Format helper: 4-decimal metric cell.
+pub fn f4(x: f32) -> String {
+    if x.is_finite() {
+        format!("{x:.4}")
+    } else {
+        "diverged".to_string()
+    }
+}
+
+/// Relative path pretty-printer for logs.
+pub fn rel(p: &Path) -> String {
+    p.to_string_lossy().into_owned()
+}

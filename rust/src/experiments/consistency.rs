@@ -1,0 +1,102 @@
+//! Figure 4: fake-quant (compiled HLO) vs real-quant (native Rust engine)
+//! agreement — the paper's train/test-mismatch check.
+//!
+//! Three executions of the *same* attention on identical inputs:
+//!   1. `attn_<v>_s256_d64`         — fast-jnp fake-quant HLO (training fwd)
+//!   2. `attn_<v>_pallas_s256_d64`  — Pallas-kernel fake-quant HLO
+//!   3. `attention::engine`          — packed-4-bit real-quant Rust engine
+//!
+//! The paper's claim (Fig. 4: "visually indistinguishable") maps to small
+//! max-abs error and cosine ≈ 1 between (1)/(2) and (3).
+
+use anyhow::Result;
+
+use super::common::write_table;
+use crate::attention::engine::attend_sage3_blocked;
+use crate::attention::{attend, Variant};
+use crate::config::Config;
+use crate::rng::Rng;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Tensor;
+
+pub fn fig4(rt: &Runtime, cfg: &Config) -> Result<()> {
+    let (b, h, n, d) = (1usize, 4usize, 256usize, 64usize);
+    let seed = cfg.u64_or("seed", 42);
+    let mut rng = Rng::new(seed ^ 0xf14);
+    let q = Tensor::new(vec![b, h, n, d], rng.normal_vec(b * h * n * d, 0.0, 1.0))?;
+    let k = Tensor::new(vec![b, h, n, d], rng.normal_vec(b * h * n * d, 0.0, 1.0))?;
+    let v = Tensor::new(vec![b, h, n, d], rng.normal_vec(b * h * n * d, 0.0, 1.0))?;
+
+    let mut rows = Vec::new();
+    for variant in ["f32", "fp4", "sage3"] {
+        let fast = rt.run(
+            &format!("attn_{variant}_s{n}_d{d}"),
+            &[Value::F32(q.clone()), Value::F32(k.clone()), Value::F32(v.clone())],
+        )?;
+        let pallas = rt.run(
+            &format!("attn_{variant}_pallas_s{n}_d{d}"),
+            &[Value::F32(q.clone()), Value::F32(k.clone()), Value::F32(v.clone())],
+        )?;
+        // Native real-quant engine, per head.
+        let var = Variant::parse(variant).unwrap();
+        let mut native = Tensor::zeros(vec![b, h, n, d]);
+        for head in 0..h {
+            let off = head * n * d;
+            // block_q must match the artifact's tile (64) for sage3.
+            let out = if var == Variant::Sage3 {
+                attend_sage3_blocked(
+                    &q.data[off..off + n * d],
+                    &k.data[off..off + n * d],
+                    &v.data[off..off + n * d],
+                    n, n, d, false, 64,
+                )
+            } else {
+                attend(
+                    &q.data[off..off + n * d],
+                    &k.data[off..off + n * d],
+                    &v.data[off..off + n * d],
+                    n, d, false, var,
+                )
+            };
+            native.data[off..off + n * d].copy_from_slice(&out.o);
+        }
+        let fast_vs_native = (
+            fast[0].max_abs_diff(&native),
+            fast[0].mean_abs_diff(&native),
+            fast[0].cosine_sim(&native),
+        );
+        let pallas_vs_native = (
+            pallas[0].max_abs_diff(&native),
+            pallas[0].mean_abs_diff(&native),
+            pallas[0].cosine_sim(&native),
+        );
+        let fast_vs_pallas = (
+            fast[0].max_abs_diff(&pallas[0]),
+            fast[0].mean_abs_diff(&pallas[0]),
+            fast[0].cosine_sim(&pallas[0]),
+        );
+        println!(
+            "[fig4] {variant}: fake(jnp)↔real max {:.2e}, fake(pallas)↔real max {:.2e}",
+            fast_vs_native.0, pallas_vs_native.0
+        );
+        for (pair, (mx, mn, cs)) in [
+            ("fake-quant HLO (jnp) vs real-quant engine", fast_vs_native),
+            ("fake-quant HLO (pallas) vs real-quant engine", pallas_vs_native),
+            ("fake-quant jnp vs pallas", fast_vs_pallas),
+        ] {
+            rows.push(vec![
+                variant.to_string(),
+                pair.to_string(),
+                format!("{mx:.3e}"),
+                format!("{mn:.3e}"),
+                format!("{cs:.6}"),
+            ]);
+        }
+    }
+    write_table(
+        "fig4_consistency",
+        "Figure 4 (proxy): fake-quant (training) vs real-quant (inference) agreement, 256×64 heads",
+        &["Variant", "Pair", "Max abs err", "Mean abs err", "Cosine"],
+        &rows,
+    )
+}

@@ -1,0 +1,108 @@
+//! Figure 5: attention-kernel throughput.
+//!
+//! Two complementary views (DESIGN.md §2 substitution):
+//!
+//! * **Measured (CPU)** — wall time of the compiled attention artifacts per
+//!   variant/shape. On CPU the FP4 variants *emulate* quantization in f32
+//!   and are necessarily slower than plain f32 attention, but the paper's
+//!   key ordering — Attn-QAT faster than SageAttention3 (less
+//!   preprocessing) — must and does hold.
+//! * **Modeled (RTX 5090)** — the `perfmodel` analytical estimates at the
+//!   paper's shapes (batch 16, 16 heads, hd ∈ {64,128}), reproducing the
+//!   1.1–1.5× Attn-QAT/Sage3 and FP4/BF16 speedup shapes.
+
+use anyhow::Result;
+
+use super::common::write_table;
+use crate::bench::bench_units;
+use crate::config::Config;
+use crate::perfmodel::{estimate, Hw, Kernel};
+use crate::rng::Rng;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Tensor;
+
+pub fn fig5(rt: &Runtime, cfg: &Config) -> Result<()> {
+    measured(rt, cfg)?;
+    modeled(cfg)
+}
+
+fn measured(rt: &Runtime, cfg: &Config) -> Result<()> {
+    let iters = cfg.usize_or("fig5.iters", 5);
+    let mut rows = Vec::new();
+    let mut rng = Rng::new(cfg.u64_or("seed", 42));
+    for d in [64usize, 128] {
+        for n in [128usize, 256, 512, 1024] {
+            let (b, h) = (1usize, 4usize);
+            let numel = b * h * n * d;
+            let q = Tensor::new(vec![b, h, n, d], rng.normal_vec(numel, 0.0, 1.0))?;
+            let k = Tensor::new(vec![b, h, n, d], rng.normal_vec(numel, 0.0, 1.0))?;
+            let v = Tensor::new(vec![b, h, n, d], rng.normal_vec(numel, 0.0, 1.0))?;
+            let mut per_variant = Vec::new();
+            for variant in ["f32", "fp4", "sage3"] {
+                let name = format!("attn_{variant}_s{n}_d{d}");
+                if rt.meta(&name).is_err() {
+                    continue; // bench set not exported
+                }
+                let inputs =
+                    [Value::F32(q.clone()), Value::F32(k.clone()), Value::F32(v.clone())];
+                rt.run(&name, &inputs)?; // compile warmup
+                let flops = 4.0 * (b * h) as f64 * (n * n * d) as f64;
+                let r = bench_units(&name, 1, iters, flops, "flop", || {
+                    rt.run(&name, &inputs).expect("bench run");
+                });
+                per_variant.push((variant, r.median_ns, r.throughput()));
+            }
+            let sage = per_variant.iter().find(|(v, ..)| *v == "sage3").map(|x| x.1);
+            for (variant, ns, tput) in &per_variant {
+                let vs_sage = sage.map(|s| format!("{:.2}x", s / ns)).unwrap_or_default();
+                rows.push(vec![
+                    format!("hd={d} seq={n}"),
+                    variant.to_string(),
+                    format!("{:.3} ms", ns / 1e6),
+                    format!("{:.3e}", tput),
+                    vs_sage,
+                ]);
+            }
+        }
+    }
+    write_table(
+        "fig5_measured",
+        "Figure 5a (CPU-measured): compiled attention artifact wall time (FP4 emulated in f32 — ordering vs Sage3 is the claim)",
+        &["Shape", "Variant", "Median", "FLOP/s", "Speedup vs Sage3"],
+        &rows,
+    )
+}
+
+fn modeled(_cfg: &Config) -> Result<()> {
+    let hw = Hw::default();
+    let mut rows = Vec::new();
+    for d in [64usize, 128] {
+        for n in [1024usize, 2048, 4096, 8192, 16384] {
+            let (b, h) = (16usize, 16usize);
+            let fa2 = estimate(Kernel::Fa2Bf16, &hw, b, h, n, d);
+            let sage = estimate(Kernel::Sage3, &hw, b, h, n, d);
+            let qat = estimate(Kernel::AttnQat, &hw, b, h, n, d);
+            let tput = |e: &crate::perfmodel::Estimate| {
+                4.0 * (b * h) as f64 * (n * n * d) as f64 / e.total_s / 1e12
+            };
+            rows.push(vec![
+                format!("hd={d} seq={n}"),
+                format!("{:.1}", tput(&fa2)),
+                format!("{:.1}", tput(&sage)),
+                format!("{:.1}", tput(&qat)),
+                format!("{:.2}x", sage.total_s / qat.total_s),
+                format!("{:.2}x", fa2.total_s / qat.total_s),
+                format!("{:.0}%", qat.mxu_utilization * 100.0),
+            ]);
+        }
+    }
+    write_table(
+        "fig5_modeled",
+        "Figure 5b (modeled, RTX 5090 profile): TFLOP/s by kernel; Attn-QAT vs Sage3 should fall in the paper's 1.1-1.5x band",
+        &[
+            "Shape", "FA2-BF16 TFLOP/s", "Sage3 TFLOP/s", "Attn-QAT TFLOP/s",
+            "QAT/Sage3", "QAT/FA2", "QAT tensor-core util",
+        ],
+        &rows,
+    )
+}

@@ -1,0 +1,240 @@
+//! LLM experiments: Table 3 (SFT), Table 4 (continued training), Fig 3(c).
+//!
+//! Size mapping (DESIGN.md §2): paper's Qwen3-14B → our "small", paper's
+//! Llama-3.1-70B → our "base". Evaluation = held-out perplexity + five
+//! multiple-choice suites scored by likelihood ranking, mirroring
+//! lm-eval-harness mechanics.
+
+use anyhow::{anyhow, Result};
+
+use super::common::{ensure_lm_base, f4, write_history, write_table};
+use crate::config::Config;
+use crate::coordinator::{LrSchedule, StepMetrics, Trainer};
+use crate::data::corpus::Corpus;
+use crate::data::tasks::{sft_batch, MC_SUITES};
+use crate::eval::lm::{mc_accuracy, perplexity};
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Eval artifact variant for a trained variant (QAT models infer in FP4).
+fn eval_variant(trained: &str) -> &'static str {
+    match trained {
+        "f32" => "f32",
+        _ => "fp4",
+    }
+}
+
+/// Continue training `variant` from base params on corpus data.
+fn continue_train(
+    rt: &Runtime,
+    size: &str,
+    variant: &str,
+    base: &[Tensor],
+    cfg: &Config,
+) -> Result<(Vec<Tensor>, Vec<StepMetrics>)> {
+    let steps = cfg.usize_or("llm.ct_steps", 150);
+    let lr = cfg.f32_or("llm.ct_lr", 3e-4);
+    let seed = cfg.u64_or("seed", 42);
+    let train_art = format!("lm_train_{variant}_{size}");
+    let meta = rt.meta(&train_art)?;
+    let batch = meta.usize_field("batch").ok_or_else(|| anyhow!("batch"))?;
+    let seq = meta.raw.get("model").get("seq_len").as_usize().unwrap();
+    println!("[llm] continued training '{variant}' on {size} for {steps} steps...");
+    let mut trainer = Trainer::new(
+        rt,
+        &format!("lm_init_{size}"),
+        &train_art,
+        seed as i32,
+        LrSchedule::Constant(lr),
+    )?
+    .with_params(base.to_vec())?;
+    let mut corpus = Corpus::new(seed ^ 0xc7);
+    trainer.run(
+        steps,
+        (steps / 5).max(1),
+        |_| {
+            let b = corpus.next_batch(batch, seq);
+            vec![b.token_value(), b.mask_value()]
+        },
+        |m| println!("  [{variant}] step {:>4} loss {:.4} gnorm {:.3}", m.step, m.loss, m.grad_norm),
+    )?;
+    Ok((trainer.state.params.clone(), trainer.history))
+}
+
+/// SFT `variant` from base params on instruction tasks.
+fn sft_train(
+    rt: &Runtime,
+    size: &str,
+    variant: &str,
+    base: &[Tensor],
+    cfg: &Config,
+) -> Result<(Vec<Tensor>, Vec<StepMetrics>)> {
+    let steps = cfg.usize_or("llm.sft_steps", 150);
+    let lr = cfg.f32_or("llm.sft_lr", 3e-4);
+    let seed = cfg.u64_or("seed", 42);
+    let train_art = format!("lm_train_{variant}_{size}");
+    let meta = rt.meta(&train_art)?;
+    let batch = meta.usize_field("batch").ok_or_else(|| anyhow!("batch"))?;
+    let seq = meta.raw.get("model").get("seq_len").as_usize().unwrap();
+    println!("[llm] SFT '{variant}' on {size} for {steps} steps...");
+    let mut trainer = Trainer::new(
+        rt,
+        &format!("lm_init_{size}"),
+        &train_art,
+        seed as i32,
+        LrSchedule::Constant(lr),
+    )?
+    .with_params(base.to_vec())?;
+    let mut rng = Rng::new(seed ^ 0x5f7);
+    trainer.run(
+        steps,
+        (steps / 5).max(1),
+        |_| {
+            let b = sft_batch(&mut rng, batch, seq);
+            vec![b.token_value(), b.mask_value()]
+        },
+        |m| println!("  [{variant}] step {:>4} loss {:.4} gnorm {:.3}", m.step, m.loss, m.grad_norm),
+    )?;
+    Ok((trainer.state.params.clone(), trainer.history))
+}
+
+/// Evaluate params: perplexity + the 5 MC suites.
+fn evaluate(
+    rt: &Runtime,
+    size: &str,
+    variant: &str,
+    params: &[Tensor],
+    cfg: &Config,
+) -> Result<(f64, Vec<f64>)> {
+    let artifact = format!("lm_eval_{}_{size}", eval_variant(variant));
+    let seed = cfg.u64_or("seed", 42);
+    let n_items = cfg.usize_or("llm.eval_items", 40);
+    let mut held_out = Corpus::new(seed ^ 0xeeee);
+    let ppl = perplexity(rt, &artifact, params, &mut held_out, cfg.usize_or("llm.ppl_batches", 3))?;
+    let mut accs = Vec::new();
+    for suite in MC_SUITES {
+        accs.push(mc_accuracy(rt, &artifact, params, suite, n_items, seed + 9)?);
+    }
+    Ok((ppl, accs))
+}
+
+const T4_HEADER: [&str; 8] = [
+    "Exp.", "Model / Precision", "topic (WinoGrande)", "markov (HellaSwag)",
+    "copy (ARC-c)", "sort (PIQA)", "lookup (MMLU)", "Held-out PPL ↓",
+];
+
+/// Table 4: continued training, sizes {small, base} × {BF16, FP4, Attn-QAT}.
+pub fn table4(rt: &Runtime, cfg: &Config) -> Result<()> {
+    let sizes: Vec<String> = match cfg.get("llm.sizes") {
+        Some(crate::config::CfgValue::Arr(a)) => a
+            .iter()
+            .filter_map(|v| match v {
+                crate::config::CfgValue::Str(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect(),
+        _ => vec!["small".to_string(), "base".to_string()],
+    };
+    let mut rows = Vec::new();
+    let mut exp_no = 1;
+    for size in &sizes {
+        let base = ensure_lm_base(rt, size, cfg)?;
+        // 1) BF16: continue in f32.
+        let (p_f32, _) = continue_train(rt, size, "f32", &base, cfg)?;
+        // 2) FP4: no training, base params, FP4 inference.
+        // 3) Attn-QAT: continue with QAT, FP4 inference.
+        let (p_qat, _) = continue_train(rt, size, "qat", &base, cfg)?;
+        for (label, variant, params) in [
+            ("BF16 (f32)", "f32", &p_f32),
+            ("FP4", "fp4", &base),
+            ("Attn-QAT", "qat", &p_qat),
+        ] {
+            let (ppl, accs) = evaluate(rt, size, variant, params, cfg)?;
+            println!("[table4] {size}/{label}: ppl {ppl:.4} accs {accs:?}");
+            let mut row = vec![exp_no.to_string(), format!("{size} / {label}")];
+            row.extend(accs.iter().map(|&a| f4(a as f32)));
+            row.push(format!("{ppl:.4}"));
+            rows.push(row);
+            exp_no += 1;
+        }
+    }
+    write_table(
+        "table4_llm",
+        "Table 4 (proxy): LLM continued training — benchmark proxies + held-out perplexity",
+        &T4_HEADER,
+        &rows,
+    )
+}
+
+const T3_HEADER: [&str; 7] = [
+    "Exp.", "Model / Precision", "lookup (MMLU-Redux)", "copy (IFEval)",
+    "markov (GPQA)", "sort (MATH-500)", "topic (GSM8K)",
+];
+
+/// Table 3: SFT with BF16 vs Attn-QAT; also records Fig 3(c) loss curves.
+pub fn table3(rt: &Runtime, cfg: &Config) -> Result<()> {
+    let sizes: Vec<String> = match cfg.get("llm.sizes") {
+        Some(crate::config::CfgValue::Arr(a)) => a
+            .iter()
+            .filter_map(|v| match v {
+                crate::config::CfgValue::Str(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect(),
+        _ => vec!["small".to_string(), "base".to_string()],
+    };
+    let mut rows = Vec::new();
+    let mut series = Vec::new();
+    let mut exp_no = 1;
+    for size in &sizes {
+        let base = ensure_lm_base(rt, size, cfg)?;
+        for (label, variant) in [("BF16 (f32)", "f32"), ("FP4 w. Attn-QAT", "qat")] {
+            let (params, hist) = sft_train(rt, size, variant, &base, cfg)?;
+            // Table-3 proxies lean on the SFT task suites.
+            let artifact = format!("lm_eval_{}_{size}", eval_variant(variant));
+            let seed = cfg.u64_or("seed", 42);
+            let n_items = cfg.usize_or("llm.eval_items", 40);
+            let mut accs = Vec::new();
+            for suite in ["lookup", "copy", "markov", "sort", "topic"] {
+                accs.push(mc_accuracy(rt, &artifact, &params, suite, n_items, seed + 17)?);
+            }
+            println!("[table3] {size}/{label}: accs {accs:?}");
+            let mut row = vec![exp_no.to_string(), format!("{size} / {label}")];
+            row.extend(accs.iter().map(|&a| f4(a as f32)));
+            rows.push(row);
+            series.push((format!("{size}/{label}"), hist));
+            exp_no += 1;
+        }
+    }
+    write_history("fig3c_sft_loss", &series)?;
+    write_table(
+        "table3_llm",
+        "Table 3 (proxy): SFT with BF16 attention vs Attn-QAT",
+        &T3_HEADER,
+        &rows,
+    )
+}
+
+/// Figure 3(c): SFT loss curves BF16 vs Attn-QAT on the small model.
+pub fn fig3c(rt: &Runtime, cfg: &Config) -> Result<()> {
+    let size = cfg.str_or("llm.fig3c_size", "small");
+    let base = ensure_lm_base(rt, &size, cfg)?;
+    let mut series = Vec::new();
+    let mut rows = Vec::new();
+    for (label, variant) in [("BF16 (f32)", "f32"), ("Attn-QAT", "qat")] {
+        let (_, hist) = sft_train(rt, &size, variant, &base, cfg)?;
+        let final_loss = hist.last().map(|m| m.loss).unwrap_or(f32::NAN);
+        let tail: Vec<f32> = hist.iter().rev().take(10).map(|m| m.loss).collect();
+        let tail_mean = tail.iter().sum::<f32>() / tail.len().max(1) as f32;
+        rows.push(vec![label.to_string(), f4(final_loss), f4(tail_mean)]);
+        series.push((label.to_string(), hist));
+    }
+    write_history("fig3c_curves", &series)?;
+    write_table(
+        "fig3c_sft",
+        "Figure 3(c) (proxy): SFT loss, BF16 vs Attn-QAT (series in results/fig3c_curves.json)",
+        &["Config", "Final loss", "Tail-10 mean loss"],
+        &rows,
+    )
+}

@@ -1,0 +1,43 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §1 index).
+//!
+//! Each driver is callable from the CLI (`repro exp <id>`) and writes both
+//! a human-readable markdown table under `results/` and a JSON twin for
+//! downstream tooling. Step budgets and sizes come from `config::Config`
+//! (CPU-friendly defaults; scale up via `-s` overrides or a config file).
+
+pub mod common;
+pub mod consistency;
+pub mod diffusion;
+pub mod kernels;
+pub mod llm;
+
+use anyhow::{bail, Result};
+
+use crate::config::Config;
+use crate::runtime::Runtime;
+
+/// Run one experiment by its paper id.
+pub fn run(rt: &Runtime, id: &str, cfg: &Config) -> Result<()> {
+    match id {
+        "table1" => diffusion::table1(rt, cfg),
+        "table2" => diffusion::table2(rt, cfg),
+        "table3" => llm::table3(rt, cfg),
+        "table4" => llm::table4(rt, cfg),
+        "fig1" => diffusion::fig1(rt, cfg),
+        "fig2" => diffusion::fig2(rt, cfg),
+        "fig3" => {
+            diffusion::fig3_dynamics(rt, cfg)?;
+            llm::fig3c(rt, cfg)
+        }
+        "fig4" => consistency::fig4(rt, cfg),
+        "fig5" => kernels::fig5(rt, cfg),
+        "all" => {
+            for id in ["table2", "table1", "table4", "table3", "fig1", "fig2", "fig3", "fig4", "fig5"] {
+                println!("\n===== {id} =====");
+                run(rt, id, cfg)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment '{other}' (table1-4, fig1-5, all)"),
+    }
+}

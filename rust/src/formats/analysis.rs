@@ -1,0 +1,85 @@
+//! Quantization-error statistics — the measurement side of the format lib.
+//!
+//! Used by the experiment harness to report per-tensor quantization error
+//! (the quantity QAT learns to compensate) and by tests to bound format
+//! behaviour (e.g. NVFP4's worst-case relative error within a block).
+
+/// Summary statistics of `q` as an approximation of `x`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ErrorStats {
+    pub mse: f64,
+    pub max_abs: f32,
+    /// Max relative error over elements with |x| > threshold.
+    pub max_rel: f32,
+    /// Signal-to-noise ratio in dB (10·log10(‖x‖² / ‖x−q‖²)).
+    pub snr_db: f64,
+    pub n: usize,
+}
+
+/// Compute error statistics (relative errors counted where |x| > `rel_floor`).
+pub fn error_stats(x: &[f32], q: &[f32], rel_floor: f32) -> ErrorStats {
+    assert_eq!(x.len(), q.len());
+    let mut se = 0.0f64;
+    let mut sig = 0.0f64;
+    let mut max_abs = 0.0f32;
+    let mut max_rel = 0.0f32;
+    for (&a, &b) in x.iter().zip(q) {
+        let e = a - b;
+        se += (e as f64) * (e as f64);
+        sig += (a as f64) * (a as f64);
+        max_abs = max_abs.max(e.abs());
+        if a.abs() > rel_floor {
+            max_rel = max_rel.max(e.abs() / a.abs());
+        }
+    }
+    let n = x.len().max(1);
+    ErrorStats {
+        mse: se / n as f64,
+        max_abs,
+        max_rel,
+        snr_db: if se > 0.0 { 10.0 * (sig / se).log10() } else { f64::INFINITY },
+        n: x.len(),
+    }
+}
+
+/// Theoretical worst-case relative element error of E2M1 rounding for
+/// in-range values (half the largest relative gap: between 4 and 6 the
+/// midpoint 5 is 20% from 4... relative to the *input* the bound is 1/4
+/// at the bottom of the subnormal range; for normal values it is 1/6).
+pub const E2M1_MAX_REL_ERR_NORMAL: f32 = 1.0 / 6.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::block::nvfp4_fake_quant_row;
+    use crate::rng::Rng;
+
+    #[test]
+    fn zero_error_stats() {
+        let x = [1.0f32, -2.0, 3.0];
+        let s = error_stats(&x, &x, 1e-6);
+        assert_eq!(s.mse, 0.0);
+        assert_eq!(s.max_abs, 0.0);
+        assert!(s.snr_db.is_infinite());
+    }
+
+    #[test]
+    fn nvfp4_snr_reasonable_for_gaussian() {
+        // Gaussian data through NVFP4 keeps roughly 14-20 dB SNR — the
+        // regime the paper's Q/K/V tensors live in.
+        let mut rng = Rng::new(9);
+        let x = rng.normal_vec(4096, 0.0, 1.0);
+        let mut q = x.clone();
+        for row in q.chunks_mut(16) {
+            let _ = row;
+        }
+        let mut q2 = x.clone();
+        nvfp4_fake_quant_row(&mut q2);
+        let s = error_stats(&x, &q2, 1e-3);
+        assert!(s.snr_db > 10.0, "snr {}", s.snr_db);
+        assert!(s.snr_db < 40.0, "suspiciously clean: {}", s.snr_db);
+        // Elements much smaller than their block's amax flush to zero, so
+        // the worst elementwise relative error is exactly 1.
+        assert!(s.max_rel <= 1.0, "max_rel {}", s.max_rel);
+    }
+}

@@ -1,0 +1,134 @@
+//! Block quantization: NVFP4 (block 16, E4M3 scale) and MXFP4 (block 32,
+//! E8M0 scale) — Eq. (1)/(2) of the paper, bit-exact with
+//! `python/compile/kernels/nvfp4.{nvfp4_quant, mxfp4_quant}`.
+
+use super::{e2m1, e4m3, e8m0};
+
+/// NVFP4 micro-scaling block size.
+pub const NVFP4_BLOCK: usize = 16;
+/// MXFP4 (OCP MX) block size.
+pub const MXFP4_BLOCK: usize = 32;
+
+/// Quantize one row (blocked along its length) into E2M1 codes + E4M3
+/// scale bytes. `row.len()` must be a multiple of [`NVFP4_BLOCK`].
+///
+/// Matches Eq. (1): `s = amax/6` (then E4M3-rounded; zero/underflowed
+/// blocks get scale 1.0 so all-zero blocks dequantize exactly), elements
+/// RNE-rounded to E2M1 after division by the *decoded* scale.
+pub fn nvfp4_quant_row(row: &[f32], codes: &mut Vec<u8>, scales: &mut Vec<u8>) {
+    debug_assert_eq!(row.len() % NVFP4_BLOCK, 0);
+    for block in row.chunks(NVFP4_BLOCK) {
+        let amax = block.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let mut s = e4m3::round(amax / e2m1::MAX);
+        if s <= 0.0 {
+            s = 1.0;
+        }
+        scales.push(e4m3::encode(s));
+        for &x in block {
+            codes.push(e2m1::encode(x / s));
+        }
+    }
+}
+
+/// Dequantize one row previously produced by [`nvfp4_quant_row`].
+pub fn nvfp4_dequant_row(codes: &[u8], scales: &[u8], out: &mut Vec<f32>) {
+    debug_assert_eq!(codes.len(), scales.len() * NVFP4_BLOCK);
+    for (bi, block) in codes.chunks(NVFP4_BLOCK).enumerate() {
+        let s = e4m3::decode(scales[bi]); // decoded once per block
+        for &c in block {
+            out.push(e2m1::decode(c) * s);
+        }
+    }
+}
+
+/// Fake-quantize a row in place: quantize + dequantize (Eq. 6's φ⁻¹∘φ).
+pub fn nvfp4_fake_quant_row(row: &mut [f32]) {
+    debug_assert_eq!(row.len() % NVFP4_BLOCK, 0);
+    for block in row.chunks_mut(NVFP4_BLOCK) {
+        let amax = block.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        let mut s = e4m3::round(amax / e2m1::MAX);
+        if s <= 0.0 {
+            s = 1.0;
+        }
+        for x in block.iter_mut() {
+            *x = e2m1::round(*x / s) * s;
+        }
+    }
+}
+
+/// MXFP4: quantize one block of 32 with a power-of-two E8M0 scale.
+/// Returns (codes, scale_byte).
+pub fn mxfp4_quant_block(block: &[f32]) -> (Vec<u8>, u8) {
+    debug_assert_eq!(block.len(), MXFP4_BLOCK);
+    let amax = block.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+    let s = e8m0::scale_for_amax(amax);
+    let codes = block.iter().map(|&x| e2m1::encode(x / s)).collect();
+    (codes, e8m0::encode(s))
+}
+
+/// MXFP4 dequantization of one block.
+pub fn mxfp4_dequant_block(codes: &[u8], scale_byte: u8, out: &mut Vec<f32>) {
+    let s = e8m0::decode(scale_byte);
+    for &c in codes {
+        out.push(e2m1::decode(c) * s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nvfp4_roundtrip_zero_block() {
+        let row = vec![0.0f32; NVFP4_BLOCK];
+        let (mut codes, mut scales) = (Vec::new(), Vec::new());
+        nvfp4_quant_row(&row, &mut codes, &mut scales);
+        let mut out = Vec::new();
+        nvfp4_dequant_row(&codes, &scales, &mut out);
+        assert_eq!(out, row);
+    }
+
+    #[test]
+    fn nvfp4_block_amax_maps_to_six() {
+        // amax element lands exactly on ±6·s when amax/6 is representable.
+        let mut row = vec![0.1f32; NVFP4_BLOCK];
+        row[3] = -12.0; // amax 12, s = 2.0 exactly representable in e4m3
+        let (mut codes, mut scales) = (Vec::new(), Vec::new());
+        nvfp4_quant_row(&row, &mut codes, &mut scales);
+        let mut out = Vec::new();
+        nvfp4_dequant_row(&codes, &scales, &mut out);
+        assert_eq!(out[3], -12.0);
+    }
+
+    #[test]
+    fn fake_quant_matches_quant_dequant() {
+        let mut row: Vec<f32> = (0..64).map(|i| ((i * 37 % 97) as f32 - 48.0) / 7.0).collect();
+        let (mut codes, mut scales) = (Vec::new(), Vec::new());
+        nvfp4_quant_row(&row, &mut codes, &mut scales);
+        let mut deq = Vec::new();
+        nvfp4_dequant_row(&codes, &scales, &mut deq);
+        nvfp4_fake_quant_row(&mut row);
+        assert_eq!(row, deq);
+    }
+
+    #[test]
+    fn fake_quant_idempotent() {
+        let mut row: Vec<f32> = (0..32).map(|i| (i as f32 - 16.0) * 0.3).collect();
+        nvfp4_fake_quant_row(&mut row);
+        let once = row.clone();
+        nvfp4_fake_quant_row(&mut row);
+        assert_eq!(row, once);
+    }
+
+    #[test]
+    fn mxfp4_roundtrip_pow2() {
+        let mut block = vec![0.0f32; MXFP4_BLOCK];
+        block[0] = 6.0;
+        block[1] = -3.0;
+        let (codes, sb) = mxfp4_quant_block(&block);
+        let mut out = Vec::new();
+        mxfp4_dequant_block(&codes, sb, &mut out);
+        assert_eq!(out[0], 6.0);
+        assert_eq!(out[1], -3.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! E2M1 — the FP4 element format (1 sign / 2 exponent / 1 mantissa bits).
+//!
+//! 16 codes, 15 distinct values: ±{0, 0.5, 1, 1.5, 2, 3, 4, 6} (−0 == +0).
+//! Codes are `sign<<3 | mag_code` with `mag_code` indexing [`VALUES`].
+//! Rounding is RNE with saturation at ±6, the semantics of Blackwell's
+//! `cvt.rn.satfinite.e2m1x2.f32`.
+
+use super::rne_binade;
+
+/// Non-negative representable magnitudes, indexed by magnitude code 0..=7.
+pub const VALUES: [f32; 8] = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0];
+
+/// Largest representable magnitude.
+pub const MAX: f32 = 6.0;
+
+/// Round an f32 to the nearest E2M1 value (RNE, saturating).
+#[inline]
+pub fn round(x: f32) -> f32 {
+    let mag = rne_binade(x.abs(), 1, 0, MAX);
+    if x.is_sign_negative() {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Encode to a 4-bit code (`sign<<3 | mag_code`).
+#[inline]
+pub fn encode(x: f32) -> u8 {
+    let mag = rne_binade(x.abs(), 1, 0, MAX);
+    // Eight lattice points: binary-search-free linear scan is fastest.
+    let mut code = 0u8;
+    for (i, v) in VALUES.iter().enumerate() {
+        if mag == *v {
+            code = i as u8;
+            break;
+        }
+    }
+    if x.is_sign_negative() && mag != 0.0 {
+        code | 0x8
+    } else {
+        code
+    }
+}
+
+/// All 16 code values (index = full 4-bit code, sign included).
+pub const DECODE_TABLE: [f32; 16] = [
+    0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0,
+    -0.0, -0.5, -1.0, -1.5, -2.0, -3.0, -4.0, -6.0,
+];
+
+/// Decode a 4-bit code to f32 (branch-free table lookup).
+#[inline]
+pub fn decode(code: u8) -> f32 {
+    DECODE_TABLE[(code & 0xF) as usize]
+}
+
+/// Pack 4-bit codes pairwise into bytes (low nibble = even index).
+pub fn pack(codes: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(codes.len().div_ceil(2));
+    for pair in codes.chunks(2) {
+        let lo = pair[0] & 0xF;
+        let hi = if pair.len() > 1 { pair[1] & 0xF } else { 0 };
+        out.push(lo | (hi << 4));
+    }
+    out
+}
+
+/// Unpack `n` 4-bit codes from packed bytes.
+pub fn unpack(packed: &[u8], n: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(n);
+    for &b in packed {
+        out.push(b & 0xF);
+        if out.len() == n {
+            break;
+        }
+        out.push(b >> 4);
+        if out.len() == n {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_lattice_values_fixed() {
+        for (i, v) in VALUES.iter().enumerate() {
+            assert_eq!(round(*v), *v);
+            assert_eq!(round(-*v), -*v);
+            assert_eq!(encode(*v) & 0x7, i as u8);
+        }
+    }
+
+    #[test]
+    fn saturates() {
+        assert_eq!(round(100.0), 6.0);
+        assert_eq!(round(-100.0), -6.0);
+        assert_eq!(round(6.0001), 6.0);
+    }
+
+    #[test]
+    fn ties_to_even_code() {
+        assert_eq!(round(0.25), 0.0);
+        assert_eq!(round(0.75), 1.0);
+        assert_eq!(round(1.25), 1.0);
+        assert_eq!(round(1.75), 2.0);
+        assert_eq!(round(2.5), 2.0);
+        assert_eq!(round(3.5), 4.0);
+        assert_eq!(round(5.0), 4.0);
+        assert_eq!(round(-2.5), -2.0);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for code in 0u8..16 {
+            let v = decode(code);
+            let back = encode(v);
+            // -0 canonicalises to +0.
+            if code == 0x8 {
+                assert_eq!(back, 0);
+            } else {
+                assert_eq!(back, code, "code {code} -> {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_is_nearest() {
+        // Dense sweep: result must always be a nearest lattice point.
+        let mut x = -8.0f32;
+        while x < 8.0 {
+            let r = round(x);
+            let best = VALUES
+                .iter()
+                .flat_map(|v| [*v, -*v])
+                .min_by(|a, b| (a - x).abs().partial_cmp(&(b - x).abs()).unwrap())
+                .unwrap();
+            assert!(
+                (r - x).abs() <= (best - x).abs() + 1e-6,
+                "x={x} r={r} best={best}"
+            );
+            x += 0.0317;
+        }
+    }
+
+    #[test]
+    fn pack_unpack() {
+        let codes: Vec<u8> = (0..16).collect();
+        assert_eq!(unpack(&pack(&codes), 16), codes);
+        let odd: Vec<u8> = (0..7).collect();
+        assert_eq!(unpack(&pack(&odd), 7), odd);
+    }
+}

@@ -1,0 +1,142 @@
+//! E4M3 — the FP8 format NVFP4 uses for block scales (fp8e4m3fn).
+//!
+//! 1 sign / 4 exponent / 3 mantissa bits, bias 7, **no infinities** and a
+//! single NaN code (0x7F): max finite = 448, min normal = 2⁻⁶, min
+//! subnormal = 2⁻⁹. Encoding is `sign<<7 | code` with codes 0x00..=0x7E
+//! monotone in value.
+
+use super::rne_binade;
+
+/// Largest finite magnitude.
+pub const MAX: f32 = 448.0;
+/// Smallest positive normal (2^-6).
+pub const MIN_NORMAL: f32 = 0.015625;
+/// Smallest positive subnormal (2^-9).
+pub const MIN_SUBNORMAL: f32 = 0.001953125;
+
+/// Round an f32 to the nearest finite E4M3 value (RNE, saturating).
+#[inline]
+pub fn round(x: f32) -> f32 {
+    let mag = rne_binade(x.abs(), 3, -6, MAX);
+    if x.is_sign_negative() {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Decode magnitude from a 7-bit code (0x00..=0x7E). 0x7F is NaN.
+#[inline]
+pub fn decode_mag(code: u8) -> f32 {
+    debug_assert!(code <= 0x7F);
+    if code == 0x7F {
+        return f32::NAN;
+    }
+    let exp = (code >> 3) as i32;
+    let man = (code & 0x7) as f32;
+    if exp == 0 {
+        // subnormal: man/8 * 2^-6
+        man / 8.0 * MIN_NORMAL
+    } else {
+        (1.0 + man / 8.0) * ((exp - 7) as f32).exp2()
+    }
+}
+
+/// Decode a full byte (`sign<<7 | code`).
+#[inline]
+pub fn decode(byte: u8) -> f32 {
+    let mag = decode_mag(byte & 0x7F);
+    if byte & 0x80 != 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// Encode an f32 to the nearest E4M3 byte (RNE, saturating).
+#[inline]
+pub fn encode(x: f32) -> u8 {
+    let mag = rne_binade(x.abs(), 3, -6, MAX);
+    let code = if mag == 0.0 {
+        0u8
+    } else if mag < MIN_NORMAL {
+        // subnormal: round() already landed on a multiple of 2^-9
+        (mag / MIN_SUBNORMAL) as u8
+    } else {
+        let b = mag.log2().floor() as i32; // exact: mag is on the lattice
+        let exp_field = (b + 7) as u8;
+        let man = ((mag / (b as f32).exp2() - 1.0) * 8.0) as u8;
+        (exp_field << 3) | man
+    };
+    if x.is_sign_negative() && mag != 0.0 {
+        code | 0x80
+    } else {
+        code
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_known_codes() {
+        assert_eq!(decode_mag(0x00), 0.0);
+        assert_eq!(decode_mag(0x01), MIN_SUBNORMAL);
+        assert_eq!(decode_mag(0x08), MIN_NORMAL);
+        assert_eq!(decode_mag(0x7E), MAX);
+        assert!(decode_mag(0x7F).is_nan());
+        assert_eq!(decode(0x80 | 0x08), -MIN_NORMAL);
+    }
+
+    #[test]
+    fn encode_decode_all_codes() {
+        for code in 0u8..=0x7E {
+            let v = decode_mag(code);
+            assert_eq!(encode(v) & 0x7F, code, "code {code} value {v}");
+            assert_eq!(round(v), v);
+        }
+    }
+
+    #[test]
+    fn saturation_and_sign() {
+        assert_eq!(round(1e9), MAX);
+        assert_eq!(round(-1e9), -MAX);
+        assert_eq!(encode(-MAX), 0x80 | 0x7E);
+    }
+
+    #[test]
+    fn rne_midpoints() {
+        // 1.0 has step 1/8; midpoint 1.0625 between 1.0 (code even) and
+        // 1.125 -> even mantissa wins: 1.0.
+        assert_eq!(round(1.0625), 1.0);
+        // midpoint between 1.125 and 1.25 -> 1.25 (even mantissa code 2).
+        assert_eq!(round(1.1875), 1.25);
+    }
+
+    #[test]
+    fn monotone_codes() {
+        let mut prev = -1.0;
+        for code in 0u8..=0x7E {
+            let v = decode_mag(code);
+            assert!(v > prev, "code {code}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn round_is_nearest_dense() {
+        let lattice: Vec<f32> = (0u8..=0x7E).map(decode_mag).collect();
+        let mut x = 0.0f32;
+        while x < 500.0 {
+            let r = round(x);
+            let best = lattice
+                .iter()
+                .copied()
+                .min_by(|a, b| (a - x).abs().partial_cmp(&(b - x).abs()).unwrap())
+                .unwrap();
+            assert!((r - x).abs() <= (best - x).abs() + 1e-6, "x={x} r={r} best={best}");
+            x = x * 1.01 + 1e-4;
+        }
+    }
+}

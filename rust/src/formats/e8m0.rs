@@ -1,0 +1,83 @@
+//! E8M0 — the power-of-two shared-scale format of OCP MXFP4.
+//!
+//! A pure 8-bit exponent (bias 127, no sign, no mantissa): representable
+//! values are 2^e for e ∈ [−127, 127] plus a NaN code (0xFF). MXFP4 blocks
+//! of 32 share one E8M0 scale chosen as `2^(floor(log2(amax)) − emax_elem)`
+//! with `emax_elem = 2` for the E2M1 element format (OCP MX spec v1.0).
+
+/// Element-format max exponent for E2M1 (6 = 1.5·2², so emax = 2).
+pub const EMAX_ELEM: i32 = 2;
+
+/// The MX shared scale for a block with the given amax.
+///
+/// Returns 1.0 for all-zero blocks (dequantization is exact either way).
+#[inline]
+pub fn scale_for_amax(amax: f32) -> f32 {
+    if amax <= 0.0 {
+        return 1.0;
+    }
+    let e = floor_log2(amax) - EMAX_ELEM;
+    (e.clamp(-127, 127) as f32).exp2()
+}
+
+/// Encode 2^e as the biased exponent byte.
+#[inline]
+pub fn encode(scale: f32) -> u8 {
+    debug_assert!(scale > 0.0);
+    let e = floor_log2(scale);
+    (e.clamp(-127, 127) + 127) as u8
+}
+
+/// Decode a biased exponent byte to 2^(byte − 127).
+#[inline]
+pub fn decode(byte: u8) -> f32 {
+    debug_assert!(byte != 0xFF, "E8M0 NaN code");
+    ((byte as i32 - 127) as f32).exp2()
+}
+
+/// floor(log2(x)) for positive normal f32 via exponent bits.
+#[inline]
+pub fn floor_log2(x: f32) -> i32 {
+    debug_assert!(x > 0.0);
+    let bits = x.to_bits();
+    let exp_field = ((bits >> 23) & 0xFF) as i32;
+    if exp_field == 0 {
+        // subnormal: fall back (rare; only reachable with amax < 2^-126)
+        x.log2().floor() as i32
+    } else {
+        exp_field - 127
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floor_log2_exact() {
+        assert_eq!(floor_log2(1.0), 0);
+        assert_eq!(floor_log2(1.5), 0);
+        assert_eq!(floor_log2(2.0), 1);
+        assert_eq!(floor_log2(0.5), -1);
+        assert_eq!(floor_log2(0.9999), -1);
+        assert_eq!(floor_log2(6.0), 2);
+    }
+
+    #[test]
+    fn scale_rule() {
+        // amax = 6 -> block fits e2m1 exactly with scale 2^0.
+        assert_eq!(scale_for_amax(6.0), 1.0);
+        // amax = 12 -> scale 2^1.
+        assert_eq!(scale_for_amax(12.0), 2.0);
+        assert_eq!(scale_for_amax(0.0), 1.0);
+        assert_eq!(scale_for_amax(1.0), 0.25); // floor(log2 1)=0, -2 -> 2^-2
+    }
+
+    #[test]
+    fn encode_decode() {
+        for e in [-127i32, -10, -1, 0, 1, 10, 127] {
+            let s = (e as f32).exp2();
+            assert_eq!(decode(encode(s)), s);
+        }
+    }
+}

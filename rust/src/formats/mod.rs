@@ -1,0 +1,92 @@
+//! Bit-exact software NVFP4 / MXFP4 numeric formats (the paper's §2.1).
+//!
+//! This is the "real quant" half of the system: while the JAX/Pallas layers
+//! *emulate* FP4 via fake quantization (Eq. 6), this module implements the
+//! actual storage formats —
+//!
+//! * [`e2m1`] — the FP4 element codec (1/2/1 bits, values ±{0,.5,..,6})
+//! * [`e4m3`] — the FP8 scale codec used by NVFP4 (bias 7, max 448)
+//! * [`e8m0`] — the power-of-two scale codec used by MXFP4
+//! * [`block`] — NVFP4 (block 16, E4M3 scales) and MXFP4 (block 32, E8M0
+//!   scales) block quantization
+//! * [`tensor4`] — packed 4-bit tensors (2 codes/byte + scale bytes): the
+//!   storage the FP4 KV cache and the real-quant attention engine use
+//! * [`analysis`] — quantization-error statistics
+//!
+//! Decoding an (E2M1 code × E4M3 scale) pair into f32 and accumulating in
+//! f32 is numerically identical to what Blackwell's FP4MM hardware does, so
+//! every *error-behaviour* experiment in the paper transfers exactly
+//! (speed is modeled separately in `perfmodel`). Golden vectors emitted by
+//! `python/compile/aot.py` pin this module to the JAX implementation.
+
+pub mod analysis;
+pub mod block;
+pub mod e2m1;
+pub mod e4m3;
+pub mod e8m0;
+pub mod tensor4;
+
+pub use block::{mxfp4_quant_block, nvfp4_dequant_row, nvfp4_quant_row, MXFP4_BLOCK, NVFP4_BLOCK};
+pub use tensor4::PackedNvfp4;
+
+/// Round-to-nearest-even onto a mini-float magnitude lattice, closed form.
+///
+/// The lattice is "`mant_bits` mantissa bits, normal binades ≥ `min_binade`,
+/// subnormal spacing below, saturate at `max_val`" — the exact mirror of
+/// `python/compile/kernels/nvfp4._rne_binade`:
+///
+/// ```text
+/// b    = max(floor(log2(mag)), min_binade)
+/// step = 2^(b − mant_bits)
+/// q    = round_ties_even(mag / step) · step, clamped to max_val
+/// ```
+///
+/// `mag / step` is exact (power-of-two divisor), so the tie cases land
+/// exactly on `.5` and `round_ties_even` reproduces IEEE RNE on the code
+/// lattice (even quotient == even mantissa code).
+pub fn rne_binade(mag: f32, mant_bits: i32, min_binade: i32, max_val: f32) -> f32 {
+    debug_assert!(mag >= 0.0);
+    if mag == 0.0 {
+        return 0.0;
+    }
+    let bits = mag.to_bits();
+    let exp_field = ((bits >> 23) & 0xFF) as i32;
+    // Subnormal f32 inputs have exp_field == 0; they sit far below every
+    // lattice we use, so clamping to min_binade is exact.
+    let b = if exp_field == 0 { min_binade } else { (exp_field - 127).max(min_binade) };
+    // 2^(b - mant_bits) constructed from bits (no libm exp2 call; the
+    // exponent is always in the normal f32 range for our lattices).
+    let step = f32::from_bits(((b - mant_bits + 127) as u32) << 23);
+    let q = (mag / step).round_ties_even() * step;
+    q.min(max_val)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rne_binade_e2m1_ties() {
+        // Exact midpoints must follow the even-code convention.
+        let cases = [
+            (0.25, 0.0),
+            (0.75, 1.0),
+            (1.25, 1.0),
+            (1.75, 2.0),
+            (2.5, 2.0),
+            (3.5, 4.0),
+            (5.0, 4.0),
+            (7.0, 6.0),
+        ];
+        for (x, want) in cases {
+            assert_eq!(rne_binade(x, 1, 0, 6.0), want, "x={x}");
+        }
+    }
+
+    #[test]
+    fn rne_binade_zero_and_tiny() {
+        assert_eq!(rne_binade(0.0, 1, 0, 6.0), 0.0);
+        assert_eq!(rne_binade(1e-30, 1, 0, 6.0), 0.0);
+        assert_eq!(rne_binade(f32::MIN_POSITIVE / 2.0, 3, -6, 448.0), 0.0);
+    }
+}

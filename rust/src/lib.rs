@@ -1,0 +1,35 @@
+//! # attn-qat — Attn-QAT reproduction (L3 runtime)
+//!
+//! Rust coordinator for the three-layer Attn-QAT stack (see DESIGN.md):
+//! JAX/Pallas author the models and kernels at build time; this crate owns
+//! everything that runs — the PJRT runtime, training orchestration, the
+//! synthetic-data pipeline, evaluation, the NVFP4 format library, the
+//! real-quant attention engines, the FP4 KV cache + decode server, and the
+//! experiment drivers that regenerate every table and figure of the paper.
+//!
+//! Module map:
+//! * substrates: [`json`], [`rng`], [`tensor`], [`bench`], [`config`]
+//! * numeric formats: [`formats`] (E2M1 / E4M3 / E8M0 / NVFP4 / MXFP4)
+//! * runtime: [`runtime`] (PJRT + artifact registry)
+//! * engines: [`attention`] (f32 / real-quant FP4 / Sage3)
+//! * pipeline: [`data`], [`coordinator`], [`eval`]
+//! * serving: [`kvcache`], [`serve`]
+//! * analysis: [`perfmodel`], [`experiments`]
+
+pub mod bench;
+pub mod config;
+pub mod json;
+pub mod rng;
+pub mod tensor;
+
+pub mod formats;
+
+pub mod attention;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod kvcache;
+pub mod perfmodel;
+pub mod runtime;
+pub mod serve;

@@ -1,0 +1,241 @@
+//! `repro` — the Attn-QAT reproduction launcher.
+//!
+//! ```text
+//! repro list                          # artifacts in the registry
+//! repro train  <train_artifact>       # run a training loop
+//! repro eval   <size> <variant>       # ppl + benchmark suites
+//! repro sample <size> <variant>       # diffusion sampling + metrics
+//! repro serve  <size>                 # batched FP4-KV decode demo
+//! repro exp    <table1|...|fig5|all>  # regenerate a paper table/figure
+//! ```
+//!
+//! Common flags: `-c <config.toml>` (preset file), `-s key=value`
+//! (override), `--artifacts <dir>`.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use attn_qat::config::Config;
+use attn_qat::coordinator::{LrSchedule, Trainer};
+use attn_qat::data::corpus::Corpus;
+use attn_qat::data::latents::LatentGen;
+use attn_qat::experiments;
+use attn_qat::runtime::Runtime;
+use attn_qat::serve::{DecodeServer, Request};
+
+struct Cli {
+    command: String,
+    args: Vec<String>,
+    cfg: Config,
+    artifacts: PathBuf,
+}
+
+fn parse_cli() -> Result<Cli> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = Config::default();
+    let mut artifacts = Runtime::default_dir();
+    let mut rest = Vec::new();
+    let mut i = 0;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "-c" | "--config" => {
+                i += 1;
+                let path = argv.get(i).ok_or_else(|| anyhow!("-c needs a path"))?;
+                cfg = Config::load(std::path::Path::new(path))?;
+            }
+            "-s" | "--set" => {
+                i += 1;
+                cfg.set(argv.get(i).ok_or_else(|| anyhow!("-s needs key=value"))?)?;
+            }
+            "--artifacts" => {
+                i += 1;
+                artifacts = PathBuf::from(argv.get(i).ok_or_else(|| anyhow!("--artifacts needs a dir"))?);
+            }
+            other => rest.push(other.to_string()),
+        }
+        i += 1;
+    }
+    if rest.is_empty() {
+        rest.push("help".to_string());
+    }
+    argv = rest;
+    Ok(Cli { command: argv[0].clone(), args: argv[1..].to_vec(), cfg, artifacts })
+}
+
+fn main() -> Result<()> {
+    let cli = parse_cli()?;
+    if cli.command == "help" {
+        println!("{}", HELP);
+        return Ok(());
+    }
+    let rt = Runtime::new(&cli.artifacts)?;
+    match cli.command.as_str() {
+        "list" => {
+            for name in rt.registry().names() {
+                let meta = rt.meta(name)?;
+                println!(
+                    "{name:<40} kind={:<12} inputs={} outputs={}",
+                    meta.kind(),
+                    meta.inputs.len(),
+                    meta.outputs.len()
+                );
+            }
+            Ok(())
+        }
+        "train" => cmd_train(&rt, &cli),
+        "eval" => cmd_eval(&rt, &cli),
+        "sample" => cmd_sample(&rt, &cli),
+        "serve" => cmd_serve(&rt, &cli),
+        "exp" => {
+            let id = cli.args.first().map(String::as_str).unwrap_or("all");
+            experiments::run(&rt, id, &cli.cfg)
+        }
+        other => bail!("unknown command '{other}'\n{HELP}"),
+    }
+}
+
+fn cmd_train(rt: &Runtime, cli: &Cli) -> Result<()> {
+    let artifact = cli
+        .args
+        .first()
+        .ok_or_else(|| anyhow!("usage: repro train <train_artifact>"))?;
+    let meta = rt.meta(artifact)?;
+    let kind = meta.kind().to_string();
+    let size = meta.str_field("size").unwrap_or("small").to_string();
+    let steps = cli.cfg.usize_or("train.steps", 100);
+    let lr = cli.cfg.f32_or("train.lr", 1e-3);
+    let seed = cli.cfg.u64_or("seed", 42);
+    let batch = meta.usize_field("batch").ok_or_else(|| anyhow!("batch"))?;
+    let init = if kind.starts_with("lm") {
+        format!("lm_init_{size}")
+    } else {
+        format!("diff_init_{size}")
+    };
+    let mut trainer = Trainer::new(
+        rt,
+        &init,
+        artifact,
+        seed as i32,
+        LrSchedule::Cosine { warmup: steps / 10 + 1, peak: lr, total: steps, floor_frac: 0.1 },
+    )?;
+    if kind == "lm_train" {
+        let seq = meta.raw.get("model").get("seq_len").as_usize().unwrap();
+        let mut corpus = Corpus::new(seed);
+        trainer.run(
+            steps,
+            cli.cfg.usize_or("train.log_every", 10),
+            |_| {
+                let b = corpus.next_batch(batch, seq);
+                vec![b.token_value(), b.mask_value()]
+            },
+            |m| println!("step {:>5} loss {:.4} gnorm {:.3} lr {:.2e} {:.0}ms",
+                m.step, m.loss, m.grad_norm, m.lr, m.wall_ms),
+        )?;
+    } else {
+        let model = meta.raw.get("model").clone();
+        let frames = model.get("frames").as_usize().unwrap();
+        let latent_dim = model.get("latent_dim").as_usize().unwrap();
+        let mut gen = LatentGen::new(seed, frames, latent_dim);
+        trainer.run(
+            steps,
+            cli.cfg.usize_or("train.log_every", 10),
+            |_| gen.next_batch(batch).values().to_vec(),
+            |m| println!("step {:>5} loss {:.4} gnorm {:.3} lr {:.2e} {:.0}ms",
+                m.step, m.loss, m.grad_norm, m.lr, m.wall_ms),
+        )?;
+    }
+    println!(
+        "done: {} steps, tail loss {:.4}, diverged={}",
+        steps,
+        trainer.tail_loss(10),
+        trainer.diverged()
+    );
+    Ok(())
+}
+
+fn cmd_eval(rt: &Runtime, cli: &Cli) -> Result<()> {
+    let size = cli.args.first().ok_or_else(|| anyhow!("usage: repro eval <size> [variant]"))?;
+    let variant = cli.args.get(1).map(String::as_str).unwrap_or("f32");
+    let params = experiments::common::ensure_lm_base(rt, size, &cli.cfg)?;
+    let artifact = format!("lm_eval_{variant}_{size}");
+    let seed = cli.cfg.u64_or("seed", 42);
+    let mut held_out = Corpus::new(seed ^ 0xeeee);
+    let ppl = attn_qat::eval::perplexity(rt, &artifact, &params, &mut held_out, 3)?;
+    println!("held-out ppl ({variant}): {ppl:.4}");
+    for suite in attn_qat::data::tasks::MC_SUITES {
+        let acc = attn_qat::eval::mc_accuracy(rt, &artifact, &params, suite, 40, seed + 9)?;
+        println!("  {suite:<8} acc {acc:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_sample(rt: &Runtime, cli: &Cli) -> Result<()> {
+    let size = cli.args.first().ok_or_else(|| anyhow!("usage: repro sample <size> [variant]"))?;
+    let mut cfg = cli.cfg.clone();
+    cfg.set(&format!("diff.table2_size={size}"))?;
+    experiments::diffusion::fig1(rt, &cfg)
+}
+
+fn cmd_serve(rt: &Runtime, cli: &Cli) -> Result<()> {
+    let size = cli.args.first().map(String::as_str).unwrap_or("tiny");
+    let meta = rt.meta(&format!("lm_init_{size}"))?;
+    let names = meta.param_names();
+    // Weights: cached base if available, else fresh init.
+    let params = experiments::common::load_cached(&format!("lm_base_{size}"), &names)
+        .unwrap_or(rt.run(&format!("lm_init_{size}"), &[attn_qat::runtime::Value::scalar_i32(
+            cli.cfg.u64_or("seed", 42) as i32,
+        )])?);
+    let weights: Vec<(String, attn_qat::tensor::Tensor)> =
+        names.into_iter().zip(params).collect();
+    let mut server = DecodeServer::new(rt, size, weights)?;
+    let n_req = cli.cfg.usize_or("serve.requests", 8);
+    let max_new = cli.cfg.usize_or("serve.max_new_tokens", 24);
+    let t0 = std::time::Instant::now();
+    for i in 0..n_req {
+        server.submit(Request {
+            id: i as u64 + 1,
+            prompt: format!("C:hello{i}#").into_bytes(),
+            max_new_tokens: max_new,
+            temperature: 0.0,
+        });
+    }
+    let done = server.run()?;
+    let wall = t0.elapsed().as_secs_f64();
+    for c in &done {
+        println!(
+            "req {:>3}: {:>3} prompt + {:>3} new tokens in {:>7.1} ms  {:?}",
+            c.id,
+            c.prompt_tokens,
+            c.new_tokens,
+            c.wall_ms,
+            String::from_utf8_lossy(&c.text)
+        );
+    }
+    let stats = server.stats;
+    println!(
+        "\n{} tokens in {:.2}s = {:.1} tok/s | KV mem {} B (f32-equiv {} B, {:.1}x saved)",
+        stats.tokens_decoded,
+        wall,
+        stats.tokens_decoded as f64 / wall,
+        stats.kv_bytes,
+        stats.kv_bytes_f32_equiv,
+        stats.kv_bytes_f32_equiv as f64 / stats.kv_bytes.max(1) as f64
+    );
+    Ok(())
+}
+
+const HELP: &str = "repro — Attn-QAT reproduction launcher
+
+USAGE:
+    repro <command> [args] [-c config.toml] [-s key=value] [--artifacts dir]
+
+COMMANDS:
+    list                         list registered artifacts
+    train <artifact>             run a training loop on a *_train_* artifact
+    eval <size> [variant]        perplexity + benchmark suites
+    sample <size>                diffusion sampling + VBench-proxy metrics
+    serve [size]                 batched decode demo over the FP4 KV cache
+    exp <id>                     regenerate a paper table/figure:
+                                 table1 table2 table3 table4 fig1..fig5 all
+";

@@ -1,0 +1,168 @@
+//! Analytical performance model (Figure 5's speedup shape + TPU estimates).
+//!
+//! The CPU testbed cannot exhibit FP4 tensor-core speedups, so — per the
+//! substitution rule (DESIGN.md §2) — we model kernel time on the paper's
+//! hardware (RTX 5090) from first principles: matmul time at the format's
+//! tensor-core rate, plus elementwise preprocessing at memory bandwidth,
+//! plus HBM traffic. What the model must reproduce is the *shape* of
+//! Figure 5: FP4 variants ≫ BF16 FlashAttention, and Attn-QAT 1.1–1.5×
+//! over SageAttention3 because it skips Smooth-QK and two-level-P work.
+//!
+//! The same module provides the TPU-side VMEM/MXU estimates quoted in
+//! DESIGN.md §3 for the Pallas kernel.
+
+/// Hardware profile (defaults ≈ RTX 5090).
+#[derive(Clone, Copy, Debug)]
+pub struct Hw {
+    /// Dense BF16 tensor-core throughput, FLOP/s.
+    pub bf16_flops: f64,
+    /// Dense FP4 (NVFP4) tensor-core throughput, FLOP/s.
+    pub fp4_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// Effective elementwise (CUDA-core) throughput, elements/s.
+    pub elementwise_eps: f64,
+}
+
+impl Default for Hw {
+    fn default() -> Hw {
+        Hw {
+            bf16_flops: 210e12,
+            fp4_flops: 840e12, // 4× bf16 dense (Blackwell NVFP4, no sparsity)
+            hbm_bw: 1.79e12,
+            elementwise_eps: 5.0e12,
+        }
+    }
+}
+
+/// Attention kernel variants of Figure 5.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// FlashAttention-2, BF16 matmuls, no quantization.
+    Fa2Bf16,
+    /// SageAttention3: FP4 matmuls + Smooth-QK + two-level P.
+    Sage3,
+    /// Attn-QAT inference: FP4 matmuls, plain φ quantization only.
+    AttnQat,
+}
+
+/// Modeled kernel execution estimate.
+#[derive(Clone, Copy, Debug)]
+pub struct Estimate {
+    pub matmul_s: f64,
+    pub elementwise_s: f64,
+    pub memory_s: f64,
+    pub total_s: f64,
+    /// Achieved fraction of the format's tensor-core roofline.
+    pub mxu_utilization: f64,
+}
+
+/// Model one attention forward: batch `b`, heads `h`, seq `n`, head dim `d`.
+pub fn estimate(k: Kernel, hw: &Hw, b: usize, h: usize, n: usize, d: usize) -> Estimate {
+    let bh = (b * h) as f64;
+    let nf = n as f64;
+    let df = d as f64;
+    // Two matmuls: S = QKᵀ and O = P·V, each 2·n²·d FLOPs per head.
+    let mm_flops = 2.0 * 2.0 * bh * nf * nf * df;
+    let mm_rate = match k {
+        Kernel::Fa2Bf16 => hw.bf16_flops,
+        _ => hw.fp4_flops,
+    };
+    let matmul_s = mm_flops / mm_rate;
+
+    // Elementwise work (element-visits), per variant:
+    //   softmax machinery (exp, max, rescale): ~4 visits of the n² scores.
+    let mut ew = 4.0 * bh * nf * nf;
+    match k {
+        Kernel::Fa2Bf16 => {}
+        Kernel::Sage3 => {
+            // quantize Q,K,V (2 visits each: amax + round), smooth Q,K
+            // (mean + subtract: 2 visits each), P quantize with two-level
+            // (rowmax + rescale + amax + round + unscale: 5 visits of n²),
+            // ΔS correction accumulation (1 visit of n²).
+            ew += 2.0 * 3.0 * bh * nf * df; // quantize QKV
+            ew += 2.0 * 2.0 * bh * nf * df; // smooth Q and K
+            ew += 5.0 * bh * nf * nf; // two-level P + ΔS add-back
+        }
+        Kernel::AttnQat => {
+            ew += 2.0 * 3.0 * bh * nf * df; // quantize QKV
+            ew += 2.0 * bh * nf * nf; // plain P quantize (amax + round)
+        }
+    }
+    let elementwise_s = ew / hw.elementwise_eps;
+
+    // HBM traffic: all variants read BF16 Q/K/V once (FP4 kernels quantize
+    // on the fly in-register) and write O in BF16; traffic is ~equal, the
+    // win is matmul rate + elementwise work.
+    let bytes = bh * nf * df * (3.0 * 2.0 + 2.0);
+    let memory_s = bytes / hw.hbm_bw;
+
+    // Matmul overlaps poorly with elementwise in these kernels (the paper's
+    // speedup comes precisely from removing elementwise work): serialize
+    // matmul+elementwise, overlap memory.
+    let total_s = (matmul_s + elementwise_s).max(memory_s);
+    Estimate {
+        matmul_s,
+        elementwise_s,
+        memory_s,
+        total_s,
+        mxu_utilization: matmul_s / total_s,
+    }
+}
+
+/// Modeled speedup of `a` over `b` on identical shapes.
+pub fn speedup(a: Kernel, b: Kernel, hw: &Hw, bs: usize, h: usize, n: usize, d: usize) -> f64 {
+    estimate(b, hw, bs, h, n, d).total_s / estimate(a, hw, bs, h, n, d).total_s
+}
+
+// ---------------------------------------------------------------------------
+// TPU-side estimates for the Pallas kernel (DESIGN.md §3)
+// ---------------------------------------------------------------------------
+
+/// VMEM bytes one grid step of the Alg. 2 forward needs (f32 tiles).
+pub fn pallas_vmem_bytes(bq: usize, bk: usize, d: usize) -> usize {
+    // Q, O, O' tiles (bq×d), K, V tiles (bk×d, double-buffered ×2),
+    // S/P tiles (bq×bk), m/l/alpha rows (3×bq).
+    4 * (3 * bq * d + 2 * 2 * bk * d + 2 * bq * bk + 3 * bq)
+}
+
+/// True when the tile configuration fits a TPU core's VMEM (~16 MiB).
+pub fn pallas_fits_vmem(bq: usize, bk: usize, d: usize) -> bool {
+    pallas_vmem_bytes(bq, bk, d) < 16 * 1024 * 1024
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_shape_holds() {
+        let hw = Hw::default();
+        for &n in &[1024usize, 2048, 4096, 8192] {
+            for &d in &[64usize, 128] {
+                let s_qat_sage = speedup(Kernel::AttnQat, Kernel::Sage3, &hw, 16, 16, n, d);
+                assert!(
+                    (1.05..1.8).contains(&s_qat_sage),
+                    "attn-qat/sage3 at n={n} d={d}: {s_qat_sage}"
+                );
+                let s_qat_fa2 = speedup(Kernel::AttnQat, Kernel::Fa2Bf16, &hw, 16, 16, n, d);
+                assert!(s_qat_fa2 > 1.2, "attn-qat/fa2 at n={n} d={d}: {s_qat_fa2}");
+            }
+        }
+    }
+
+    #[test]
+    fn utilization_increases_with_head_dim() {
+        let hw = Hw::default();
+        let lo = estimate(Kernel::AttnQat, &hw, 16, 16, 4096, 64).mxu_utilization;
+        let hi = estimate(Kernel::AttnQat, &hw, 16, 16, 4096, 128).mxu_utilization;
+        assert!(hi > lo, "{hi} vs {lo}");
+    }
+
+    #[test]
+    fn design_md_vmem_figures() {
+        // The DESIGN.md §3 numbers: 128×128 tiles, d=128 fit comfortably.
+        assert!(pallas_fits_vmem(128, 128, 128));
+        assert!(!pallas_fits_vmem(2048, 2048, 512));
+    }
+}

@@ -1,0 +1,198 @@
+//! PJRT runtime: load AOT artifacts (HLO text + metadata) and execute them.
+//!
+//! The only bridge to the build-time python world. `make artifacts` drops
+//! `<name>.hlo.txt` + `<name>.meta.json` pairs in `artifacts/`; this module
+//! compiles them on the PJRT CPU client (lazily, cached) and exposes a
+//! typed execute API over [`crate::tensor::Tensor`].
+//!
+//! Interchange notes (see DESIGN.md §5): HLO **text** is required — jax ≥
+//! 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids. Artifacts are lowered with
+//! `return_tuple=True`, so every execution returns one tuple literal that
+//! we decompose.
+
+pub mod registry;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Tensor;
+pub use registry::{ArtifactMeta, Registry, TensorSpec};
+
+/// Lazily-compiling executor over an artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    registry: Registry,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    dir: PathBuf,
+}
+
+/// A host-side value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Value {
+        Value::F32(Tensor::scalar(v))
+    }
+
+    pub fn scalar_i32(v: i32) -> Value {
+        Value::I32(vec![v], vec![])
+    }
+
+    pub fn tensor(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(..) => bail!("expected f32 value"),
+        }
+    }
+}
+
+impl Runtime {
+    /// Create a runtime over `dir` (usually `artifacts/`).
+    pub fn new(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        let registry = Registry::load(dir)?;
+        Ok(Runtime {
+            client,
+            registry,
+            cache: RefCell::new(HashMap::new()),
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Artifact directory default: `$REPRO_ARTIFACTS` or `artifacts/`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("REPRO_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.registry
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}' (run `make artifacts`?)"))
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e}"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on host values; returns one Tensor per output.
+    ///
+    /// Inputs are validated against the artifact metadata (count, shape,
+    /// dtype) before hitting PJRT so shape bugs fail with names attached.
+    pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        let meta = self.meta(name)?.clone();
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        // Upload inputs as device buffers and run through `execute_b`:
+        // the literal-based `execute` entry point leaks its temporary
+        // device buffers (~state-size per call — see EXPERIMENTS.md §Perf),
+        // and buffer upload also skips one host copy.
+        let mut buffers = Vec::with_capacity(inputs.len());
+        for (v, spec) in inputs.iter().zip(&meta.inputs) {
+            buffers.push(
+                self.to_buffer(v, spec)
+                    .with_context(|| format!("{name}:{}", spec.name))?,
+            );
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&buffers)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e}"))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untuple {name}: {e}"))?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "{name}: expected {} outputs, got {}",
+                meta.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&meta.outputs)
+            .map(|(lit, spec)| from_literal(&lit, spec))
+            .collect()
+    }
+}
+
+impl Runtime {
+    fn to_buffer(&self, v: &Value, spec: &TensorSpec) -> Result<xla::PjRtBuffer> {
+        match (v, spec.dtype.as_str()) {
+            (Value::F32(t), "float32") => {
+                if t.shape != spec.shape {
+                    bail!("shape {:?} != expected {:?}", t.shape, spec.shape);
+                }
+                self.client
+                    .buffer_from_host_buffer(&t.data, &spec.shape, None)
+                    .map_err(|e| anyhow!("upload f32: {e}"))
+            }
+            (Value::I32(data, shape), "int32") => {
+                if *shape != spec.shape {
+                    bail!("shape {:?} != expected {:?}", shape, spec.shape);
+                }
+                self.client
+                    .buffer_from_host_buffer(&data[..], &spec.shape, None)
+                    .map_err(|e| anyhow!("upload i32: {e}"))
+            }
+            (v, dt) => bail!("dtype mismatch: host {:?} vs artifact {}", kind(v), dt),
+        }
+    }
+}
+
+fn kind(v: &Value) -> &'static str {
+    match v {
+        Value::F32(..) => "f32",
+        Value::I32(..) => "i32",
+    }
+}
+
+fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+    let data: Vec<f32> = match spec.dtype.as_str() {
+        "float32" => lit.to_vec::<f32>().map_err(|e| anyhow!("read f32: {e}"))?,
+        "int32" => lit
+            .to_vec::<i32>()
+            .map_err(|e| anyhow!("read i32: {e}"))?
+            .into_iter()
+            .map(|x| x as f32)
+            .collect(),
+        other => bail!("unsupported output dtype {other}"),
+    };
+    Tensor::new(spec.shape.clone(), data)
+}

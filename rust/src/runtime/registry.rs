@@ -1,0 +1,199 @@
+//! Artifact registry: parses the `*.meta.json` files `aot.py` emits and
+//! exposes typed metadata (ordered input/output specs + the free-form
+//! config blob each builder attached).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::Json;
+
+/// Shape + dtype of one named artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: v
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow!("spec missing name"))?
+                .to_string(),
+            shape: v
+                .get("shape")
+                .as_arr()
+                .ok_or_else(|| anyhow!("spec missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+            dtype: v
+                .get("dtype")
+                .as_str()
+                .ok_or_else(|| anyhow!("spec missing dtype"))?
+                .to_string(),
+        })
+    }
+}
+
+/// Parsed `<name>.meta.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// The whole metadata object (kind/size/variant/model config/...).
+    pub raw: Json,
+}
+
+impl ArtifactMeta {
+    pub fn kind(&self) -> &str {
+        self.raw.get("kind").as_str().unwrap_or("")
+    }
+
+    pub fn str_field(&self, key: &str) -> Option<&str> {
+        self.raw.get(key).as_str()
+    }
+
+    pub fn usize_field(&self, key: &str) -> Option<usize> {
+        self.raw.get(key).as_usize()
+    }
+
+    /// Names of the model parameters, in artifact input order.
+    pub fn param_names(&self) -> Vec<String> {
+        self.raw
+            .get("param_names")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn opt_names(&self) -> Vec<String> {
+        self.raw
+            .get("opt_names")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("artifact {} has no input '{name}'", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|s| s.name == name)
+            .ok_or_else(|| anyhow!("artifact {} has no output '{name}'", self.name))
+    }
+}
+
+/// All artifacts in a directory.
+pub struct Registry {
+    metas: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Registry {
+    pub fn load(dir: &Path) -> Result<Registry> {
+        let mut metas = BTreeMap::new();
+        if !dir.exists() {
+            bail!(
+                "artifact directory {} missing — run `make artifacts`",
+                dir.display()
+            );
+        }
+        for entry in fs::read_dir(dir).with_context(|| format!("read {}", dir.display()))? {
+            let path = entry?.path();
+            let fname = path.file_name().and_then(|s| s.to_str()).unwrap_or("");
+            if !fname.ends_with(".meta.json") {
+                continue;
+            }
+            let text = fs::read_to_string(&path)?;
+            let v = Json::parse(&text).with_context(|| format!("parse {}", path.display()))?;
+            let meta = parse_meta(&v).with_context(|| format!("meta {}", path.display()))?;
+            metas.insert(meta.name.clone(), meta);
+        }
+        Ok(Registry { metas })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.metas.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.metas.keys().map(|s| s.as_str())
+    }
+
+    /// All artifacts whose metadata `kind` matches.
+    pub fn by_kind<'a>(&'a self, kind: &'a str) -> impl Iterator<Item = &'a ArtifactMeta> {
+        self.metas.values().filter(move |m| m.kind() == kind)
+    }
+
+    pub fn len(&self) -> usize {
+        self.metas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metas.is_empty()
+    }
+}
+
+fn parse_meta(v: &Json) -> Result<ArtifactMeta> {
+    let name = v
+        .get("name")
+        .as_str()
+        .ok_or_else(|| anyhow!("meta missing name"))?
+        .to_string();
+    let inputs = v
+        .get("inputs")
+        .as_arr()
+        .ok_or_else(|| anyhow!("meta missing inputs"))?
+        .iter()
+        .map(TensorSpec::from_json)
+        .collect::<Result<_>>()?;
+    let outputs = v
+        .get("outputs")
+        .as_arr()
+        .ok_or_else(|| anyhow!("meta missing outputs"))?
+        .iter()
+        .map(TensorSpec::from_json)
+        .collect::<Result<_>>()?;
+    Ok(ArtifactMeta { name, inputs, outputs, raw: v.clone() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_meta_roundtrip() {
+        let src = r#"{
+            "name": "t", "kind": "lm_train",
+            "inputs": [{"name": "x", "shape": [2, 3], "dtype": "float32"}],
+            "outputs": [{"name": "y", "shape": [], "dtype": "float32"}],
+            "param_names": ["a", "b"]
+        }"#;
+        let m = parse_meta(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(m.name, "t");
+        assert_eq!(m.kind(), "lm_train");
+        assert_eq!(m.inputs[0].shape, vec![2, 3]);
+        assert_eq!(m.inputs[0].numel(), 6);
+        assert_eq!(m.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(m.param_names(), vec!["a", "b"]);
+        assert_eq!(m.input_index("x").unwrap(), 0);
+        assert!(m.input_index("zz").is_err());
+    }
+}

@@ -1,0 +1,177 @@
+//! Minimal host tensor (substrate): row-major f32 with shape metadata.
+//!
+//! This is the coordinator-side container that shuttles data between the
+//! data pipeline, the PJRT runtime (as `xla::Literal`s), the native
+//! attention engines, and the eval harness. It is deliberately simple —
+//! heavy math happens either in compiled HLO or in the dedicated engines.
+
+use anyhow::{bail, Result};
+
+/// Row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Number of rows when viewed as a (rows, cols) matrix over the last axis.
+    pub fn rows(&self) -> usize {
+        if self.shape.is_empty() {
+            1
+        } else {
+            self.shape[..self.shape.len() - 1].iter().product()
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("reshape {:?} -> {:?} mismatched", self.shape, shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn item(&self) -> f32 {
+        debug_assert_eq!(self.data.len(), 1);
+        self.data[0]
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn mean_abs_diff(&self, other: &Tensor) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / self.data.len() as f32
+    }
+
+    pub fn cosine_sim(&self, other: &Tensor) -> f32 {
+        let dot: f32 = self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum();
+        let na: f32 = self.data.iter().map(|a| a * a).sum::<f32>().sqrt();
+        let nb: f32 = other.data.iter().map(|b| b * b).sum::<f32>().sqrt();
+        if na == 0.0 || nb == 0.0 {
+            return if na == nb { 1.0 } else { 0.0 };
+        }
+        dot / (na * nb)
+    }
+}
+
+/// `c[m,n] = a[m,k] @ b[k,n]` (f32 accumulate), the engine building block.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// `c[m,n] = a[m,k] @ b[n,k]^T`.
+pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        let t = Tensor::zeros(vec![2, 3]);
+        assert_eq!((t.rows(), t.cols()), (2, 3));
+    }
+
+    #[test]
+    fn matmul_small() {
+        // [[1,2],[3,4]] @ [[1,0],[0,1]] = same
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let id = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &id, 2, 2, 2), a);
+        // against transposed form
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        let bt = vec![5.0, 7.0, 6.0, 8.0]; // b^T stored row-major
+        assert_eq!(matmul(&a, &b, 2, 2, 2), matmul_bt(&a, &bt, 2, 2, 2));
+    }
+
+    #[test]
+    fn diff_metrics() {
+        let a = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]).unwrap();
+        let b = Tensor::new(vec![3], vec![1.0, 2.5, 3.0]).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+        assert!((a.cosine_sim(&a) - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,104 @@
+//! Golden tests: the native Rust attention engines vs the JAX oracle
+//! (`rust/tests/golden/attention_golden.json`, emitted by `make artifacts`).
+//!
+//! These pin the Figure-4 "real quant" comparator to the exact semantics
+//! of `ref.naive_attention` per variant.
+
+use attn_qat::attention::{attend_fp4, attend_sage3};
+use attn_qat::attention::flash::attend_f32;
+use attn_qat::json::Json;
+
+fn load_golden() -> Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/attention_golden.json");
+    let text = std::fs::read_to_string(path)
+        .expect("golden vectors missing — run `make artifacts` first");
+    Json::parse(&text).expect("parse golden json")
+}
+
+fn check_case(case: &Json, f: impl Fn(&[f32], &[f32], &[f32], usize, usize) -> (Vec<f32>, Vec<f32>), tol: f32) {
+    let n = case.get("n").as_usize().unwrap();
+    let d = case.get("d").as_usize().unwrap();
+    let q = case.get("q").to_f32_vec().unwrap();
+    let k = case.get("k").to_f32_vec().unwrap();
+    let v = case.get("v").to_f32_vec().unwrap();
+    let want_o = case.get("o").to_f32_vec().unwrap();
+    let want_lse = case.get("lse").to_f32_vec().unwrap();
+    let (o, lse) = f(&q, &k, &v, n, d);
+    let mut max_o = 0.0f32;
+    for (a, b) in o.iter().zip(&want_o) {
+        max_o = max_o.max((a - b).abs());
+    }
+    let mut max_l = 0.0f32;
+    for (a, b) in lse.iter().zip(&want_lse) {
+        max_l = max_l.max((a - b).abs());
+    }
+    assert!(max_o < tol, "o diff {max_o}");
+    assert!(max_l < tol * 10.0, "lse diff {max_l}");
+}
+
+#[test]
+fn f32_engine_matches_jax_full() {
+    let g = load_golden();
+    check_case(
+        &g.get("f32_full").clone(),
+        |q, k, v, n, d| {
+            let out = attend_f32(q, k, v, n, n, d, false);
+            (out.o, out.lse)
+        },
+        1e-5,
+    );
+}
+
+#[test]
+fn f32_engine_matches_jax_causal() {
+    let g = load_golden();
+    check_case(
+        &g.get("f32_causal").clone(),
+        |q, k, v, n, d| {
+            let out = attend_f32(q, k, v, n, n, d, true);
+            (out.o, out.lse)
+        },
+        1e-5,
+    );
+}
+
+#[test]
+fn fp4_engine_matches_jax_full() {
+    // Real-quant vs fake-quant: same lattice arithmetic, only f32
+    // accumulation order differs.
+    let g = load_golden();
+    check_case(
+        &g.get("fp4_full").clone(),
+        |q, k, v, n, d| {
+            let out = attend_fp4(q, k, v, n, n, d, false);
+            (out.o, out.lse)
+        },
+        5e-5,
+    );
+}
+
+#[test]
+fn fp4_engine_matches_jax_causal() {
+    let g = load_golden();
+    check_case(
+        &g.get("fp4_causal").clone(),
+        |q, k, v, n, d| {
+            let out = attend_fp4(q, k, v, n, n, d, true);
+            (out.o, out.lse)
+        },
+        5e-5,
+    );
+}
+
+#[test]
+fn sage3_engine_matches_jax_full() {
+    let g = load_golden();
+    check_case(
+        &g.get("sage3_full").clone(),
+        |q, k, v, n, d| {
+            let out = attend_sage3(q, k, v, n, n, d, false);
+            (out.o, out.lse)
+        },
+        5e-5,
+    );
+}

@@ -1,0 +1,244 @@
+//! End-to-end integration over compiled artifacts (needs `make artifacts`).
+//!
+//! Exercises the whole three-layer composition on the tiny models: init →
+//! train (both jnp and Pallas train steps) → eval → serve, plus the
+//! fake-vs-real quant agreement that Figure 4 scales up.
+
+use std::path::Path;
+
+use attn_qat::coordinator::{LrSchedule, Trainer};
+use attn_qat::data::corpus::Corpus;
+use attn_qat::data::latents::LatentGen;
+use attn_qat::data::tasks::sft_batch;
+use attn_qat::rng::Rng;
+use attn_qat::runtime::{Runtime, Value};
+use attn_qat::serve::{DecodeServer, Request};
+use attn_qat::tensor::Tensor;
+
+fn runtime() -> Runtime {
+    Runtime::new(Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")))
+        .expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn registry_has_core_artifacts() {
+    let rt = runtime();
+    for name in [
+        "lm_init_tiny",
+        "lm_train_f32_tiny",
+        "lm_train_qat_tiny",
+        "lm_train_qat_pallas_tiny",
+        "lm_eval_fp4_tiny",
+        "diff_train_qat_tiny",
+        "quant_fake_1024x64",
+        "attn_fp4_pallas_s256_d64",
+    ] {
+        assert!(rt.meta(name).is_ok(), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn init_is_deterministic_per_seed() {
+    let rt = runtime();
+    let a = rt.run("lm_init_tiny", &[Value::scalar_i32(7)]).unwrap();
+    let b = rt.run("lm_init_tiny", &[Value::scalar_i32(7)]).unwrap();
+    let c = rt.run("lm_init_tiny", &[Value::scalar_i32(8)]).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.data, y.data);
+    }
+    assert!(a.iter().zip(&c).any(|(x, y)| x.data != y.data));
+}
+
+#[test]
+fn input_validation_catches_shape_and_arity() {
+    let rt = runtime();
+    // wrong arity
+    assert!(rt.run("lm_init_tiny", &[]).is_err());
+    // wrong dtype
+    assert!(rt.run("lm_init_tiny", &[Value::scalar_f32(1.0)]).is_err());
+    // unknown artifact
+    assert!(rt.run("nope", &[Value::scalar_i32(0)]).is_err());
+}
+
+#[test]
+fn lm_qat_training_learns_fixed_batch() {
+    let rt = runtime();
+    let mut trainer = Trainer::new(
+        &rt,
+        "lm_init_tiny",
+        "lm_train_qat_tiny",
+        3,
+        LrSchedule::Constant(3e-3),
+    )
+    .unwrap();
+    let mut corpus = Corpus::new(11);
+    let meta = rt.meta("lm_train_qat_tiny").unwrap();
+    let batch = meta.usize_field("batch").unwrap();
+    let seq = meta.raw.get("model").get("seq_len").as_usize().unwrap();
+    let b = corpus.next_batch(batch, seq);
+    let batch_vals = vec![b.token_value(), b.mask_value()];
+    let mut first = None;
+    for _ in 0..10 {
+        let m = trainer.step(&batch_vals).unwrap();
+        first.get_or_insert(m.loss);
+        assert!(m.loss.is_finite() && m.grad_norm.is_finite());
+    }
+    let last = trainer.history.last().unwrap().loss;
+    assert!(
+        last < first.unwrap() - 0.3,
+        "no learning: {} -> {}",
+        first.unwrap(),
+        last
+    );
+    assert!(!trainer.diverged());
+}
+
+#[test]
+fn pallas_train_step_composes() {
+    // The L1-kernel-backed train step must run and produce finite grads —
+    // the full three-layer composition proof.
+    let rt = runtime();
+    let mut trainer = Trainer::new(
+        &rt,
+        "lm_init_tiny",
+        "lm_train_qat_pallas_tiny",
+        3,
+        LrSchedule::Constant(1e-3),
+    )
+    .unwrap();
+    let mut corpus = Corpus::new(5);
+    let meta = rt.meta("lm_train_qat_pallas_tiny").unwrap();
+    let batch = meta.usize_field("batch").unwrap();
+    let seq = meta.raw.get("model").get("seq_len").as_usize().unwrap();
+    let b = corpus.next_batch(batch, seq);
+    let m = trainer.step(&[b.token_value(), b.mask_value()]).unwrap();
+    assert!(m.loss.is_finite() && m.grad_norm.is_finite());
+}
+
+#[test]
+fn pallas_and_jnp_train_steps_agree() {
+    // Same params, same batch: the tiled (Pallas) and fused (jnp) QAT
+    // implementations must produce near-identical loss and gradients
+    // (they differ only in online-softmax tiling).
+    let rt = runtime();
+    let params = rt.run("lm_init_tiny", &[Value::scalar_i32(9)]).unwrap();
+    let meta = rt.meta("lm_train_qat_tiny").unwrap();
+    let batch = meta.usize_field("batch").unwrap();
+    let seq = meta.raw.get("model").get("seq_len").as_usize().unwrap();
+    let mut corpus = Corpus::new(13);
+    let b = corpus.next_batch(batch, seq);
+    let run = |artifact: &str| -> (f32, f32) {
+        let mut trainer = Trainer::new(
+            &rt,
+            "lm_init_tiny",
+            artifact,
+            9,
+            LrSchedule::Constant(1e-3),
+        )
+        .unwrap()
+        .with_params(params.clone())
+        .unwrap();
+        let m = trainer.step(&[b.token_value(), b.mask_value()]).unwrap();
+        (m.loss, m.grad_norm)
+    };
+    let (l_jnp, g_jnp) = run("lm_train_qat_tiny");
+    let (l_pal, g_pal) = run("lm_train_qat_pallas_tiny");
+    assert!((l_jnp - l_pal).abs() < 2e-2, "loss {l_jnp} vs {l_pal}");
+    assert!((g_jnp - g_pal).abs() / g_jnp.max(1e-6) < 0.1, "gnorm {g_jnp} vs {g_pal}");
+}
+
+#[test]
+fn diffusion_train_and_sample() {
+    let rt = runtime();
+    let mut trainer = Trainer::new(
+        &rt,
+        "diff_init_tiny",
+        "diff_train_qat_tiny",
+        1,
+        LrSchedule::Constant(3e-3),
+    )
+    .unwrap();
+    let meta = rt.meta("diff_train_qat_tiny").unwrap();
+    let batch = meta.usize_field("batch").unwrap();
+    let model = meta.raw.get("model").clone();
+    let frames = model.get("frames").as_usize().unwrap();
+    let dl = model.get("latent_dim").as_usize().unwrap();
+    let mut gen = LatentGen::new(3, frames, dl);
+    for _ in 0..5 {
+        let b = gen.next_batch(batch);
+        let m = trainer.step(&b.values()).unwrap();
+        assert!(m.loss.is_finite());
+    }
+    // one sampler step
+    let mut inputs: Vec<Value> = trainer.state.params.iter().cloned().map(Value::F32).collect();
+    inputs.push(Value::F32(
+        Tensor::new(vec![batch, frames, dl], gen.noise_batch(batch)).unwrap(),
+    ));
+    inputs.push(Value::F32(Tensor::new(vec![batch], vec![1.0; batch]).unwrap()));
+    inputs.push(Value::F32(Tensor::new(vec![batch], vec![0.25; batch]).unwrap()));
+    let x = rt.run("diff_sample_fp4_tiny", &inputs).unwrap();
+    assert!(x[0].data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn eval_artifact_counts_tokens() {
+    let rt = runtime();
+    let params = rt.run("lm_init_tiny", &[Value::scalar_i32(1)]).unwrap();
+    let meta = rt.meta("lm_eval_f32_tiny").unwrap();
+    let batch = meta.usize_field("batch").unwrap();
+    let seq = meta.raw.get("model").get("seq_len").as_usize().unwrap();
+    let mut corpus = Corpus::new(2);
+    let b = corpus.next_batch(batch, seq);
+    let mut inputs: Vec<Value> = params.into_iter().map(Value::F32).collect();
+    inputs.push(b.token_value());
+    inputs.push(b.mask_value());
+    let out = rt.run("lm_eval_f32_tiny", &inputs).unwrap();
+    assert_eq!(out[1].data, vec![seq as f32; batch]);
+    // fresh init ≈ uniform: per-token nll ≈ ln 256
+    let nll_tok = out[0].data.iter().sum::<f32>() / (batch * seq) as f32;
+    assert!((nll_tok - 256f32.ln()).abs() < 0.6, "nll/tok {nll_tok}");
+}
+
+#[test]
+fn fake_quant_hlo_matches_formats_lib_bitexact() {
+    let rt = runtime();
+    let mut rng = Rng::new(99);
+    let x: Vec<f32> = rng.normal_vec(1024 * 64, 0.0, 2.0);
+    let t = Tensor::new(vec![1024, 64], x.clone()).unwrap();
+    for artifact in ["quant_fake_1024x64", "quant_fake_pallas_1024x64"] {
+        let out = rt.run(artifact, &[Value::F32(t.clone())]).unwrap();
+        let mut expect = x.clone();
+        for row in expect.chunks_mut(64) {
+            attn_qat::formats::block::nvfp4_fake_quant_row(row);
+        }
+        assert_eq!(out[0].data, expect, "{artifact}");
+    }
+}
+
+#[test]
+fn serve_decodes_with_fp4_kv() {
+    let rt = runtime();
+    let meta = rt.meta("lm_init_tiny").unwrap();
+    let names = meta.param_names();
+    let params = rt.run("lm_init_tiny", &[Value::scalar_i32(4)]).unwrap();
+    let weights: Vec<(String, Tensor)> = names.into_iter().zip(params).collect();
+    let mut server = DecodeServer::new(&rt, "tiny", weights).unwrap();
+    for i in 0..6 {
+        server.submit(Request {
+            id: i + 1,
+            prompt: b"C:abc#".to_vec(),
+            max_new_tokens: 5,
+            temperature: 0.0,
+        });
+    }
+    let done = server.run().unwrap();
+    assert_eq!(done.len(), 6);
+    for c in &done {
+        assert!(c.new_tokens >= 1 && c.new_tokens <= 5);
+        assert!(c.text.len() >= c.prompt_tokens);
+    }
+    // 6 requests with batch 4 => at least two waves ran; KV compressed.
+    let stats = server.stats;
+    assert!(stats.tokens_decoded >= 6 * 6);
+    assert!(stats.kv_bytes > 0);
+}
