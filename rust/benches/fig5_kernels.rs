@@ -1,10 +1,13 @@
-//! Figure-5 bench: compiled attention artifact throughput per variant and
-//! shape (the measured half), plus the modeled RTX-5090 table.
+//! Figure-5 bench: native packed-vs-dequant engine throughput, compiled
+//! attention artifact throughput per variant and shape (the measured
+//! half), plus the modeled RTX-5090 table.
 //!
 //! ```bash
 //! cargo bench --bench fig5_kernels
 //! ```
 
+use attn_qat::attention::engine::{attend_fp4, attend_fp4_dequant, pack_qkv_for_attention};
+use attn_qat::attention::packed::{attend_packed, AttnScratch};
 use attn_qat::bench::{bench_units, Reporter};
 use attn_qat::config::Config;
 use attn_qat::perfmodel::{speedup, Hw, Kernel};
@@ -13,34 +16,95 @@ use attn_qat::runtime::{Runtime, Value};
 use attn_qat::tensor::Tensor;
 
 fn main() -> anyhow::Result<()> {
-    let rt = Runtime::new(&Runtime::default_dir())?;
     let mut rep = Reporter::new("fig5_kernels");
     let mut rng = Rng::new(5);
     let quick = std::env::var("BENCH_QUICK").is_ok();
-    let seqs: &[usize] = if quick { &[128, 256] } else { &[128, 256, 512, 1024] };
-    for &d in &[64usize, 128] {
-        for &n in seqs {
-            let (b, h) = (1usize, 4usize);
-            let numel = b * h * n * d;
-            let q = Tensor::new(vec![b, h, n, d], rng.normal_vec(numel, 0.0, 1.0))?;
-            let k = Tensor::new(vec![b, h, n, d], rng.normal_vec(numel, 0.0, 1.0))?;
-            let v = Tensor::new(vec![b, h, n, d], rng.normal_vec(numel, 0.0, 1.0))?;
-            for variant in ["f32", "fp4", "sage3"] {
-                let name = format!("attn_{variant}_s{n}_d{d}");
-                if rt.meta(&name).is_err() {
-                    continue;
+
+    // --- Native engines: packed-domain LUT kernels vs the legacy
+    // dequantizing path (same lattice, same outputs to fp tolerance) ------
+    let native_seqs: &[usize] = if quick { &[128] } else { &[128, 256, 512] };
+    for &n in native_seqs {
+        let d = 64usize;
+        let q = rng.normal_vec(n * d, 0.0, 1.0);
+        let k = rng.normal_vec(n * d, 0.0, 1.0);
+        let v = rng.normal_vec(n * d, 0.0, 1.0);
+        let flops = 4.0 * (n * n * d) as f64;
+        let iters = if n >= 512 { 3 } else { 5 };
+        rep.push(bench_units(
+            &format!("native_fp4_dequant_s{n}_d{d}"),
+            1,
+            iters,
+            flops,
+            "flop",
+            || {
+                let out = attend_fp4_dequant(&q, &k, &v, n, n, d, false);
+                std::hint::black_box(out.o[0]);
+            },
+        ));
+        rep.push(bench_units(
+            &format!("native_fp4_packed_s{n}_d{d}"),
+            1,
+            iters,
+            flops,
+            "flop",
+            || {
+                let out = attend_fp4(&q, &k, &v, n, n, d, false);
+                std::hint::black_box(out.o[0]);
+            },
+        ));
+        // Pure packed compute (quantization hoisted out, scratch reused):
+        // the steady-state kernel cost a resident KV cache would see.
+        let (qq, kq, vq) = pack_qkv_for_attention(&q, &k, &v, n, n, d);
+        let mut scratch = AttnScratch::new();
+        rep.push(bench_units(
+            &format!("native_fp4_packed_prequant_s{n}_d{d}"),
+            1,
+            iters,
+            flops,
+            "flop",
+            || {
+                let out = attend_packed(&qq, &kq, &vq, n, n, d, false, &mut scratch);
+                std::hint::black_box(out.o[0]);
+            },
+        ));
+    }
+
+    // --- Compiled attention artifacts (need `make artifacts` + PJRT) ------
+    match Runtime::new(&Runtime::default_dir()) {
+        Ok(rt) => {
+            let seqs: &[usize] = if quick { &[128, 256] } else { &[128, 256, 512, 1024] };
+            for &d in &[64usize, 128] {
+                for &n in seqs {
+                    let (b, h) = (1usize, 4usize);
+                    let numel = b * h * n * d;
+                    let q = Tensor::new(vec![b, h, n, d], rng.normal_vec(numel, 0.0, 1.0))?;
+                    let k = Tensor::new(vec![b, h, n, d], rng.normal_vec(numel, 0.0, 1.0))?;
+                    let v = Tensor::new(vec![b, h, n, d], rng.normal_vec(numel, 0.0, 1.0))?;
+                    for variant in ["f32", "fp4", "sage3"] {
+                        let name = format!("attn_{variant}_s{n}_d{d}");
+                        if rt.meta(&name).is_err() {
+                            continue;
+                        }
+                        let inputs =
+                            [Value::F32(q.clone()), Value::F32(k.clone()), Value::F32(v.clone())];
+                        rt.run(&name, &inputs)?; // compile + warm
+                        let flops = 4.0 * (b * h) as f64 * (n * n * d) as f64;
+                        let iters = if n >= 1024 { 3 } else { 5 };
+                        rep.push(bench_units(&name, 1, iters, flops, "flop", || {
+                            rt.run(&name, &inputs).expect("run");
+                        }));
+                    }
                 }
-                let inputs = [Value::F32(q.clone()), Value::F32(k.clone()), Value::F32(v.clone())];
-                rt.run(&name, &inputs)?; // compile + warm
-                let flops = 4.0 * (b * h) as f64 * (n * n * d) as f64;
-                let iters = if n >= 1024 { 3 } else { 5 };
-                rep.push(bench_units(&name, 1, iters, flops, "flop", || {
-                    rt.run(&name, &inputs).expect("run");
-                }));
             }
+            rep.save()?;
+            // Also regenerate the results/ table via the experiment driver.
+            attn_qat::experiments::kernels::fig5(&rt, &Config::default())?;
+        }
+        Err(e) => {
+            eprintln!("skipping compiled-artifact benches: {e}");
+            rep.save()?;
         }
     }
-    rep.save()?;
 
     // Modeled RTX-5090 speedup shape (the paper's headline numbers).
     let hw = Hw::default();
@@ -55,7 +119,5 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
-    // Also regenerate the results/ table via the experiment driver.
-    attn_qat::experiments::kernels::fig5(&rt, &Config::default())?;
     Ok(())
 }

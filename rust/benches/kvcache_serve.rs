@@ -2,7 +2,7 @@
 //! decode throughput of the FP4-KV server on the tiny model.
 
 use attn_qat::bench::{bench_units, Reporter};
-use attn_qat::kvcache::PagedKvCache;
+use attn_qat::kvcache::{DecodeScratch, PagedKvCache};
 use attn_qat::rng::Rng;
 use attn_qat::runtime::{Runtime, Value};
 use attn_qat::serve::{DecodeServer, Request};
@@ -51,9 +51,12 @@ fn main() -> anyhow::Result<()> {
         },
     ));
 
-    // Decode attention over the cache (1 query token).
+    // Decode attention over the cache (1 query token), both paths:
+    // the legacy materialising baseline (gather + attend_f32) vs the fused
+    // packed-domain `attend_decode` — the before/after record for the
+    // packed-kernel refactor.
     let q = rng.normal_vec(d, 0.0, 1.0);
-    rep.push(bench_units(
+    let baseline = bench_units(
         &format!("kv_decode_attend_{tokens}tok_d{d}"),
         1,
         10,
@@ -64,7 +67,31 @@ fn main() -> anyhow::Result<()> {
             let out = attn_qat::attention::flash::attend_f32(&q, &k, &v, 1, tokens, d, false);
             std::hint::black_box(out.o[0]);
         },
-    ));
+    );
+    let baseline_ns = baseline.median_ns;
+    rep.push(baseline);
+
+    let mut scratch = DecodeScratch::new();
+    let mut out_buf = vec![0.0f32; d];
+    let fused = bench_units(
+        &format!("kv_decode_attend_fused_{tokens}tok_d{d}"),
+        2,
+        20,
+        1.0,
+        "tok",
+        || {
+            let lse = cache
+                .attend_decode(1, 0, 0, &q, &mut out_buf, &mut scratch)
+                .unwrap();
+            std::hint::black_box(lse);
+        },
+    );
+    let fused_ns = fused.median_ns;
+    rep.push(fused);
+    println!(
+        "fused attend_decode speedup vs gather+attend_f32 @ {tokens} tok: {:.2}x",
+        baseline_ns / fused_ns
+    );
 
     // End-to-end decode server (needs core artifacts).
     if let Ok(rt) = Runtime::new(&Runtime::default_dir()) {
@@ -75,7 +102,12 @@ fn main() -> anyhow::Result<()> {
             // warmup/compile outside the measurement
             {
                 let mut s = DecodeServer::new(&rt, "tiny", weights.clone())?;
-                s.submit(Request { id: 1, prompt: b"C:ab#".to_vec(), max_new_tokens: 2, temperature: 0.0 });
+                s.submit(Request {
+                    id: 1,
+                    prompt: b"C:ab#".to_vec(),
+                    max_new_tokens: 2,
+                    temperature: 0.0,
+                });
                 s.run()?;
             }
             let mut decoded = 0usize;

@@ -6,15 +6,23 @@
 //! * Q, K quantized along the head dimension (contraction of QKᵀ),
 //! * V quantized along the token axis (contraction of P·V),
 //! * P̃ = exp(S − rowmax) quantized per row along the key axis,
-//! * all matmuls accumulate in f32 over dequantized E2M1×E4M3 values —
+//! * all matmuls accumulate in f32 over (E2M1 code × E4M3 scale) values —
 //!   exactly the FP4MM hardware semantics (§2.1).
 //!
-//! The inputs really are packed to 4-bit storage ([`PackedNvfp4`]) before
-//! being consumed: this is the paper's *inference* kernel (Alg. 1), and the
-//! Figure-4 "real quant" comparator for the fake-quant HLO path.
+//! Since the packed-kernel refactor the hot path is
+//! [`super::packed::attend_packed_core`]: inputs are quantized **once**
+//! into [`PackedNvfp4`] and consumed in the packed domain via the byte-pair
+//! LUT — no dequantized copies of Q/K/V exist at all. The pre-refactor
+//! dequantizing implementation is kept as [`attend_fp4_dequant`] /
+//! [`attend_sage3_dequant`]: it is the packed-vs-dequant comparator for
+//! benches and the cross-check for tests.
+
+use std::borrow::Cow;
 
 use crate::formats::block::{nvfp4_fake_quant_row, NVFP4_BLOCK};
 use crate::formats::tensor4::PackedNvfp4;
+
+use super::packed::{attend_packed_core, AttnScratch, causal_limit};
 
 /// Attention output: `o (nq × d)` + per-row logsumexp.
 #[derive(Clone, Debug)]
@@ -25,17 +33,18 @@ pub struct AttnOutput {
     pub d: usize,
 }
 
-/// Pad `rows × cols` to a column count that's a multiple of 16 (zero fill).
-fn pad_cols(data: &[f32], rows: usize, cols: usize) -> (Vec<f32>, usize) {
+/// Pad `rows × cols` to a column count that's a multiple of 16 (zero
+/// fill); borrows the input unchanged when it is already aligned.
+fn pad_cols<'a>(data: &'a [f32], rows: usize, cols: usize) -> (Cow<'a, [f32]>, usize) {
     let padded = cols.div_ceil(NVFP4_BLOCK) * NVFP4_BLOCK;
     if padded == cols {
-        return (data.to_vec(), cols);
+        return (Cow::Borrowed(data), cols);
     }
     let mut out = vec![0.0f32; rows * padded];
     for r in 0..rows {
         out[r * padded..r * padded + cols].copy_from_slice(&data[r * cols..(r + 1) * cols]);
     }
-    (out, padded)
+    (Cow::Owned(out), padded)
 }
 
 /// Transpose `rows × cols` row-major.
@@ -49,10 +58,111 @@ fn transpose(data: &[f32], rows: usize, cols: usize) -> Vec<f32> {
     out
 }
 
+/// Quantize f32 Q/K/V into the packed layout the packed engine consumes:
+/// Q/K `(n × d_pad)` blocked along `d`, V transposed `(d × nk_pad)` blocked
+/// along the token axis. This is the single quantization point of the
+/// engine path (everything downstream stays 4-bit).
+pub fn pack_qkv_for_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+) -> (PackedNvfp4, PackedNvfp4, PackedNvfp4) {
+    let (q_pad, dp) = pad_cols(q, nq, d);
+    let qq = PackedNvfp4::quantize(&q_pad, nq, dp).expect("quantize q");
+    let (k_pad, _) = pad_cols(k, nk, d);
+    let kq = PackedNvfp4::quantize(&k_pad, nk, dp).expect("quantize k");
+    let vt = transpose(v, nk, d);
+    let (vt_pad, nkp) = pad_cols(&vt, d, nk);
+    let vq = PackedNvfp4::quantize(&vt_pad, d, nkp).expect("quantize v");
+    (qq, kq, vq)
+}
+
+/// SageAttention3 Eq. 4 preprocessing, shared by the packed and legacy
+/// engines: subtract the global per-column key mean and the per-tile query
+/// mean. Returns the smoothed copies plus the per-tile means q̄
+/// (`⌈nq/block_q⌉ × d` row-major) needed for the high-precision ΔS fixup.
+fn smooth_qk(
+    q: &[f32],
+    k: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    block_q: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut q_in = q.to_vec();
+    let mut k_in = k.to_vec();
+    let mut q_means = Vec::with_capacity(nq.div_ceil(block_q) * d);
+    // K smoothing: subtract the global per-column key mean.
+    for c in 0..d {
+        let mean: f32 = (0..nk).map(|j| k[j * d + c]).sum::<f32>() / nk as f32;
+        for j in 0..nk {
+            k_in[j * d + c] -= mean;
+        }
+    }
+    // Q smoothing per query tile; means kept for the high-prec ΔS.
+    for i0 in (0..nq).step_by(block_q) {
+        let rows = block_q.min(nq - i0);
+        for c in 0..d {
+            let mean: f32 = (i0..i0 + rows).map(|i| q[i * d + c]).sum::<f32>() / rows as f32;
+            q_means.push(mean);
+            for i in i0..i0 + rows {
+                q_in[i * d + c] -= mean;
+            }
+        }
+    }
+    (q_in, k_in, q_means)
+}
+
+/// Core quantized attention with optional smoothing / two-level P.
+///
+/// Preprocesses (smoothing per SageAttention3 Eq. 4), quantizes once into
+/// packed 4-bit storage, and delegates to the packed-domain engine. The
+/// non-smoothing path quantizes straight from the caller's slices — the
+/// only f32 copy left is the V transpose (a layout change the packed
+/// engine needs), plus zero-padding when `d` or `nk` is not 16-aligned.
+#[allow(clippy::too_many_arguments)]
+fn attend_quantized(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    causal: bool,
+    smooth: bool,
+    two_level_p: bool,
+    block_q: usize,
+) -> AttnOutput {
+    let (q_in, k_in, q_means): (Cow<[f32]>, Cow<[f32]>, Vec<f32>) = if smooth {
+        let (qi, ki, qm) = smooth_qk(q, k, nq, nk, d, block_q);
+        (Cow::Owned(qi), Cow::Owned(ki), qm)
+    } else {
+        (Cow::Borrowed(q), Cow::Borrowed(k), Vec::new())
+    };
+    let (qq, kq, vq) = pack_qkv_for_attention(&q_in, &k_in, v, nq, nk, d);
+    let mut scratch = AttnScratch::new();
+    attend_packed_core(
+        &qq,
+        &kq,
+        &vq,
+        nq,
+        nk,
+        d,
+        causal,
+        if smooth { Some(&q_means) } else { None },
+        block_q,
+        two_level_p,
+        &mut scratch,
+    )
+}
+
 /// Quantize through real packed storage and hand back dequantized f32.
 ///
-/// (Quantize → pack to 4-bit → unpack → dequantize; the round trip through
-/// [`PackedNvfp4`] is the point — it exercises the storage format.)
+/// (Used by the legacy dequantizing reference below; the packed engine
+/// never materialises these f32 copies.)
 fn through_fp4(data: &[f32], rows: usize, cols: usize) -> Vec<f32> {
     let (padded, pc) = pad_cols(data, rows, cols);
     let packed = PackedNvfp4::quantize(&padded, rows, pc).expect("quantize");
@@ -68,9 +178,13 @@ fn through_fp4(data: &[f32], rows: usize, cols: usize) -> Vec<f32> {
     }
 }
 
-/// Core quantized attention with optional smoothing / two-level P.
+/// Legacy dequantizing implementation (pre-packed-kernel): unpacks every
+/// operand to f32 and accumulates element-wise. Identical quantization
+/// lattice to the packed engine; only the f32 accumulation grouping
+/// differs (per element here, per 16-block there). Kept as the
+/// packed-vs-dequant comparator for benches and tests.
 #[allow(clippy::too_many_arguments)]
-fn attend_quantized(
+fn attend_quantized_dequant(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -83,30 +197,12 @@ fn attend_quantized(
     block_q: usize,
 ) -> AttnOutput {
     // --- preprocessing (Alg. 1 l.4 + SageAttention3 Eq. 4) ---------------
-    let mut k_in = k.to_vec();
-    let mut q_in = q.to_vec();
-    let mut q_means: Vec<f32> = Vec::new(); // per-tile q̄ (nq/block_q × d)
-    if smooth {
-        // K smoothing: subtract the global per-column key mean.
-        for c in 0..d {
-            let mean: f32 = (0..nk).map(|j| k[j * d + c]).sum::<f32>() / nk as f32;
-            for j in 0..nk {
-                k_in[j * d + c] -= mean;
-            }
-        }
-        // Q smoothing per query tile; means kept for the high-prec ΔS.
-        for i0 in (0..nq).step_by(block_q) {
-            let rows = block_q.min(nq - i0);
-            for c in 0..d {
-                let mean: f32 =
-                    (i0..i0 + rows).map(|i| q[i * d + c]).sum::<f32>() / rows as f32;
-                q_means.push(mean);
-                for i in i0..i0 + rows {
-                    q_in[i * d + c] -= mean;
-                }
-            }
-        }
-    }
+    let (q_in, k_in, q_means): (Cow<[f32]>, Cow<[f32]>, Vec<f32>) = if smooth {
+        let (qi, ki, qm) = smooth_qk(q, k, nq, nk, d, block_q);
+        (Cow::Owned(qi), Cow::Owned(ki), qm)
+    } else {
+        (Cow::Borrowed(q), Cow::Borrowed(k), Vec::new())
+    };
     let qf = through_fp4(&q_in, nq, d); // blocks along d
     let kf = through_fp4(&k_in, nk, d); // blocks along d
     // V: blocks along the token axis -> quantize the transpose.
@@ -123,7 +219,11 @@ fn attend_quantized(
     for i in 0..nq {
         let qi = &qf[i * d..(i + 1) * d];
         let tile = i / block_q;
-        let limit = if causal { (i + nk - nq + 1).min(nk) } else { nk };
+        let limit = if causal { causal_limit(i, nq, nk) } else { nk };
+        if limit == 0 {
+            lse[i] = f32::NEG_INFINITY;
+            continue;
+        }
         let mut m = f32::NEG_INFINITY;
         for j in 0..limit {
             let kj = &kf[j * d..(j + 1) * d];
@@ -226,6 +326,32 @@ pub fn attend_sage3_blocked(
     block_q: usize,
 ) -> AttnOutput {
     attend_quantized(q, k, v, nq, nk, d, causal, true, true, block_q)
+}
+
+/// [`attend_fp4`] via the legacy dequantizing path (bench/test comparator).
+pub fn attend_fp4_dequant(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    causal: bool,
+) -> AttnOutput {
+    attend_quantized_dequant(q, k, v, nq, nk, d, causal, false, false, 16)
+}
+
+/// [`attend_sage3`] via the legacy dequantizing path (bench/test comparator).
+pub fn attend_sage3_dequant(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    causal: bool,
+) -> AttnOutput {
+    attend_quantized_dequant(q, k, v, nq, nk, d, causal, true, true, 16)
 }
 
 #[cfg(test)]
@@ -333,5 +459,35 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(max_diff < 0.6, "max_diff {max_diff}");
+    }
+
+    #[test]
+    fn packed_and_dequant_paths_agree() {
+        // Identical quantization lattice, different f32 accumulation
+        // grouping: agreement to fp tolerance, not bit-exact.
+        for &(nq, nk, d, seed) in &[(16usize, 16usize, 32usize, 6u64), (8, 37, 64, 7)] {
+            let mut rng = Rng::new(seed);
+            let q = rng.normal_vec(nq * d, 0.0, 1.0);
+            let k = rng.normal_vec(nk * d, 0.0, 1.0);
+            let v = rng.normal_vec(nk * d, 0.0, 1.0);
+            let a = attend_fp4(&q, &k, &v, nq, nk, d, false);
+            let b = attend_fp4_dequant(&q, &k, &v, nq, nk, d, false);
+            let max_diff = a
+                .o
+                .iter()
+                .zip(&b.o)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_diff < 1e-4, "fp4 packed vs dequant: {max_diff}");
+            let s = attend_sage3(&q, &k, &v, nq, nk, d, false);
+            let sd = attend_sage3_dequant(&q, &k, &v, nq, nk, d, false);
+            let max_diff_s = s
+                .o
+                .iter()
+                .zip(&sd.o)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_diff_s < 1e-3, "sage3 packed vs dequant: {max_diff_s}");
+        }
     }
 }

@@ -5,10 +5,13 @@
 //! and the high-precision fallback of the decode path.
 
 use super::engine::AttnOutput;
+use super::packed::causal_limit;
 
 /// Single-head attention: `q (nq × d)`, `k/v (nk × d)` row-major.
 ///
-/// Causality uses aligned ends (query i sees keys j ≤ i + nk − nq).
+/// Causality uses aligned ends (query i sees keys j ≤ i + nk − nq); when
+/// `nk < nq` the leading queries see zero keys and produce zero output
+/// with `lse = -inf` (the old unsaturated limit underflowed there).
 pub fn attend_f32(
     q: &[f32],
     k: &[f32],
@@ -24,7 +27,11 @@ pub fn attend_f32(
     let mut s_row = vec![0.0f32; nk];
     for i in 0..nq {
         let qi = &q[i * d..(i + 1) * d];
-        let limit = if causal { (i + nk - nq + 1).min(nk) } else { nk };
+        let limit = if causal { causal_limit(i, nq, nk) } else { nk };
+        if limit == 0 {
+            lse[i] = f32::NEG_INFINITY;
+            continue;
+        }
         let mut m = f32::NEG_INFINITY;
         for j in 0..limit {
             let kj = &k[j * d..(j + 1) * d];
@@ -88,6 +95,27 @@ mod tests {
         for c in 0..d {
             assert!((out.o[c] - v[c]).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn causal_nk_less_than_nq_no_underflow() {
+        // Regression: `(i + nk - nq + 1)` underflowed (debug panic /
+        // release wraparound) whenever nk < nq.
+        let (nq, nk, d) = (6, 2, 8);
+        let mut rng = Rng::new(9);
+        let q = rng.normal_vec(nq * d, 0.0, 1.0);
+        let k = rng.normal_vec(nk * d, 0.0, 1.0);
+        let v = rng.normal_vec(nk * d, 0.0, 1.0);
+        let out = attend_f32(&q, &k, &v, nq, nk, d, true);
+        // Queries 0..nq-nk see zero keys (aligned ends).
+        for i in 0..nq - nk {
+            assert!(out.o[i * d..(i + 1) * d].iter().all(|&x| x == 0.0), "row {i}");
+            assert_eq!(out.lse[i], f32::NEG_INFINITY);
+        }
+        // The last query sees every key: must match full attention.
+        let full = attend_f32(&q[(nq - 1) * d..], &k, &v, 1, nk, d, false);
+        assert_eq!(&out.o[(nq - 1) * d..], &full.o[..]);
+        assert_eq!(out.lse[nq - 1], full.lse[0]);
     }
 
     #[test]

@@ -17,9 +17,11 @@
 
 pub mod engine;
 pub mod flash;
+pub mod packed;
 
 pub use engine::{attend_fp4, attend_sage3, AttnOutput};
 pub use flash::attend_f32;
+pub use packed::{attend_packed, AttnScratch};
 
 /// Forward-variant selector for the native engines.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -1,0 +1,291 @@
+//! Packed-domain NVFP4 attention: consumes 4-bit storage directly.
+//!
+//! Where `engine::attend_quantized_dequant` (the legacy reference) unpacks
+//! every operand back to f32 before the matmuls, this engine keeps Q, K, V
+//! in [`PackedNvfp4`] form and computes QKᵀ and P·V with the byte-pair LUT
+//! ([`crate::formats::lut`]): 8 table lookups + one scale multiply per
+//! 16-element block, no dequant, no fresh buffers — the software analogue
+//! of feeding FP4 operands straight to the tensor cores (Attn-QAT Alg. 1 /
+//! SageAttention3's microscaling FP4 kernels).
+//!
+//! Numerics: per-block dots are *exact* (see the `lut` module docs), so the
+//! only difference vs the dequantizing reference is f32 rounding in the
+//! cross-block accumulation order — one add per 16-block here vs one add
+//! per element there. Both sit well inside the golden-test tolerances that
+//! pin the engines to the JAX oracle.
+//!
+//! Layout contract (the FP4MM micro-scaling convention — scales along the
+//! contraction axis):
+//! * `q`, `k` — `(n × d_pad)`, blocks along the head dimension,
+//! * `vt` — `(d × nk_pad)`, V transposed, blocks along the token axis,
+//! * P rows are quantized along the key axis on the fly (per 16 keys).
+//!
+//! All intermediate state lives in a caller-provided [`AttnScratch`]; after
+//! warmup the engine performs zero heap allocation per call beyond the
+//! `AttnOutput` it returns (the decode hot path, which cannot afford even
+//! that, uses `PagedKvCache::attend_decode` writing into a caller buffer).
+
+use crate::formats::block::NVFP4_BLOCK;
+use crate::formats::e4m3;
+use crate::formats::lut::{self, BLOCK_BYTES};
+use crate::formats::tensor4::PackedNvfp4;
+
+use super::engine::AttnOutput;
+
+/// Reusable workspace for [`attend_packed`] / `attend_packed_core`.
+///
+/// Buffers grow to the largest (nk, d) seen and are then reused verbatim —
+/// steady state performs no allocation.
+#[derive(Default)]
+pub struct AttnScratch {
+    /// Raw scores for one query row (`nk`).
+    s_row: Vec<f32>,
+    /// exp(S − m) for one query row, padded to a block multiple (`nk_pad`).
+    p_row: Vec<f32>,
+    /// Packed E2M1 codes of the quantized P row (`nk_pad / 2`).
+    p_codes: Vec<u8>,
+    /// E4M3 scale bytes of the quantized P row (`nk_pad / 16`).
+    p_scales: Vec<u8>,
+    /// One dequantized K row (`d_pad`) for the smooth-Q ΔS precompute.
+    kf_row: Vec<f32>,
+    /// ΔS fixup values, `(tiles × nk)` row-major.
+    delta: Vec<f32>,
+}
+
+impl AttnScratch {
+    pub fn new() -> AttnScratch {
+        AttnScratch::default()
+    }
+}
+
+/// Aligned-ends causal limit: query `i` sees keys `j < limit`.
+///
+/// Saturating: when `nk < nq` the leading queries legitimately see zero
+/// keys (the old `i + nk - nq + 1` underflowed there).
+#[inline]
+pub(crate) fn causal_limit(i: usize, nq: usize, nk: usize) -> usize {
+    (i + nk + 1).saturating_sub(nq).min(nk)
+}
+
+/// Plain packed-domain NVFP4 attention (Alg. 1 on packed operands).
+///
+/// `q`/`k` are `(nq|nk × d_pad)` with blocks along `d`; `vt` is V
+/// transposed `(d × nk_pad)` with blocks along the token axis (`nk_pad` =
+/// `nk` rounded up to 16). `d` is the true head dimension (`≤ d_pad`).
+#[allow(clippy::too_many_arguments)]
+pub fn attend_packed(
+    q: &PackedNvfp4,
+    k: &PackedNvfp4,
+    vt: &PackedNvfp4,
+    nq: usize,
+    nk: usize,
+    d: usize,
+    causal: bool,
+    scratch: &mut AttnScratch,
+) -> AttnOutput {
+    attend_packed_core(q, k, vt, nq, nk, d, causal, None, NVFP4_BLOCK, false, scratch)
+}
+
+/// Full packed engine with the SageAttention3 knobs: optional smooth-Q ΔS
+/// fixup (`q_means` = per-tile means, `(⌈nq/block_q⌉ × d)` row-major) and
+/// two-level P quantization.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attend_packed_core(
+    q: &PackedNvfp4,
+    k: &PackedNvfp4,
+    vt: &PackedNvfp4,
+    nq: usize,
+    nk: usize,
+    d: usize,
+    causal: bool,
+    q_means: Option<&[f32]>,
+    block_q: usize,
+    two_level_p: bool,
+    scratch: &mut AttnScratch,
+) -> AttnOutput {
+    let lut = lut::pair_dot();
+    let nkp = nk.div_ceil(NVFP4_BLOCK) * NVFP4_BLOCK;
+    debug_assert_eq!(q.cols, k.cols, "q/k head-dim padding mismatch");
+    debug_assert!(q.rows >= nq && k.rows >= nk);
+    debug_assert_eq!(vt.rows, d, "vt must be (d x nk_pad)");
+    debug_assert_eq!(vt.cols, nkp, "vt token padding mismatch");
+
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut o = vec![0.0f32; nq * d];
+    let mut lse = vec![0.0f32; nq];
+    scratch.s_row.resize(nk, 0.0);
+    scratch.p_row.resize(nkp, 0.0);
+
+    // Smooth-Q ΔS fixup, precomputed per (query tile, key): q̄_t · γ(K_j)
+    // in high precision (Eq. 5). K rows dequantize once each.
+    let tiles = nq.div_ceil(block_q);
+    if let Some(qm) = q_means {
+        debug_assert_eq!(qm.len(), tiles * d, "q_means must be tiles x d");
+        scratch.kf_row.resize(k.cols, 0.0);
+        scratch.delta.resize(tiles * nk, 0.0);
+        for j in 0..nk {
+            k.dequant_row_into(j, &mut scratch.kf_row);
+            for t in 0..tiles {
+                let qmt = &qm[t * d..(t + 1) * d];
+                let mut acc = 0.0f32;
+                for c in 0..d {
+                    acc += qmt[c] * scratch.kf_row[c];
+                }
+                scratch.delta[t * nk + j] = acc;
+            }
+        }
+    }
+
+    let v_bpr = nkp / 2; // vt bytes per row
+    let v_spb = nkp / NVFP4_BLOCK; // vt scale blocks per row
+
+    for i in 0..nq {
+        let tile = i / block_q;
+        let limit = if causal { causal_limit(i, nq, nk) } else { nk };
+        if limit == 0 {
+            // Query precedes every key: empty softmax, defined as zeros.
+            lse[i] = f32::NEG_INFINITY;
+            continue;
+        }
+        // --- S row: packed QKᵀ (FP4MM #1, f32 accumulate) -----------------
+        let mut m = f32::NEG_INFINITY;
+        for j in 0..limit {
+            let mut acc = lut::packed_row_dot(lut, q, i, k, j);
+            if q_means.is_some() {
+                acc += scratch.delta[tile * nk + j];
+            }
+            let s = acc * scale;
+            scratch.s_row[j] = s;
+            m = m.max(s);
+        }
+        let mut l = 0.0f32;
+        for j in 0..limit {
+            let p = (scratch.s_row[j] - m).exp();
+            scratch.p_row[j] = p;
+            l += p;
+        }
+        for p in scratch.p_row[limit..].iter_mut() {
+            *p = 0.0;
+        }
+        // --- P quantization (Alg. 1 l.12 / SageAttention3 two-level) ------
+        let mut inv_factor = 1.0f32;
+        if two_level_p {
+            let rmax = scratch.p_row[..limit].iter().fold(0.0f32, |a, &b| a.max(b));
+            let factor = if rmax > 0.0 { 448.0 * 6.0 / rmax } else { 1.0 };
+            for p in scratch.p_row.iter_mut() {
+                *p *= factor;
+            }
+            inv_factor = 1.0 / factor;
+        }
+        lut::quantize_row_into(&scratch.p_row, &mut scratch.p_codes, &mut scratch.p_scales);
+        // --- O = P^F · V^F / l: packed P·V (FP4MM #2) ----------------------
+        let orow = &mut o[i * d..(i + 1) * d];
+        for b in 0..limit.div_ceil(NVFP4_BLOCK) {
+            let sp = e4m3::decode(scratch.p_scales[b]) * inv_factor;
+            let p_codes = &scratch.p_codes[b * BLOCK_BYTES..(b + 1) * BLOCK_BYTES];
+            for (c, oc) in orow.iter_mut().enumerate() {
+                let base = c * v_bpr + b * BLOCK_BYTES;
+                let dot = lut::bytes_dot(lut, p_codes, &vt.codes[base..base + BLOCK_BYTES]);
+                let sv = e4m3::decode(vt.scales[c * v_spb + b]);
+                *oc += dot * (sp * sv);
+            }
+        }
+        let inv = 1.0 / l;
+        for x in orow.iter_mut() {
+            *x *= inv;
+        }
+        lse[i] = m + l.ln();
+    }
+    AttnOutput { o, lse, nq, d }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::engine::{attend_fp4, pack_qkv_for_attention};
+    use crate::rng::Rng;
+
+    #[test]
+    fn attend_packed_matches_attend_fp4_bitwise() {
+        // attend_fp4 quantizes once and delegates here; quantizing with the
+        // same helper and calling the packed engine directly must agree
+        // bit for bit.
+        let (nq, nk, d) = (8, 19, 32);
+        let mut rng = Rng::new(11);
+        let q = rng.normal_vec(nq * d, 0.0, 1.0);
+        let k = rng.normal_vec(nk * d, 0.0, 1.0);
+        let v = rng.normal_vec(nk * d, 0.0, 1.0);
+        let (qq, kq, vq) = pack_qkv_for_attention(&q, &k, &v, nq, nk, d);
+        let mut scratch = AttnScratch::new();
+        let got = attend_packed(&qq, &kq, &vq, nq, nk, d, false, &mut scratch);
+        let want = attend_fp4(&q, &k, &v, nq, nk, d, false);
+        assert_eq!(got.o, want.o);
+        assert_eq!(got.lse, want.lse);
+    }
+
+    #[test]
+    fn attend_packed_matches_attend_fp4_on_outliers() {
+        // Outlier-heavy inputs stress the scale path (large E4M3 scales,
+        // saturating E2M1 codes); bitwise agreement must still hold, and
+        // causal masking must not disturb it.
+        let (nq, nk, d) = (16, 16, 16);
+        let mut rng = Rng::new(21);
+        let mut q = rng.normal_vec(nq * d, 0.0, 1.0);
+        let mut k = rng.normal_vec(nk * d, 0.0, 1.0);
+        let mut v = rng.normal_vec(nk * d, 0.0, 1.0);
+        for i in (0..q.len()).step_by(7) {
+            q[i] *= 50.0;
+        }
+        for i in (0..k.len()).step_by(5) {
+            k[i] *= 200.0;
+        }
+        for i in (0..v.len()).step_by(3) {
+            v[i] *= 100.0;
+        }
+        for causal in [false, true] {
+            let (qq, kq, vq) = pack_qkv_for_attention(&q, &k, &v, nq, nk, d);
+            let mut scratch = AttnScratch::new();
+            let got = attend_packed(&qq, &kq, &vq, nq, nk, d, causal, &mut scratch);
+            let want = attend_fp4(&q, &k, &v, nq, nk, d, causal);
+            assert_eq!(got.o, want.o, "causal={causal}");
+            assert_eq!(got.lse, want.lse, "causal={causal}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes() {
+        // One scratch across growing then shrinking shapes stays correct.
+        let mut scratch = AttnScratch::new();
+        let mut rng = Rng::new(12);
+        for &(nq, nk, d) in &[(4usize, 16usize, 16usize), (8, 64, 32), (2, 5, 16)] {
+            let q = rng.normal_vec(nq * d, 0.0, 1.0);
+            let k = rng.normal_vec(nk * d, 0.0, 1.0);
+            let v = rng.normal_vec(nk * d, 0.0, 1.0);
+            let (qq, kq, vq) = pack_qkv_for_attention(&q, &k, &v, nq, nk, d);
+            let got = attend_packed(&qq, &kq, &vq, nq, nk, d, false, &mut scratch);
+            let want = attend_fp4(&q, &k, &v, nq, nk, d, false);
+            assert_eq!(got.o, want.o, "shape ({nq},{nk},{d})");
+        }
+    }
+
+    #[test]
+    fn causal_nq_gt_nk_has_empty_rows() {
+        // Regression: the old causal limit underflowed when nk < nq.
+        let (nq, nk, d) = (5, 3, 16);
+        let mut rng = Rng::new(13);
+        let q = rng.normal_vec(nq * d, 0.0, 1.0);
+        let k = rng.normal_vec(nk * d, 0.0, 1.0);
+        let v = rng.normal_vec(nk * d, 0.0, 1.0);
+        let out = attend_fp4(&q, &k, &v, nq, nk, d, true);
+        // Queries 0 and 1 precede every key (aligned ends): zero output.
+        for i in 0..2 {
+            assert!(out.o[i * d..(i + 1) * d].iter().all(|&x| x == 0.0), "row {i}");
+            assert_eq!(out.lse[i], f32::NEG_INFINITY);
+        }
+        // Later rows are ordinary finite attention outputs.
+        for i in 2..nq {
+            assert!(out.o[i * d..(i + 1) * d].iter().all(|x| x.is_finite()), "row {i}");
+            assert!(out.lse[i].is_finite());
+        }
+    }
+}

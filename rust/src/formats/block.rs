@@ -9,20 +9,31 @@ pub const NVFP4_BLOCK: usize = 16;
 /// MXFP4 (OCP MX) block size.
 pub const MXFP4_BLOCK: usize = 32;
 
+/// The NVFP4 block scale rule of Eq. (1): `s = amax/6`, E4M3-rounded,
+/// with zero/underflowed blocks falling back to 1.0 (so all-zero blocks
+/// dequantize exactly). Returns the *decoded* scale. Every NVFP4
+/// quantizer in the crate (row quant, fake quant, the packed-domain
+/// `formats::lut::quantize_row_into`) must go through this one function.
+#[inline]
+pub fn nvfp4_block_scale(block: &[f32]) -> f32 {
+    let amax = block.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+    let s = e4m3::round(amax / e2m1::MAX);
+    if s <= 0.0 {
+        1.0
+    } else {
+        s
+    }
+}
+
 /// Quantize one row (blocked along its length) into E2M1 codes + E4M3
 /// scale bytes. `row.len()` must be a multiple of [`NVFP4_BLOCK`].
 ///
-/// Matches Eq. (1): `s = amax/6` (then E4M3-rounded; zero/underflowed
-/// blocks get scale 1.0 so all-zero blocks dequantize exactly), elements
-/// RNE-rounded to E2M1 after division by the *decoded* scale.
+/// Matches Eq. (1): scale per [`nvfp4_block_scale`], elements RNE-rounded
+/// to E2M1 after division by the *decoded* scale.
 pub fn nvfp4_quant_row(row: &[f32], codes: &mut Vec<u8>, scales: &mut Vec<u8>) {
     debug_assert_eq!(row.len() % NVFP4_BLOCK, 0);
     for block in row.chunks(NVFP4_BLOCK) {
-        let amax = block.iter().fold(0.0f32, |m, x| m.max(x.abs()));
-        let mut s = e4m3::round(amax / e2m1::MAX);
-        if s <= 0.0 {
-            s = 1.0;
-        }
+        let s = nvfp4_block_scale(block);
         scales.push(e4m3::encode(s));
         for &x in block {
             codes.push(e2m1::encode(x / s));
@@ -45,11 +56,7 @@ pub fn nvfp4_dequant_row(codes: &[u8], scales: &[u8], out: &mut Vec<f32>) {
 pub fn nvfp4_fake_quant_row(row: &mut [f32]) {
     debug_assert_eq!(row.len() % NVFP4_BLOCK, 0);
     for block in row.chunks_mut(NVFP4_BLOCK) {
-        let amax = block.iter().fold(0.0f32, |m, x| m.max(x.abs()));
-        let mut s = e4m3::round(amax / e2m1::MAX);
-        if s <= 0.0 {
-            s = 1.0;
-        }
+        let s = nvfp4_block_scale(block);
         for x in block.iter_mut() {
             *x = e2m1::round(*x / s) * s;
         }

@@ -25,17 +25,18 @@ pub fn round(x: f32) -> f32 {
 }
 
 /// Encode to a 4-bit code (`sign<<3 | mag_code`).
+///
+/// The magnitude code is computed directly from the rounded magnitude's
+/// bit pattern (no scan over [`VALUES`]): `mag = (1 + m/2)·2^e` with
+/// `e ∈ 0..=2`, `m ∈ {0, 1}` maps to code `2e + m + 2`, while 0.5 → 1 and
+/// 0 → 0 fall out of the clamp/zero-mask below.
 #[inline]
 pub fn encode(x: f32) -> u8 {
     let mag = rne_binade(x.abs(), 1, 0, MAX);
-    // Eight lattice points: binary-search-free linear scan is fastest.
-    let mut code = 0u8;
-    for (i, v) in VALUES.iter().enumerate() {
-        if mag == *v {
-            code = i as u8;
-            break;
-        }
-    }
+    let bits = mag.to_bits();
+    let exp = ((bits >> 23) & 0xFF) as i32 - 127;
+    let top_mant = ((bits >> 22) & 1) as i32;
+    let code = ((2 * exp + top_mant + 2).max(1) * (mag != 0.0) as i32) as u8;
     if x.is_sign_negative() && mag != 0.0 {
         code | 0x8
     } else {
@@ -144,6 +145,43 @@ mod tests {
                 "x={x} r={r} best={best}"
             );
             x += 0.0317;
+        }
+    }
+
+    /// The pre-refactor scan encoder, kept as the equivalence oracle.
+    fn encode_scan(x: f32) -> u8 {
+        let mag = rne_binade(x.abs(), 1, 0, MAX);
+        let mut code = 0u8;
+        for (i, v) in VALUES.iter().enumerate() {
+            if mag == *v {
+                code = i as u8;
+                break;
+            }
+        }
+        if x.is_sign_negative() && mag != 0.0 {
+            code | 0x8
+        } else {
+            code
+        }
+    }
+
+    #[test]
+    fn encode_matches_scan_exhaustively() {
+        // Dense sweep across the whole useful range plus every edge the
+        // codec has: lattice points, RNE midpoints, saturation, signed
+        // zero, subnormals, infinities.
+        let mut x = -10.0f32;
+        while x < 10.0 {
+            assert_eq!(encode(x), encode_scan(x), "x={x}");
+            x += 0.001953125; // 2^-9: hits every midpoint exactly
+        }
+        let edges = [
+            0.0f32, -0.0, 0.25, -0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0, 6.0, -6.0,
+            6.0001, 100.0, -100.0, 1e30, -1e30, f32::INFINITY, f32::NEG_INFINITY,
+            f32::MIN_POSITIVE, -f32::MIN_POSITIVE, 1e-40, -1e-40, 1e-30,
+        ];
+        for &e in &edges {
+            assert_eq!(encode(e), encode_scan(e), "edge {e}");
         }
     }
 

@@ -1,0 +1,184 @@
+//! Packed-domain dot products: the byte-pair lookup table that lets the
+//! attention engines consume NVFP4 storage *without dequantizing*.
+//!
+//! A packed NVFP4 byte holds two E2M1 codes. For two packed bytes `a`, `b`
+//! the table stores the exact f32 dot contribution of the code pair:
+//!
+//! ```text
+//! PAIR_DOT[a][b] = d(a & 0xF)·d(b & 0xF) + d(a >> 4)·d(b >> 4)
+//! ```
+//!
+//! so a 16-element block dot product is **8 byte-indexed lookups** plus one
+//! `s_a·s_b` scale multiply — no unpacking, no per-element dequant. This is
+//! the software analogue of the FP4 tensor-core path (SageAttention3 /
+//! Attn-QAT inference): arithmetic intensity comes from operating on the
+//! 4-bit representation directly.
+//!
+//! Exactness: E2M1 magnitudes are ±{0, .5, 1, 1.5, 2, 3, 4, 6}, so every
+//! pairwise product is a multiple of 0.25 bounded by 36, every block-level
+//! partial sum is a multiple of 0.25 bounded by 576 — far inside f32's
+//! exact-integer range — and E4M3 scales carry ≤ 4 significand bits, so
+//! `block_sum · (s_a·s_b)` is computed without rounding. The LUT block dot
+//! therefore equals the mathematically exact dot of the dequantized block.
+//! (Across blocks the f32 sum rounds once per block, the same contract as
+//! the dequantizing engines' f32 accumulation.)
+//!
+//! The table is 256×256 f32 = 256 KiB, built once on first use.
+
+use std::sync::OnceLock;
+
+use super::block::{nvfp4_block_scale, NVFP4_BLOCK};
+use super::e2m1;
+use super::e4m3;
+use super::tensor4::PackedNvfp4;
+
+/// Flattened 256×256 pair-dot table; index with `(a << 8) | b`.
+pub const LUT_LEN: usize = 256 * 256;
+
+static PAIR_DOT: OnceLock<Vec<f32>> = OnceLock::new();
+
+/// The pair-dot table (built on first call, then shared).
+pub fn pair_dot() -> &'static [f32] {
+    PAIR_DOT.get_or_init(|| {
+        let mut t = vec![0.0f32; LUT_LEN];
+        for a in 0..256usize {
+            let alo = e2m1::decode((a & 0xF) as u8);
+            let ahi = e2m1::decode((a >> 4) as u8);
+            for b in 0..256usize {
+                let blo = e2m1::decode((b & 0xF) as u8);
+                let bhi = e2m1::decode((b >> 4) as u8);
+                t[(a << 8) | b] = alo * blo + ahi * bhi;
+            }
+        }
+        t
+    })
+}
+
+/// Unscaled dot of two packed code runs (pairs of E2M1 codes per byte).
+///
+/// Exact as long as the runs stay within one scale block (≤ 8 bytes); the
+/// callers below apply it per 16-element block.
+#[inline(always)]
+pub fn bytes_dot(lut: &[f32], a: &[u8], b: &[u8]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += lut[((x as usize) << 8) | y as usize];
+    }
+    acc
+}
+
+/// Bytes per 16-element NVFP4 block (two codes per byte).
+pub const BLOCK_BYTES: usize = NVFP4_BLOCK / 2;
+
+/// Packed-domain dot of row `ra` of `a` with row `rb` of `b`.
+///
+/// Both matrices must share `cols` (a multiple of 16). Per block: 8 LUT
+/// lookups + one `s_a·s_b` multiply; blocks accumulate in f32 left to
+/// right. Never touches dequantized values.
+#[inline]
+pub fn packed_row_dot(
+    lut: &[f32],
+    a: &PackedNvfp4,
+    ra: usize,
+    b: &PackedNvfp4,
+    rb: usize,
+) -> f32 {
+    debug_assert_eq!(a.cols, b.cols);
+    debug_assert!(ra < a.rows && rb < b.rows);
+    let spb = a.cols / NVFP4_BLOCK; // scale blocks per row
+    let bpr = a.cols / 2; // bytes per row
+    let a_codes = &a.codes[ra * bpr..(ra + 1) * bpr];
+    let b_codes = &b.codes[rb * bpr..(rb + 1) * bpr];
+    let a_scales = &a.scales[ra * spb..(ra + 1) * spb];
+    let b_scales = &b.scales[rb * spb..(rb + 1) * spb];
+    let mut acc = 0.0f32;
+    for bi in 0..spb {
+        let s = e4m3::decode(a_scales[bi]) * e4m3::decode(b_scales[bi]);
+        let d = bytes_dot(
+            lut,
+            &a_codes[bi * BLOCK_BYTES..(bi + 1) * BLOCK_BYTES],
+            &b_codes[bi * BLOCK_BYTES..(bi + 1) * BLOCK_BYTES],
+        );
+        acc += d * s;
+    }
+    acc
+}
+
+/// Quantize one row straight into packed form (codes 2-per-byte + scale
+/// bytes), reusing the caller's buffers — the allocation-free counterpart
+/// of [`PackedNvfp4::quantize`] for hot paths (decode queries, P rows).
+///
+/// `row.len()` must be a multiple of 16. Clears and refills both vectors;
+/// steady-state reuse never reallocates.
+pub fn quantize_row_into(row: &[f32], codes: &mut Vec<u8>, scales: &mut Vec<u8>) {
+    debug_assert_eq!(row.len() % NVFP4_BLOCK, 0);
+    codes.clear();
+    scales.clear();
+    for block in row.chunks(NVFP4_BLOCK) {
+        let s = nvfp4_block_scale(block);
+        scales.push(e4m3::encode(s));
+        for pair in block.chunks(2) {
+            let lo = e2m1::encode(pair[0] / s);
+            let hi = e2m1::encode(pair[1] / s);
+            codes.push(lo | (hi << 4));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_matches_decoded_products() {
+        let lut = pair_dot();
+        for a in 0..256usize {
+            for b in [0usize, 1, 17, 128, 136, 255, 0x93, 0x7f] {
+                let want = e2m1::decode((a & 0xF) as u8) * e2m1::decode((b & 0xF) as u8)
+                    + e2m1::decode((a >> 4) as u8) * e2m1::decode((b >> 4) as u8);
+                assert_eq!(lut[(a << 8) | b], want, "a={a:#x} b={b:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_row_dot_matches_dequant_dot() {
+        // The LUT dot must equal the exact dot of the dequantized rows
+        // (per-block products are exact in f32; see module docs).
+        let rows = 4;
+        let cols = 64;
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|i| ((i * 2654435761usize) % 2000) as f32 / 250.0 - 4.0)
+            .collect();
+        let p = PackedNvfp4::quantize(&data, rows, cols).unwrap();
+        let deq = p.dequantize();
+        let lut = pair_dot();
+        for ra in 0..rows {
+            for rb in 0..rows {
+                let got = packed_row_dot(lut, &p, ra, &p, rb);
+                // Exact per block; cross-block f32 sum in the same order.
+                let mut want = 0.0f32;
+                for bi in 0..cols / NVFP4_BLOCK {
+                    let mut blk = 0.0f32;
+                    for c in bi * NVFP4_BLOCK..(bi + 1) * NVFP4_BLOCK {
+                        blk += deq[ra * cols + c] * deq[rb * cols + c];
+                    }
+                    want += blk;
+                }
+                assert_eq!(got, want, "rows {ra},{rb}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_row_into_matches_packed_quantize() {
+        let cols = 48;
+        let row: Vec<f32> = (0..cols).map(|i| (i as f32 - 20.0) * 0.37).collect();
+        let p = PackedNvfp4::quantize(&row, 1, cols).unwrap();
+        let (mut codes, mut scales) = (Vec::new(), Vec::new());
+        quantize_row_into(&row, &mut codes, &mut scales);
+        assert_eq!(codes, p.codes);
+        assert_eq!(scales, p.scales);
+    }
+}

@@ -11,6 +11,8 @@
 //!   scales) block quantization
 //! * [`tensor4`] — packed 4-bit tensors (2 codes/byte + scale bytes): the
 //!   storage the FP4 KV cache and the real-quant attention engine use
+//! * [`lut`] — the 256×256 byte-pair dot LUT that lets the engines consume
+//!   packed storage directly (8 lookups + 1 multiply per 16-element block)
 //! * [`analysis`] — quantization-error statistics
 //!
 //! Decoding an (E2M1 code × E4M3 scale) pair into f32 and accumulating in
@@ -24,6 +26,7 @@ pub mod block;
 pub mod e2m1;
 pub mod e4m3;
 pub mod e8m0;
+pub mod lut;
 pub mod tensor4;
 
 pub use block::{mxfp4_quant_block, nvfp4_dequant_row, nvfp4_quant_row, MXFP4_BLOCK, NVFP4_BLOCK};

@@ -17,7 +17,7 @@ use std::collections::VecDeque;
 use anyhow::{anyhow, bail, Result};
 
 use crate::attention::flash::attend_f32;
-use crate::kvcache::PagedKvCache;
+use crate::kvcache::{DecodeScratch, PagedKvCache};
 use crate::rng::Rng;
 use crate::runtime::{Runtime, Value};
 use crate::tensor::Tensor;
@@ -77,6 +77,11 @@ pub struct DecodeServer<'rt> {
     active: Vec<Active>,
     done: Vec<Completion>,
     rng: Rng,
+    /// Per-slot decode scratch, reused every step (no steady-state alloc).
+    scratches: Vec<DecodeScratch>,
+    /// Use the legacy materialising `gather` + `attend_f32` attention
+    /// instead of the fused packed decode (for A/B comparisons).
+    baseline_attn: bool,
     pub stats: ServeStats,
 }
 
@@ -107,12 +112,20 @@ impl<'rt> DecodeServer<'rt> {
             active: Vec::new(),
             done: Vec::new(),
             rng: Rng::new(0x5e7e),
+            scratches: Vec::new(),
+            baseline_attn: false,
             stats: ServeStats::default(),
         })
     }
 
     pub fn submit(&mut self, req: Request) {
         self.queue.push_back(req);
+    }
+
+    /// Switch between the fused packed decode attention (default) and the
+    /// legacy materialising `gather` + `attend_f32` baseline.
+    pub fn set_baseline_attention(&mut self, on: bool) {
+        self.baseline_attn = on;
     }
 
     fn weight(&self, name: &str) -> Result<&Tensor> {
@@ -198,17 +211,88 @@ impl<'rt> DecodeServer<'rt> {
             let (q, k, v) = (&qkv[0], &qkv[1], &qkv[2]);
 
             // Native attention over the FP4 KV cache, per (slot, head).
+            // Phase 1: append this step's K/V (mutates the cache).
             let hd = self.head_dim;
             let mut attn = Tensor::zeros(vec![b, d]);
             for (s, a) in self.active.iter().enumerate() {
                 let seq = a.req.id;
                 for head in 0..self.heads {
                     let off = s * d + head * hd;
-                    self.cache.append(seq, l, head, &k.data[off..off + hd], &v.data[off..off + hd])?;
-                    let (kc, vc) = self.cache.gather(seq, l, head)?;
-                    let nk = kc.len() / hd;
-                    let out = attend_f32(&q.data[off..off + hd], &kc, &vc, 1, nk, hd, false);
-                    attn.data[off..off + hd].copy_from_slice(&out.o);
+                    self.cache
+                        .append(seq, l, head, &k.data[off..off + hd], &v.data[off..off + hd])?;
+                }
+            }
+            // Phase 2: attend. Default is the fused packed decode
+            // (`attend_decode`) — sealed pages consumed in the 4-bit
+            // domain, no gather, no per-token dequant — with the
+            // per-(slot, head) loop fanned out across slots via
+            // `std::thread::scope` (the cache is read-only here and each
+            // slot writes a disjoint row of `attn`).
+            if self.baseline_attn {
+                for (s, a) in self.active.iter().enumerate() {
+                    let seq = a.req.id;
+                    for head in 0..self.heads {
+                        let off = s * d + head * hd;
+                        let (kc, vc) = self.cache.gather(seq, l, head)?;
+                        let nk = kc.len() / hd;
+                        let out = attend_f32(&q.data[off..off + hd], &kc, &vc, 1, nk, hd, false);
+                        attn.data[off..off + hd].copy_from_slice(&out.o);
+                    }
+                }
+            } else if self.active.len() == 1 {
+                // One slot: thread spawn/join would dwarf the attention
+                // work on short caches — run inline.
+                if self.scratches.is_empty() {
+                    self.scratches.push(DecodeScratch::new());
+                }
+                let seq = self.active[0].req.id;
+                for head in 0..self.heads {
+                    let off = head * hd;
+                    self.cache.attend_decode(
+                        seq,
+                        l,
+                        head,
+                        &q.data[off..off + hd],
+                        &mut attn.data[off..off + hd],
+                        &mut self.scratches[0],
+                    )?;
+                }
+            } else {
+                while self.scratches.len() < self.active.len() {
+                    self.scratches.push(DecodeScratch::new());
+                }
+                let cache = &self.cache;
+                let active = &self.active;
+                let heads = self.heads;
+                let qd = &q.data;
+                let results: Vec<Result<()>> = std::thread::scope(|scope| {
+                    let mut handles = Vec::with_capacity(active.len());
+                    for ((s, (a, row)), scratch) in active
+                        .iter()
+                        .zip(attn.data.chunks_mut(d))
+                        .enumerate()
+                        .zip(self.scratches.iter_mut())
+                    {
+                        let seq = a.req.id;
+                        handles.push(scope.spawn(move || -> Result<()> {
+                            for head in 0..heads {
+                                let off = head * hd;
+                                cache.attend_decode(
+                                    seq,
+                                    l,
+                                    head,
+                                    &qd[s * d + off..s * d + off + hd],
+                                    &mut row[off..off + hd],
+                                    scratch,
+                                )?;
+                            }
+                            Ok(())
+                        }));
+                    }
+                    handles.into_iter().map(|h| h.join().expect("attend thread panicked")).collect()
+                });
+                for r in results {
+                    r?;
                 }
             }
 

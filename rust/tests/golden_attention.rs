@@ -9,13 +9,17 @@ use attn_qat::attention::flash::attend_f32;
 use attn_qat::json::Json;
 
 fn load_golden() -> Json {
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/attention_golden.json");
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/attention_golden.json");
     let text = std::fs::read_to_string(path)
         .expect("golden vectors missing — run `make artifacts` first");
     Json::parse(&text).expect("parse golden json")
 }
 
-fn check_case(case: &Json, f: impl Fn(&[f32], &[f32], &[f32], usize, usize) -> (Vec<f32>, Vec<f32>), tol: f32) {
+fn check_case(
+    case: &Json,
+    f: impl Fn(&[f32], &[f32], &[f32], usize, usize) -> (Vec<f32>, Vec<f32>),
+    tol: f32,
+) {
     let n = case.get("n").as_usize().unwrap();
     let d = case.get("d").as_usize().unwrap();
     let q = case.get("q").to_f32_vec().unwrap();

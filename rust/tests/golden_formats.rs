@@ -7,7 +7,7 @@ use attn_qat::formats::{block, e2m1, e4m3};
 use attn_qat::json::Json;
 
 fn load_golden() -> Json {
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/nvfp4_golden.json");
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/nvfp4_golden.json");
     let text = std::fs::read_to_string(path)
         .expect("golden vectors missing — run `make artifacts` first");
     Json::parse(&text).expect("parse golden json")
