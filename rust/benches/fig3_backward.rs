@@ -1,0 +1,85 @@
+//! Figure-3 backward bench: f32 recomputation vs packed-FP4 recomputation.
+//!
+//! Measures the native `qat::flash_backward` in its two recomputation
+//! regimes (the drop-in stock-FA backward and the Attn-QAT matched
+//! backward whose S/P rebuild runs in the packed 4-bit domain via the
+//! byte-pair LUT), plus the training forward that produces the residuals.
+//! Appends JSONL history to `results/bench/fig3_backward.jsonl`, same
+//! format as `fig5_kernels`.
+//!
+//! ```bash
+//! cargo bench --bench fig3_backward          # full shapes
+//! BENCH_QUICK=1 cargo bench --bench fig3_backward
+//! ```
+
+use attn_qat::attention::engine::attend_fp4_train;
+use attn_qat::attention::flash::attend_f32;
+use attn_qat::bench::{bench_units, Reporter};
+use attn_qat::qat::{flash_backward, BwdSwitches};
+use attn_qat::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rep = Reporter::new("fig3_backward");
+    let mut rng = Rng::new(3);
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let seqs: &[usize] = if quick { &[128] } else { &[128, 256] };
+
+    const DROPIN: BwdSwitches = BwdSwitches { fq_inputs: false, fq_p: false, high_prec_o: false };
+    const QAT: BwdSwitches = BwdSwitches { fq_inputs: true, fq_p: true, high_prec_o: true };
+
+    for &n in seqs {
+        let d = 64usize;
+        let q = rng.normal_vec(n * d, 0.0, 1.0);
+        let k = rng.normal_vec(n * d, 0.0, 1.0);
+        let v = rng.normal_vec(n * d, 0.0, 1.0);
+        let dout = rng.normal_vec(n * d, 0.0, 1.0);
+        // Residuals once per shape; both backwards consume the same ones.
+        let f32_res = attend_f32(&q, &k, &v, n, n, d, false);
+        let train = attend_fp4_train(&q, &k, &v, n, n, d, false);
+        // 5 n×n×d matmuls in the backward (S, dV, dP, dQ, dK).
+        let flops = 10.0 * (n * n * d) as f64;
+        let iters = if n >= 256 { 3 } else { 5 };
+
+        rep.push(bench_units(
+            &format!("bwd_f32_recompute_s{n}_d{d}"),
+            1,
+            iters,
+            flops,
+            "flop",
+            || {
+                let g = flash_backward(
+                    &q, &k, &v, n, n, d, false, &f32_res.o, &f32_res.o, &f32_res.lse, &dout,
+                    DROPIN,
+                );
+                std::hint::black_box(g.dq[0]);
+            },
+        ));
+        rep.push(bench_units(
+            &format!("bwd_packed_recompute_s{n}_d{d}"),
+            1,
+            iters,
+            flops,
+            "flop",
+            || {
+                let g = flash_backward(
+                    &q, &k, &v, n, n, d, false, &train.o, &train.o_prime, &train.lse, &dout, QAT,
+                );
+                std::hint::black_box(g.dq[0]);
+            },
+        ));
+        // Training forward for context (2 n×n×d matmuls + O′).
+        rep.push(bench_units(
+            &format!("fwd_train_packed_s{n}_d{d}"),
+            1,
+            iters,
+            6.0 * (n * n * d) as f64,
+            "flop",
+            || {
+                let t = attend_fp4_train(&q, &k, &v, n, n, d, false);
+                std::hint::black_box(t.o[0]);
+            },
+        ));
+    }
+    rep.save()?;
+    Ok(())
+}

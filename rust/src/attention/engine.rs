@@ -22,7 +22,7 @@ use std::borrow::Cow;
 use crate::formats::block::{nvfp4_fake_quant_row, NVFP4_BLOCK};
 use crate::formats::tensor4::PackedNvfp4;
 
-use super::packed::{attend_packed_core, AttnScratch, causal_limit};
+use super::packed::{attend_packed_core, attend_packed_train, AttnScratch, causal_limit};
 
 /// Attention output: `o (nq × d)` + per-row logsumexp.
 #[derive(Clone, Debug)]
@@ -155,8 +155,41 @@ fn attend_quantized(
         if smooth { Some(&q_means) } else { None },
         block_q,
         two_level_p,
+        None,
         &mut scratch,
     )
+}
+
+/// Training-forward residuals (Alg. 2): what the QAT backward consumes.
+#[derive(Clone, Debug)]
+pub struct TrainOutput {
+    /// Quantized-path output O (identical to [`attend_fp4`]'s).
+    pub o: Vec<f32>,
+    /// High-precision O′ = P·V^F / l (pre-quantization P, Alg. 2 l.13).
+    pub o_prime: Vec<f32>,
+    /// Per-row logsumexp L.
+    pub lse: Vec<f32>,
+}
+
+/// [`attend_fp4`] plus the O′ residual — the Attn-QAT training forward.
+///
+/// O and lse are bitwise identical to the inference forward (same packed
+/// engine, same quantization points); O′ rides along for Fix B of the
+/// backward (`qat::backward`). Empty causal rows (nk < nq) produce zero
+/// O and O′ with `lse = -inf`, matching the forward contract.
+pub fn attend_fp4_train(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    causal: bool,
+) -> TrainOutput {
+    let (qq, kq, vq) = pack_qkv_for_attention(q, k, v, nq, nk, d);
+    let mut scratch = AttnScratch::new();
+    let (out, o_prime) = attend_packed_train(&qq, &kq, &vq, nq, nk, d, causal, &mut scratch);
+    TrainOutput { o: out.o, o_prime, lse: out.lse }
 }
 
 /// Quantize through real packed storage and hand back dequantized f32.

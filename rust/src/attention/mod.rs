@@ -19,9 +19,9 @@ pub mod engine;
 pub mod flash;
 pub mod packed;
 
-pub use engine::{attend_fp4, attend_sage3, AttnOutput};
+pub use engine::{attend_fp4, attend_fp4_train, attend_sage3, AttnOutput, TrainOutput};
 pub use flash::attend_f32;
-pub use packed::{attend_packed, AttnScratch};
+pub use packed::{attend_packed, attend_packed_train, AttnScratch, QuantQueryCache};
 
 /// Forward-variant selector for the native engines.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

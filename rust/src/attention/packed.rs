@@ -50,6 +50,63 @@ pub struct AttnScratch {
     kf_row: Vec<f32>,
     /// ΔS fixup values, `(tiles × nk)` row-major.
     delta: Vec<f32>,
+    /// Dequantized Vᵀ (`d × nk_pad`) for the train-forward O′ accumulator.
+    vf: Vec<f32>,
+}
+
+/// Content-keyed memo over [`lut::quantize_row_into`] — the ROADMAP
+/// "quantized-query cache".
+///
+/// Callers that quantize an identical row repeatedly — repeated heads
+/// sharing one query vector (GQA-style layouts), a decode step
+/// re-attending an unchanged query, A/B reruns over the same input — pay
+/// one cheap bitwise row comparison instead of a full scale+encode pass.
+/// A mismatch (including any NaN, which never compares equal)
+/// re-quantizes and re-arms the memo. Miss cost over plain
+/// `quantize_row_into` is one short-circuiting d-element compare plus a
+/// d-float copy — noise next to the O(seq_len·d) page scoring each decode
+/// call performs, which is why the decode scratch carries it even though
+/// today's single-query serve loop never repeats a query.
+pub struct QuantQueryCache {
+    row: Vec<f32>,
+    q4: PackedNvfp4,
+    /// Calls served from the memo.
+    pub hits: u64,
+    /// Calls that re-quantized.
+    pub misses: u64,
+}
+
+impl QuantQueryCache {
+    pub fn new() -> QuantQueryCache {
+        QuantQueryCache {
+            row: Vec::new(),
+            q4: PackedNvfp4 { rows: 1, cols: 0, codes: Vec::new(), scales: Vec::new() },
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Packed NVFP4 quantization of `row` (1 × len, blocks along the row;
+    /// `len` must be a multiple of 16), memoised on the exact f32 contents.
+    pub fn get_or_quantize(&mut self, row: &[f32]) -> &PackedNvfp4 {
+        debug_assert_eq!(row.len() % NVFP4_BLOCK, 0);
+        if self.q4.cols == row.len() && self.row.as_slice() == row {
+            self.hits += 1;
+        } else {
+            lut::quantize_row_into(row, &mut self.q4.codes, &mut self.q4.scales);
+            self.q4.cols = row.len();
+            self.row.clear();
+            self.row.extend_from_slice(row);
+            self.misses += 1;
+        }
+        &self.q4
+    }
+}
+
+impl Default for QuantQueryCache {
+    fn default() -> QuantQueryCache {
+        QuantQueryCache::new()
+    }
 }
 
 impl AttnScratch {
@@ -83,12 +140,45 @@ pub fn attend_packed(
     causal: bool,
     scratch: &mut AttnScratch,
 ) -> AttnOutput {
-    attend_packed_core(q, k, vt, nq, nk, d, causal, None, NVFP4_BLOCK, false, scratch)
+    attend_packed_core(q, k, vt, nq, nk, d, causal, None, NVFP4_BLOCK, false, None, scratch)
+}
+
+/// Training forward (Alg. 2): [`attend_packed`] plus the high-precision
+/// `O′ = P·V^F / l` residual (unquantized P, Alg. 2 l.13) the QAT backward
+/// needs for Fix B. O and lse are bitwise identical to the inference path.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_packed_train(
+    q: &PackedNvfp4,
+    k: &PackedNvfp4,
+    vt: &PackedNvfp4,
+    nq: usize,
+    nk: usize,
+    d: usize,
+    causal: bool,
+    scratch: &mut AttnScratch,
+) -> (AttnOutput, Vec<f32>) {
+    let mut o_prime = vec![0.0f32; nq * d];
+    let out = attend_packed_core(
+        q,
+        k,
+        vt,
+        nq,
+        nk,
+        d,
+        causal,
+        None,
+        NVFP4_BLOCK,
+        false,
+        Some(&mut o_prime),
+        scratch,
+    );
+    (out, o_prime)
 }
 
 /// Full packed engine with the SageAttention3 knobs: optional smooth-Q ΔS
 /// fixup (`q_means` = per-tile means, `(⌈nq/block_q⌉ × d)` row-major) and
-/// two-level P quantization.
+/// two-level P quantization. `o_prime` (training only) receives the
+/// high-precision `P·V^F / l` rows.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn attend_packed_core(
     q: &PackedNvfp4,
@@ -101,6 +191,7 @@ pub(crate) fn attend_packed_core(
     q_means: Option<&[f32]>,
     block_q: usize,
     two_level_p: bool,
+    mut o_prime: Option<&mut Vec<f32>>,
     scratch: &mut AttnScratch,
 ) -> AttnOutput {
     let lut = lut::pair_dot();
@@ -136,6 +227,16 @@ pub(crate) fn attend_packed_core(
         }
     }
 
+    // Train forward: the O′ accumulator consumes V^F in f32 (unquantized-P
+    // matmul has no packed counterpart) — dequantize Vᵀ once.
+    if let Some(hp) = o_prime.as_deref_mut() {
+        debug_assert_eq!(hp.len(), nq * d);
+        scratch.vf.resize(d * nkp, 0.0);
+        for r in 0..d {
+            vt.dequant_row_into(r, &mut scratch.vf[r * nkp..(r + 1) * nkp]);
+        }
+    }
+
     let v_bpr = nkp / 2; // vt bytes per row
     let v_spb = nkp / NVFP4_BLOCK; // vt scale blocks per row
 
@@ -166,6 +267,19 @@ pub(crate) fn attend_packed_core(
         }
         for p in scratch.p_row[limit..].iter_mut() {
             *p = 0.0;
+        }
+        // --- O′ = P · V^F / l (Alg. 2 l.13, pre-quantization P) -----------
+        if let Some(hp) = o_prime.as_deref_mut() {
+            let inv = 1.0 / l;
+            let row = &mut hp[i * d..(i + 1) * d];
+            for (c, oc) in row.iter_mut().enumerate() {
+                let vrow = &scratch.vf[c * nkp..c * nkp + limit];
+                let mut acc = 0.0f32;
+                for (p, vv) in scratch.p_row[..limit].iter().zip(vrow) {
+                    acc += p * vv;
+                }
+                *oc = acc * inv;
+            }
         }
         // --- P quantization (Alg. 1 l.12 / SageAttention3 two-level) ------
         let mut inv_factor = 1.0f32;
@@ -266,6 +380,76 @@ mod tests {
             let want = attend_fp4(&q, &k, &v, nq, nk, d, false);
             assert_eq!(got.o, want.o, "shape ({nq},{nk},{d})");
         }
+    }
+
+    #[test]
+    fn train_forward_matches_inference_bitwise_and_adds_o_prime() {
+        // The training forward must not perturb the inference output: O and
+        // lse bit-identical to attend_packed, with O′ riding along. O′ uses
+        // the unquantized P, so it differs from O but stays close.
+        let (nq, nk, d) = (8, 19, 32);
+        let mut rng = Rng::new(51);
+        let q = rng.normal_vec(nq * d, 0.0, 1.0);
+        let k = rng.normal_vec(nk * d, 0.0, 1.0);
+        let v = rng.normal_vec(nk * d, 0.0, 1.0);
+        let (qq, kq, vq) = pack_qkv_for_attention(&q, &k, &v, nq, nk, d);
+        let mut scratch = AttnScratch::new();
+        let want = attend_packed(&qq, &kq, &vq, nq, nk, d, false, &mut scratch);
+        let (got, o_prime) = attend_packed_train(&qq, &kq, &vq, nq, nk, d, false, &mut scratch);
+        assert_eq!(got.o, want.o);
+        assert_eq!(got.lse, want.lse);
+        assert_eq!(o_prime.len(), nq * d);
+        let max_diff = o_prime
+            .iter()
+            .zip(&got.o)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff > 0.0, "O' must differ from the quantized-P O");
+        assert!(max_diff < 0.5, "but stay close: {max_diff}");
+    }
+
+    #[test]
+    fn train_forward_empty_causal_rows_zero_o_prime() {
+        let (nq, nk, d) = (5, 3, 16);
+        let mut rng = Rng::new(52);
+        let q = rng.normal_vec(nq * d, 0.0, 1.0);
+        let k = rng.normal_vec(nk * d, 0.0, 1.0);
+        let v = rng.normal_vec(nk * d, 0.0, 1.0);
+        let (qq, kq, vq) = pack_qkv_for_attention(&q, &k, &v, nq, nk, d);
+        let mut scratch = AttnScratch::new();
+        let (out, o_prime) = attend_packed_train(&qq, &kq, &vq, nq, nk, d, true, &mut scratch);
+        for i in 0..2 {
+            assert!(o_prime[i * d..(i + 1) * d].iter().all(|&x| x == 0.0), "row {i}");
+            assert_eq!(out.lse[i], f32::NEG_INFINITY);
+        }
+        assert!(o_prime.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn quant_query_cache_shares_identical_rows() {
+        // Repeated heads quantizing the same query row: one miss, then
+        // hits, with the memoised packing bit-identical to a fresh one.
+        let d = 32;
+        let mut rng = Rng::new(53);
+        let row_a = rng.normal_vec(d, 0.0, 1.0);
+        let row_b = rng.normal_vec(d, 0.0, 1.0);
+        let mut cache = QuantQueryCache::new();
+        let fresh = PackedNvfp4::quantize(&row_a, 1, d).unwrap();
+        {
+            let q4 = cache.get_or_quantize(&row_a);
+            assert_eq!(q4.codes, fresh.codes);
+            assert_eq!(q4.scales, fresh.scales);
+        }
+        for _ in 0..3 {
+            cache.get_or_quantize(&row_a);
+        }
+        assert_eq!((cache.hits, cache.misses), (3, 1));
+        // Different content re-quantizes; switching back re-quantizes again
+        // (single-entry memo) but stays correct.
+        let fresh_b = PackedNvfp4::quantize(&row_b, 1, d).unwrap();
+        assert_eq!(cache.get_or_quantize(&row_b).codes, fresh_b.codes);
+        assert_eq!(cache.get_or_quantize(&row_a).codes, fresh.codes);
+        assert_eq!((cache.hits, cache.misses), (3, 3));
     }
 
     #[test]

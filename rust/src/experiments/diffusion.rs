@@ -9,7 +9,8 @@ use anyhow::{anyhow, Result};
 
 use super::common::{ensure_diff_base, f4, write_history, write_table};
 use crate::config::Config;
-use crate::coordinator::{LrSchedule, Trainer};
+use crate::coordinator::{LrSchedule, StepMetrics, Trainer};
+use crate::qat::{NativeTrainer, QatVariant, TrainerConfig};
 use crate::data::latents::LatentGen;
 use crate::eval::judge::judge_pairwise;
 use crate::eval::video::{reference_stats, video_metrics, VideoMetrics, VideoRefStats};
@@ -295,6 +296,26 @@ pub fn fig2(rt: &Runtime, cfg: &Config) -> Result<()> {
     )
 }
 
+/// Final-loss / max-gnorm / gnorm-std summary row for a Fig-3 curve.
+fn dynamics_row(label: &str, hist: &[StepMetrics]) -> Vec<String> {
+    let max_gnorm = hist.iter().map(|m| m.grad_norm).fold(0.0f32, f32::max);
+    let gnorm_std = {
+        let g: Vec<f32> = hist.iter().map(|m| m.grad_norm).filter(|g| g.is_finite()).collect();
+        let mean = g.iter().sum::<f32>() / g.len().max(1) as f32;
+        (g.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / g.len().max(1) as f32).sqrt()
+    };
+    let final_loss = hist.last().map(|m| m.loss).unwrap_or(f32::NAN);
+    vec![label.to_string(), f4(final_loss), f4(max_gnorm), f4(gnorm_std)]
+}
+
+/// The four Figure-3 ablation curves (labels shared by both drivers).
+const FIG3_CURVES: [(&str, &str); 4] = [
+    ("Attn-QAT", "qat"),
+    ("- High prec. O in BWD", "qat_no_o_prime"),
+    ("- Fake quant P in BWD", "qat_no_fq_p"),
+    ("naive drop-in (FP4 fwd + stock bwd)", "fp4"),
+];
+
 /// Figure 3 (a, b): training dynamics under the backward ablations.
 pub fn fig3_dynamics(rt: &Runtime, cfg: &Config) -> Result<()> {
     let size = cfg.str_or("diff.table2_size", "small");
@@ -302,32 +323,54 @@ pub fn fig3_dynamics(rt: &Runtime, cfg: &Config) -> Result<()> {
     let mut series = Vec::new();
     let mut rows = Vec::new();
     let fig3_lr = cfg.f32_or("fig3.lr", 1e-3);
-    for (label, variant) in [
-        ("Attn-QAT", "qat"),
-        ("- High prec. O in BWD", "qat_no_o_prime"),
-        ("- Fake quant P in BWD", "qat_no_fq_p"),
-        ("naive drop-in (FP4 fwd + stock bwd)", "fp4"),
-    ] {
+    for (label, variant) in FIG3_CURVES {
         let (_, hist) = finetune_lr(rt, &size, variant, &base, cfg, fig3_lr)?;
-        let max_gnorm = hist.iter().map(|m| m.grad_norm).fold(0.0f32, f32::max);
-        let gnorm_std = {
-            let g: Vec<f32> = hist.iter().map(|m| m.grad_norm).filter(|g| g.is_finite()).collect();
-            let mean = g.iter().sum::<f32>() / g.len().max(1) as f32;
-            (g.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / g.len().max(1) as f32).sqrt()
-        };
-        let final_loss = hist.last().map(|m| m.loss).unwrap_or(f32::NAN);
-        rows.push(vec![
-            label.to_string(),
-            f4(final_loss),
-            f4(max_gnorm),
-            f4(gnorm_std),
-        ]);
+        rows.push(dynamics_row(label, &hist));
         series.push((label.to_string(), hist));
     }
-    write_history("fig3_dynamics", &series)?;
+    // Distinct name for the raw series: write_table also emits a .json
+    // twin, which used to clobber the history file of the same name.
+    write_history("fig3_dynamics_series", &series)?;
     write_table(
         "fig3_dynamics",
-        "Figure 3 (a,b) (proxy): diffusion QAT training dynamics (full series in results/fig3_dynamics.json)",
+        "Figure 3 (a,b) (proxy): diffusion QAT training dynamics (full series in results/fig3_dynamics_series.json)",
+        &["Config", "Final loss", "Max grad-norm", "Grad-norm std"],
+        &rows,
+    )
+}
+
+/// Figure 3 (a, b) without the XLA runtime: the same four ablation curves
+/// on the native `qat` trainer (packed-FP4 recomputed backward vs drop-in),
+/// runnable from a bare `cargo run -- exp fig3`. The qualitative result —
+/// drop-in spikes/diverges, Attn-QAT stays stable at the same hot lr — is
+/// pinned by `qat::trainer`'s tests.
+pub fn fig3_dynamics_native(cfg: &Config) -> Result<()> {
+    let steps = cfg.usize_or("fig3.native_steps", 150);
+    let lr = cfg.f32_or("fig3.native_lr", 0.2);
+    let seed = cfg.u64_or("seed", 42);
+    let mut series = Vec::new();
+    let mut rows = Vec::new();
+    for (label, variant) in FIG3_CURVES {
+        let variant = QatVariant::parse(variant).expect("fig3 variant");
+        println!("[fig3-native] training '{label}' for {steps} steps (lr {lr})...");
+        let tc = TrainerConfig { lr, seed, ..TrainerConfig::default() };
+        let mut trainer = NativeTrainer::new(tc, variant);
+        trainer.run(steps, (steps / 5).max(1), |m| {
+            println!(
+                "  [{label}] step {:>4} loss {:.4} gnorm {:.3}",
+                m.step, m.loss, m.grad_norm
+            )
+        });
+        if trainer.diverged() {
+            println!("  [{label}] diverged (expected for drop-in) — recorded as data");
+        }
+        rows.push(dynamics_row(label, &trainer.history));
+        series.push((label.to_string(), trainer.history));
+    }
+    write_history("fig3_dynamics_series", &series)?;
+    write_table(
+        "fig3_dynamics",
+        "Figure 3 (a,b) (native): QAT training dynamics, native trainer (full series in results/fig3_dynamics_series.json)",
         &["Config", "Final loss", "Max grad-norm", "Grad-norm std"],
         &rows,
     )

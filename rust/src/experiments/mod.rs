@@ -41,3 +41,24 @@ pub fn run(rt: &Runtime, id: &str, cfg: &Config) -> Result<()> {
         other => bail!("unknown experiment '{other}' (table1-4, fig1-5, all)"),
     }
 }
+
+/// Artifact-free dispatch: the subset of experiments that run on the
+/// native `qat` subsystem alone. `main` falls back here when the PJRT
+/// runtime is unavailable (the stub `xla` backend), so `cargo run -- exp
+/// fig3` reproduces the paper's training-dynamics result out of the box.
+pub fn run_native(id: &str, cfg: &Config) -> Result<()> {
+    match id {
+        "fig3" => {
+            diffusion::fig3_dynamics_native(cfg)?;
+            llm::fig3c_native(cfg)
+        }
+        "all" => {
+            println!("(native mode: only fig3 runs without compiled artifacts)");
+            run_native("fig3", cfg)
+        }
+        other => bail!(
+            "experiment '{other}' needs compiled HLO artifacts and a real PJRT backend \
+             (the stub xla crate is active); only 'fig3' has a native path"
+        ),
+    }
+}

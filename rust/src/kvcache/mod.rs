@@ -19,6 +19,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::attention::packed::QuantQueryCache;
 use crate::formats::e4m3;
 use crate::formats::lut;
 use crate::formats::tensor4::PackedNvfp4;
@@ -47,8 +48,10 @@ struct HeadCache {
 /// packed P̃ block, and the output accumulator. Buffers retain capacity
 /// across calls, so the steady-state decode loop never allocates.
 pub struct DecodeScratch {
-    /// Query quantized to packed NVFP4 (1 × head_dim, blocks along d).
-    q4: PackedNvfp4,
+    /// Quantized-query memo (1 × head_dim, blocks along d): repeated calls
+    /// with an identical query — repeated heads sharing one query vector,
+    /// re-scoring an unchanged query — skip the encode pass entirely.
+    qcache: QuantQueryCache,
     /// Scores for one page's tokens.
     s: [f32; PAGE_SIZE],
     /// exp(S − m) for one sealed page.
@@ -64,13 +67,18 @@ pub struct DecodeScratch {
 impl DecodeScratch {
     pub fn new() -> DecodeScratch {
         DecodeScratch {
-            q4: PackedNvfp4 { rows: 0, cols: 0, codes: Vec::new(), scales: Vec::new() },
+            qcache: QuantQueryCache::new(),
             s: [0.0; PAGE_SIZE],
             p: [0.0; PAGE_SIZE],
             p_codes: Vec::new(),
             p_scales: Vec::new(),
             acc: Vec::new(),
         }
+    }
+
+    /// (hits, misses) of the quantized-query memo.
+    pub fn query_cache_stats(&self) -> (u64, u64) {
+        (self.qcache.hits, self.qcache.misses)
     }
 }
 
@@ -249,10 +257,10 @@ impl PagedKvCache {
         let lut = lut::pair_dot();
         let scale = 1.0 / (d as f32).sqrt();
         // Quantize the query once (blocks along d, the QKᵀ contraction) —
-        // every sealed-page dot below runs purely on packed bytes.
-        scratch.q4.rows = 1;
-        scratch.q4.cols = d;
-        lut::quantize_row_into(q, &mut scratch.q4.codes, &mut scratch.q4.scales);
+        // every sealed-page dot below runs purely on packed bytes. The
+        // memo makes repeated identical queries (shared across heads, or
+        // re-scored) skip even that single encode pass.
+        let q4 = scratch.qcache.get_or_quantize(q);
         scratch.acc.clear();
         scratch.acc.resize(d, 0.0);
         let mut m = f32::NEG_INFINITY;
@@ -262,7 +270,7 @@ impl PagedKvCache {
                 Page::Sealed { k, vt } => {
                     let mut page_m = f32::NEG_INFINITY;
                     for t in 0..PAGE_SIZE {
-                        let s = lut::packed_row_dot(lut, &scratch.q4, 0, k, t) * scale;
+                        let s = lut::packed_row_dot(lut, q4, 0, k, t) * scale;
                         scratch.s[t] = s;
                         page_m = page_m.max(s);
                     }
@@ -510,6 +518,37 @@ mod tests {
             assert!((lse - base.lse[0]).abs() < 0.5, "tokens={tokens}: lse");
             assert!(out.iter().all(|x| x.is_finite()));
         }
+    }
+
+    #[test]
+    fn attend_decode_shares_quantized_query_across_heads() {
+        // Two heads fed the *same* query vector through one scratch: the
+        // second attend quantizes nothing (cache hit) yet both heads score
+        // their own K/V pages correctly.
+        let d = 32;
+        let mut c = PagedKvCache::new(1, 2, d);
+        c.add_seq(1);
+        let mut rng = Rng::new(16);
+        for _ in 0..20 {
+            for h in 0..2 {
+                let k = rng.normal_vec(d, 0.0, 1.0);
+                let v = rng.normal_vec(d, 0.0, 1.0);
+                c.append(1, 0, h, &k, &v).unwrap();
+            }
+        }
+        let q = rng.normal_vec(d, 0.0, 1.0);
+        let mut scratch = DecodeScratch::new();
+        let mut o0 = vec![0.0; d];
+        let mut o1 = vec![0.0; d];
+        c.attend_decode(1, 0, 0, &q, &mut o0, &mut scratch).unwrap();
+        c.attend_decode(1, 0, 1, &q, &mut o1, &mut scratch).unwrap();
+        assert_eq!(scratch.query_cache_stats(), (1, 1), "second head must hit");
+        assert_ne!(o0, o1, "different heads still attend different pages");
+        // And the shared-query result is identical to a fresh scratch.
+        let mut fresh = DecodeScratch::new();
+        let mut o1b = vec![0.0; d];
+        c.attend_decode(1, 0, 1, &q, &mut o1b, &mut fresh).unwrap();
+        assert_eq!(o1, o1b);
     }
 
     #[test]

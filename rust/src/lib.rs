@@ -12,6 +12,7 @@
 //! * numeric formats: [`formats`] (E2M1 / E4M3 / E8M0 / NVFP4 / MXFP4)
 //! * runtime: [`runtime`] (PJRT + artifact registry)
 //! * engines: [`attention`] (f32 / real-quant FP4 / Sage3)
+//! * training: [`qat`] (native FP4-recomputed backward + STE + trainer)
 //! * pipeline: [`data`], [`coordinator`], [`eval`]
 //! * serving: [`kvcache`], [`serve`]
 //! * analysis: [`perfmodel`], [`experiments`]
@@ -31,5 +32,6 @@ pub mod eval;
 pub mod experiments;
 pub mod kvcache;
 pub mod perfmodel;
+pub mod qat;
 pub mod runtime;
 pub mod serve;

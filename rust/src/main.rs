@@ -69,7 +69,17 @@ fn main() -> Result<()> {
         println!("{}", HELP);
         return Ok(());
     }
-    let rt = Runtime::new(&cli.artifacts)?;
+    let rt = match Runtime::new(&cli.artifacts) {
+        Ok(rt) => rt,
+        Err(e) if cli.command == "exp" => {
+            // No PJRT backend (stub xla build, or artifacts missing): the
+            // native qat subsystem still reproduces fig3 end to end.
+            eprintln!("[repro] PJRT runtime unavailable ({e}); using the native-only path");
+            let id = cli.args.first().map(String::as_str).unwrap_or("all");
+            return experiments::run_native(id, &cli.cfg);
+        }
+        Err(e) => return Err(e),
+    };
     match cli.command.as_str() {
         "list" => {
             for name in rt.registry().names() {

@@ -1,0 +1,297 @@
+//! FA2-style attention backward with the paper's two fixes (Algorithm 3).
+//!
+//! Recomputation strategy mirrors FlashAttention-2: nothing from the
+//! forward survives except `(O, O′, lse)`; S and P are rebuilt row by row.
+//! Under Fix A ([`BwdSwitches::fq_inputs`]) the rebuild happens **in the
+//! packed 4-bit domain** — `S_ij = LUT-dot(Q̂_i, K̂_j) · scale` over the same
+//! packed codes the forward consumed, so forward and backward see bitwise
+//! identical scores (the per-block LUT dots are exact; see `formats::lut`).
+//! The recomputed probabilities `P = exp(S − lse)` are then fake-quantized
+//! along the key axis before the dV accumulation (Alg. 3 l.11), exactly as
+//! the forward quantized P̃.
+//!
+//! The remaining matmuls (dV = P^Fᵀ·dO, dP = dO·V^Fᵀ, dQ = dS·K^F,
+//! dK = dSᵀ·Q^F) contract along axes that do not line up with the NVFP4
+//! block axes, so they run in f32 over the *dequantized* quantized values —
+//! the same semantics as FP4MM's f32 accumulation, just without a second
+//! packing step (matches `ref.flash_backward`).
+//!
+//! Gradients are returned with respect to the **raw** q/k/v via the
+//! straight-through estimator (`ste::ste_grad`, Eq. 7): dQ ≈ dQ^F etc.
+//!
+//! Pinned to the JAX oracle by `rust/tests/golden/attention_bwd_golden.json`
+//! (parity for every ablation mode) and by finite-difference checks in
+//! `rust/tests/grad_check.rs`.
+
+use crate::attention::packed::causal_limit;
+use crate::formats::block::{nvfp4_fake_quant_row, NVFP4_BLOCK};
+use crate::formats::lut;
+
+use super::ste::{quantize_attn_inputs_ste, ste_grad};
+
+/// Gradients w.r.t. the raw attention inputs (row-major, same shapes).
+#[derive(Clone, Debug)]
+pub struct AttnGrads {
+    pub dq: Vec<f32>,
+    pub dk: Vec<f32>,
+    pub dv: Vec<f32>,
+}
+
+/// Backward ablation switches (the paper's §3.2 fixes; see the `qat`
+/// module docs for the switch-combination → Figure-3-curve table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BwdSwitches {
+    /// Fix A (part 1): recompute S from the packed FP4 Q̂/K̂ and run the
+    /// dV/dQ/dK matmuls over the dequantized Q^F/K^F/V^F.
+    pub fq_inputs: bool,
+    /// Fix A (part 2): fake-quantize the recomputed P before dV (l.11).
+    pub fq_p: bool,
+    /// Fix B: D = rowsum(dO ∘ O′) instead of rowsum(dO ∘ O) (l.3).
+    pub high_prec_o: bool,
+}
+
+/// Attention backward over `(O, O′, lse, dO)` residuals.
+///
+/// `q/k/v` are the **raw** inputs (`nq×d`, `nk×d`); `o`, `o_prime`, `dout`
+/// are `nq×d`; `lse` is the per-row logsumexp from the forward (rows with
+/// `lse = -inf` — empty causal rows when `nk < nq` — contribute nothing).
+/// Causality uses aligned ends, identical to the forward engines.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_backward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    causal: bool,
+    o: &[f32],
+    o_prime: &[f32],
+    lse: &[f32],
+    dout: &[f32],
+    sw: BwdSwitches,
+) -> AttnGrads {
+    debug_assert_eq!(q.len(), nq * d);
+    debug_assert_eq!(k.len(), nk * d);
+    debug_assert_eq!(v.len(), nk * d);
+    debug_assert_eq!(o.len(), nq * d);
+    debug_assert_eq!(o_prime.len(), nq * d);
+    debug_assert_eq!(lse.len(), nq);
+    debug_assert_eq!(dout.len(), nq * d);
+    let scale = 1.0 / (d as f32).sqrt();
+    let nkp = nk.div_ceil(NVFP4_BLOCK) * NVFP4_BLOCK;
+
+    // Fix A precondition: the backward's operands. Quantized (packed +
+    // dequantized views sharing one set of bits) or raw f32.
+    let quant = if sw.fq_inputs {
+        Some(quantize_attn_inputs_ste(q, k, v, nq, nk, d))
+    } else {
+        None
+    };
+    let (qf, kf, vf): (&[f32], &[f32], &[f32]) = match &quant {
+        Some(inp) => (&inp.qf, &inp.kf, &inp.vf),
+        None => (q, k, v),
+    };
+    let lut_table = lut::pair_dot();
+
+    // Fix B: D = rowsum(dO ∘ O′) — or the naive rowsum(dO ∘ O).
+    let o_for_d = if sw.high_prec_o { o_prime } else { o };
+    let mut d_vec = vec![0.0f32; nq];
+    for i in 0..nq {
+        let mut acc = 0.0f32;
+        for c in 0..d {
+            acc += dout[i * d + c] * o_for_d[i * d + c];
+        }
+        d_vec[i] = acc;
+    }
+
+    let mut dq = vec![0.0f32; nq * d];
+    let mut dk = vec![0.0f32; nk * d];
+    let mut dv = vec![0.0f32; nk * d];
+    let mut p_row = vec![0.0f32; nkp];
+    let mut pf_row = vec![0.0f32; nkp];
+
+    for i in 0..nq {
+        let limit = if causal { causal_limit(i, nq, nk) } else { nk };
+        if limit == 0 {
+            continue; // empty causal row: zero gradient everywhere
+        }
+        let doi = &dout[i * d..(i + 1) * d];
+        // --- recompute S, P (Alg. 3 l.9-10) -------------------------------
+        for j in 0..limit {
+            let s = match &quant {
+                Some(inp) => lut::packed_row_dot(lut_table, &inp.q4, i, &inp.k4, j),
+                None => {
+                    let qi = &q[i * d..(i + 1) * d];
+                    let kj = &k[j * d..(j + 1) * d];
+                    let mut acc = 0.0f32;
+                    for c in 0..d {
+                        acc += qi[c] * kj[c];
+                    }
+                    acc
+                }
+            } * scale;
+            p_row[j] = (s - lse[i]).exp();
+        }
+        for p in p_row[limit..].iter_mut() {
+            *p = 0.0;
+        }
+        // --- Fix A: fake-quantize the recomputed P (Alg. 3 l.11) ----------
+        let pf: &[f32] = if sw.fq_p {
+            pf_row.copy_from_slice(&p_row);
+            nvfp4_fake_quant_row(&mut pf_row);
+            &pf_row
+        } else {
+            &p_row
+        };
+        // --- dV += P^Fᵀ · dO (Alg. 3 l.12) --------------------------------
+        for j in 0..limit {
+            let p = pf[j];
+            if p == 0.0 {
+                continue;
+            }
+            let dvj = &mut dv[j * d..(j + 1) * d];
+            for (x, &g) in dvj.iter_mut().zip(doi) {
+                *x += p * g;
+            }
+        }
+        // --- dS = P ∘ (dP − D) · scale; dQ, dK (Alg. 3 l.13-16) -----------
+        let dqi = &mut dq[i * d..(i + 1) * d];
+        let qfi = &qf[i * d..(i + 1) * d];
+        for j in 0..limit {
+            let p = p_row[j];
+            if p == 0.0 {
+                continue;
+            }
+            let vj = &vf[j * d..(j + 1) * d];
+            let mut dp = 0.0f32;
+            for c in 0..d {
+                dp += doi[c] * vj[c];
+            }
+            let ds = p * (dp - d_vec[i]) * scale;
+            let kj = &kf[j * d..(j + 1) * d];
+            for (x, &kc) in dqi.iter_mut().zip(kj) {
+                *x += ds * kc;
+            }
+            let dkj = &mut dk[j * d..(j + 1) * d];
+            for (x, &qc) in dkj.iter_mut().zip(qfi) {
+                *x += ds * qc;
+            }
+        }
+    }
+    // STE (Eq. 7): gradients w.r.t. the quantized operands pass through the
+    // quantizers unchanged to the raw tensors.
+    AttnGrads { dq: ste_grad(dq), dk: ste_grad(dk), dv: ste_grad(dv) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::engine::attend_fp4_train;
+    use crate::attention::flash::attend_f32;
+    use crate::rng::Rng;
+
+    const QAT: BwdSwitches = BwdSwitches { fq_inputs: true, fq_p: true, high_prec_o: true };
+    const DROPIN: BwdSwitches = BwdSwitches { fq_inputs: false, fq_p: false, high_prec_o: false };
+
+    fn rand_case(nq: usize, nk: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (
+            rng.normal_vec(nq * d, 0.0, 1.0),
+            rng.normal_vec(nk * d, 0.0, 1.0),
+            rng.normal_vec(nk * d, 0.0, 1.0),
+            rng.normal_vec(nq * d, 0.0, 1.0),
+        )
+    }
+
+    #[test]
+    fn softmax_row_gradient_sums_to_zero_with_fix_b() {
+        // With D = rowsum(dO ∘ O′), each query row's dS sums to zero, so
+        // Σ_i dq_i ≈ Σ_j (Σ_i ds_ij) k_j stays bounded. The telltale:
+        // replacing O′ with O (NoHighPrecO) breaks the cancellation.
+        let (nq, nk, d) = (16, 16, 16);
+        let (q, k, v, dout) = rand_case(nq, nk, d, 41);
+        let t = attend_fp4_train(&q, &k, &v, nq, nk, d, false);
+        let fixed = flash_backward(
+            &q, &k, &v, nq, nk, d, false, &t.o, &t.o_prime, &t.lse, &dout, QAT,
+        );
+        let naive = flash_backward(
+            &q, &k, &v, nq, nk, d, false, &t.o, &t.o_prime, &t.lse, &dout,
+            BwdSwitches { high_prec_o: false, ..QAT },
+        );
+        // Row-sum residual of dS shows up as |Σ_j ds_ij| = |dO_i·(O′_i−O_i)|;
+        // measure it through dq magnitudes: the naive-D dq must differ.
+        let diff: f32 = fixed
+            .dq
+            .iter()
+            .zip(&naive.dq)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max);
+        assert!(diff > 1e-6, "Fix B must change dq: {diff}");
+        assert!(fixed.dq.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn empty_causal_rows_have_zero_dq() {
+        // nk < nq causal: leading queries see no keys (PR-1 forward edge);
+        // their dq rows must be exactly zero and nothing may NaN.
+        let (nq, nk, d) = (6, 2, 16);
+        let (q, k, v, dout) = rand_case(nq, nk, d, 42);
+        let t = attend_fp4_train(&q, &k, &v, nq, nk, d, true);
+        let g = flash_backward(
+            &q, &k, &v, nq, nk, d, true, &t.o, &t.o_prime, &t.lse, &dout, QAT,
+        );
+        for i in 0..nq - nk {
+            assert!(g.dq[i * d..(i + 1) * d].iter().all(|&x| x == 0.0), "row {i}");
+        }
+        for x in g.dq.iter().chain(&g.dk).chain(&g.dv) {
+            assert!(x.is_finite());
+        }
+    }
+
+    #[test]
+    fn dropin_recomputes_from_raw_inputs() {
+        // DropIn uses the raw f32 operands: with a quantized forward the
+        // recomputed S mismatches, so the gradients must differ from the
+        // matched AttnQat ones on the same residuals.
+        let (nq, nk, d) = (16, 16, 16);
+        let (mut q, mut k, v, dout) = rand_case(nq, nk, d, 43);
+        for x in q.iter_mut().step_by(5) {
+            *x *= 8.0;
+        }
+        for x in k.iter_mut().step_by(7) {
+            *x *= 8.0;
+        }
+        let t = attend_fp4_train(&q, &k, &v, nq, nk, d, false);
+        let a = flash_backward(&q, &k, &v, nq, nk, d, false, &t.o, &t.o_prime, &t.lse, &dout, QAT);
+        let b =
+            flash_backward(&q, &k, &v, nq, nk, d, false, &t.o, &t.o_prime, &t.lse, &dout, DROPIN);
+        let diff: f32 =
+            a.dk.iter().zip(&b.dk).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+        assert!(diff > 1e-4, "drop-in must mismatch on outliers: {diff}");
+    }
+
+    #[test]
+    fn f32_mode_matches_softmax_identity() {
+        // No quantization anywhere: dV = Pᵀ dO with P the true softmax. For
+        // uniform attention (q ⟂ k) every dv row is mean(dO)/... — check
+        // the simplest closed form: nq=1 ⇒ dv_j = p_j · dO.
+        let (nk, d) = (8, 8);
+        let mut rng = Rng::new(44);
+        let q = vec![0.0f32; d];
+        let k = rng.normal_vec(nk * d, 0.0, 1.0);
+        let v = rng.normal_vec(nk * d, 0.0, 1.0);
+        let dout = rng.normal_vec(d, 0.0, 1.0);
+        let out = attend_f32(&q, &k, &v, 1, nk, d, false);
+        let g = flash_backward(
+            &q, &k, &v, 1, nk, d, false, &out.o, &out.o, &out.lse, &dout, DROPIN,
+        );
+        // q = 0 ⇒ uniform p = 1/nk.
+        for j in 0..nk {
+            for c in 0..d {
+                let want = dout[c] / nk as f32;
+                assert!((g.dv[j * d + c] - want).abs() < 1e-5, "dv[{j},{c}]");
+            }
+        }
+    }
+}

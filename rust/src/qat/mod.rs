@@ -1,0 +1,116 @@
+//! Native Attn-QAT training subsystem: the paper's backward pass, in Rust.
+//!
+//! The crate's engines were forward-only until this module: gradients were
+//! reachable solely through compiled train-step artifacts, which need the
+//! (stubbed) PJRT runtime. `qat` lands the training side natively so the
+//! paper's headline result — Figure 3's "drop-in QAT destabilises, Attn-QAT
+//! doesn't" — reproduces with plain `cargo run -- exp fig3`, no XLA.
+//!
+//! The paper identifies two principles for stable FP4 attention training
+//! (§3.2), both implemented by [`backward::flash_backward`]:
+//!
+//! 1. **Matched low-precision recomputation** (Fix A): the FA2-style
+//!    backward recomputes S and P from the *same quantized operands* the
+//!    forward used — here literally from the **packed** NVFP4 Q/K via the
+//!    byte-pair LUT ([`crate::formats::lut`]), and the recomputed P is
+//!    fake-quantized again before the dV matmul (Alg. 3 l.11). A stock FA
+//!    backward recomputes from the raw f32 tensors, so its gradients
+//!    describe a different function than the one the forward evaluated.
+//! 2. **Resolved implicit precision assumption in D** (Fix B): Flash
+//!    Attention's gradient term `D = rowsum(dO ∘ O)` silently assumes O was
+//!    computed from the *unquantized* P. With a quantized forward that
+//!    assumption breaks — the softmax gradient rows no longer sum to zero
+//!    and a spurious component accumulates. The training forward therefore
+//!    also returns the high-precision `O′ = P·V^F / l` (Alg. 2 l.13) and
+//!    the backward computes `D = rowsum(dO ∘ O′)` (Alg. 3 l.3).
+//!
+//! Ablation switches → Figure-3 curves (same labels as the compiled path):
+//!
+//! | [`QatVariant`]   | recompute      | P in dV     | D from | Fig. 3 curve |
+//! |------------------|----------------|-------------|--------|--------------|
+//! | `AttnQat`        | packed FP4     | fake-quant  | O′     | "Attn-QAT" (stable) |
+//! | `NoHighPrecO`    | packed FP4     | fake-quant  | O      | "- High prec. O in BWD" |
+//! | `NoFqP`          | packed FP4     | high-prec   | O′     | "- Fake quant P in BWD" |
+//! | `DropIn`         | raw f32        | high-prec   | O      | "naive drop-in" (spikes/diverges) |
+//! | `F32`            | raw f32        | high-prec   | O (=O′)| "BF16" baseline (f32 fwd too) |
+//!
+//! Gradients leave the subsystem with respect to the **raw** Q/K/V via the
+//! straight-through estimator ([`ste`], Eq. 7); [`trainer`] chains them
+//! into projection-weight gradients and runs SGD+momentum natively.
+
+pub mod backward;
+pub mod ste;
+pub mod trainer;
+
+pub use backward::{flash_backward, AttnGrads, BwdSwitches};
+pub use trainer::{NativeTrainer, TrainerConfig};
+
+/// Training variant: forward precision + backward ablation switches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QatVariant {
+    /// f32 forward and backward (the paper's "BF16" baseline).
+    F32,
+    /// FP4 forward + matched backward with both fixes (Alg. 2 + Alg. 3).
+    AttnQat,
+    /// Attn-QAT without Fix B: D from the quantized-path O (Table 2 Exp. 7).
+    NoHighPrecO,
+    /// Attn-QAT without Fix A's P quantization in dV (Table 2 Exp. 8).
+    NoFqP,
+    /// FP4 forward + stock f32 FA backward — the unstable "drop-in" QAT.
+    DropIn,
+}
+
+impl QatVariant {
+    pub fn parse(s: &str) -> Option<QatVariant> {
+        match s {
+            "f32" | "bf16" => Some(QatVariant::F32),
+            "qat" | "attn_qat" => Some(QatVariant::AttnQat),
+            "qat_no_o_prime" => Some(QatVariant::NoHighPrecO),
+            "qat_no_fq_p" => Some(QatVariant::NoFqP),
+            "fp4" | "dropin" => Some(QatVariant::DropIn),
+            _ => None,
+        }
+    }
+
+    /// Does the forward run through the quantized FP4 engine?
+    pub fn quantized_forward(self) -> bool {
+        !matches!(self, QatVariant::F32)
+    }
+
+    /// Backward ablation switches for this variant.
+    pub fn switches(self) -> BwdSwitches {
+        match self {
+            QatVariant::F32 | QatVariant::DropIn => BwdSwitches {
+                fq_inputs: false,
+                fq_p: false,
+                high_prec_o: false,
+            },
+            QatVariant::AttnQat => BwdSwitches { fq_inputs: true, fq_p: true, high_prec_o: true },
+            QatVariant::NoHighPrecO => {
+                BwdSwitches { fq_inputs: true, fq_p: true, high_prec_o: false }
+            }
+            QatVariant::NoFqP => BwdSwitches { fq_inputs: true, fq_p: false, high_prec_o: true },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_switch_table() {
+        // The mapping above *is* the paper's ablation table — pin it.
+        let s = QatVariant::AttnQat.switches();
+        assert!(s.fq_inputs && s.fq_p && s.high_prec_o);
+        let s = QatVariant::DropIn.switches();
+        assert!(!s.fq_inputs && !s.fq_p && !s.high_prec_o);
+        assert!(!QatVariant::NoHighPrecO.switches().high_prec_o);
+        assert!(!QatVariant::NoFqP.switches().fq_p);
+        assert!(!QatVariant::F32.quantized_forward());
+        assert!(QatVariant::DropIn.quantized_forward());
+        assert_eq!(QatVariant::parse("qat"), Some(QatVariant::AttnQat));
+        assert_eq!(QatVariant::parse("fp4"), Some(QatVariant::DropIn));
+        assert_eq!(QatVariant::parse("nope"), None);
+    }
+}

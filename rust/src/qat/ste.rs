@@ -1,0 +1,160 @@
+//! Straight-through-estimator hooks over the NVFP4 quantizers (Eq. 7).
+//!
+//! The quantizer φ⁻¹∘φ is piecewise constant, so its true derivative is
+//! zero almost everywhere. QAT instead trains with the STE surrogate: the
+//! forward uses the fake-quantized value, the backward treats the quantizer
+//! as identity —
+//!
+//! ```text
+//! value(x) = φ⁻¹(φ(x)),      ∂value/∂x ≈ I      (Eq. 7)
+//! ```
+//!
+//! [`quantize_attn_inputs_ste`] is the single quantization point of the
+//! native training path: it packs Q/K/V once (exactly like the inference
+//! engine, via [`pack_qkv_for_attention`]) and exposes both views the
+//! backward needs — the **packed** 4-bit form for the LUT-domain S/P
+//! recomputation, and the dequantized f32 values Q^F/K^F/V^F for the
+//! dV/dQ/dK matmuls whose contraction axes don't line up with the
+//! quantization blocks. [`ste_grad`] then maps gradients w.r.t. the
+//! quantized tensors back to the raw tensors (identity, per Eq. 7).
+
+use crate::attention::engine::pack_qkv_for_attention;
+use crate::formats::tensor4::PackedNvfp4;
+
+/// Quantized attention inputs: packed storage + dequantized f32 views.
+///
+/// Layouts match the engine contract: `q4`/`k4` are `(n × d_pad)` with
+/// blocks along the head dimension, `v4t` is Vᵀ `(d × nk_pad)` with blocks
+/// along the token axis. The f32 views are trimmed back to logical shapes
+/// (`qf`/`kf`: `n × d`, `vf`: `nk × d` row-major, un-transposed).
+pub struct SteAttnInputs {
+    pub q4: PackedNvfp4,
+    pub k4: PackedNvfp4,
+    pub v4t: PackedNvfp4,
+    pub qf: Vec<f32>,
+    pub kf: Vec<f32>,
+    pub vf: Vec<f32>,
+}
+
+/// Quantize raw Q/K/V once for the training path (forward + backward share
+/// the same bits — the "matched recomputation" precondition of Fix A).
+pub fn quantize_attn_inputs_ste(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+) -> SteAttnInputs {
+    let (q4, k4, v4t) = pack_qkv_for_attention(q, k, v, nq, nk, d);
+    let qf = dequant_trim(&q4, nq, d);
+    let kf = dequant_trim(&k4, nk, d);
+    let vf = dequant_transpose_trim(&v4t, nk, d);
+    SteAttnInputs { q4, k4, v4t, qf, kf, vf }
+}
+
+/// STE backward through a quantizer: the gradient passes unchanged (Eq. 7).
+///
+/// Kept as an explicit (inlined-away) function so call sites document
+/// *where* the estimator is applied rather than silently reusing buffers.
+#[inline]
+pub fn ste_grad(upstream: Vec<f32>) -> Vec<f32> {
+    upstream
+}
+
+/// Dequantize a row-blocked packed matrix, trimming column padding.
+fn dequant_trim(p: &PackedNvfp4, rows: usize, cols: usize) -> Vec<f32> {
+    debug_assert!(p.rows >= rows && p.cols >= cols);
+    let mut row_buf = vec![0.0f32; p.cols];
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        p.dequant_row_into(r, &mut row_buf);
+        out[r * cols..(r + 1) * cols].copy_from_slice(&row_buf[..cols]);
+    }
+    out
+}
+
+/// Dequantize packed Vᵀ `(d × nk_pad)` back to row-major V^F `(nk × d)`.
+fn dequant_transpose_trim(vt: &PackedNvfp4, nk: usize, d: usize) -> Vec<f32> {
+    debug_assert_eq!(vt.rows, d);
+    debug_assert!(vt.cols >= nk);
+    let mut row_buf = vec![0.0f32; vt.cols];
+    let mut out = vec![0.0f32; nk * d];
+    for c in 0..d {
+        vt.dequant_row_into(c, &mut row_buf);
+        for j in 0..nk {
+            out[j * d + c] = row_buf[j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::block::nvfp4_fake_quant_row;
+    use crate::rng::Rng;
+
+    #[test]
+    fn dequant_views_match_fake_quant() {
+        // The f32 views must be exactly φ⁻¹(φ(·)) with the engine's axis
+        // conventions: Q/K along d, V along the token axis.
+        let (nq, nk, d) = (5, 7, 32);
+        let mut rng = Rng::new(31);
+        let q = rng.normal_vec(nq * d, 0.0, 1.0);
+        let k = rng.normal_vec(nk * d, 0.0, 1.0);
+        let v = rng.normal_vec(nk * d, 0.0, 1.0);
+        let inp = quantize_attn_inputs_ste(&q, &k, &v, nq, nk, d);
+
+        let mut qf = q.clone();
+        for row in qf.chunks_mut(d) {
+            nvfp4_fake_quant_row(row);
+        }
+        assert_eq!(inp.qf, qf);
+
+        let mut kf = k.clone();
+        for row in kf.chunks_mut(d) {
+            nvfp4_fake_quant_row(row);
+        }
+        assert_eq!(inp.kf, kf);
+
+        // V: quantize the transpose (blocks along tokens, padded to 16),
+        // then transpose back.
+        let nkp = nk.div_ceil(16) * 16;
+        let mut vt = vec![0.0f32; d * nkp];
+        for j in 0..nk {
+            for c in 0..d {
+                vt[c * nkp + j] = v[j * d + c];
+            }
+        }
+        for row in vt.chunks_mut(nkp) {
+            nvfp4_fake_quant_row(row);
+        }
+        for j in 0..nk {
+            for c in 0..d {
+                assert_eq!(inp.vf[j * d + c], vt[c * nkp + j], "v[{j},{c}]");
+            }
+        }
+    }
+
+    #[test]
+    fn ste_grad_is_identity() {
+        let g = vec![1.0f32, -2.5, 0.0, 1e-8];
+        assert_eq!(ste_grad(g.clone()), g);
+    }
+
+    #[test]
+    fn packed_and_f32_views_share_bits() {
+        // Dequantizing the packed form must reproduce the f32 view — the
+        // backward's LUT dots and f32 matmuls consume the same lattice.
+        let (nq, nk, d) = (3, 19, 16);
+        let mut rng = Rng::new(32);
+        let q = rng.normal_vec(nq * d, 0.0, 2.0);
+        let k = rng.normal_vec(nk * d, 0.0, 2.0);
+        let v = rng.normal_vec(nk * d, 0.0, 2.0);
+        let inp = quantize_attn_inputs_ste(&q, &k, &v, nq, nk, d);
+        assert_eq!(dequant_trim(&inp.q4, nq, d), inp.qf);
+        assert_eq!(dequant_trim(&inp.k4, nk, d), inp.kf);
+        assert_eq!(dequant_transpose_trim(&inp.v4t, nk, d), inp.vf);
+    }
+}
