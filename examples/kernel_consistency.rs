@@ -6,8 +6,7 @@
 //! make artifacts && cargo run --release --example kernel_consistency
 //! ```
 
-use attn_qat::attention::engine::attend_sage3_blocked;
-use attn_qat::attention::{attend, Variant};
+use attn_qat::attention::{AttnConfig, AttnEngine};
 use attn_qat::rng::Rng;
 use attn_qat::runtime::{Runtime, Value};
 use attn_qat::tensor::Tensor;
@@ -35,28 +34,11 @@ fn main() -> anyhow::Result<()> {
             &format!("attn_{variant}_pallas_s{n}_d{d}"),
             &[Value::F32(q.clone()), Value::F32(k.clone()), Value::F32(v.clone())],
         )?;
-        let var = Variant::parse(variant).unwrap();
-        let mut native = Tensor::zeros(vec![b, h, n, d]);
-        for head in 0..h {
-            let off = head * n * d;
-            // block_q must match the artifact's tile (64) for sage3.
-            let out = if var == Variant::Sage3 {
-                attend_sage3_blocked(
-                    &q.data[off..off + n * d],
-                    &k.data[off..off + n * d],
-                    &v.data[off..off + n * d],
-                    n, n, d, false, 64,
-                )
-            } else {
-                attend(
-                    &q.data[off..off + n * d],
-                    &k.data[off..off + n * d],
-                    &v.data[off..off + n * d],
-                    n, d, false, var,
-                )
-            };
-            native.data[off..off + n * d].copy_from_slice(&out.o);
-        }
+        // One multi-head engine session per variant; block_q = 64 matches
+        // the artifact's Q tile for sage3 bit parity.
+        let mut engine = AttnEngine::new(AttnConfig::parse(variant)?.with_block_q(64));
+        let out = engine.forward(&q.data, &k.data, &v.data, h, n, n, d);
+        let native = Tensor::new(vec![b, h, n, d], out.o)?;
         for (pair, a, bb) in [
             ("fake-quant HLO (jnp) vs real-quant rust", &fast[0], &native),
             ("fake-quant HLO (pallas) vs real-quant rust", &pallas[0], &native),

@@ -10,7 +10,7 @@
 //! attention engines — and proves the JAX-lowered HLO and the Rust format
 //! library agree **bit-exactly**.
 
-use attn_qat::attention::{attend, Variant};
+use attn_qat::attention::{AttnConfig, AttnEngine};
 use attn_qat::formats::analysis::error_stats;
 use attn_qat::formats::block::nvfp4_fake_quant_row;
 use attn_qat::formats::PackedNvfp4;
@@ -61,12 +61,13 @@ fn main() -> anyhow::Result<()> {
     let q = rng.normal_vec(n * d, 0.0, 1.0);
     let k = rng.normal_vec(n * d, 0.0, 1.0);
     let v = rng.normal_vec(n * d, 0.0, 1.0);
-    let exact = attend(&q, &k, &v, n, d, false, Variant::F32);
+    let exact = AttnEngine::new(AttnConfig::f32()).forward(&q, &k, &v, 1, n, n, d);
     println!("\nattention output error vs f32 ({n}x{d}, native engines):");
-    for variant in [Variant::Fp4, Variant::Sage3] {
-        let out = attend(&q, &k, &v, n, d, false, variant);
+    for variant in ["fp4", "sage3"] {
+        let mut engine = AttnEngine::new(AttnConfig::parse(variant)?);
+        let out = engine.forward(&q, &k, &v, 1, n, n, d);
         let s = error_stats(&exact.o, &out.o, 1e-3);
-        println!("  {variant:?}: snr {:.1} dB, max abs err {:.4}", s.snr_db, s.max_abs);
+        println!("  {variant}: snr {:.1} dB, max abs err {:.4}", s.snr_db, s.max_abs);
     }
 
     // --- 4. Run the compiled attention artifact -------------------------

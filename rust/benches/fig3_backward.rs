@@ -12,10 +12,9 @@
 //! BENCH_QUICK=1 cargo bench --bench fig3_backward
 //! ```
 
-use attn_qat::attention::engine::attend_fp4_train;
-use attn_qat::attention::flash::attend_f32;
+use attn_qat::attention::{AttnConfig, AttnEngine, BwdSwitches};
 use attn_qat::bench::{bench_units, Reporter};
-use attn_qat::qat::{flash_backward, BwdSwitches};
+use attn_qat::qat::flash_backward;
 use attn_qat::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -24,8 +23,10 @@ fn main() -> anyhow::Result<()> {
     let quick = std::env::var("BENCH_QUICK").is_ok();
     let seqs: &[usize] = if quick { &[128] } else { &[128, 256] };
 
-    const DROPIN: BwdSwitches = BwdSwitches { fq_inputs: false, fq_p: false, high_prec_o: false };
-    const QAT: BwdSwitches = BwdSwitches { fq_inputs: true, fq_p: true, high_prec_o: true };
+    const DROPIN: BwdSwitches = BwdSwitches::STOCK;
+    const QAT: BwdSwitches = BwdSwitches::MATCHED;
+    let mut f32_engine = AttnEngine::new(AttnConfig::f32());
+    let mut qat_engine = AttnEngine::new(AttnConfig::attn_qat());
 
     for &n in seqs {
         let d = 64usize;
@@ -34,8 +35,8 @@ fn main() -> anyhow::Result<()> {
         let v = rng.normal_vec(n * d, 0.0, 1.0);
         let dout = rng.normal_vec(n * d, 0.0, 1.0);
         // Residuals once per shape; both backwards consume the same ones.
-        let f32_res = attend_f32(&q, &k, &v, n, n, d, false);
-        let train = attend_fp4_train(&q, &k, &v, n, n, d, false);
+        let f32_res = f32_engine.forward(&q, &k, &v, 1, n, n, d);
+        let train = qat_engine.forward_train(&q, &k, &v, 1, n, n, d);
         // 5 n×n×d matmuls in the backward (S, dV, dP, dQ, dK).
         let flops = 10.0 * (n * n * d) as f64;
         let iters = if n >= 256 { 3 } else { 5 };
@@ -75,7 +76,7 @@ fn main() -> anyhow::Result<()> {
             6.0 * (n * n * d) as f64,
             "flop",
             || {
-                let t = attend_fp4_train(&q, &k, &v, n, n, d, false);
+                let t = qat_engine.forward_train(&q, &k, &v, 1, n, n, d);
                 std::hint::black_box(t.o[0]);
             },
         ));

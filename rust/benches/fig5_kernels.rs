@@ -6,8 +6,8 @@
 //! cargo bench --bench fig5_kernels
 //! ```
 
-use attn_qat::attention::engine::{attend_fp4, attend_fp4_dequant, pack_qkv_for_attention};
-use attn_qat::attention::packed::{attend_packed, AttnScratch};
+use attn_qat::attention::engine::pack_qkv_for_attention;
+use attn_qat::attention::{AttnConfig, AttnEngine, Backend};
 use attn_qat::bench::{bench_units, Reporter};
 use attn_qat::config::Config;
 use attn_qat::perfmodel::{speedup, Hw, Kernel};
@@ -21,7 +21,10 @@ fn main() -> anyhow::Result<()> {
     let quick = std::env::var("BENCH_QUICK").is_ok();
 
     // --- Native engines: packed-domain LUT kernels vs the legacy
-    // dequantizing path (same lattice, same outputs to fp tolerance) ------
+    // dequantizing backend (same lattice, same outputs to fp tolerance),
+    // both dispatched through `AttnEngine` — the backend is just config --
+    let mut dequant_engine = AttnEngine::new(AttnConfig::fp4().with_backend(Backend::Dequant));
+    let mut packed_engine = AttnEngine::new(AttnConfig::fp4());
     let native_seqs: &[usize] = if quick { &[128] } else { &[128, 256, 512] };
     for &n in native_seqs {
         let d = 64usize;
@@ -37,7 +40,7 @@ fn main() -> anyhow::Result<()> {
             flops,
             "flop",
             || {
-                let out = attend_fp4_dequant(&q, &k, &v, n, n, d, false);
+                let out = dequant_engine.forward(&q, &k, &v, 1, n, n, d);
                 std::hint::black_box(out.o[0]);
             },
         ));
@@ -48,14 +51,14 @@ fn main() -> anyhow::Result<()> {
             flops,
             "flop",
             || {
-                let out = attend_fp4(&q, &k, &v, n, n, d, false);
+                let out = packed_engine.forward(&q, &k, &v, 1, n, n, d);
                 std::hint::black_box(out.o[0]);
             },
         ));
-        // Pure packed compute (quantization hoisted out, scratch reused):
-        // the steady-state kernel cost a resident KV cache would see.
+        // Pure packed compute (quantization hoisted out, the engine's own
+        // workspace reused): the steady-state kernel cost a resident KV
+        // cache would see.
         let (qq, kq, vq) = pack_qkv_for_attention(&q, &k, &v, n, n, d);
-        let mut scratch = AttnScratch::new();
         rep.push(bench_units(
             &format!("native_fp4_packed_prequant_s{n}_d{d}"),
             1,
@@ -63,7 +66,7 @@ fn main() -> anyhow::Result<()> {
             flops,
             "flop",
             || {
-                let out = attend_packed(&qq, &kq, &vq, n, n, d, false, &mut scratch);
+                let out = packed_engine.forward_packed(&qq, &kq, &vq, n, n, d);
                 std::hint::black_box(out.o[0]);
             },
         ));

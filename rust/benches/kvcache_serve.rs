@@ -1,8 +1,9 @@
 //! Serving-path bench: KV-cache append/gather hot loops and end-to-end
 //! decode throughput of the FP4-KV server on the tiny model.
 
+use attn_qat::attention::{AttnConfig, AttnEngine};
 use attn_qat::bench::{bench_units, Reporter};
-use attn_qat::kvcache::{DecodeScratch, PagedKvCache};
+use attn_qat::kvcache::PagedKvCache;
 use attn_qat::rng::Rng;
 use attn_qat::runtime::{Runtime, Value};
 use attn_qat::serve::{DecodeServer, Request};
@@ -51,11 +52,13 @@ fn main() -> anyhow::Result<()> {
         },
     ));
 
-    // Decode attention over the cache (1 query token), both paths:
-    // the legacy materialising baseline (gather + attend_f32) vs the fused
-    // packed-domain `attend_decode` — the before/after record for the
-    // packed-kernel refactor.
+    // Decode attention over the cache (1 query token), both paths as
+    // engine configs: the materialising baseline (`AttnConfig::f32()` =
+    // gather + f32) vs the fused packed-domain decode (`AttnConfig::fp4()`)
+    // — the before/after record for the packed-kernel refactor.
     let q = rng.normal_vec(d, 0.0, 1.0);
+    let mut baseline_engine = AttnEngine::new(AttnConfig::f32());
+    let mut out_buf = vec![0.0f32; d];
     let baseline = bench_units(
         &format!("kv_decode_attend_{tokens}tok_d{d}"),
         1,
@@ -63,16 +66,14 @@ fn main() -> anyhow::Result<()> {
         1.0,
         "tok",
         || {
-            let (k, v) = cache.gather(1, 0, 0).unwrap();
-            let out = attn_qat::attention::flash::attend_f32(&q, &k, &v, 1, tokens, d, false);
-            std::hint::black_box(out.o[0]);
+            baseline_engine.decode(&cache, 1, 0, &q, &mut out_buf).unwrap();
+            std::hint::black_box(out_buf[0]);
         },
     );
     let baseline_ns = baseline.median_ns;
     rep.push(baseline);
 
-    let mut scratch = DecodeScratch::new();
-    let mut out_buf = vec![0.0f32; d];
+    let mut fused_engine = AttnEngine::new(AttnConfig::fp4());
     let fused = bench_units(
         &format!("kv_decode_attend_fused_{tokens}tok_d{d}"),
         2,
@@ -80,10 +81,8 @@ fn main() -> anyhow::Result<()> {
         1.0,
         "tok",
         || {
-            let lse = cache
-                .attend_decode(1, 0, 0, &q, &mut out_buf, &mut scratch)
-                .unwrap();
-            std::hint::black_box(lse);
+            fused_engine.decode(&cache, 1, 0, &q, &mut out_buf).unwrap();
+            std::hint::black_box(out_buf[0]);
         },
     );
     let fused_ns = fused.median_ns;
@@ -91,6 +90,66 @@ fn main() -> anyhow::Result<()> {
     println!(
         "fused attend_decode speedup vs gather+attend_f32 @ {tokens} tok: {:.2}x",
         baseline_ns / fused_ns
+    );
+
+    // Prompt ingestion: token-at-a-time decode (one fused `decode` per
+    // arriving token) vs the batched multi-query `prefill` (append all,
+    // one page-walk pass). Both closures rebuild the cache and append the
+    // same ctx+prompt tokens, so the measured difference is the attention
+    // path itself.
+    let ctx = 192usize;
+    let prompt = 64usize;
+    let all_kv: Vec<(Vec<f32>, Vec<f32>)> = (0..ctx + prompt)
+        .map(|_| (rng.normal_vec(d, 0.0, 1.0), rng.normal_vec(d, 0.0, 1.0)))
+        .collect();
+    let prompt_q = rng.normal_vec(prompt * d, 0.0, 1.0);
+    let mut prefill_engine = AttnEngine::new(AttnConfig::fp4());
+    let tokenwise = bench_units(
+        &format!("kv_prefill_tokenwise_{prompt}q_d{d}"),
+        1,
+        5,
+        prompt as f64,
+        "tok",
+        || {
+            let mut c = PagedKvCache::new(1, 1, d);
+            c.add_seq(1);
+            for (k, v) in &all_kv[..ctx] {
+                c.append(1, 0, 0, k, v).unwrap();
+            }
+            let mut out = vec![0.0f32; d];
+            for (i, (k, v)) in all_kv[ctx..].iter().enumerate() {
+                c.append(1, 0, 0, k, v).unwrap();
+                prefill_engine
+                    .decode(&c, 1, 0, &prompt_q[i * d..(i + 1) * d], &mut out)
+                    .unwrap();
+            }
+            std::hint::black_box(out[0]);
+        },
+    );
+    let tokenwise_ns = tokenwise.median_ns;
+    rep.push(tokenwise);
+    let batched = bench_units(
+        &format!("kv_prefill_batched_{prompt}q_d{d}"),
+        1,
+        5,
+        prompt as f64,
+        "tok",
+        || {
+            let mut c = PagedKvCache::new(1, 1, d);
+            c.add_seq(1);
+            for (k, v) in &all_kv {
+                c.append(1, 0, 0, k, v).unwrap();
+            }
+            let mut out = vec![0.0f32; prompt * d];
+            let lse = prefill_engine.prefill(&c, 1, 0, &prompt_q, prompt, &mut out).unwrap();
+            std::hint::black_box((out[0], lse[0]));
+        },
+    );
+    let batched_ns = batched.median_ns;
+    rep.push(batched);
+    println!(
+        "batched prefill speedup vs token-at-a-time decode @ {prompt} prompt tok over {ctx} ctx: {:.2}x",
+        tokenwise_ns / batched_ns
     );
 
     // End-to-end decode server (needs core artifacts).

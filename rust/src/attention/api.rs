@@ -1,0 +1,721 @@
+//! The unified attention API: [`AttnConfig`] + [`AttnEngine`].
+//!
+//! One config describes *what* to compute — precision family, causal
+//! masking, SageAttention3 smoothing / two-level P, the Q-smoothing tile
+//! size, the packed-vs-dequant backend, and the backward ablation switches
+//! — and one engine object *owns* everything needed to compute it: the
+//! per-head [`AttnScratch`] workspaces and the paged-decode
+//! [`DecodeScratch`] (with its N-way quantized-query cache). This replaces
+//! the free-function zoo (`attend_f32`, `attend_fp4`, `attend_sage3`, …)
+//! with a session API over **multi-head** `(h, n, d)` views:
+//!
+//! ```no_run
+//! use attn_qat::attention::{AttnConfig, AttnEngine};
+//!
+//! let mut engine = AttnEngine::new(AttnConfig::parse("sage3").unwrap().with_causal(true));
+//! # let (heads, n, d) = (4usize, 128usize, 64usize);
+//! # let q = vec![0.0f32; heads * n * d];
+//! # let (k, v) = (q.clone(), q.clone());
+//! let out = engine.forward(&q, &k, &v, heads, n, n, d); // (h × n × d) + lse
+//! ```
+//!
+//! Heads are independent single-head problems; `forward` / `forward_train`
+//! fan them out with `std::thread::scope`, one workspace per lane, and the
+//! per-head results are **bitwise identical** to `h` independent
+//! single-head calls (pinned by `rust/tests/engine_api.rs`). `decode` and
+//! `prefill` run against the paged FP4 KV cache and double as the serving
+//! backends of `serve::DecodeServer` — an `AttnConfig::f32()` engine *is*
+//! the gather + f32 A/B baseline, no separate switch needed.
+
+use anyhow::{ensure, Result};
+
+use crate::formats::tensor4::PackedNvfp4;
+use crate::kvcache::{DecodeScratch, PagedKvCache};
+
+use super::engine::{
+    attend_quantized, attend_quantized_dequant, attend_quantized_train, AttnOutput,
+};
+use super::flash::attend_f32_core;
+use super::packed::{attend_packed_core, AttnScratch};
+
+/// Forward precision family (the `python/compile/kernels/ref.PRESETS`
+/// forward semantics, unified across the old `Variant` / `QatVariant`
+/// selectors).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// Reference f32 flash attention (also serves the "bf16" label: this
+    /// crate emulates the paper's BF16 baseline in f32).
+    F32,
+    /// Plain NVFP4 — the Attn-QAT inference kernel (Alg. 1).
+    Fp4,
+    /// SageAttention3 emulation: Q/K smoothing + two-level P quantization.
+    Sage3,
+}
+
+/// Quantized-path compute backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Packed-domain byte-pair LUT kernels (the default hot path).
+    Packed,
+    /// Legacy dequantizing reference — same quantization lattice, per
+    /// element f32 accumulation. Kept as the packed-vs-dequant comparator
+    /// for benches and tests.
+    Dequant,
+}
+
+/// Backward ablation switches (the paper's §3.2 fixes; see the `qat`
+/// module docs for the switch-combination → Figure-3-curve table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BwdSwitches {
+    /// Fix A (part 1): recompute S from the packed FP4 Q̂/K̂ and run the
+    /// dV/dQ/dK matmuls over the dequantized Q^F/K^F/V^F.
+    pub fq_inputs: bool,
+    /// Fix A (part 2): fake-quantize the recomputed P before dV (l.11).
+    pub fq_p: bool,
+    /// Fix B: D = rowsum(dO ∘ O′) instead of rowsum(dO ∘ O) (l.3).
+    pub high_prec_o: bool,
+}
+
+impl BwdSwitches {
+    /// Both fixes on — the matched Attn-QAT backward.
+    pub const MATCHED: BwdSwitches =
+        BwdSwitches { fq_inputs: true, fq_p: true, high_prec_o: true };
+    /// Stock f32 FA backward (the "drop-in" / f32-baseline setting).
+    pub const STOCK: BwdSwitches =
+        BwdSwitches { fq_inputs: false, fq_p: false, high_prec_o: false };
+}
+
+/// Error from [`AttnConfig::parse`]: names every accepted variant instead
+/// of silently returning `None`.
+#[derive(Clone, Debug)]
+pub struct ParseVariantError {
+    got: String,
+}
+
+impl std::fmt::Display for ParseVariantError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "unknown attention variant '{}' (expected one of: {})",
+            self.got,
+            AttnConfig::VARIANT_NAMES.join(", ")
+        )
+    }
+}
+
+impl std::error::Error for ParseVariantError {}
+
+/// Everything the attention engines are configurable on, in one place.
+///
+/// Presets ([`AttnConfig::f32`], [`AttnConfig::fp4`], [`AttnConfig::sage3`],
+/// [`AttnConfig::attn_qat`]) pin the exact semantics the old free
+/// functions had; builder methods refine them. `smooth` / `two_level_p`
+/// are independent knobs (e.g. the paper's `qat_smoothk` ablation is
+/// `fp4()` + smoothing), `bwd` only matters to training sessions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AttnConfig {
+    /// Forward precision family.
+    pub precision: Precision,
+    /// Aligned-ends causal masking (query i sees keys j ≤ i + nk − nq).
+    pub causal: bool,
+    /// SageAttention3 Eq. 4 smoothing (per-column K mean, per-tile Q mean
+    /// with a high-precision ΔS fixup). Quantized precisions only.
+    pub smooth: bool,
+    /// Two-level P quantization (per-row rescale into the E4M3 range
+    /// before the NVFP4 pass). Quantized precisions only.
+    pub two_level_p: bool,
+    /// Q-smoothing tile size; must match a compiled artifact's tile for
+    /// bit-level comparisons (e.g. Fig. 4 uses 64).
+    pub block_q: usize,
+    /// Packed-LUT hot path or the legacy dequantizing comparator.
+    pub backend: Backend,
+    /// Backward ablation switches consumed by `qat::flash_backward`.
+    pub bwd: BwdSwitches,
+}
+
+impl AttnConfig {
+    /// Every name [`AttnConfig::parse`] accepts, in display order.
+    pub const VARIANT_NAMES: [&'static str; 9] = [
+        "f32",
+        "bf16",
+        "fp4",
+        "dropin",
+        "qat",
+        "attn_qat",
+        "qat_no_o_prime",
+        "qat_no_fq_p",
+        "sage3",
+    ];
+
+    /// Reference f32 engine (the paper's BF16 baseline), stock backward.
+    pub fn f32() -> AttnConfig {
+        AttnConfig {
+            precision: Precision::F32,
+            causal: false,
+            smooth: false,
+            two_level_p: false,
+            block_q: 16,
+            backend: Backend::Packed,
+            bwd: BwdSwitches::STOCK,
+        }
+    }
+
+    /// Plain NVFP4 forward with the stock backward — quantized inference,
+    /// or the unstable "drop-in" QAT when trained.
+    pub fn fp4() -> AttnConfig {
+        AttnConfig { precision: Precision::Fp4, ..AttnConfig::f32() }
+    }
+
+    /// NVFP4 forward + the matched backward (both §3.2 fixes): the
+    /// Attn-QAT training configuration.
+    pub fn attn_qat() -> AttnConfig {
+        AttnConfig { bwd: BwdSwitches::MATCHED, ..AttnConfig::fp4() }
+    }
+
+    /// SageAttention3 emulation: smoothing + two-level P.
+    pub fn sage3() -> AttnConfig {
+        AttnConfig {
+            precision: Precision::Sage3,
+            smooth: true,
+            two_level_p: true,
+            ..AttnConfig::fp4()
+        }
+    }
+
+    /// One vocabulary for every engine — replaces `Variant::parse` and
+    /// `QatVariant::parse`. Forward semantics and backward switches land
+    /// in the same config:
+    ///
+    /// | name | forward | backward |
+    /// |------|---------|----------|
+    /// | `f32`, `bf16` | f32 (bf16 **aliases the f32 engine**: the BF16 baseline is emulated in f32) | stock |
+    /// | `fp4`, `dropin` | NVFP4 | stock (the unstable drop-in QAT) |
+    /// | `qat`, `attn_qat` | NVFP4 | matched (both fixes) |
+    /// | `qat_no_o_prime` | NVFP4 | matched − Fix B |
+    /// | `qat_no_fq_p` | NVFP4 | matched − Fix A's P quantization |
+    /// | `sage3` | NVFP4 + smoothing + two-level P | stock (no native smooth backward yet) |
+    ///
+    /// Every name returns its preset verbatim, so parsing a name and
+    /// spelling the preset in code can never disagree. Unknown names
+    /// produce a [`ParseVariantError`] listing the accepted vocabulary
+    /// rather than a silent `None`.
+    pub fn parse(s: &str) -> Result<AttnConfig, ParseVariantError> {
+        match s {
+            "f32" | "bf16" => Ok(AttnConfig::f32()),
+            "fp4" | "dropin" => Ok(AttnConfig::fp4()),
+            "qat" | "attn_qat" => Ok(AttnConfig::attn_qat()),
+            "qat_no_o_prime" => Ok(AttnConfig::attn_qat()
+                .with_bwd(BwdSwitches { high_prec_o: false, ..BwdSwitches::MATCHED })),
+            "qat_no_fq_p" => Ok(AttnConfig::attn_qat()
+                .with_bwd(BwdSwitches { fq_p: false, ..BwdSwitches::MATCHED })),
+            "sage3" => Ok(AttnConfig::sage3()),
+            _ => Err(ParseVariantError { got: s.to_string() }),
+        }
+    }
+
+    /// Set causal masking.
+    pub fn with_causal(mut self, causal: bool) -> AttnConfig {
+        self.causal = causal;
+        self
+    }
+
+    /// Set the Q-smoothing tile size.
+    pub fn with_block_q(mut self, block_q: usize) -> AttnConfig {
+        assert!(block_q > 0, "block_q must be positive");
+        self.block_q = block_q;
+        self
+    }
+
+    /// Select the compute backend.
+    pub fn with_backend(mut self, backend: Backend) -> AttnConfig {
+        self.backend = backend;
+        self
+    }
+
+    /// Set the backward ablation switches.
+    pub fn with_bwd(mut self, bwd: BwdSwitches) -> AttnConfig {
+        self.bwd = bwd;
+        self
+    }
+
+    /// Does the forward run through a quantized engine?
+    pub fn quantized(&self) -> bool {
+        self.precision != Precision::F32
+    }
+}
+
+impl Default for AttnConfig {
+    fn default() -> AttnConfig {
+        AttnConfig::fp4()
+    }
+}
+
+/// Multi-head attention output: `o` is `(heads × nq × d)` row-major,
+/// `lse` is `(heads × nq)`.
+#[derive(Clone, Debug)]
+pub struct AttnBatch {
+    pub o: Vec<f32>,
+    pub lse: Vec<f32>,
+    pub heads: usize,
+    pub nq: usize,
+    pub d: usize,
+}
+
+impl AttnBatch {
+    /// Output rows of head `h` (`nq × d`).
+    pub fn head_o(&self, h: usize) -> &[f32] {
+        &self.o[h * self.nq * self.d..(h + 1) * self.nq * self.d]
+    }
+
+    /// Logsumexp rows of head `h` (`nq`).
+    pub fn head_lse(&self, h: usize) -> &[f32] {
+        &self.lse[h * self.nq..(h + 1) * self.nq]
+    }
+}
+
+/// Multi-head training-forward output: [`AttnBatch`] fields plus the
+/// high-precision `O′ = P·V^F / l` residual (Alg. 2 l.13) per head.
+#[derive(Clone, Debug)]
+pub struct TrainBatch {
+    /// Quantized-path output O, bitwise identical to [`AttnEngine::forward`].
+    pub o: Vec<f32>,
+    /// High-precision O′ (pre-quantization P); equals `o` for f32 sessions.
+    pub o_prime: Vec<f32>,
+    /// Per-row logsumexp L, `(heads × nq)`.
+    pub lse: Vec<f32>,
+    pub heads: usize,
+    pub nq: usize,
+    pub d: usize,
+}
+
+/// One attention session: a config plus the owned workspaces to run it.
+///
+/// Construction is cheap (buffers grow lazily and are then reused
+/// verbatim); steady state performs no allocation beyond the outputs.
+/// The engine is `Send`, so sessions can be moved into worker threads —
+/// `serve::DecodeServer` keeps one per batch slot.
+pub struct AttnEngine {
+    cfg: AttnConfig,
+    /// One workspace per head fan-out lane.
+    scratches: Vec<AttnScratch>,
+    /// Paged-decode workspace (quantized-query cache, page buffers).
+    decode_scratch: DecodeScratch,
+}
+
+impl AttnEngine {
+    pub fn new(cfg: AttnConfig) -> AttnEngine {
+        AttnEngine { cfg, scratches: Vec::new(), decode_scratch: DecodeScratch::new() }
+    }
+
+    pub fn config(&self) -> &AttnConfig {
+        &self.cfg
+    }
+
+    /// (hits, misses) of the paged-decode quantized-query cache.
+    pub fn query_cache_stats(&self) -> (u64, u64) {
+        self.decode_scratch.query_cache_stats()
+    }
+
+    fn grow_scratches(&mut self, heads: usize) {
+        while self.scratches.len() < heads {
+            self.scratches.push(AttnScratch::new());
+        }
+    }
+
+    /// The paged KV backends implement exactly two kernels — fused packed
+    /// fp4 and the gather + f32 baseline. Reject quantized configs whose
+    /// knobs name a kernel the paged path cannot honor, instead of
+    /// silently computing something the config does not describe.
+    fn ensure_paged_config(&self, what: &str) -> Result<()> {
+        if self.cfg.quantized() {
+            ensure!(
+                self.cfg.backend == Backend::Packed
+                    && !self.cfg.smooth
+                    && !self.cfg.two_level_p,
+                "{what} supports only the packed fp4 and f32 configs \
+                 (smoothing / two-level P / the dequant backend have no paged path)"
+            );
+        }
+        Ok(())
+    }
+
+    /// Multi-head forward over `(heads × n × d)` row-major views:
+    /// `q` is `(heads × nq × d)`, `k`/`v` are `(heads × nk × d)`.
+    ///
+    /// Heads run as independent single-head problems — fanned out across
+    /// threads when `heads > 1` — and each head's `o`/`lse` is bitwise
+    /// identical to a single-head call with the same config.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward(
+        &mut self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        heads: usize,
+        nq: usize,
+        nk: usize,
+        d: usize,
+    ) -> AttnBatch {
+        assert_eq!(q.len(), heads * nq * d, "q must be (heads x nq x d)");
+        assert_eq!(k.len(), heads * nk * d, "k must be (heads x nk x d)");
+        assert_eq!(v.len(), heads * nk * d, "v must be (heads x nk x d)");
+        self.grow_scratches(heads.max(1));
+        let cfg = self.cfg;
+        let mut o = vec![0.0f32; heads * nq * d];
+        let mut lse = vec![0.0f32; heads * nq];
+        if heads == 1 {
+            let out = run_head(&cfg, q, k, v, nq, nk, d, &mut self.scratches[0]);
+            o.copy_from_slice(&out.o);
+            lse.copy_from_slice(&out.lse);
+        } else if heads > 1 {
+            let scratches = &mut self.scratches;
+            std::thread::scope(|scope| {
+                for (h, ((oh, lh), scratch)) in o
+                    .chunks_mut(nq * d)
+                    .zip(lse.chunks_mut(nq))
+                    .zip(scratches.iter_mut())
+                    .enumerate()
+                {
+                    let qh = &q[h * nq * d..(h + 1) * nq * d];
+                    let kh = &k[h * nk * d..(h + 1) * nk * d];
+                    let vh = &v[h * nk * d..(h + 1) * nk * d];
+                    scope.spawn(move || {
+                        let out = run_head(&cfg, qh, kh, vh, nq, nk, d, scratch);
+                        oh.copy_from_slice(&out.o);
+                        lh.copy_from_slice(&out.lse);
+                    });
+                }
+            });
+        }
+        AttnBatch { o, lse, heads, nq, d }
+    }
+
+    /// Multi-head training forward: [`AttnEngine::forward`] plus the O′
+    /// residual the QAT backward consumes (Fix B). O and lse stay bitwise
+    /// identical to the inference forward; for f32 sessions `o_prime == o`.
+    ///
+    /// Smoothing / two-level P have no native backward yet (ROADMAP), and
+    /// the dequant comparator backend has no training path — training
+    /// sessions must configure all three off.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_train(
+        &mut self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        heads: usize,
+        nq: usize,
+        nk: usize,
+        d: usize,
+    ) -> TrainBatch {
+        assert_eq!(q.len(), heads * nq * d, "q must be (heads x nq x d)");
+        assert_eq!(k.len(), heads * nk * d, "k must be (heads x nk x d)");
+        assert_eq!(v.len(), heads * nk * d, "v must be (heads x nk x d)");
+        assert!(
+            !self.cfg.smooth && !self.cfg.two_level_p,
+            "training forward does not support smoothing / two-level P yet"
+        );
+        assert!(
+            self.cfg.backend == Backend::Packed,
+            "training forward runs the packed engine only (no dequant comparator path)"
+        );
+        self.grow_scratches(heads.max(1));
+        let cfg = self.cfg;
+        let mut o = vec![0.0f32; heads * nq * d];
+        let mut o_prime = vec![0.0f32; heads * nq * d];
+        let mut lse = vec![0.0f32; heads * nq];
+        if heads == 1 {
+            let (out, op) = run_head_train(&cfg, q, k, v, nq, nk, d, &mut self.scratches[0]);
+            o.copy_from_slice(&out.o);
+            o_prime.copy_from_slice(&op);
+            lse.copy_from_slice(&out.lse);
+        } else if heads > 1 {
+            let scratches = &mut self.scratches;
+            std::thread::scope(|scope| {
+                for (h, (((oh, oph), lh), scratch)) in o
+                    .chunks_mut(nq * d)
+                    .zip(o_prime.chunks_mut(nq * d))
+                    .zip(lse.chunks_mut(nq))
+                    .zip(scratches.iter_mut())
+                    .enumerate()
+                {
+                    let qh = &q[h * nq * d..(h + 1) * nq * d];
+                    let kh = &k[h * nk * d..(h + 1) * nk * d];
+                    let vh = &v[h * nk * d..(h + 1) * nk * d];
+                    scope.spawn(move || {
+                        let (out, op) = run_head_train(&cfg, qh, kh, vh, nq, nk, d, scratch);
+                        oh.copy_from_slice(&out.o);
+                        oph.copy_from_slice(&op);
+                        lh.copy_from_slice(&out.lse);
+                    });
+                }
+            });
+        }
+        TrainBatch { o, o_prime, lse, heads, nq, d }
+    }
+
+    /// Single-head forward over **pre-quantized** operands — the
+    /// steady-state kernel cost a resident packed KV cache would see
+    /// (quantization hoisted out, workspace reused). `q`/`k` are
+    /// `(n × d_pad)` with blocks along `d`; `vt` is V transposed
+    /// `(d × nk_pad)` with blocks along the token axis.
+    ///
+    /// Smoothing is a pre-quantization transform and cannot apply here;
+    /// the config's `two_level_p` and `causal` are honored.
+    pub fn forward_packed(
+        &mut self,
+        q: &PackedNvfp4,
+        k: &PackedNvfp4,
+        vt: &PackedNvfp4,
+        nq: usize,
+        nk: usize,
+        d: usize,
+    ) -> AttnOutput {
+        assert!(!self.cfg.smooth, "forward_packed cannot smooth pre-quantized operands");
+        self.grow_scratches(1);
+        attend_packed_core(
+            q,
+            k,
+            vt,
+            nq,
+            nk,
+            d,
+            self.cfg.causal,
+            None,
+            self.cfg.block_q,
+            self.cfg.two_level_p,
+            None,
+            &mut self.scratches[0],
+        )
+    }
+
+    /// Single-token decode over the paged FP4 KV cache, all heads of one
+    /// layer at once: `q` and `out` are `(heads × head_dim)` — exactly one
+    /// model row of a batched decode step.
+    ///
+    /// Quantized configs stream sealed pages in the packed domain
+    /// (`PagedKvCache::attend_decode`); an [`AttnConfig::f32`] session is
+    /// the materialising gather + f32 baseline — the A/B switch the decode
+    /// server used to carry as a bool is now just a config.
+    ///
+    /// The paged path has no smoothing / two-level-P / dequant-backend
+    /// variants; a quantized config carrying those knobs is rejected
+    /// rather than silently computed with a different kernel.
+    pub fn decode(
+        &mut self,
+        cache: &PagedKvCache,
+        seq: u64,
+        layer: usize,
+        q: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.ensure_paged_config("decode")?;
+        let d = cache.head_dim();
+        ensure!(
+            q.len() == out.len() && !q.is_empty() && q.len() % d == 0,
+            "q/out must be heads x head_dim={d}"
+        );
+        let heads = q.len() / d;
+        for head in 0..heads {
+            let (qh, oh) = (&q[head * d..(head + 1) * d], &mut out[head * d..(head + 1) * d]);
+            if self.cfg.quantized() {
+                cache.attend_decode(seq, layer, head, qh, oh, &mut self.decode_scratch)?;
+            } else {
+                let (kc, vc) = cache.gather(seq, layer, head)?;
+                let nk = kc.len() / d;
+                ensure!(nk > 0, "seq {seq} has no cached tokens");
+                let o = attend_f32_core(qh, &kc, &vc, 1, nk, d, false);
+                oh.copy_from_slice(&o.o);
+            }
+        }
+        Ok(())
+    }
+
+    /// Batched multi-query prefill over the paged FP4 KV cache: attend the
+    /// **last `nq` cached tokens'** queries in one pass, with aligned-ends
+    /// causality (query i sees keys `0 ..= len − nq + i`). `q` and `out`
+    /// are `(heads × nq × head_dim)` row-major; returns the `(heads × nq)`
+    /// logsumexps.
+    ///
+    /// Prefill is causal **by construction** — the queries are the cache's
+    /// own newest tokens, each allowed to see its own prefix; the config's
+    /// `causal` flag (which governs [`AttnEngine::forward`]) is not
+    /// consulted here, exactly as `decode`'s single trailing query always
+    /// sees the whole cache.
+    ///
+    /// This is the ROADMAP "batched multi-query decode" lever: one page
+    /// walk per query instead of one full `decode` call per token — the
+    /// per-call sequence lookup, query-cache probe, and accumulator setup
+    /// amortise across the prompt (see the `kvcache_serve` bench's
+    /// `prefill` scenario for the recorded comparison).
+    pub fn prefill(
+        &mut self,
+        cache: &PagedKvCache,
+        seq: u64,
+        layer: usize,
+        q: &[f32],
+        nq: usize,
+        out: &mut [f32],
+    ) -> Result<Vec<f32>> {
+        self.ensure_paged_config("prefill")?;
+        let d = cache.head_dim();
+        ensure!(nq > 0, "prefill needs at least one query");
+        ensure!(
+            q.len() == out.len() && q.len() % (nq * d) == 0 && !q.is_empty(),
+            "q/out must be heads x nq={nq} x head_dim={d}"
+        );
+        let heads = q.len() / (nq * d);
+        let mut lse = vec![0.0f32; heads * nq];
+        for head in 0..heads {
+            let qh = &q[head * nq * d..(head + 1) * nq * d];
+            let oh = &mut out[head * nq * d..(head + 1) * nq * d];
+            let lh = &mut lse[head * nq..(head + 1) * nq];
+            if self.cfg.quantized() {
+                cache.attend_prefill(seq, layer, head, qh, nq, oh, lh, &mut self.decode_scratch)?;
+            } else {
+                let (kc, vc) = cache.gather(seq, layer, head)?;
+                let nk = kc.len() / d;
+                ensure!(nq <= nk, "prefill of {nq} queries over {nk} cached tokens");
+                let o = attend_f32_core(qh, &kc, &vc, nq, nk, d, true);
+                oh.copy_from_slice(&o.o);
+                lh.copy_from_slice(&o.lse);
+            }
+        }
+        Ok(lse)
+    }
+}
+
+/// One head's forward under `cfg` — the single dispatch point every
+/// engine path funnels through.
+#[allow(clippy::too_many_arguments)]
+fn run_head(
+    cfg: &AttnConfig,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    scratch: &mut AttnScratch,
+) -> AttnOutput {
+    match (cfg.precision, cfg.backend) {
+        (Precision::F32, _) => attend_f32_core(q, k, v, nq, nk, d, cfg.causal),
+        (_, Backend::Dequant) => attend_quantized_dequant(
+            q,
+            k,
+            v,
+            nq,
+            nk,
+            d,
+            cfg.causal,
+            cfg.smooth,
+            cfg.two_level_p,
+            cfg.block_q,
+        ),
+        (_, Backend::Packed) => attend_quantized(
+            q,
+            k,
+            v,
+            nq,
+            nk,
+            d,
+            cfg.causal,
+            cfg.smooth,
+            cfg.two_level_p,
+            cfg.block_q,
+            scratch,
+        ),
+    }
+}
+
+/// One head's training forward: `(O + lse, O′)`.
+#[allow(clippy::too_many_arguments)]
+fn run_head_train(
+    cfg: &AttnConfig,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    scratch: &mut AttnScratch,
+) -> (AttnOutput, Vec<f32>) {
+    if cfg.precision == Precision::F32 {
+        let out = attend_f32_core(q, k, v, nq, nk, d, cfg.causal);
+        let o_prime = out.o.clone();
+        (out, o_prime)
+    } else {
+        attend_quantized_train(q, k, v, nq, nk, d, cfg.causal, scratch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn parse_covers_both_old_vocabularies() {
+        // Forward semantics of the old Variant::parse...
+        assert_eq!(AttnConfig::parse("f32").unwrap().precision, Precision::F32);
+        assert_eq!(AttnConfig::parse("bf16").unwrap().precision, Precision::F32);
+        assert_eq!(AttnConfig::parse("fp4").unwrap().precision, Precision::Fp4);
+        assert_eq!(AttnConfig::parse("qat").unwrap().precision, Precision::Fp4);
+        let sage = AttnConfig::parse("sage3").unwrap();
+        assert_eq!(sage.precision, Precision::Sage3);
+        assert!(sage.smooth && sage.two_level_p);
+        // ...and the backward switches of the old QatVariant::parse.
+        assert_eq!(AttnConfig::parse("attn_qat").unwrap().bwd, BwdSwitches::MATCHED);
+        assert_eq!(AttnConfig::parse("dropin").unwrap().bwd, BwdSwitches::STOCK);
+        assert!(!AttnConfig::parse("qat_no_o_prime").unwrap().bwd.high_prec_o);
+        assert!(!AttnConfig::parse("qat_no_fq_p").unwrap().bwd.fq_p);
+    }
+
+    #[test]
+    fn parse_error_lists_valid_names() {
+        let err = AttnConfig::parse("nope").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("'nope'"), "{msg}");
+        for name in AttnConfig::VARIANT_NAMES {
+            assert!(msg.contains(name), "error must list '{name}': {msg}");
+        }
+    }
+
+    #[test]
+    fn head_accessors_slice_the_batch() {
+        let (h, n, d) = (3usize, 8usize, 16usize);
+        let mut rng = Rng::new(71);
+        let q = rng.normal_vec(h * n * d, 0.0, 1.0);
+        let k = rng.normal_vec(h * n * d, 0.0, 1.0);
+        let v = rng.normal_vec(h * n * d, 0.0, 1.0);
+        let mut engine = AttnEngine::new(AttnConfig::fp4());
+        let out = engine.forward(&q, &k, &v, h, n, n, d);
+        assert_eq!(out.o.len(), h * n * d);
+        assert_eq!(out.lse.len(), h * n);
+        for head in 0..h {
+            assert_eq!(out.head_o(head), &out.o[head * n * d..(head + 1) * n * d]);
+            assert_eq!(out.head_lse(head), &out.lse[head * n..(head + 1) * n]);
+        }
+    }
+
+    #[test]
+    fn forward_train_o_matches_forward_bitwise() {
+        let (h, n, d) = (2usize, 8usize, 32usize);
+        let mut rng = Rng::new(72);
+        let q = rng.normal_vec(h * n * d, 0.0, 1.0);
+        let k = rng.normal_vec(h * n * d, 0.0, 1.0);
+        let v = rng.normal_vec(h * n * d, 0.0, 1.0);
+        for cfg in [AttnConfig::fp4().with_causal(true), AttnConfig::f32()] {
+            let mut engine = AttnEngine::new(cfg);
+            let fwd = engine.forward(&q, &k, &v, h, n, n, d);
+            let train = engine.forward_train(&q, &k, &v, h, n, n, d);
+            assert_eq!(train.o, fwd.o);
+            assert_eq!(train.lse, fwd.lse);
+            if cfg.quantized() {
+                assert_ne!(train.o_prime, train.o, "O' uses unquantized P");
+            } else {
+                assert_eq!(train.o_prime, train.o, "f32 session: O' == O");
+            }
+        }
+    }
+}

@@ -10,19 +10,25 @@
 //!   exactly the FP4MM hardware semantics (§2.1).
 //!
 //! Since the packed-kernel refactor the hot path is
-//! [`super::packed::attend_packed_core`]: inputs are quantized **once**
-//! into [`PackedNvfp4`] and consumed in the packed domain via the byte-pair
+//! `packed::attend_packed_core`: inputs are quantized **once** into
+//! [`PackedNvfp4`] and consumed in the packed domain via the byte-pair
 //! LUT — no dequantized copies of Q/K/V exist at all. The pre-refactor
-//! dequantizing implementation is kept as [`attend_fp4_dequant`] /
-//! [`attend_sage3_dequant`]: it is the packed-vs-dequant comparator for
-//! benches and the cross-check for tests.
+//! dequantizing implementation is kept as the dequant engine backend
+//! (reachable through the deprecated [`attend_fp4_dequant`] /
+//! [`attend_sage3_dequant`] shims): it is the packed-vs-dequant comparator
+//! for benches and the cross-check for tests.
+//!
+//! Since the `AttnEngine` redesign the public entry point is
+//! [`super::AttnEngine`]; the free functions here are `#[deprecated]`
+//! shims kept so the golden tests pin bitwise parity across the
+//! migration.
 
 use std::borrow::Cow;
 
 use crate::formats::block::{nvfp4_fake_quant_row, NVFP4_BLOCK};
 use crate::formats::tensor4::PackedNvfp4;
 
-use super::packed::{attend_packed_core, attend_packed_train, AttnScratch, causal_limit};
+use super::packed::{attend_packed_core, causal_limit, AttnScratch};
 
 /// Attention output: `o (nq × d)` + per-row logsumexp.
 #[derive(Clone, Debug)]
@@ -116,7 +122,8 @@ fn smooth_qk(
     (q_in, k_in, q_means)
 }
 
-/// Core quantized attention with optional smoothing / two-level P.
+/// Core quantized attention with optional smoothing / two-level P — the
+/// quantized-path workhorse behind `AttnEngine::forward`.
 ///
 /// Preprocesses (smoothing per SageAttention3 Eq. 4), quantizes once into
 /// packed 4-bit storage, and delegates to the packed-domain engine. The
@@ -124,7 +131,7 @@ fn smooth_qk(
 /// only f32 copy left is the V transpose (a layout change the packed
 /// engine needs), plus zero-padding when `d` or `nk` is not 16-aligned.
 #[allow(clippy::too_many_arguments)]
-fn attend_quantized(
+pub(crate) fn attend_quantized(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -135,6 +142,7 @@ fn attend_quantized(
     smooth: bool,
     two_level_p: bool,
     block_q: usize,
+    scratch: &mut AttnScratch,
 ) -> AttnOutput {
     let (q_in, k_in, q_means): (Cow<[f32]>, Cow<[f32]>, Vec<f32>) = if smooth {
         let (qi, ki, qm) = smooth_qk(q, k, nq, nk, d, block_q);
@@ -143,7 +151,6 @@ fn attend_quantized(
         (Cow::Borrowed(q), Cow::Borrowed(k), Vec::new())
     };
     let (qq, kq, vq) = pack_qkv_for_attention(&q_in, &k_in, v, nq, nk, d);
-    let mut scratch = AttnScratch::new();
     attend_packed_core(
         &qq,
         &kq,
@@ -156,8 +163,41 @@ fn attend_quantized(
         block_q,
         two_level_p,
         None,
-        &mut scratch,
+        scratch,
     )
+}
+
+/// Training-forward core: [`attend_quantized`] (plain FP4) plus the
+/// high-precision `O′ = P·V^F / l` residual (Alg. 2 l.13). O and lse are
+/// bitwise identical to the inference path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attend_quantized_train(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    causal: bool,
+    scratch: &mut AttnScratch,
+) -> (AttnOutput, Vec<f32>) {
+    let (qq, kq, vq) = pack_qkv_for_attention(q, k, v, nq, nk, d);
+    let mut o_prime = vec![0.0f32; nq * d];
+    let out = attend_packed_core(
+        &qq,
+        &kq,
+        &vq,
+        nq,
+        nk,
+        d,
+        causal,
+        None,
+        NVFP4_BLOCK,
+        false,
+        Some(&mut o_prime),
+        scratch,
+    );
+    (out, o_prime)
 }
 
 /// Training-forward residuals (Alg. 2): what the QAT backward consumes.
@@ -177,6 +217,7 @@ pub struct TrainOutput {
 /// engine, same quantization points); O′ rides along for Fix B of the
 /// backward (`qat::backward`). Empty causal rows (nk < nq) produce zero
 /// O and O′ with `lse = -inf`, matching the forward contract.
+#[deprecated(note = "use AttnEngine::forward_train with AttnConfig::fp4()/attn_qat()")]
 pub fn attend_fp4_train(
     q: &[f32],
     k: &[f32],
@@ -186,9 +227,8 @@ pub fn attend_fp4_train(
     d: usize,
     causal: bool,
 ) -> TrainOutput {
-    let (qq, kq, vq) = pack_qkv_for_attention(q, k, v, nq, nk, d);
     let mut scratch = AttnScratch::new();
-    let (out, o_prime) = attend_packed_train(&qq, &kq, &vq, nq, nk, d, causal, &mut scratch);
+    let (out, o_prime) = attend_quantized_train(q, k, v, nq, nk, d, causal, &mut scratch);
     TrainOutput { o: out.o, o_prime, lse: out.lse }
 }
 
@@ -215,9 +255,10 @@ fn through_fp4(data: &[f32], rows: usize, cols: usize) -> Vec<f32> {
 /// operand to f32 and accumulates element-wise. Identical quantization
 /// lattice to the packed engine; only the f32 accumulation grouping
 /// differs (per element here, per 16-block there). Kept as the
-/// packed-vs-dequant comparator for benches and tests.
+/// packed-vs-dequant comparator (`Backend::Dequant`) for benches and
+/// tests.
 #[allow(clippy::too_many_arguments)]
-fn attend_quantized_dequant(
+pub(crate) fn attend_quantized_dequant(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -321,6 +362,7 @@ fn attend_quantized_dequant(
 }
 
 /// Plain NVFP4 attention (the Attn-QAT inference forward, Alg. 1).
+#[deprecated(note = "use AttnEngine::forward with AttnConfig::fp4()")]
 pub fn attend_fp4(
     q: &[f32],
     k: &[f32],
@@ -330,10 +372,12 @@ pub fn attend_fp4(
     d: usize,
     causal: bool,
 ) -> AttnOutput {
-    attend_quantized(q, k, v, nq, nk, d, causal, false, false, 16)
+    let mut scratch = AttnScratch::new();
+    attend_quantized(q, k, v, nq, nk, d, causal, false, false, 16, &mut scratch)
 }
 
 /// SageAttention3 emulation: Q/K smoothing + two-level P quantization.
+#[deprecated(note = "use AttnEngine::forward with AttnConfig::sage3()")]
 pub fn attend_sage3(
     q: &[f32],
     k: &[f32],
@@ -343,11 +387,14 @@ pub fn attend_sage3(
     d: usize,
     causal: bool,
 ) -> AttnOutput {
-    attend_quantized(q, k, v, nq, nk, d, causal, true, true, 16)
+    let mut scratch = AttnScratch::new();
+    attend_quantized(q, k, v, nq, nk, d, causal, true, true, 16, &mut scratch)
 }
 
 /// [`attend_sage3`] with an explicit Q-smoothing tile size (must match the
 /// compiled artifact's `block_q` for bit-level comparisons, e.g. Fig. 4).
+#[deprecated(note = "use AttnEngine::forward with AttnConfig::sage3().with_block_q(..)")]
+#[allow(clippy::too_many_arguments)]
 pub fn attend_sage3_blocked(
     q: &[f32],
     k: &[f32],
@@ -358,10 +405,12 @@ pub fn attend_sage3_blocked(
     causal: bool,
     block_q: usize,
 ) -> AttnOutput {
-    attend_quantized(q, k, v, nq, nk, d, causal, true, true, block_q)
+    let mut scratch = AttnScratch::new();
+    attend_quantized(q, k, v, nq, nk, d, causal, true, true, block_q, &mut scratch)
 }
 
 /// [`attend_fp4`] via the legacy dequantizing path (bench/test comparator).
+#[deprecated(note = "use AttnEngine::forward with AttnConfig::fp4().with_backend(Backend::Dequant)")]
 pub fn attend_fp4_dequant(
     q: &[f32],
     k: &[f32],
@@ -375,6 +424,9 @@ pub fn attend_fp4_dequant(
 }
 
 /// [`attend_sage3`] via the legacy dequantizing path (bench/test comparator).
+#[deprecated(
+    note = "use AttnEngine::forward with AttnConfig::sage3().with_backend(Backend::Dequant)"
+)]
 pub fn attend_sage3_dequant(
     q: &[f32],
     k: &[f32],
@@ -388,6 +440,7 @@ pub fn attend_sage3_dequant(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the shims are exactly what these tests pin
 mod tests {
     use super::*;
     use crate::attention::flash::attend_f32;

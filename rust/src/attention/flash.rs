@@ -12,7 +12,22 @@ use super::packed::causal_limit;
 /// Causality uses aligned ends (query i sees keys j ≤ i + nk − nq); when
 /// `nk < nq` the leading queries see zero keys and produce zero output
 /// with `lse = -inf` (the old unsaturated limit underflowed there).
+#[deprecated(note = "use AttnEngine::forward with AttnConfig::f32()")]
 pub fn attend_f32(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    causal: bool,
+) -> AttnOutput {
+    attend_f32_core(q, k, v, nq, nk, d, causal)
+}
+
+/// The f32 flash forward behind [`attend_f32`] and the engine's
+/// `Precision::F32` path.
+pub(crate) fn attend_f32_core(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -63,6 +78,7 @@ pub fn attend_f32(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // pins the shim alongside the core
 mod tests {
     use super::*;
     use crate::rng::Rng;

@@ -1,29 +1,65 @@
-//! Native Rust attention engines — the "real quant" side of the system.
+//! Native Rust attention — one engine API over the "real quant" kernels.
 //!
 //! Where the JAX/Pallas layers *fake-quantize* (Eq. 6), these engines run
 //! attention on **actually packed** NVFP4 tensors (4-bit codes + E4M3
-//! scales), dequantizing block-wise into the f32 accumulator exactly like
-//! Blackwell's FP4MM. Uses:
+//! scales), consuming them through the byte-pair LUT exactly like
+//! Blackwell's FP4MM. The public surface is the session API in [`api`]:
 //!
-//! * Figure 4 — fake-quant (compiled HLO) vs real-quant (this module)
-//!   agreement on identical inputs;
-//! * the serving decode path — attention over the FP4 paged KV cache
-//!   (`kvcache`), where the per-token query is f32 and K/V live in NVFP4;
-//! * a reference f32 flash implementation for baseline comparisons.
+//! * [`AttnConfig`] — precision family (`f32` / `fp4` / `sage3`), causal
+//!   flag, smoothing, two-level P, Q-tile size, packed-vs-dequant backend,
+//!   and the backward ablation switches, with one [`AttnConfig::parse`]
+//!   vocabulary covering every variant name the crate ever accepted;
+//! * [`AttnEngine`] — owns its workspaces and exposes
+//!   [`forward`](AttnEngine::forward) /
+//!   [`forward_train`](AttnEngine::forward_train) over multi-head
+//!   `(h, n, d)` views (heads fanned out with `std::thread::scope`),
+//!   [`forward_packed`](AttnEngine::forward_packed) for pre-quantized
+//!   operands, and [`decode`](AttnEngine::decode) /
+//!   [`prefill`](AttnEngine::prefill) over the paged FP4 KV cache.
 //!
-//! Variants mirror `python/compile/kernels/ref.PRESETS` forward semantics:
-//! `F32`, `Fp4` (plain NVFP4, the Attn-QAT inference kernel), `Sage3`
-//! (K/Q smoothing + two-level P quantization).
+//! Uses: Figure 4 (fake-quant HLO vs this real-quant engine), the serving
+//! decode path (`kvcache` / `serve`), and the native QAT trainer (`qat`).
+//!
+//! ## Migrating from the free functions
+//!
+//! The pre-engine free functions remain as thin `#[deprecated]` shims so
+//! the golden tests pin bitwise parity; new code should build an engine:
+//!
+//! | old free function | engine equivalent |
+//! |-------------------|-------------------|
+//! | `attend_f32(q,k,v,nq,nk,d,causal)` | `AttnEngine::new(AttnConfig::f32().with_causal(causal)).forward(q,k,v,1,nq,nk,d)` |
+//! | `attend_fp4(...)` | config `AttnConfig::fp4()` |
+//! | `attend_sage3(...)` | config `AttnConfig::sage3()` |
+//! | `attend_sage3_blocked(..., block_q)` | config `AttnConfig::sage3().with_block_q(block_q)` |
+//! | `attend_fp4_dequant` / `attend_sage3_dequant` | config `.with_backend(Backend::Dequant)` |
+//! | `attend_fp4_train(...)` | [`AttnEngine::forward_train`] (config `AttnConfig::fp4()` or [`AttnConfig::attn_qat`]) |
+//! | `attend_packed` / `attend_packed_train` | [`AttnEngine::forward_packed`] / [`AttnEngine::forward_train`] |
+//! | `attend(..., Variant::X)` | `AttnEngine::new(AttnConfig::parse("x")?)` |
+//! | `PagedKvCache::attend_decode` per head | [`AttnEngine::decode`] (all heads of a layer; `AttnConfig::f32()` = the gather baseline) |
+//! | token-at-a-time prompt ingestion | [`AttnEngine::prefill`] (batched multi-query causal) |
 
+pub mod api;
 pub mod engine;
 pub mod flash;
 pub mod packed;
 
-pub use engine::{attend_fp4, attend_fp4_train, attend_sage3, AttnOutput, TrainOutput};
+pub use api::{
+    AttnBatch, AttnConfig, AttnEngine, Backend, BwdSwitches, ParseVariantError, Precision,
+    TrainBatch,
+};
+#[allow(deprecated)]
+pub use engine::{attend_fp4, attend_fp4_train, attend_sage3};
+pub use engine::{AttnOutput, TrainOutput};
+#[allow(deprecated)]
 pub use flash::attend_f32;
-pub use packed::{attend_packed, attend_packed_train, AttnScratch, QuantQueryCache};
+#[allow(deprecated)]
+pub use packed::{attend_packed, attend_packed_train};
+pub use packed::{AttnScratch, QuantQueryCache};
 
-/// Forward-variant selector for the native engines.
+/// Legacy forward-variant selector.
+///
+/// Superseded by [`AttnConfig`], which carries the same three precision
+/// families plus every other knob in one place.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Variant {
     F32,
@@ -32,6 +68,7 @@ pub enum Variant {
 }
 
 impl Variant {
+    #[deprecated(note = "use AttnConfig::parse — one vocabulary, errors list the valid names")]
     pub fn parse(s: &str) -> Option<Variant> {
         match s {
             "f32" | "bf16" => Some(Variant::F32),
@@ -43,6 +80,7 @@ impl Variant {
 }
 
 /// Dispatch an (n × d) single-head attention over the chosen variant.
+#[deprecated(note = "build an AttnEngine from an AttnConfig and call forward")]
 pub fn attend(
     q: &[f32],
     k: &[f32],
@@ -52,9 +90,14 @@ pub fn attend(
     causal: bool,
     variant: Variant,
 ) -> AttnOutput {
+    let mut scratch = AttnScratch::new();
     match variant {
-        Variant::F32 => attend_f32(q, k, v, n, n, d, causal),
-        Variant::Fp4 => attend_fp4(q, k, v, n, n, d, causal),
-        Variant::Sage3 => attend_sage3(q, k, v, n, n, d, causal),
+        Variant::F32 => flash::attend_f32_core(q, k, v, n, n, d, causal),
+        Variant::Fp4 => {
+            engine::attend_quantized(q, k, v, n, n, d, causal, false, false, 16, &mut scratch)
+        }
+        Variant::Sage3 => {
+            engine::attend_quantized(q, k, v, n, n, d, causal, true, true, 16, &mut scratch)
+        }
     }
 }

@@ -12,8 +12,7 @@
 use anyhow::Result;
 
 use super::common::write_table;
-use crate::attention::engine::attend_sage3_blocked;
-use crate::attention::{attend, Variant};
+use crate::attention::{AttnConfig, AttnEngine};
 use crate::config::Config;
 use crate::rng::Rng;
 use crate::runtime::{Runtime, Value};
@@ -37,29 +36,13 @@ pub fn fig4(rt: &Runtime, cfg: &Config) -> Result<()> {
             &format!("attn_{variant}_pallas_s{n}_d{d}"),
             &[Value::F32(q.clone()), Value::F32(k.clone()), Value::F32(v.clone())],
         )?;
-        // Native real-quant engine, per head.
-        let var = Variant::parse(variant).unwrap();
-        let mut native = Tensor::zeros(vec![b, h, n, d]);
-        for head in 0..h {
-            let off = head * n * d;
-            // block_q must match the artifact's tile (64) for sage3.
-            let out = if var == Variant::Sage3 {
-                attend_sage3_blocked(
-                    &q.data[off..off + n * d],
-                    &k.data[off..off + n * d],
-                    &v.data[off..off + n * d],
-                    n, n, d, false, 64,
-                )
-            } else {
-                attend(
-                    &q.data[off..off + n * d],
-                    &k.data[off..off + n * d],
-                    &v.data[off..off + n * d],
-                    n, d, false, var,
-                )
-            };
-            native.data[off..off + n * d].copy_from_slice(&out.o);
-        }
+        // Native real-quant engine: one multi-head session per variant.
+        // block_q = 64 must match the artifact's Q tile for sage3 bit
+        // parity (it is inert for the unsmoothed f32/fp4 configs).
+        let attn_cfg = AttnConfig::parse(variant)?.with_block_q(64);
+        let mut engine = AttnEngine::new(attn_cfg);
+        let out = engine.forward(&q.data, &k.data, &v.data, h, n, n, d);
+        let native = Tensor::new(vec![b, h, n, d], out.o)?;
         let fast_vs_native = (
             fast[0].max_abs_diff(&native),
             fast[0].mean_abs_diff(&native),

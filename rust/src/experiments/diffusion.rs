@@ -8,9 +8,10 @@
 use anyhow::{anyhow, Result};
 
 use super::common::{ensure_diff_base, f4, write_history, write_table};
+use crate::attention::AttnConfig;
 use crate::config::Config;
 use crate::coordinator::{LrSchedule, StepMetrics, Trainer};
-use crate::qat::{NativeTrainer, QatVariant, TrainerConfig};
+use crate::qat::{NativeTrainer, TrainerConfig};
 use crate::data::latents::LatentGen;
 use crate::eval::judge::judge_pairwise;
 use crate::eval::video::{reference_stats, video_metrics, VideoMetrics, VideoRefStats};
@@ -351,10 +352,10 @@ pub fn fig3_dynamics_native(cfg: &Config) -> Result<()> {
     let mut series = Vec::new();
     let mut rows = Vec::new();
     for (label, variant) in FIG3_CURVES {
-        let variant = QatVariant::parse(variant).expect("fig3 variant");
+        let attn = AttnConfig::parse(variant).expect("fig3 variant");
         println!("[fig3-native] training '{label}' for {steps} steps (lr {lr})...");
         let tc = TrainerConfig { lr, seed, ..TrainerConfig::default() };
-        let mut trainer = NativeTrainer::new(tc, variant);
+        let mut trainer = NativeTrainer::with_attention(tc, attn);
         trainer.run(steps, (steps / 5).max(1), |m| {
             println!(
                 "  [{label}] step {:>4} loss {:.4} gnorm {:.3}",

@@ -14,6 +14,7 @@
 use anyhow::Result;
 
 use super::common::write_table;
+use crate::attention::{AttnConfig, AttnEngine};
 use crate::bench::bench_units;
 use crate::config::Config;
 use crate::perfmodel::{estimate, Hw, Kernel};
@@ -30,6 +31,46 @@ fn measured(rt: &Runtime, cfg: &Config) -> Result<()> {
     let iters = cfg.usize_or("fig5.iters", 5);
     let mut rows = Vec::new();
     let mut rng = Rng::new(cfg.u64_or("seed", 42));
+
+    // Native real-quant engine rows (no artifacts needed): the same
+    // variant family through one AttnEngine per config, so the table has
+    // measured content even on the stub PJRT backend.
+    {
+        let d = 64usize;
+        for n in [128usize, 256] {
+            let q = rng.normal_vec(n * d, 0.0, 1.0);
+            let k = rng.normal_vec(n * d, 0.0, 1.0);
+            let v = rng.normal_vec(n * d, 0.0, 1.0);
+            let flops = 4.0 * (n * n * d) as f64;
+            let mut per_variant = Vec::new();
+            for variant in ["f32", "fp4", "sage3"] {
+                let mut engine = AttnEngine::new(AttnConfig::parse(variant)?);
+                let r = bench_units(
+                    &format!("native_{variant}_s{n}_d{d}"),
+                    1,
+                    iters.min(3),
+                    flops,
+                    "flop",
+                    || {
+                        let out = engine.forward(&q, &k, &v, 1, n, n, d);
+                        std::hint::black_box(out.o[0]);
+                    },
+                );
+                per_variant.push((variant, r.median_ns, r.throughput()));
+            }
+            let sage = per_variant.iter().find(|(v, ..)| *v == "sage3").map(|x| x.1);
+            for (variant, ns, tput) in &per_variant {
+                let vs_sage = sage.map(|s| format!("{:.2}x", s / ns)).unwrap_or_default();
+                rows.push(vec![
+                    format!("native hd={d} seq={n}"),
+                    variant.to_string(),
+                    format!("{:.3} ms", ns / 1e6),
+                    format!("{:.3e}", tput),
+                    vs_sage,
+                ]);
+            }
+        }
+    }
     for d in [64usize, 128] {
         for n in [128usize, 256, 512, 1024] {
             let (b, h) = (1usize, 4usize);

@@ -8,12 +8,13 @@
 use anyhow::{anyhow, Result};
 
 use super::common::{ensure_lm_base, f4, write_history, write_table};
+use crate::attention::AttnConfig;
 use crate::config::Config;
 use crate::coordinator::{LrSchedule, StepMetrics, Trainer};
 use crate::data::corpus::Corpus;
 use crate::data::tasks::{sft_batch, MC_SUITES};
 use crate::eval::lm::{mc_accuracy, perplexity};
-use crate::qat::{NativeTrainer, QatVariant, TrainerConfig};
+use crate::qat::{NativeTrainer, TrainerConfig};
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
@@ -250,10 +251,11 @@ pub fn fig3c_native(cfg: &Config) -> Result<()> {
     let seed = cfg.u64_or("seed", 42);
     let mut series = Vec::new();
     let mut rows = Vec::new();
-    for (label, variant) in [("BF16 (f32)", QatVariant::F32), ("Attn-QAT", QatVariant::AttnQat)] {
+    for (label, attn) in [("BF16 (f32)", AttnConfig::f32()), ("Attn-QAT", AttnConfig::attn_qat())]
+    {
         println!("[fig3c-native] training '{label}' for {steps} steps (lr {lr})...");
         let tc = TrainerConfig { lr, seed, init_jitter: 0.125, ..TrainerConfig::default() };
-        let mut trainer = NativeTrainer::new(tc, variant);
+        let mut trainer = NativeTrainer::with_attention(tc, attn);
         trainer.run(steps, (steps / 5).max(1), |m| {
             println!(
                 "  [{label}] step {:>4} loss {:.4} gnorm {:.3}",

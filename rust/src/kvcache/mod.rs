@@ -14,6 +14,11 @@
 //!
 //! Memory: sealed pages cost 4.5 bits/element vs 32 for f32 — the ~7×
 //! KV-memory reduction the paper projects for low-precision decoding.
+//!
+//! Reads: [`PagedKvCache::attend_decode`] (fused single-query decode) and
+//! [`PagedKvCache::attend_prefill`] (batched multi-query causal prefill)
+//! are the paged backends of `attention::AttnEngine`; [`PagedKvCache::gather`]
+//! materialises f32 copies for the baseline path.
 
 use std::collections::BTreeMap;
 
@@ -101,6 +106,21 @@ impl PagedKvCache {
     pub fn new(layers: usize, heads: usize, head_dim: usize) -> PagedKvCache {
         assert_eq!(head_dim % 16, 0, "head_dim must be a multiple of 16");
         PagedKvCache { layers, heads, head_dim, seqs: BTreeMap::new() }
+    }
+
+    /// Per-head K/V vector width (the engine derives head counts from it).
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    /// Attention heads per layer.
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    /// Transformer layers this cache spans.
+    pub fn layers(&self) -> usize {
+        self.layers
     }
 
     pub fn add_seq(&mut self, seq: u64) {
@@ -254,94 +274,67 @@ impl PagedKvCache {
         if hc.len == 0 {
             bail!("seq {seq} has no cached tokens");
         }
-        let lut = lut::pair_dot();
-        let scale = 1.0 / (d as f32).sqrt();
-        // Quantize the query once (blocks along d, the QKᵀ contraction) —
-        // every sealed-page dot below runs purely on packed bytes. The
-        // memo makes repeated identical queries (shared across heads, or
-        // re-scored) skip even that single encode pass.
-        let q4 = scratch.qcache.get_or_quantize(q);
-        scratch.acc.clear();
-        scratch.acc.resize(d, 0.0);
-        let mut m = f32::NEG_INFINITY;
-        let mut l = 0.0f32;
-        for page in &hc.pages {
-            match page {
-                Page::Sealed { k, vt } => {
-                    let mut page_m = f32::NEG_INFINITY;
-                    for t in 0..PAGE_SIZE {
-                        let s = lut::packed_row_dot(lut, q4, 0, k, t) * scale;
-                        scratch.s[t] = s;
-                        page_m = page_m.max(s);
-                    }
-                    let new_m = m.max(page_m);
-                    let alpha = (m - new_m).exp(); // 0 on the first page
-                    l *= alpha;
-                    for a in scratch.acc.iter_mut() {
-                        *a *= alpha;
-                    }
-                    for t in 0..PAGE_SIZE {
-                        let p = (scratch.s[t] - new_m).exp();
-                        scratch.p[t] = p;
-                        l += p;
-                    }
-                    m = new_m;
-                    // P̃ for this page is exactly one NVFP4 block along the
-                    // token axis: quantize it and dot against packed Vᵀ.
-                    lut::quantize_row_into(
-                        &scratch.p,
-                        &mut scratch.p_codes,
-                        &mut scratch.p_scales,
-                    );
-                    let sp = e4m3::decode(scratch.p_scales[0]);
-                    for (c, a) in scratch.acc.iter_mut().enumerate() {
-                        let sv = e4m3::decode(vt.scales[c]);
-                        let base = c * lut::BLOCK_BYTES;
-                        let dot = lut::bytes_dot(
-                            lut,
-                            &scratch.p_codes,
-                            &vt.codes[base..base + lut::BLOCK_BYTES],
-                        );
-                        *a += dot * (sp * sv);
-                    }
-                }
-                Page::Hot { k, v, len } => {
-                    // f32 fallback for the still-filling tail.
-                    let n = *len;
-                    let mut page_m = f32::NEG_INFINITY;
-                    for t in 0..n {
-                        let kt = &k[t * d..(t + 1) * d];
-                        let mut acc = 0.0f32;
-                        for c in 0..d {
-                            acc += q[c] * kt[c];
-                        }
-                        let s = acc * scale;
-                        scratch.s[t] = s;
-                        page_m = page_m.max(s);
-                    }
-                    let new_m = m.max(page_m);
-                    let alpha = (m - new_m).exp();
-                    l *= alpha;
-                    for a in scratch.acc.iter_mut() {
-                        *a *= alpha;
-                    }
-                    for t in 0..n {
-                        let p = (scratch.s[t] - new_m).exp();
-                        l += p;
-                        let vt_row = &v[t * d..(t + 1) * d];
-                        for (c, a) in scratch.acc.iter_mut().enumerate() {
-                            *a += p * vt_row[c];
-                        }
-                    }
-                    m = new_m;
-                }
-            }
+        Ok(attend_query_walk(hc, d, q, hc.len, out, scratch))
+    }
+
+    /// Batched multi-query prefill attention over the paged FP4 cache —
+    /// the engine-side backend of `AttnEngine::prefill`.
+    ///
+    /// The `nq` query rows in `q` (`nq × head_dim`) belong to the **last
+    /// `nq` cached tokens** (append the prompt first, then attend), with
+    /// aligned-ends causality: query `i` sees keys `0 ..= len − nq + i`.
+    /// One call walks the page list once per query with the same online
+    /// softmax as [`PagedKvCache::attend_decode`] — sealed pages consumed
+    /// in the packed domain, hot tail in f32 — so the per-token sequence
+    /// lookup, query-cache probe, and accumulator setup of token-at-a-time
+    /// decode amortise across the whole prompt. The final partial page of
+    /// a query's causal window masks by zeroing P̃ beyond the limit before
+    /// quantization, matching the engine-side padding semantics.
+    ///
+    /// Writes outputs into `out` (`nq × head_dim`) and per-row logsumexps
+    /// into `lse` (`nq`). For a query whose window covers the whole cache
+    /// the result is bitwise identical to [`PagedKvCache::attend_decode`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn attend_prefill(
+        &self,
+        seq: u64,
+        layer: usize,
+        head: usize,
+        q: &[f32],
+        nq: usize,
+        out: &mut [f32],
+        lse: &mut [f32],
+        scratch: &mut DecodeScratch,
+    ) -> Result<()> {
+        let d = self.head_dim;
+        if q.len() != nq * d || out.len() != nq * d || lse.len() != nq {
+            bail!("q/out must be nq={nq} x head_dim={d}, lse nq={nq} long");
         }
-        let inv = 1.0 / l;
-        for (oc, a) in out.iter_mut().zip(&scratch.acc) {
-            *oc = a * inv;
+        let idx = layer * self.heads + head;
+        let hc = self
+            .seqs
+            .get(&seq)
+            .ok_or_else(|| anyhow!("unknown seq {seq}"))?
+            .get(idx)
+            .ok_or_else(|| anyhow!("bad layer/head {layer}/{head}"))?;
+        let len = hc.len;
+        if nq == 0 || nq > len {
+            bail!("prefill needs 1..=len queries (nq={nq}, cached len={len})");
         }
-        Ok(m + l.ln())
+        for i in 0..nq {
+            // Aligned-ends causal window: this query's token position is
+            // len - nq + i, so it attends limit = position + 1 keys.
+            let limit = len - nq + i + 1;
+            lse[i] = attend_query_walk(
+                hc,
+                d,
+                &q[i * d..(i + 1) * d],
+                limit,
+                &mut out[i * d..(i + 1) * d],
+                scratch,
+            );
+        }
+        Ok(())
     }
 
     /// (bytes used, bytes an f32 cache would use) across all sequences.
@@ -362,6 +355,123 @@ impl PagedKvCache {
         }
         (used, f32_equiv)
     }
+}
+
+/// Shared per-query online-softmax page walk behind
+/// [`PagedKvCache::attend_decode`] and [`PagedKvCache::attend_prefill`]:
+/// attends keys `0..limit` of one (seq, layer, head) page list — sealed
+/// pages consumed in the packed domain (query quantized once through the
+/// scratch's N-way memo, P̃ quantized per page), the hot tail in f32 —
+/// writing the output row into `out` and returning the logsumexp.
+///
+/// A `limit` ending inside a sealed page masks causally by zeroing P̃
+/// beyond the window before quantizing the block, matching the
+/// engine-side padding semantics; with `limit == hc.len` every page is
+/// full and the walk is exactly the single-query decode.
+fn attend_query_walk(
+    hc: &HeadCache,
+    d: usize,
+    q: &[f32],
+    limit: usize,
+    out: &mut [f32],
+    scratch: &mut DecodeScratch,
+) -> f32 {
+    let lut = lut::pair_dot();
+    let scale = 1.0 / (d as f32).sqrt();
+    // Quantize the query once (blocks along d, the QKᵀ contraction) —
+    // every sealed-page dot below runs purely on packed bytes. The memo
+    // makes repeated identical queries (shared across heads, or
+    // re-scored) skip even that single encode pass.
+    let q4 = scratch.qcache.get_or_quantize(q);
+    scratch.acc.clear();
+    scratch.acc.resize(d, 0.0);
+    let mut m = f32::NEG_INFINITY;
+    let mut l = 0.0f32;
+    let mut pos = 0usize; // tokens before the current page
+    for page in &hc.pages {
+        if pos >= limit {
+            break;
+        }
+        match page {
+            Page::Sealed { k, vt } => {
+                let n_in = PAGE_SIZE.min(limit - pos);
+                let mut page_m = f32::NEG_INFINITY;
+                for t in 0..n_in {
+                    let s = lut::packed_row_dot(lut, q4, 0, k, t) * scale;
+                    scratch.s[t] = s;
+                    page_m = page_m.max(s);
+                }
+                let new_m = m.max(page_m);
+                let alpha = (m - new_m).exp(); // 0 on the first page
+                l *= alpha;
+                for a in scratch.acc.iter_mut() {
+                    *a *= alpha;
+                }
+                for t in 0..n_in {
+                    let p = (scratch.s[t] - new_m).exp();
+                    scratch.p[t] = p;
+                    l += p;
+                }
+                // Causal mask inside the page: zero P̃ beyond the window
+                // before quantizing the block (no-op for a full page).
+                for p in scratch.p[n_in..].iter_mut() {
+                    *p = 0.0;
+                }
+                m = new_m;
+                // P̃ for this page is exactly one NVFP4 block along the
+                // token axis: quantize it and dot against packed Vᵀ.
+                lut::quantize_row_into(&scratch.p, &mut scratch.p_codes, &mut scratch.p_scales);
+                let sp = e4m3::decode(scratch.p_scales[0]);
+                for (c, a) in scratch.acc.iter_mut().enumerate() {
+                    let sv = e4m3::decode(vt.scales[c]);
+                    let base = c * lut::BLOCK_BYTES;
+                    let dot = lut::bytes_dot(
+                        lut,
+                        &scratch.p_codes,
+                        &vt.codes[base..base + lut::BLOCK_BYTES],
+                    );
+                    *a += dot * (sp * sv);
+                }
+                pos += PAGE_SIZE;
+            }
+            Page::Hot { k, v, len: hot_len } => {
+                // f32 fallback for the still-filling tail.
+                let n = (*hot_len).min(limit - pos);
+                let mut page_m = f32::NEG_INFINITY;
+                for t in 0..n {
+                    let kt = &k[t * d..(t + 1) * d];
+                    let mut acc = 0.0f32;
+                    for c in 0..d {
+                        acc += q[c] * kt[c];
+                    }
+                    let s = acc * scale;
+                    scratch.s[t] = s;
+                    page_m = page_m.max(s);
+                }
+                let new_m = m.max(page_m);
+                let alpha = (m - new_m).exp();
+                l *= alpha;
+                for a in scratch.acc.iter_mut() {
+                    *a *= alpha;
+                }
+                for t in 0..n {
+                    let p = (scratch.s[t] - new_m).exp();
+                    l += p;
+                    let vt_row = &v[t * d..(t + 1) * d];
+                    for (c, a) in scratch.acc.iter_mut().enumerate() {
+                        *a += p * vt_row[c];
+                    }
+                }
+                m = new_m;
+                pos += *hot_len;
+            }
+        }
+    }
+    let inv = 1.0 / l;
+    for (oc, a) in out.iter_mut().zip(&scratch.acc) {
+        *oc = a * inv;
+    }
+    m + l.ln()
 }
 
 #[cfg(test)]
@@ -489,7 +599,7 @@ mod tests {
         // quantizes the query and P̃ for sealed pages (the paper's
         // inference-kernel semantics), so agreement is to FP4 tolerance,
         // not bit-exact.
-        use crate::attention::flash::attend_f32;
+        use crate::attention::flash::attend_f32_core;
         let d = 64;
         for &(tokens, seed) in &[(16usize, 10u64), (17, 11), (37, 12), (512, 13)] {
             let mut c = PagedKvCache::new(1, 1, d);
@@ -502,7 +612,7 @@ mod tests {
             }
             let q = rng.normal_vec(d, 0.0, 1.0);
             let (kc, vc) = c.gather(1, 0, 0).unwrap();
-            let base = attend_f32(&q, &kc, &vc, 1, tokens, d, false);
+            let base = attend_f32_core(&q, &kc, &vc, 1, tokens, d, false);
             let mut out = vec![0.0; d];
             let mut scratch = DecodeScratch::new();
             let lse = c.attend_decode(1, 0, 0, &q, &mut out, &mut scratch).unwrap();
@@ -549,6 +659,91 @@ mod tests {
         let mut o1b = vec![0.0; d];
         c.attend_decode(1, 0, 1, &q, &mut o1b, &mut fresh).unwrap();
         assert_eq!(o1, o1b);
+    }
+
+    #[test]
+    fn attend_prefill_matches_f32_reference_causally() {
+        // Batched prefill vs gather + causal f32 attention (aligned ends):
+        // FP4 tolerance, every query row finite, lse in agreement.
+        use crate::attention::flash::attend_f32_core;
+        let d = 64;
+        for &(tokens, nq, seed) in &[(16usize, 4usize, 20u64), (37, 8, 21), (64, 16, 22)] {
+            let mut c = PagedKvCache::new(1, 1, d);
+            c.add_seq(1);
+            let mut rng = Rng::new(seed);
+            for _ in 0..tokens {
+                let k = rng.normal_vec(d, 0.0, 1.0);
+                let v = rng.normal_vec(d, 0.0, 1.0);
+                c.append(1, 0, 0, &k, &v).unwrap();
+            }
+            let q = rng.normal_vec(nq * d, 0.0, 1.0);
+            let (kc, vc) = c.gather(1, 0, 0).unwrap();
+            let base = attend_f32_core(&q, &kc, &vc, nq, tokens, d, true);
+            let mut out = vec![0.0f32; nq * d];
+            let mut lse = vec![0.0f32; nq];
+            let mut scratch = DecodeScratch::new();
+            c.attend_prefill(1, 0, 0, &q, nq, &mut out, &mut lse, &mut scratch).unwrap();
+            let max_diff = out
+                .iter()
+                .zip(&base.o)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_diff < 0.5, "tokens={tokens} nq={nq}: max_diff {max_diff}");
+            for i in 0..nq {
+                assert!((lse[i] - base.lse[i]).abs() < 0.5, "tokens={tokens} row {i}");
+            }
+            assert!(out.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn attend_prefill_full_window_matches_attend_decode_bitwise() {
+        // The last prefill query sees the whole cache — identical float
+        // sequence to the fused single-query decode, so bitwise equal.
+        // Covers both a fully-sealed cache and one with a hot tail.
+        let d = 32;
+        for &(tokens, seed) in &[(32usize, 23u64), (37, 24)] {
+            let mut c = PagedKvCache::new(1, 1, d);
+            c.add_seq(1);
+            let mut rng = Rng::new(seed);
+            for _ in 0..tokens {
+                let k = rng.normal_vec(d, 0.0, 1.0);
+                let v = rng.normal_vec(d, 0.0, 1.0);
+                c.append(1, 0, 0, &k, &v).unwrap();
+            }
+            let nq = 4;
+            let q = rng.normal_vec(nq * d, 0.0, 1.0);
+            let mut out = vec![0.0f32; nq * d];
+            let mut lse = vec![0.0f32; nq];
+            let mut scratch = DecodeScratch::new();
+            c.attend_prefill(1, 0, 0, &q, nq, &mut out, &mut lse, &mut scratch).unwrap();
+            let mut dec = vec![0.0f32; d];
+            let mut fresh = DecodeScratch::new();
+            let dec_lse = c
+                .attend_decode(1, 0, 0, &q[(nq - 1) * d..], &mut dec, &mut fresh)
+                .unwrap();
+            assert_eq!(&out[(nq - 1) * d..], &dec[..], "tokens={tokens}");
+            assert_eq!(lse[nq - 1], dec_lse, "tokens={tokens}");
+        }
+    }
+
+    #[test]
+    fn attend_prefill_rejects_bad_query_counts() {
+        let d = 16;
+        let mut c = PagedKvCache::new(1, 1, d);
+        fill(&mut c, 1, 8, d, 25);
+        let mut scratch = DecodeScratch::new();
+        let q = vec![0.0f32; 16 * d];
+        let mut out = vec![0.0f32; 16 * d];
+        let mut lse = vec![0.0f32; 16];
+        // More queries than cached tokens.
+        assert!(c.attend_prefill(1, 0, 0, &q, 16, &mut out, &mut lse, &mut scratch).is_err());
+        // Zero queries.
+        assert!(c.attend_prefill(1, 0, 0, &[], 0, &mut [], &mut [], &mut scratch).is_err());
+        // Unknown sequence.
+        assert!(c
+            .attend_prefill(9, 0, 0, &q[..8 * d], 8, &mut out[..8 * d], &mut lse[..8], &mut scratch)
+            .is_err());
     }
 
     #[test]

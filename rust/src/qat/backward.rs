@@ -37,18 +37,10 @@ pub struct AttnGrads {
     pub dv: Vec<f32>,
 }
 
-/// Backward ablation switches (the paper's §3.2 fixes; see the `qat`
-/// module docs for the switch-combination → Figure-3-curve table).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct BwdSwitches {
-    /// Fix A (part 1): recompute S from the packed FP4 Q̂/K̂ and run the
-    /// dV/dQ/dK matmuls over the dequantized Q^F/K^F/V^F.
-    pub fq_inputs: bool,
-    /// Fix A (part 2): fake-quantize the recomputed P before dV (l.11).
-    pub fq_p: bool,
-    /// Fix B: D = rowsum(dO ∘ O′) instead of rowsum(dO ∘ O) (l.3).
-    pub high_prec_o: bool,
-}
+// The switch struct now lives with the unified config (an `AttnConfig`
+// carries it as `.bwd`); re-exported here so `qat::BwdSwitches` keeps
+// working.
+pub use crate::attention::BwdSwitches;
 
 /// Attention backward over `(O, O′, lse, dO)` residuals.
 ///
@@ -185,14 +177,15 @@ pub fn flash_backward(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // residuals come from the pinned forward shims
 mod tests {
     use super::*;
     use crate::attention::engine::attend_fp4_train;
     use crate::attention::flash::attend_f32;
     use crate::rng::Rng;
 
-    const QAT: BwdSwitches = BwdSwitches { fq_inputs: true, fq_p: true, high_prec_o: true };
-    const DROPIN: BwdSwitches = BwdSwitches { fq_inputs: false, fq_p: false, high_prec_o: false };
+    const QAT: BwdSwitches = BwdSwitches::MATCHED;
+    const DROPIN: BwdSwitches = BwdSwitches::STOCK;
 
     fn rand_case(nq: usize, nk: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
         let mut rng = Rng::new(seed);

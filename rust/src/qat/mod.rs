@@ -45,7 +45,14 @@ pub mod trainer;
 pub use backward::{flash_backward, AttnGrads, BwdSwitches};
 pub use trainer::{NativeTrainer, TrainerConfig};
 
+use crate::attention::AttnConfig;
+
 /// Training variant: forward precision + backward ablation switches.
+///
+/// Each variant is a named preset over the unified [`AttnConfig`]
+/// (see [`QatVariant::config`]); parse strings through
+/// [`AttnConfig::parse`], which covers this vocabulary and the forward
+/// variants in one place.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum QatVariant {
     /// f32 forward and backward (the paper's "BF16" baseline).
@@ -61,6 +68,7 @@ pub enum QatVariant {
 }
 
 impl QatVariant {
+    #[deprecated(note = "use AttnConfig::parse — one vocabulary, errors list the valid names")]
     pub fn parse(s: &str) -> Option<QatVariant> {
         match s {
             "f32" | "bf16" => Some(QatVariant::F32),
@@ -70,6 +78,13 @@ impl QatVariant {
             "fp4" | "dropin" => Some(QatVariant::DropIn),
             _ => None,
         }
+    }
+
+    /// The unified engine config this preset names: forward precision plus
+    /// this ablation's backward switches.
+    pub fn config(self) -> AttnConfig {
+        let base = if self.quantized_forward() { AttnConfig::fp4() } else { AttnConfig::f32() };
+        base.with_bwd(self.switches())
     }
 
     /// Does the forward run through the quantized FP4 engine?
@@ -109,8 +124,26 @@ mod tests {
         assert!(!QatVariant::NoFqP.switches().fq_p);
         assert!(!QatVariant::F32.quantized_forward());
         assert!(QatVariant::DropIn.quantized_forward());
-        assert_eq!(QatVariant::parse("qat"), Some(QatVariant::AttnQat));
-        assert_eq!(QatVariant::parse("fp4"), Some(QatVariant::DropIn));
-        assert_eq!(QatVariant::parse("nope"), None);
+        #[allow(deprecated)]
+        {
+            assert_eq!(QatVariant::parse("qat"), Some(QatVariant::AttnQat));
+            assert_eq!(QatVariant::parse("fp4"), Some(QatVariant::DropIn));
+            assert_eq!(QatVariant::parse("nope"), None);
+        }
+    }
+
+    #[test]
+    fn variant_configs_match_unified_parse() {
+        // Each named preset must agree with the AttnConfig::parse entry of
+        // the same name — the two vocabularies cannot drift.
+        for (name, variant) in [
+            ("f32", QatVariant::F32),
+            ("qat", QatVariant::AttnQat),
+            ("qat_no_o_prime", QatVariant::NoHighPrecO),
+            ("qat_no_fq_p", QatVariant::NoFqP),
+            ("fp4", QatVariant::DropIn),
+        ] {
+            assert_eq!(variant.config(), AttnConfig::parse(name).unwrap(), "{name}");
+        }
     }
 }

@@ -21,8 +21,7 @@
 //! here (mirroring `coordinator::Trainer`): steps keep running and the
 //! history records the NaNs/spikes for the figure.
 
-use crate::attention::engine::attend_fp4_train;
-use crate::attention::flash::attend_f32;
+use crate::attention::{AttnConfig, AttnEngine};
 use crate::coordinator::StepMetrics;
 use crate::rng::Rng;
 
@@ -124,7 +123,13 @@ impl Param {
 /// Native SGD+momentum trainer over one attention layer.
 pub struct NativeTrainer {
     pub cfg: TrainerConfig,
-    pub variant: QatVariant,
+    /// The unified attention config driving the student's forward and the
+    /// backward ablation switches.
+    pub attn: AttnConfig,
+    /// Student attention session (the variant's engine).
+    engine: AttnEngine,
+    /// Frozen f32 teacher session.
+    teacher: AttnEngine,
     wq: Param,
     wk: Param,
     wv: Param,
@@ -141,7 +146,18 @@ pub struct NativeTrainer {
 }
 
 impl NativeTrainer {
+    /// Build a trainer from one of the named ablation presets.
     pub fn new(cfg: TrainerConfig, variant: QatVariant) -> NativeTrainer {
+        let attn = variant.config();
+        NativeTrainer::with_attention(cfg, attn)
+    }
+
+    /// Build a trainer from an explicit [`AttnConfig`] (e.g. from
+    /// `AttnConfig::parse`); `cfg.causal` overrides the config's causal
+    /// flag so the teacher and student always agree with the trainer
+    /// setting.
+    pub fn with_attention(cfg: TrainerConfig, attn: AttnConfig) -> NativeTrainer {
+        let attn = attn.with_causal(cfg.causal);
         let (dm, dh) = (cfg.d_model, cfg.d_head);
         assert_eq!(dh % 16, 0, "d_head must be a multiple of 16");
         let root = Rng::new(cfg.seed);
@@ -162,7 +178,9 @@ impl NativeTrainer {
         let data = root.split("data");
         NativeTrainer {
             cfg,
-            variant,
+            attn,
+            engine: AttnEngine::new(attn),
+            teacher: AttnEngine::new(AttnConfig::f32().with_causal(attn.causal)),
             wq: Param::new(wq),
             wk: Param::new(wk),
             wv: Param::new(wv),
@@ -194,20 +212,15 @@ impl NativeTrainer {
         let qs = matmul(&x, &self.tq, n, dm, dh);
         let ks = matmul(&x, &self.tk, n, dm, dh);
         let vs = matmul(&x, &self.tv, n, dm, dh);
-        let y = attend_f32(&qs, &ks, &vs, n, n, dh, causal).o;
+        let y = self.teacher.forward(&qs, &ks, &vs, 1, n, n, dh).o;
 
-        // Student forward through the variant's engine.
+        // Student training forward through the session's engine (for f32
+        // sessions O′ == O, so one call covers every variant).
         let q = matmul(&x, &self.wq.w, n, dm, dh);
         let k = matmul(&x, &self.wk.w, n, dm, dh);
         let v = matmul(&x, &self.wv.w, n, dm, dh);
-        let (o, o_prime, lse) = if self.variant.quantized_forward() {
-            let t = attend_fp4_train(&q, &k, &v, n, n, dh, causal);
-            (t.o, t.o_prime, t.lse)
-        } else {
-            let out = attend_f32(&q, &k, &v, n, n, dh, causal);
-            let o_prime = out.o.clone();
-            (out.o, o_prime, out.lse)
-        };
+        let t = self.engine.forward_train(&q, &k, &v, 1, n, n, dh);
+        let (o, o_prime, lse) = (t.o, t.o_prime, t.lse);
 
         // MSE on the quantized-path output.
         let numel = (n * dh) as f32;
@@ -233,7 +246,7 @@ impl NativeTrainer {
             &o_prime,
             &lse,
             &dout,
-            self.variant.switches(),
+            self.attn.bwd,
         );
         let gq = matmul_tn(&x, &g.dq, n, dm, dh);
         let gk = matmul_tn(&x, &g.dk, n, dm, dh);

@@ -16,8 +16,8 @@ use std::collections::VecDeque;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::attention::flash::attend_f32;
-use crate::kvcache::{DecodeScratch, PagedKvCache};
+use crate::attention::{AttnConfig, AttnEngine};
+use crate::kvcache::PagedKvCache;
 use crate::rng::Rng;
 use crate::runtime::{Runtime, Value};
 use crate::tensor::Tensor;
@@ -77,11 +77,11 @@ pub struct DecodeServer<'rt> {
     active: Vec<Active>,
     done: Vec<Completion>,
     rng: Rng,
-    /// Per-slot decode scratch, reused every step (no steady-state alloc).
-    scratches: Vec<DecodeScratch>,
-    /// Use the legacy materialising `gather` + `attend_f32` attention
-    /// instead of the fused packed decode (for A/B comparisons).
-    baseline_attn: bool,
+    /// Attention session config every slot engine is built from.
+    attn_cfg: AttnConfig,
+    /// Per-slot attention engines (owned workspaces), reused every step —
+    /// no steady-state allocation.
+    engines: Vec<AttnEngine>,
     pub stats: ServeStats,
 }
 
@@ -112,8 +112,8 @@ impl<'rt> DecodeServer<'rt> {
             active: Vec::new(),
             done: Vec::new(),
             rng: Rng::new(0x5e7e),
-            scratches: Vec::new(),
-            baseline_attn: false,
+            attn_cfg: AttnConfig::fp4(),
+            engines: Vec::new(),
             stats: ServeStats::default(),
         })
     }
@@ -122,10 +122,15 @@ impl<'rt> DecodeServer<'rt> {
         self.queue.push_back(req);
     }
 
-    /// Switch between the fused packed decode attention (default) and the
-    /// legacy materialising `gather` + `attend_f32` baseline.
-    pub fn set_baseline_attention(&mut self, on: bool) {
-        self.baseline_attn = on;
+    /// Reconfigure the attention sessions (existing engines are rebuilt).
+    ///
+    /// The default is the fused packed decode (`AttnConfig::fp4()`);
+    /// passing [`AttnConfig::f32`] selects the materialising gather + f32
+    /// baseline — the A/B comparison the server used to carry as a
+    /// dedicated bool.
+    pub fn set_attention(&mut self, cfg: AttnConfig) {
+        self.attn_cfg = cfg;
+        self.engines.clear();
     }
 
     fn weight(&self, name: &str) -> Result<&Tensor> {
@@ -222,71 +227,35 @@ impl<'rt> DecodeServer<'rt> {
                         .append(seq, l, head, &k.data[off..off + hd], &v.data[off..off + hd])?;
                 }
             }
-            // Phase 2: attend. Default is the fused packed decode
-            // (`attend_decode`) — sealed pages consumed in the 4-bit
-            // domain, no gather, no per-token dequant — with the
-            // per-(slot, head) loop fanned out across slots via
+            // Phase 2: attend — one engine `decode` call per slot covers
+            // every head of the layer. The engine config decides the path:
+            // fused packed decode by default, gather + f32 when the server
+            // was reconfigured with the baseline config. Slots fan out via
             // `std::thread::scope` (the cache is read-only here and each
-            // slot writes a disjoint row of `attn`).
-            if self.baseline_attn {
-                for (s, a) in self.active.iter().enumerate() {
-                    let seq = a.req.id;
-                    for head in 0..self.heads {
-                        let off = s * d + head * hd;
-                        let (kc, vc) = self.cache.gather(seq, l, head)?;
-                        let nk = kc.len() / hd;
-                        let out = attend_f32(&q.data[off..off + hd], &kc, &vc, 1, nk, hd, false);
-                        attn.data[off..off + hd].copy_from_slice(&out.o);
-                    }
-                }
-            } else if self.active.len() == 1 {
+            // slot's engine writes a disjoint row of `attn`).
+            while self.engines.len() < self.active.len() {
+                self.engines.push(AttnEngine::new(self.attn_cfg));
+            }
+            if self.active.len() == 1 {
                 // One slot: thread spawn/join would dwarf the attention
                 // work on short caches — run inline.
-                if self.scratches.is_empty() {
-                    self.scratches.push(DecodeScratch::new());
-                }
                 let seq = self.active[0].req.id;
-                for head in 0..self.heads {
-                    let off = head * hd;
-                    self.cache.attend_decode(
-                        seq,
-                        l,
-                        head,
-                        &q.data[off..off + hd],
-                        &mut attn.data[off..off + hd],
-                        &mut self.scratches[0],
-                    )?;
-                }
+                self.engines[0].decode(&self.cache, seq, l, &q.data[..d], &mut attn.data[..d])?;
             } else {
-                while self.scratches.len() < self.active.len() {
-                    self.scratches.push(DecodeScratch::new());
-                }
                 let cache = &self.cache;
                 let active = &self.active;
-                let heads = self.heads;
                 let qd = &q.data;
                 let results: Vec<Result<()>> = std::thread::scope(|scope| {
                     let mut handles = Vec::with_capacity(active.len());
-                    for ((s, (a, row)), scratch) in active
+                    for ((s, (a, row)), engine) in active
                         .iter()
                         .zip(attn.data.chunks_mut(d))
                         .enumerate()
-                        .zip(self.scratches.iter_mut())
+                        .zip(self.engines.iter_mut())
                     {
                         let seq = a.req.id;
-                        handles.push(scope.spawn(move || -> Result<()> {
-                            for head in 0..heads {
-                                let off = head * hd;
-                                cache.attend_decode(
-                                    seq,
-                                    l,
-                                    head,
-                                    &qd[s * d + off..s * d + off + hd],
-                                    &mut row[off..off + hd],
-                                    scratch,
-                                )?;
-                            }
-                            Ok(())
+                        handles.push(scope.spawn(move || {
+                            engine.decode(cache, seq, l, &qd[s * d..(s + 1) * d], row)
                         }));
                     }
                     handles.into_iter().map(|h| h.join().expect("attend thread panicked")).collect()

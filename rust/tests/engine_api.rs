@@ -1,0 +1,260 @@
+//! `AttnEngine` dispatch tests: the batched multi-head session must be
+//! bitwise identical to independent single-head calls through the
+//! deprecated free-function shims, and the engine must reproduce the JAX
+//! golden vectors through the same configs.
+//!
+//! (The shims themselves delegate to the same cores, so these tests pin
+//! the whole migration: config → engine → core → shim all agree.)
+
+#![allow(deprecated)] // the deprecated shims are the comparison subjects
+
+use attn_qat::attention::engine::{attend_fp4, attend_fp4_dequant, attend_fp4_train, attend_sage3};
+use attn_qat::attention::flash::attend_f32;
+use attn_qat::attention::{AttnConfig, AttnEngine, AttnOutput, Backend};
+use attn_qat::json::Json;
+use attn_qat::kvcache::{DecodeScratch, PagedKvCache};
+use attn_qat::rng::Rng;
+
+fn rand_heads(
+    h: usize,
+    nq: usize,
+    nk: usize,
+    d: usize,
+    seed: u64,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    (
+        rng.normal_vec(h * nq * d, 0.0, 1.0),
+        rng.normal_vec(h * nk * d, 0.0, 1.0),
+        rng.normal_vec(h * nk * d, 0.0, 1.0),
+    )
+}
+
+type ShimFn = fn(&[f32], &[f32], &[f32], usize, usize, usize, bool) -> AttnOutput;
+
+#[test]
+fn multi_head_forward_bitwise_matches_single_head_shims() {
+    // h batched heads == h independent single-head calls, bit for bit,
+    // across precisions, causal/non-causal, and nq != nk (both ways).
+    let shims: [(&str, ShimFn); 3] =
+        [("f32", attend_f32), ("fp4", attend_fp4), ("sage3", attend_sage3)];
+    let h = 3usize;
+    for (variant, shim) in shims {
+        for &(nq, nk, d, seed) in
+            &[(16usize, 16usize, 32usize, 80u64), (8, 19, 64, 81), (9, 5, 16, 82)]
+        {
+            for causal in [false, true] {
+                let (q, k, v) = rand_heads(h, nq, nk, d, seed);
+                let cfg = AttnConfig::parse(variant).unwrap().with_causal(causal);
+                let mut engine = AttnEngine::new(cfg);
+                let got = engine.forward(&q, &k, &v, h, nq, nk, d);
+                for head in 0..h {
+                    let want = shim(
+                        &q[head * nq * d..(head + 1) * nq * d],
+                        &k[head * nk * d..(head + 1) * nk * d],
+                        &v[head * nk * d..(head + 1) * nk * d],
+                        nq,
+                        nk,
+                        d,
+                        causal,
+                    );
+                    assert_eq!(
+                        got.head_o(head),
+                        &want.o[..],
+                        "{variant} head {head} nq={nq} nk={nk} causal={causal}"
+                    );
+                    assert_eq!(
+                        got.head_lse(head),
+                        &want.lse[..],
+                        "{variant} head {head} lse nq={nq} nk={nk} causal={causal}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_head_train_forward_bitwise_matches_shim() {
+    let (h, nq, nk, d) = (4usize, 8usize, 19usize, 32usize);
+    for causal in [false, true] {
+        let (q, k, v) = rand_heads(h, nq, nk, d, 83);
+        let mut engine = AttnEngine::new(AttnConfig::attn_qat().with_causal(causal));
+        let got = engine.forward_train(&q, &k, &v, h, nq, nk, d);
+        for head in 0..h {
+            let want = attend_fp4_train(
+                &q[head * nq * d..(head + 1) * nq * d],
+                &k[head * nk * d..(head + 1) * nk * d],
+                &v[head * nk * d..(head + 1) * nk * d],
+                nq,
+                nk,
+                d,
+                causal,
+            );
+            let (lo, hi) = (head * nq * d, (head + 1) * nq * d);
+            assert_eq!(&got.o[lo..hi], &want.o[..], "head {head} causal={causal}");
+            assert_eq!(&got.o_prime[lo..hi], &want.o_prime[..], "head {head} o'");
+            assert_eq!(&got.lse[head * nq..(head + 1) * nq], &want.lse[..], "head {head} lse");
+        }
+    }
+}
+
+#[test]
+fn dequant_backend_matches_dequant_shim() {
+    let (h, n, d) = (2usize, 12usize, 32usize);
+    let (q, k, v) = rand_heads(h, n, n, d, 84);
+    let mut engine = AttnEngine::new(AttnConfig::fp4().with_backend(Backend::Dequant));
+    let got = engine.forward(&q, &k, &v, h, n, n, d);
+    for head in 0..h {
+        let want = attend_fp4_dequant(
+            &q[head * n * d..(head + 1) * n * d],
+            &k[head * n * d..(head + 1) * n * d],
+            &v[head * n * d..(head + 1) * n * d],
+            n,
+            n,
+            d,
+            false,
+        );
+        assert_eq!(got.head_o(head), &want.o[..], "head {head}");
+    }
+}
+
+#[test]
+fn engine_scratch_reuse_is_deterministic() {
+    // Re-running the same session (warm workspaces, warm query cache)
+    // must reproduce the first answer bit for bit.
+    let (h, n, d) = (2usize, 16usize, 32usize);
+    let (q, k, v) = rand_heads(h, n, n, d, 85);
+    let mut engine = AttnEngine::new(AttnConfig::sage3());
+    let a = engine.forward(&q, &k, &v, h, n, n, d);
+    let b = engine.forward(&q, &k, &v, h, n, n, d);
+    assert_eq!(a.o, b.o);
+    assert_eq!(a.lse, b.lse);
+}
+
+fn load_golden() -> Json {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden/attention_golden.json");
+    let text =
+        std::fs::read_to_string(path).expect("golden vectors missing — run `make artifacts` first");
+    Json::parse(&text).expect("parse golden json")
+}
+
+#[test]
+fn engine_matches_shims_and_goldens() {
+    // For every golden case: the engine with the parsed config must be
+    // bitwise identical to the deprecated shim, and both inside the JAX
+    // oracle tolerance — the migration cannot move the pinned numerics.
+    let g = load_golden();
+    let cases: [(&str, &str, bool, ShimFn, f32); 5] = [
+        ("f32_full", "f32", false, attend_f32, 1e-5),
+        ("f32_causal", "f32", true, attend_f32, 1e-5),
+        ("fp4_full", "fp4", false, attend_fp4, 5e-5),
+        ("fp4_causal", "fp4", true, attend_fp4, 5e-5),
+        ("sage3_full", "sage3", false, attend_sage3, 5e-5),
+    ];
+    for (case_name, variant, causal, shim, tol) in cases {
+        let case = g.get(case_name).clone();
+        let n = case.get("n").as_usize().unwrap();
+        let d = case.get("d").as_usize().unwrap();
+        let q = case.get("q").to_f32_vec().unwrap();
+        let k = case.get("k").to_f32_vec().unwrap();
+        let v = case.get("v").to_f32_vec().unwrap();
+        let want_o = case.get("o").to_f32_vec().unwrap();
+
+        let mut engine = AttnEngine::new(AttnConfig::parse(variant).unwrap().with_causal(causal));
+        let got = engine.forward(&q, &k, &v, 1, n, n, d);
+        let legacy = shim(&q, &k, &v, n, n, d, causal);
+        assert_eq!(got.o, legacy.o, "{case_name}: engine vs shim o");
+        assert_eq!(got.lse, legacy.lse, "{case_name}: engine vs shim lse");
+
+        let max_o = got
+            .o
+            .iter()
+            .zip(&want_o)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_o < tol, "{case_name}: golden diff {max_o}");
+    }
+}
+
+#[test]
+fn engine_decode_covers_both_serving_paths() {
+    // One engine.decode call per layer row == per-head attend_decode /
+    // gather+f32, for the fused and baseline configs respectively.
+    let (heads, d, tokens) = (2usize, 32usize, 37usize);
+    let mut cache = PagedKvCache::new(1, heads, d);
+    cache.add_seq(7);
+    let mut rng = Rng::new(86);
+    for _ in 0..tokens {
+        for h in 0..heads {
+            let k = rng.normal_vec(d, 0.0, 1.0);
+            let v = rng.normal_vec(d, 0.0, 1.0);
+            cache.append(7, 0, h, &k, &v).unwrap();
+        }
+    }
+    let q = rng.normal_vec(heads * d, 0.0, 1.0);
+
+    // Fused path vs raw attend_decode.
+    let mut fused = AttnEngine::new(AttnConfig::fp4());
+    let mut out = vec![0.0f32; heads * d];
+    fused.decode(&cache, 7, 0, &q, &mut out).unwrap();
+    for h in 0..heads {
+        let mut want = vec![0.0f32; d];
+        let mut scratch = DecodeScratch::new();
+        cache.attend_decode(7, 0, h, &q[h * d..(h + 1) * d], &mut want, &mut scratch).unwrap();
+        assert_eq!(&out[h * d..(h + 1) * d], &want[..], "fused head {h}");
+    }
+
+    // Baseline config vs gather + f32.
+    let mut baseline = AttnEngine::new(AttnConfig::f32());
+    let mut out_b = vec![0.0f32; heads * d];
+    baseline.decode(&cache, 7, 0, &q, &mut out_b).unwrap();
+    for h in 0..heads {
+        let (kc, vc) = cache.gather(7, 0, h).unwrap();
+        let want = attend_f32(&q[h * d..(h + 1) * d], &kc, &vc, 1, tokens, d, false);
+        assert_eq!(&out_b[h * d..(h + 1) * d], &want.o[..], "baseline head {h}");
+    }
+}
+
+#[test]
+fn engine_prefill_multi_head_matches_per_head_reference() {
+    // Multi-head prefill vs the f32 causal reference per head (tolerance),
+    // and the f32-config prefill vs the same reference bitwise.
+    let (heads, d, tokens, nq) = (2usize, 32usize, 40usize, 8usize);
+    let mut cache = PagedKvCache::new(1, heads, d);
+    cache.add_seq(3);
+    let mut rng = Rng::new(87);
+    for _ in 0..tokens {
+        for h in 0..heads {
+            let k = rng.normal_vec(d, 0.0, 1.0);
+            let v = rng.normal_vec(d, 0.0, 1.0);
+            cache.append(3, 0, h, &k, &v).unwrap();
+        }
+    }
+    let q = rng.normal_vec(heads * nq * d, 0.0, 1.0);
+
+    let mut fused = AttnEngine::new(AttnConfig::fp4());
+    let mut out = vec![0.0f32; heads * nq * d];
+    let lse = fused.prefill(&cache, 3, 0, &q, nq, &mut out).unwrap();
+    assert_eq!(lse.len(), heads * nq);
+
+    let mut baseline = AttnEngine::new(AttnConfig::f32());
+    let mut out_b = vec![0.0f32; heads * nq * d];
+    let lse_b = baseline.prefill(&cache, 3, 0, &q, nq, &mut out_b).unwrap();
+
+    for h in 0..heads {
+        let (kc, vc) = cache.gather(3, 0, h).unwrap();
+        let qh = &q[h * nq * d..(h + 1) * nq * d];
+        let want = attend_f32(qh, &kc, &vc, nq, tokens, d, true);
+        // f32 config: bitwise identical to the causal flash reference.
+        assert_eq!(&out_b[h * nq * d..(h + 1) * nq * d], &want.o[..], "f32 head {h}");
+        assert_eq!(&lse_b[h * nq..(h + 1) * nq], &want.lse[..], "f32 head {h} lse");
+        // fused config: FP4 tolerance against the same reference.
+        let max_diff = out[h * nq * d..(h + 1) * nq * d]
+            .iter()
+            .zip(&want.o)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 0.5, "fused head {h}: {max_diff}");
+    }
+}

@@ -4,8 +4,10 @@
 //! These pin the Figure-4 "real quant" comparator to the exact semantics
 //! of `ref.naive_attention` per variant.
 
-use attn_qat::attention::{attend_fp4, attend_sage3};
+#![allow(deprecated)] // the deprecated shims are exactly what these pin
+
 use attn_qat::attention::flash::attend_f32;
+use attn_qat::attention::{attend_fp4, attend_sage3};
 use attn_qat::json::Json;
 
 fn load_golden() -> Json {

@@ -12,10 +12,13 @@
 //! ≤ 9.5e-4 on the outlier case (grad magnitudes ~410), i.e. ≥ 400×
 //! margin at `2e-3 · max(1, ‖·‖∞)`.
 
+#![allow(deprecated)] // the forward shims are the pinned comparison path
+
 use attn_qat::attention::engine::attend_fp4_train;
 use attn_qat::attention::flash::attend_f32;
+use attn_qat::attention::{AttnConfig, BwdSwitches};
 use attn_qat::json::Json;
-use attn_qat::qat::{flash_backward, BwdSwitches, QatVariant};
+use attn_qat::qat::flash_backward;
 
 fn load_golden() -> Json {
     let path = concat!(
@@ -27,14 +30,14 @@ fn load_golden() -> Json {
     Json::parse(&text).expect("parse backward golden json")
 }
 
-/// Golden mode strings are exactly the `QatVariant::parse` vocabulary —
+/// Golden mode strings are exactly the `AttnConfig::parse` vocabulary —
 /// use the canonical mapping so this test can't drift from it ("fp4" =
 /// drop-in stock-FA backward; "f32" has no quantization anywhere, so the
 /// same all-off switches apply and o == o_prime).
 fn switches_for(mode: &str) -> BwdSwitches {
-    QatVariant::parse(mode)
-        .unwrap_or_else(|| panic!("unknown golden mode {mode}"))
-        .switches()
+    AttnConfig::parse(mode)
+        .unwrap_or_else(|e| panic!("unknown golden mode: {e}"))
+        .bwd
 }
 
 fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {

@@ -14,13 +14,15 @@
 //!   FD gradient of the unquantized loss (simulated: cos ≥ 0.982,
 //!   relL2 ≤ 0.193 — asserted at 0.9 / 0.35).
 
+#![allow(deprecated)] // FD references go through the pinned forward shims
+
 use attn_qat::attention::engine::attend_fp4_train;
 use attn_qat::attention::flash::attend_f32;
 use attn_qat::qat::{flash_backward, BwdSwitches};
 use attn_qat::rng::Rng;
 
-const F32_SW: BwdSwitches = BwdSwitches { fq_inputs: false, fq_p: false, high_prec_o: false };
-const QAT_SW: BwdSwitches = BwdSwitches { fq_inputs: true, fq_p: true, high_prec_o: true };
+const F32_SW: BwdSwitches = BwdSwitches::STOCK;
+const QAT_SW: BwdSwitches = BwdSwitches::MATCHED;
 
 /// L = Σ O ∘ W over the f32 attention (f64 accumulation of f32 outputs).
 #[allow(clippy::too_many_arguments)]

@@ -278,9 +278,9 @@ fn serve_fused_decode_matches_baseline_completions() {
     let names = meta.param_names();
     let params = rt.run("lm_init_tiny", &[Value::scalar_i32(4)]).unwrap();
     let weights: Vec<(String, Tensor)> = names.into_iter().zip(params).collect();
-    let run = |baseline: bool| -> Vec<(u64, Vec<u8>)> {
+    let run = |cfg: attn_qat::attention::AttnConfig| -> Vec<(u64, Vec<u8>)> {
         let mut server = DecodeServer::new(&rt, "tiny", weights.clone()).unwrap();
-        server.set_baseline_attention(baseline);
+        server.set_attention(cfg);
         for i in 0..4 {
             server.submit(Request {
                 id: i + 1,
@@ -298,7 +298,7 @@ fn serve_fused_decode_matches_baseline_completions() {
         done.sort();
         done
     };
-    let fused = run(false);
-    let baseline = run(true);
+    let fused = run(attn_qat::attention::AttnConfig::fp4());
+    let baseline = run(attn_qat::attention::AttnConfig::f32());
     assert_eq!(fused, baseline, "fused decode changed greedy completions");
 }
