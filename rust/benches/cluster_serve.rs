@@ -1,0 +1,121 @@
+//! Shard-scaling bench for the native decode cluster.
+//!
+//! One fixed request trace (prompts cut from the synthetic corpus, greedy
+//! decoding) is served by 1 / 2 / 4 / 8 shard workers, once with the fused
+//! packed-FP4 attention config and once with the `AttnConfig::f32()`
+//! gather baseline — the per-shard-count A/B the cluster inherits from the
+//! decode server. Rows land in `results/bench/cluster_serve.jsonl`:
+//! aggregate tokens/s, worst-shard p50/p99 per-token latency, query-cache
+//! hit totals, and KV memory peaks. On a multi-core host the multi-shard
+//! fp4 rows should beat the single-shard row on tokens/s; the recorded
+//! history is the scale-out before/after log.
+
+use std::io::Write;
+
+use attn_qat::attention::AttnConfig;
+use attn_qat::experiments::cluster::{demo_trace, serve_trace};
+use attn_qat::json::Json;
+use attn_qat::serve::Request;
+
+struct Run {
+    name: String,
+    shards: usize,
+    attn: &'static str,
+    requests: usize,
+    tokens: usize,
+    wall_ms: f64,
+    tok_per_s: f64,
+    p50_token_ms: f64,
+    p99_token_ms: f64,
+    qcache_hits: u64,
+    qcache_misses: u64,
+    kv_bytes_peak: usize,
+}
+
+impl Run {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("shards", Json::Num(self.shards as f64)),
+            ("attn", Json::Str(self.attn.to_string())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("wall_ms", Json::Num(self.wall_ms)),
+            ("tok_per_s", Json::Num(self.tok_per_s)),
+            ("p50_token_ms", Json::Num(self.p50_token_ms)),
+            ("p99_token_ms", Json::Num(self.p99_token_ms)),
+            ("qcache_hits", Json::Num(self.qcache_hits as f64)),
+            ("qcache_misses", Json::Num(self.qcache_misses as f64)),
+            ("kv_bytes_peak", Json::Num(self.kv_bytes_peak as f64)),
+        ])
+    }
+}
+
+fn run_once(shards: usize, attn_name: &'static str, attn: AttnConfig, trace: &[Request]) -> Run {
+    // serve_trace owns the spawn/submit/drain/verify loop (4 lanes, seed 7
+    // for both weights and sampling — the same driver `exp cluster` uses).
+    let (wall_s, stats) = serve_trace(shards, attn, 4, 7, trace).expect("cluster run");
+    let wall_ms = wall_s * 1e3;
+    let tokens = stats.total_tokens();
+    let (hits, misses) = stats.qcache_totals();
+    Run {
+        name: format!("cluster_serve_{attn_name}_{shards}shards"),
+        shards,
+        attn: attn_name,
+        requests: trace.len(),
+        tokens,
+        wall_ms,
+        tok_per_s: tokens as f64 / (wall_ms * 1e-3).max(1e-9),
+        p50_token_ms: stats.shards.iter().map(|s| s.p50_token_ms).fold(0.0, f64::max),
+        p99_token_ms: stats.p99_token_ms(),
+        qcache_hits: hits,
+        qcache_misses: misses,
+        kv_bytes_peak: stats.kv_bytes_peak(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // The same deterministic trace `repro serve cluster` and `exp cluster`
+    // drive (see experiments::cluster::demo_trace).
+    let trace = demo_trace(48, 24, 7);
+    println!("== bench group: cluster_serve ==");
+    println!(
+        "{:<32} {:>10} {:>12} {:>12} {:>12}",
+        "name", "wall", "tok/s", "p50/tok", "p99/tok"
+    );
+    let mut rows = Vec::new();
+    let mut fp4_single = None;
+    for &shards in &[1usize, 2, 4, 8] {
+        for (attn_name, attn) in [("fp4", AttnConfig::fp4()), ("f32", AttnConfig::f32())] {
+            // One throwaway run warms allocators and the page pools.
+            let _ = run_once(shards, attn_name, attn, &trace);
+            let r = run_once(shards, attn_name, attn, &trace);
+            println!(
+                "{:<32} {:>8.1}ms {:>10.0}/s {:>10.3}ms {:>10.3}ms",
+                r.name, r.wall_ms, r.tok_per_s, r.p50_token_ms, r.p99_token_ms
+            );
+            if attn_name == "fp4" {
+                if shards == 1 {
+                    fp4_single = Some(r.tok_per_s);
+                } else if let Some(base) = fp4_single {
+                    println!(
+                        "  -> fp4 {shards}-shard scaling vs 1 shard: {:.2}x",
+                        r.tok_per_s / base
+                    );
+                }
+            }
+            rows.push(r);
+        }
+    }
+
+    std::fs::create_dir_all("results/bench")?;
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("results/bench/cluster_serve.jsonl")?;
+    for r in &rows {
+        writeln!(f, "{}", r.to_json())?;
+    }
+    println!("-> results/bench/cluster_serve.jsonl ({} rows)", rows.len());
+    Ok(())
+}

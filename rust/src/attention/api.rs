@@ -30,7 +30,7 @@
 use anyhow::{ensure, Result};
 
 use crate::formats::tensor4::PackedNvfp4;
-use crate::kvcache::{DecodeScratch, PagedKvCache};
+use crate::kvcache::{DecodeScratch, PagedKvCache, SeqSlot};
 
 use super::engine::{
     attend_quantized, attend_quantized_dequant, attend_quantized_train, AttnOutput,
@@ -509,6 +509,22 @@ impl AttnEngine {
         q: &[f32],
         out: &mut [f32],
     ) -> Result<()> {
+        self.decode_slot(cache, cache.slot(seq)?, layer, q, out)
+    }
+
+    /// [`AttnEngine::decode`] by [`SeqSlot`] handle — the serving hot
+    /// path. The handle indexes the cache's slot table directly, so a
+    /// shard worker that resolves it once at admission does **zero** map
+    /// lookups per decoded token (the u64-keyed `decode` resolves on every
+    /// call).
+    pub fn decode_slot(
+        &mut self,
+        cache: &PagedKvCache,
+        slot: SeqSlot,
+        layer: usize,
+        q: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
         self.ensure_paged_config("decode")?;
         let d = cache.head_dim();
         ensure!(
@@ -519,11 +535,11 @@ impl AttnEngine {
         for head in 0..heads {
             let (qh, oh) = (&q[head * d..(head + 1) * d], &mut out[head * d..(head + 1) * d]);
             if self.cfg.quantized() {
-                cache.attend_decode(seq, layer, head, qh, oh, &mut self.decode_scratch)?;
+                cache.attend_decode_at(slot, layer, head, qh, oh, &mut self.decode_scratch)?;
             } else {
-                let (kc, vc) = cache.gather(seq, layer, head)?;
+                let (kc, vc) = cache.gather_at(slot, layer, head)?;
                 let nk = kc.len() / d;
-                ensure!(nk > 0, "seq {seq} has no cached tokens");
+                ensure!(nk > 0, "slot {} has no cached tokens", slot.index());
                 let o = attend_f32_core(qh, &kc, &vc, 1, nk, d, false);
                 oh.copy_from_slice(&o.o);
             }
@@ -557,6 +573,21 @@ impl AttnEngine {
         nq: usize,
         out: &mut [f32],
     ) -> Result<Vec<f32>> {
+        self.prefill_slot(cache, cache.slot(seq)?, layer, q, nq, out)
+    }
+
+    /// [`AttnEngine::prefill`] by [`SeqSlot`] handle — batched prompt
+    /// admission without the per-call id resolution (see
+    /// [`AttnEngine::decode_slot`]).
+    pub fn prefill_slot(
+        &mut self,
+        cache: &PagedKvCache,
+        slot: SeqSlot,
+        layer: usize,
+        q: &[f32],
+        nq: usize,
+        out: &mut [f32],
+    ) -> Result<Vec<f32>> {
         self.ensure_paged_config("prefill")?;
         let d = cache.head_dim();
         ensure!(nq > 0, "prefill needs at least one query");
@@ -571,9 +602,10 @@ impl AttnEngine {
             let oh = &mut out[head * nq * d..(head + 1) * nq * d];
             let lh = &mut lse[head * nq..(head + 1) * nq];
             if self.cfg.quantized() {
-                cache.attend_prefill(seq, layer, head, qh, nq, oh, lh, &mut self.decode_scratch)?;
+                let scratch = &mut self.decode_scratch;
+                cache.attend_prefill_at(slot, layer, head, qh, nq, oh, lh, scratch)?;
             } else {
-                let (kc, vc) = cache.gather(seq, layer, head)?;
+                let (kc, vc) = cache.gather_at(slot, layer, head)?;
                 let nk = kc.len() / d;
                 ensure!(nq <= nk, "prefill of {nq} queries over {nk} cached tokens");
                 let o = attend_f32_core(qh, &kc, &vc, nq, nk, d, true);

@@ -1,0 +1,115 @@
+//! Shard-scaling experiment for the native decode cluster (`repro exp
+//! cluster`): the serving-side companion of the paper's §5 efficiency
+//! claims, measured on this crate's own scale-out path.
+//!
+//! Serves one deterministic trace at several shard counts, fused-FP4 vs
+//! the f32 gather baseline, and writes `results/cluster_scaling.{md,json}`
+//! — aggregate tokens/s, parallel speedup vs one shard, worst-shard p99
+//! per-token latency, and the FP4 KV-memory saving. Needs no compiled
+//! artifacts and no PJRT backend (the models are native `SimLm`s), so it
+//! runs in the same environments as `exp fig3`.
+
+use anyhow::Result;
+
+use crate::attention::AttnConfig;
+use crate::config::Config;
+use crate::data::corpus::Corpus;
+use crate::serve::{ClusterConfig, DecodeCluster, Request, ShardConfig, SimLm, SimLmConfig};
+
+use super::common;
+
+/// The deterministic serving trace: prompts cut from the synthetic corpus
+/// stream at varied lengths, greedy decoding. Shared by `repro serve
+/// cluster`, `repro exp cluster`, and `benches/cluster_serve.rs` so all
+/// three measure the same workload.
+pub fn demo_trace(n_req: usize, max_new: usize, seed: u64) -> Vec<Request> {
+    let mut corpus = Corpus::new(seed ^ 0xc105);
+    (0..n_req)
+        .map(|i| Request {
+            id: i as u64 + 1,
+            prompt: corpus.stream(16 + (i % 5) * 8),
+            max_new_tokens: max_new,
+            temperature: 0.0,
+        })
+        .collect()
+}
+
+/// One (shard count × attention config) serving run over `trace`:
+/// spawn, submit, drain, verify nothing was lost; returns the wall time
+/// (seconds) and the cluster stats. `seed` feeds both the shard models
+/// and the sampling streams. Shared with `benches/cluster_serve.rs`.
+pub fn serve_trace(
+    shards: usize,
+    attn: AttnConfig,
+    lanes: usize,
+    seed: u64,
+    trace: &[Request],
+) -> Result<(f64, crate::serve::ClusterStats)> {
+    let cfg = ClusterConfig {
+        shards,
+        queue_depth: trace.len().max(1),
+        shard: ShardConfig { slots: lanes, attn, seq_max: 512, sample_seed: seed },
+    };
+    let lm = SimLmConfig { seed, ..SimLmConfig::default() };
+    let mut cluster = DecodeCluster::spawn(cfg, |_| Box::new(SimLm::new(lm)));
+    let t0 = std::time::Instant::now();
+    for r in trace {
+        cluster.submit(r.clone())?;
+    }
+    let (done, stats) = cluster.drain()?;
+    anyhow::ensure!(done.len() == trace.len(), "lost completions");
+    Ok((t0.elapsed().as_secs_f64(), stats))
+}
+
+/// `repro exp cluster` — shard-scaling table.
+pub fn cluster_scaling(cfg: &Config) -> Result<()> {
+    let n_req = cfg.usize_or("cluster.requests", 32);
+    let max_new = cfg.usize_or("cluster.max_new_tokens", 24);
+    let lanes = cfg.usize_or("cluster.lanes", 4);
+    let seed = cfg.u64_or("seed", 42);
+    let trace = demo_trace(n_req, max_new, seed);
+
+    let mut rows = Vec::new();
+    let mut base_fp4 = None;
+    for &shards in &[1usize, 2, 4] {
+        for (name, attn) in [("fp4", AttnConfig::fp4()), ("f32", AttnConfig::f32())] {
+            let (wall_s, stats) = serve_trace(shards, attn, lanes, seed, &trace)?;
+            let tokens = stats.total_tokens();
+            let tps = tokens as f64 / wall_s.max(1e-9);
+            let speedup = if name == "fp4" {
+                if shards == 1 {
+                    base_fp4 = Some(tps);
+                    1.0
+                } else {
+                    tps / base_fp4.unwrap_or(tps)
+                }
+            } else {
+                f64::NAN
+            };
+            let (used, f32eq) = (
+                stats.kv_bytes_peak(),
+                stats.shards.iter().map(|s| s.kv_bytes_f32_equiv_peak).sum::<usize>(),
+            );
+            let speedup_cell = if speedup.is_nan() {
+                "-".to_string()
+            } else {
+                format!("{speedup:.2}x")
+            };
+            rows.push(vec![
+                shards.to_string(),
+                name.to_string(),
+                tokens.to_string(),
+                format!("{tps:.0}"),
+                speedup_cell,
+                format!("{:.3}", stats.p99_token_ms()),
+                format!("{:.1}x", f32eq as f64 / used.max(1) as f64),
+            ]);
+        }
+    }
+    common::write_table(
+        "cluster_scaling",
+        "Sharded decode cluster: scaling and FP4-vs-f32 serving throughput",
+        &["shards", "attn", "tokens", "tok/s", "vs 1-shard fp4", "p99/tok (ms)", "KV saving"],
+        &rows,
+    )
+}

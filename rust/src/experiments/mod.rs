@@ -5,6 +5,7 @@
 //! downstream tooling. Step budgets and sizes come from `config::Config`
 //! (CPU-friendly defaults; scale up via `-s` overrides or a config file).
 
+pub mod cluster;
 pub mod common;
 pub mod consistency;
 pub mod diffusion;
@@ -31,14 +32,19 @@ pub fn run(rt: &Runtime, id: &str, cfg: &Config) -> Result<()> {
         }
         "fig4" => consistency::fig4(rt, cfg),
         "fig5" => kernels::fig5(rt, cfg),
+        // Serving-side scale-out study; native models, no artifacts used.
+        "cluster" => cluster::cluster_scaling(cfg),
         "all" => {
-            for id in ["table2", "table1", "table4", "table3", "fig1", "fig2", "fig3", "fig4", "fig5"] {
+            for id in [
+                "table2", "table1", "table4", "table3", "fig1", "fig2", "fig3", "fig4", "fig5",
+                "cluster",
+            ] {
                 println!("\n===== {id} =====");
                 run(rt, id, cfg)?;
             }
             Ok(())
         }
-        other => bail!("unknown experiment '{other}' (table1-4, fig1-5, all)"),
+        other => bail!("unknown experiment '{other}' (table1-4, fig1-5, cluster, all)"),
     }
 }
 
@@ -52,13 +58,15 @@ pub fn run_native(id: &str, cfg: &Config) -> Result<()> {
             diffusion::fig3_dynamics_native(cfg)?;
             llm::fig3c_native(cfg)
         }
+        "cluster" => cluster::cluster_scaling(cfg),
         "all" => {
-            println!("(native mode: only fig3 runs without compiled artifacts)");
-            run_native("fig3", cfg)
+            println!("(native mode: only fig3 and cluster run without compiled artifacts)");
+            run_native("fig3", cfg)?;
+            run_native("cluster", cfg)
         }
         other => bail!(
             "experiment '{other}' needs compiled HLO artifacts and a real PJRT backend \
-             (the stub xla crate is active); only 'fig3' has a native path"
+             (the stub xla crate is active); only 'fig3' and 'cluster' have native paths"
         ),
     }
 }

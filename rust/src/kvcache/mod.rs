@@ -19,6 +19,16 @@
 //! [`PagedKvCache::attend_prefill`] (batched multi-query causal prefill)
 //! are the paged backends of `attention::AttnEngine`; [`PagedKvCache::gather`]
 //! materialises f32 copies for the baseline path.
+//!
+//! Addressing: sequences live in **Vec-indexed slots**. [`PagedKvCache::add_seq`]
+//! returns a [`SeqSlot`] handle, and the `*_at` variants of every operation
+//! index the slot table directly — zero map lookups on the per-token serve
+//! path (the old `BTreeMap<u64, …>` survives only as an id → slot directory
+//! for admission/teardown and the u64-keyed convenience wrappers). Freed
+//! slots go on a free list and their page pools are reused by later
+//! sequences, so a serving worker's slot table stays as small as its peak
+//! concurrency no matter how many sequences churn through it; generation
+//! counters make a stale handle a hard error instead of silent cross-talk.
 
 use std::collections::BTreeMap;
 
@@ -45,6 +55,35 @@ enum Page {
 struct HeadCache {
     pages: Vec<Page>,
     len: usize,
+}
+
+/// Handle to a live sequence's slot in the cache: a plain Vec index, so
+/// the per-token hot path does no map lookup at all. The generation
+/// counter pins the handle to one occupancy — after [`PagedKvCache::drop_slot`]
+/// the slot may be reused by another sequence, and the stale handle then
+/// errors instead of reading someone else's pages.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SeqSlot {
+    idx: u32,
+    gen: u32,
+}
+
+impl SeqSlot {
+    /// The raw slot index (stable while the sequence is live) — handy as a
+    /// dense per-sequence array key in serving workers.
+    pub fn index(&self) -> usize {
+        self.idx as usize
+    }
+}
+
+/// One slot of the cache's sequence table.
+struct SlotEntry {
+    id: u64,
+    gen: u32,
+    live: bool,
+    /// Layer-major `[layer * heads + head]` page lists. The outer Vecs are
+    /// retained across sequence reuse (the slot's page pool).
+    heads: Vec<HeadCache>,
 }
 
 /// Reusable workspace for [`PagedKvCache::attend_decode`].
@@ -98,14 +137,25 @@ pub struct PagedKvCache {
     layers: usize,
     heads: usize,
     head_dim: usize,
-    /// seq_id -> layer-major [layer * heads + head] caches.
-    seqs: BTreeMap<u64, Vec<HeadCache>>,
+    /// Vec-indexed sequence table; freed entries are recycled via `free`.
+    slots: Vec<SlotEntry>,
+    free: Vec<u32>,
+    /// seq_id → slot index. Admission/teardown and the u64-keyed wrappers
+    /// only — never consulted by the `*_at` hot path.
+    ids: BTreeMap<u64, u32>,
 }
 
 impl PagedKvCache {
     pub fn new(layers: usize, heads: usize, head_dim: usize) -> PagedKvCache {
         assert_eq!(head_dim % 16, 0, "head_dim must be a multiple of 16");
-        PagedKvCache { layers, heads, head_dim, seqs: BTreeMap::new() }
+        PagedKvCache {
+            layers,
+            heads,
+            head_dim,
+            slots: Vec::new(),
+            free: Vec::new(),
+            ids: BTreeMap::new(),
+        }
     }
 
     /// Per-head K/V vector width (the engine derives head counts from it).
@@ -123,29 +173,114 @@ impl PagedKvCache {
         self.layers
     }
 
-    pub fn add_seq(&mut self, seq: u64) {
+    /// Admit `seq`, returning its slot handle. Re-admitting a live id
+    /// returns the existing slot (the old `or_insert` semantics). Freed
+    /// slots are reused before the table grows, so the table stays sized
+    /// to peak concurrency under sequence churn.
+    pub fn add_seq(&mut self, seq: u64) -> SeqSlot {
+        if let Some(&idx) = self.ids.get(&seq) {
+            return SeqSlot { idx, gen: self.slots[idx as usize].gen };
+        }
         let n = self.layers * self.heads;
-        self.seqs.entry(seq).or_insert_with(|| {
-            (0..n).map(|_| HeadCache { pages: Vec::new(), len: 0 }).collect()
-        });
+        let idx = match self.free.pop() {
+            Some(idx) => {
+                let e = &mut self.slots[idx as usize];
+                e.id = seq;
+                e.live = true;
+                idx
+            }
+            None => {
+                let idx = self.slots.len() as u32;
+                self.slots.push(SlotEntry {
+                    id: seq,
+                    gen: 0,
+                    live: true,
+                    heads: (0..n).map(|_| HeadCache { pages: Vec::new(), len: 0 }).collect(),
+                });
+                idx
+            }
+        };
+        self.ids.insert(seq, idx);
+        SeqSlot { idx, gen: self.slots[idx as usize].gen }
     }
 
+    /// Resolve a live sequence id to its slot handle (one map lookup —
+    /// hoist this out of per-token loops).
+    pub fn slot(&self, seq: u64) -> Result<SeqSlot> {
+        let idx = *self.ids.get(&seq).ok_or_else(|| anyhow!("unknown seq {seq}"))?;
+        Ok(SeqSlot { idx, gen: self.slots[idx as usize].gen })
+    }
+
+    fn entry(&self, slot: SeqSlot) -> Result<&SlotEntry> {
+        let e = self
+            .slots
+            .get(slot.idx as usize)
+            .ok_or_else(|| anyhow!("slot {} out of range", slot.idx))?;
+        if !e.live || e.gen != slot.gen {
+            bail!("stale slot handle {} (sequence dropped)", slot.idx);
+        }
+        Ok(e)
+    }
+
+    fn entry_mut(&mut self, slot: SeqSlot) -> Result<&mut SlotEntry> {
+        let e = self
+            .slots
+            .get_mut(slot.idx as usize)
+            .ok_or_else(|| anyhow!("slot {} out of range", slot.idx))?;
+        if !e.live || e.gen != slot.gen {
+            bail!("stale slot handle {} (sequence dropped)", slot.idx);
+        }
+        Ok(e)
+    }
+
+    /// Free a sequence by slot handle: page memory is released immediately
+    /// (so [`PagedKvCache::memory_stats`] drops with it), the slot joins
+    /// the free list, and the handle's generation is retired.
+    pub fn drop_slot(&mut self, slot: SeqSlot) -> Result<()> {
+        let e = self.entry_mut(slot)?;
+        let id = e.id;
+        e.live = false;
+        e.gen = e.gen.wrapping_add(1);
+        for hc in e.heads.iter_mut() {
+            hc.pages.clear();
+            hc.len = 0;
+        }
+        self.ids.remove(&id);
+        self.free.push(slot.idx);
+        Ok(())
+    }
+
+    /// Free a sequence by id (no-op for unknown ids, as before).
     pub fn drop_seq(&mut self, seq: u64) {
-        self.seqs.remove(&seq);
+        if let Ok(slot) = self.slot(seq) {
+            let _ = self.drop_slot(slot);
+        }
+    }
+
+    /// Number of live sequences.
+    pub fn live_seqs(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Size of the slot table (live + reusable freed slots) — bounded by
+    /// the peak live-sequence count, not by total sequences ever admitted.
+    pub fn slot_capacity(&self) -> usize {
+        self.slots.len()
     }
 
     pub fn seq_len(&self, seq: u64) -> usize {
-        self.seqs
-            .get(&seq)
-            .map(|h| h[0].len)
-            .unwrap_or(0)
+        self.slot(seq).and_then(|s| self.seq_len_at(s)).unwrap_or(0)
     }
 
-    fn head_cache(&mut self, seq: u64, layer: usize, head: usize) -> Result<&mut HeadCache> {
+    /// Cached token count of a live slot.
+    pub fn seq_len_at(&self, slot: SeqSlot) -> Result<usize> {
+        Ok(self.entry(slot)?.heads[0].len)
+    }
+
+    fn head_cache(&mut self, slot: SeqSlot, layer: usize, head: usize) -> Result<&mut HeadCache> {
         let idx = layer * self.heads + head;
-        self.seqs
-            .get_mut(&seq)
-            .ok_or_else(|| anyhow!("unknown seq {seq}"))?
+        self.entry_mut(slot)?
+            .heads
             .get_mut(idx)
             .ok_or_else(|| anyhow!("bad layer/head {layer}/{head}"))
     }
@@ -159,11 +294,24 @@ impl PagedKvCache {
         k: &[f32],
         v: &[f32],
     ) -> Result<()> {
+        let slot = self.slot(seq)?;
+        self.append_at(slot, layer, head, k, v)
+    }
+
+    /// [`PagedKvCache::append`] by slot handle — no map lookup.
+    pub fn append_at(
+        &mut self,
+        slot: SeqSlot,
+        layer: usize,
+        head: usize,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<()> {
         let d = self.head_dim;
         if k.len() != d || v.len() != d {
             bail!("k/v must be head_dim={d} long");
         }
-        let hc = self.head_cache(seq, layer, head)?;
+        let hc = self.head_cache(slot, layer, head)?;
         let needs_new = match hc.pages.last() {
             Some(Page::Hot { len, .. }) => *len >= PAGE_SIZE,
             _ => true,
@@ -201,12 +349,21 @@ impl PagedKvCache {
     /// Sealed pages dequantize from 4-bit storage (the FP4 read path);
     /// the hot tail copies straight through.
     pub fn gather(&self, seq: u64, layer: usize, head: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.gather_at(self.slot(seq)?, layer, head)
+    }
+
+    /// [`PagedKvCache::gather`] by slot handle.
+    pub fn gather_at(
+        &self,
+        slot: SeqSlot,
+        layer: usize,
+        head: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
         let d = self.head_dim;
         let idx = layer * self.heads + head;
         let hc = self
-            .seqs
-            .get(&seq)
-            .ok_or_else(|| anyhow!("unknown seq {seq}"))?
+            .entry(slot)?
+            .heads
             .get(idx)
             .ok_or_else(|| anyhow!("bad layer/head"))?;
         let mut k = Vec::with_capacity(hc.len * d);
@@ -260,19 +417,32 @@ impl PagedKvCache {
         out: &mut [f32],
         scratch: &mut DecodeScratch,
     ) -> Result<f32> {
+        self.attend_decode_at(self.slot(seq)?, layer, head, q, out, scratch)
+    }
+
+    /// [`PagedKvCache::attend_decode`] by slot handle — the serving
+    /// hot path: Vec index, no map walk per token.
+    pub fn attend_decode_at(
+        &self,
+        slot: SeqSlot,
+        layer: usize,
+        head: usize,
+        q: &[f32],
+        out: &mut [f32],
+        scratch: &mut DecodeScratch,
+    ) -> Result<f32> {
         let d = self.head_dim;
         if q.len() != d || out.len() != d {
             bail!("q/out must be head_dim={d} long");
         }
         let idx = layer * self.heads + head;
         let hc = self
-            .seqs
-            .get(&seq)
-            .ok_or_else(|| anyhow!("unknown seq {seq}"))?
+            .entry(slot)?
+            .heads
             .get(idx)
             .ok_or_else(|| anyhow!("bad layer/head {layer}/{head}"))?;
         if hc.len == 0 {
-            bail!("seq {seq} has no cached tokens");
+            bail!("slot {} has no cached tokens", slot.idx);
         }
         Ok(attend_query_walk(hc, d, q, hc.len, out, scratch))
     }
@@ -306,15 +476,30 @@ impl PagedKvCache {
         lse: &mut [f32],
         scratch: &mut DecodeScratch,
     ) -> Result<()> {
+        self.attend_prefill_at(self.slot(seq)?, layer, head, q, nq, out, lse, scratch)
+    }
+
+    /// [`PagedKvCache::attend_prefill`] by slot handle.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attend_prefill_at(
+        &self,
+        slot: SeqSlot,
+        layer: usize,
+        head: usize,
+        q: &[f32],
+        nq: usize,
+        out: &mut [f32],
+        lse: &mut [f32],
+        scratch: &mut DecodeScratch,
+    ) -> Result<()> {
         let d = self.head_dim;
         if q.len() != nq * d || out.len() != nq * d || lse.len() != nq {
             bail!("q/out must be nq={nq} x head_dim={d}, lse nq={nq} long");
         }
         let idx = layer * self.heads + head;
         let hc = self
-            .seqs
-            .get(&seq)
-            .ok_or_else(|| anyhow!("unknown seq {seq}"))?
+            .entry(slot)?
+            .heads
             .get(idx)
             .ok_or_else(|| anyhow!("bad layer/head {layer}/{head}"))?;
         let len = hc.len;
@@ -337,12 +522,15 @@ impl PagedKvCache {
         Ok(())
     }
 
-    /// (bytes used, bytes an f32 cache would use) across all sequences.
+    /// (bytes used, bytes an f32 cache would use) across all **live**
+    /// sequences — freed slots release their pages in
+    /// [`PagedKvCache::drop_slot`], so a drained cache reports (0, 0)
+    /// no matter how many sequences churned through it.
     pub fn memory_stats(&self) -> (usize, usize) {
         let d = self.head_dim;
         let mut used = 0usize;
         let mut f32_equiv = 0usize;
-        for heads in self.seqs.values() {
+        for heads in self.slots.iter().filter(|s| s.live).map(|s| &s.heads) {
             for hc in heads {
                 f32_equiv += hc.len * d * 4 * 2; // K and V
                 for page in &hc.pages {
@@ -744,6 +932,100 @@ mod tests {
         assert!(c
             .attend_prefill(9, 0, 0, &q[..8 * d], 8, &mut out[..8 * d], &mut lse[..8], &mut scratch)
             .is_err());
+    }
+
+    #[test]
+    fn slot_handle_paths_match_id_paths_bitwise() {
+        // The *_at hot path and the u64-keyed wrappers are the same code;
+        // pin that a resolved handle produces identical floats.
+        let d = 32;
+        let mut c = PagedKvCache::new(2, 2, d);
+        let slot = c.add_seq(9);
+        let mut rng = Rng::new(30);
+        for _ in 0..21 {
+            for l in 0..2 {
+                for h in 0..2 {
+                    let k = rng.normal_vec(d, 0.0, 1.0);
+                    let v = rng.normal_vec(d, 0.0, 1.0);
+                    c.append_at(slot, l, h, &k, &v).unwrap();
+                }
+            }
+        }
+        assert_eq!(c.seq_len(9), 21);
+        assert_eq!(c.seq_len_at(slot).unwrap(), 21);
+        assert_eq!(c.slot(9).unwrap(), slot);
+        let q = rng.normal_vec(d, 0.0, 1.0);
+        let (mut a, mut b) = (vec![0.0; d], vec![0.0; d]);
+        let mut s1 = DecodeScratch::new();
+        let mut s2 = DecodeScratch::new();
+        let la = c.attend_decode(9, 1, 1, &q, &mut a, &mut s1).unwrap();
+        let lb = c.attend_decode_at(slot, 1, 1, &q, &mut b, &mut s2).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(la, lb);
+        let (k1, v1) = c.gather(9, 0, 1).unwrap();
+        let (k2, v2) = c.gather_at(slot, 0, 1).unwrap();
+        assert_eq!(k1, k2);
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn churn_reuses_slots_and_memory_stats_drain_to_zero() {
+        // Thousands of sequences through a bounded live set: the slot
+        // table must stay at the peak concurrency (no slot leak), freed
+        // pages must leave memory_stats immediately, and a drained cache
+        // reports exactly (0, 0).
+        let d = 16;
+        let live_cap = 8usize;
+        let mut c = PagedKvCache::new(1, 1, d);
+        let mut rng = Rng::new(31);
+        let mut live: Vec<u64> = Vec::new();
+        for i in 0..2000u64 {
+            if live.len() == live_cap {
+                c.drop_seq(live.remove(0));
+            }
+            let slot = c.add_seq(i);
+            // Cross a page boundary so sealed pages churn too.
+            for _ in 0..(PAGE_SIZE + 3) {
+                let k = rng.normal_vec(d, 0.0, 1.0);
+                let v = rng.normal_vec(d, 0.0, 1.0);
+                c.append_at(slot, 0, 0, &k, &v).unwrap();
+            }
+            live.push(i);
+            assert!(c.slot_capacity() <= live_cap, "slot leak: {}", c.slot_capacity());
+            assert_eq!(c.live_seqs(), live.len());
+        }
+        let (used, equiv) = c.memory_stats();
+        // Only the live set is accounted.
+        assert!(used > 0 && equiv == live.len() * (PAGE_SIZE + 3) * d * 4 * 2);
+        for id in live.drain(..) {
+            c.drop_seq(id);
+        }
+        assert_eq!(c.memory_stats(), (0, 0));
+        assert_eq!(c.live_seqs(), 0);
+        assert!(c.slot_capacity() <= live_cap);
+    }
+
+    #[test]
+    fn stale_slot_handles_error_instead_of_cross_talking() {
+        let d = 16;
+        let mut c = PagedKvCache::new(1, 1, d);
+        let slot = c.add_seq(1);
+        c.append_at(slot, 0, 0, &[1.0; 16], &[2.0; 16]).unwrap();
+        c.drop_slot(slot).unwrap();
+        // The freed slot is re-admitted by another sequence...
+        let slot2 = c.add_seq(2);
+        assert_eq!(slot.index(), slot2.index(), "slot must be reused");
+        // ...and every old-handle operation is a hard error, not a read
+        // of the new tenant's pages.
+        let mut out = vec![0.0; d];
+        let mut scratch = DecodeScratch::new();
+        assert!(c.append_at(slot, 0, 0, &[0.0; 16], &[0.0; 16]).is_err());
+        assert!(c.gather_at(slot, 0, 0).is_err());
+        assert!(c.attend_decode_at(slot, 0, 0, &[0.0; 16], &mut out, &mut scratch).is_err());
+        assert!(c.seq_len_at(slot).is_err());
+        assert!(c.drop_slot(slot).is_err());
+        // Re-admitting a live id hands back the same slot.
+        assert_eq!(c.add_seq(2), slot2);
     }
 
     #[test]

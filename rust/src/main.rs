@@ -69,6 +69,11 @@ fn main() -> Result<()> {
         println!("{}", HELP);
         return Ok(());
     }
+    if cli.command == "serve" && cli.args.first().map(String::as_str) == Some("cluster") {
+        // The sharded native cluster needs no compiled artifacts and no
+        // PJRT backend — dispatch before the runtime is even attempted.
+        return cmd_serve_cluster(&cli);
+    }
     let rt = match Runtime::new(&cli.artifacts) {
         Ok(rt) => rt,
         Err(e) if cli.command == "exp" => {
@@ -235,6 +240,114 @@ fn cmd_serve(rt: &Runtime, cli: &Cli) -> Result<()> {
     Ok(())
 }
 
+/// `repro serve cluster [--shards N] [--requests R] [--max-new M]
+/// [--queue-depth Q] [--lanes L] [--variant fp4|f32] [--seed S]`
+///
+/// Native sharded decode: routes a deterministic request trace (prompts
+/// drawn from the synthetic corpus) across N shard workers, each with its
+/// own FP4 paged KV cache and per-lane attention engines, then drains and
+/// prints per-shard and aggregate throughput. Runs end to end without the
+/// PJRT runtime. Flags also read from config keys `serve.shards`,
+/// `serve.requests`, `serve.max_new_tokens`, `serve.queue_depth`,
+/// `serve.lanes`, `serve.variant`, `seed`.
+fn cmd_serve_cluster(cli: &Cli) -> Result<()> {
+    use attn_qat::serve::{ClusterConfig, DecodeCluster, ShardConfig, SimLm, SimLmConfig};
+
+    // `--flag value` pairs after the `cluster` subcommand override config.
+    let mut flags = std::collections::BTreeMap::new();
+    let rest = &cli.args[1..];
+    let mut i = 0;
+    while i < rest.len() {
+        let key = rest[i]
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("expected --flag, got '{}'", rest[i]))?;
+        let val = rest.get(i + 1).ok_or_else(|| anyhow!("--{key} needs a value"))?;
+        flags.insert(key.to_string(), val.clone());
+        i += 2;
+    }
+    let get_usize = |name: &str, cfg_key: &str, default: usize| -> Result<usize> {
+        match flags.get(name) {
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} wants an integer, got '{v}'")),
+            None => Ok(cli.cfg.usize_or(cfg_key, default)),
+        }
+    };
+    let shards = get_usize("shards", "serve.shards", 4)?;
+    let n_req = get_usize("requests", "serve.requests", 32)?;
+    let max_new = get_usize("max-new", "serve.max_new_tokens", 24)?;
+    let queue_depth = get_usize("queue-depth", "serve.queue_depth", 64)?;
+    let lanes = get_usize("lanes", "serve.lanes", 4)?;
+    let seed = match flags.get("seed") {
+        Some(v) => v.parse().map_err(|_| anyhow!("--seed wants an integer"))?,
+        None => cli.cfg.u64_or("seed", 42),
+    };
+    let variant = flags
+        .get("variant")
+        .cloned()
+        .unwrap_or_else(|| cli.cfg.str_or("serve.variant", "fp4"));
+    let attn = attn_qat::attention::AttnConfig::parse(&variant).map_err(|e| anyhow!("{e}"))?;
+    const KNOWN: [&str; 7] =
+        ["shards", "requests", "max-new", "queue-depth", "lanes", "seed", "variant"];
+    if let Some(unknown) = flags.keys().find(|k| !KNOWN.contains(&k.as_str())) {
+        bail!("unknown flag --{unknown} (expected one of: --{})", KNOWN.join(", --"));
+    }
+    if shards == 0 || n_req == 0 || lanes == 0 || queue_depth == 0 {
+        bail!("need at least one shard, request, lane, and queue slot");
+    }
+
+    println!(
+        "serve cluster: {shards} shard(s) x {lanes} lane(s), {n_req} requests, \
+         max_new={max_new}, attn={variant}, queue_depth={queue_depth}, seed={seed}"
+    );
+    let cluster_cfg = ClusterConfig {
+        shards,
+        queue_depth,
+        shard: ShardConfig { slots: lanes, attn, seq_max: 512, sample_seed: seed },
+    };
+    let lm_cfg = SimLmConfig { seed, ..SimLmConfig::default() };
+    let mut cluster = DecodeCluster::spawn(cluster_cfg, |_| Box::new(SimLm::new(lm_cfg)));
+
+    // Deterministic trace, shared with `exp cluster` and the bench so
+    // all three drive the same workload.
+    let t0 = std::time::Instant::now();
+    for r in attn_qat::experiments::cluster::demo_trace(n_req, max_new, seed) {
+        cluster.submit(r)?;
+    }
+    let (done, stats) = cluster.drain()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    for s in &stats.shards {
+        println!(
+            "shard {:>2}: {:>4} req {:>7} tok  {:>9.1} tok/s  queue<= {:<3} \
+             p50 {:.3} ms  p99 {:.3} ms  qcache {}h/{}m  kv<= {} B",
+            s.shard,
+            s.requests,
+            s.tokens,
+            s.tokens_per_s,
+            s.queue_peak,
+            s.p50_token_ms,
+            s.p99_token_ms,
+            s.qcache_hits,
+            s.qcache_misses,
+            s.kv_bytes_peak,
+        );
+    }
+    let total_tok = stats.total_tokens();
+    println!(
+        "\n{} completions, {} tokens in {:.2}s = {:.1} tok/s aggregate | \
+         cluster p99 {:.3} ms | KV peak {} B",
+        done.len(),
+        total_tok,
+        wall,
+        total_tok as f64 / wall.max(1e-9),
+        stats.p99_token_ms(),
+        stats.kv_bytes_peak(),
+    );
+    if done.len() != n_req {
+        bail!("lost completions: submitted {n_req}, drained {}", done.len());
+    }
+    Ok(())
+}
+
 const HELP: &str = "repro — Attn-QAT reproduction launcher
 
 USAGE:
@@ -246,6 +359,11 @@ COMMANDS:
     eval <size> [variant]        perplexity + benchmark suites
     sample <size>                diffusion sampling + VBench-proxy metrics
     serve [size]                 batched decode demo over the FP4 KV cache
+    serve cluster [--shards N] [--requests R] [--max-new M]
+                  [--queue-depth Q] [--lanes L] [--variant fp4|f32]
+                                 native sharded decode cluster (no PJRT
+                                 runtime or artifacts needed)
     exp <id>                     regenerate a paper table/figure:
-                                 table1 table2 table3 table4 fig1..fig5 all
+                                 table1 table2 table3 table4 fig1..fig5
+                                 cluster all
 ";

@@ -12,7 +12,10 @@ pub struct Rng {
     s: [u64; 4],
 }
 
-fn splitmix64(state: &mut u64) -> u64 {
+/// One SplitMix64 step: advances `state` and returns the mixed output.
+/// Also serves as the crate's stateless integer mixer (e.g. the serve
+/// cluster's request-id router hashes with one step from `id`).
+pub(crate) fn splitmix64(state: &mut u64) -> u64 {
     *state = state.wrapping_add(0x9E3779B97F4A7C15);
     let mut z = *state;
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);

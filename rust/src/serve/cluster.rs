@@ -1,0 +1,284 @@
+//! Sharded decode cluster: N independent shard workers behind a
+//! hash-on-request-id router.
+//!
+//! ```text
+//!                    ┌──────────────────────────────────────────────┐
+//!  submit(req) ──────│ router: shard = mix(req.id) % N              │
+//!                    └──┬───────────────┬───────────────┬───────────┘
+//!            bounded    │               │               │   sync_channel(queue_depth)
+//!            queues ─▶  ▼               ▼               ▼   (full ⇒ submit blocks)
+//!                 ┌───────────┐   ┌───────────┐   ┌───────────┐
+//!                 │ shard 0   │   │ shard 1   │   │ shard N−1 │  one thread each
+//!                 │ worker    │   │ worker    │   │ worker    │
+//!                 └───────────┘   └───────────┘   └───────────┘
+//! ```
+//!
+//! Each worker thread owns its whole serving state — `PagedKvCache`,
+//! per-lane `AttnEngine`s, `TokenModel` — so there is no shared mutable
+//! state and no lock anywhere on the decode path. The submission queues
+//! are bounded `sync_channel`s: a full shard pushes back on the submitter
+//! instead of buffering unboundedly. [`DecodeCluster::drain`] delivers a
+//! drain marker to every shard, lets them finish queued + in-flight work,
+//! and joins them into the pooled completions and [`ClusterStats`].
+//!
+//! Placement never changes tokens: sequences are independent (own cache
+//! slot, own sampling stream), so on any trace of unique request ids an
+//! N-shard cluster is bitwise identical to the single-worker server —
+//! sharding buys wall-clock only. Pinned by `rust/tests/cluster_serve.rs`.
+
+use std::sync::mpsc::{Receiver, sync_channel, SyncSender, TrySendError};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::model::TokenModel;
+use super::shard::{ShardConfig, ShardStats, ShardWorker};
+use super::{Completion, Request};
+
+/// Cluster-level knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    /// Shard worker count.
+    pub shards: usize,
+    /// Bounded submission-queue depth per shard (backpressure threshold).
+    pub queue_depth: usize,
+    /// Per-shard serving config.
+    pub shard: ShardConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> ClusterConfig {
+        ClusterConfig { shards: 4, queue_depth: 64, shard: ShardConfig::default() }
+    }
+}
+
+/// Post-drain cluster report.
+#[derive(Clone, Debug)]
+pub struct ClusterStats {
+    pub shards: Vec<ShardStats>,
+}
+
+impl ClusterStats {
+    /// Forward passes summed over shards.
+    pub fn total_tokens(&self) -> usize {
+        self.shards.iter().map(|s| s.tokens).sum()
+    }
+
+    pub fn total_requests(&self) -> usize {
+        self.shards.iter().map(|s| s.requests).sum()
+    }
+
+    /// Quantized-query cache (hits, misses) summed over every shard's
+    /// lane engines.
+    pub fn qcache_totals(&self) -> (u64, u64) {
+        self.shards.iter().fold((0, 0), |(h, m), s| (h + s.qcache_hits, m + s.qcache_misses))
+    }
+
+    /// Worst shard p99 per-token latency (ms) — the cluster's tail.
+    pub fn p99_token_ms(&self) -> f64 {
+        self.shards.iter().map(|s| s.p99_token_ms).fold(0.0, f64::max)
+    }
+
+    /// Peak KV bytes summed over shards.
+    pub fn kv_bytes_peak(&self) -> usize {
+        self.shards.iter().map(|s| s.kv_bytes_peak).sum()
+    }
+}
+
+enum ShardMsg {
+    Req(Request),
+    Drain,
+}
+
+/// SplitMix64 step (shared with [`crate::rng`]) — the request-id router
+/// hash. Consecutive ids spread uniformly instead of striding the shards
+/// in lockstep.
+fn mix_id(id: u64) -> u64 {
+    let mut state = id;
+    crate::rng::splitmix64(&mut state)
+}
+
+struct ShardHandle {
+    tx: SyncSender<ShardMsg>,
+    join: JoinHandle<Result<(Vec<Completion>, ShardStats)>>,
+}
+
+/// The sharded decode cluster (see module docs).
+pub struct DecodeCluster {
+    cfg: ClusterConfig,
+    workers: Vec<ShardHandle>,
+    submitted: usize,
+}
+
+impl DecodeCluster {
+    /// Spawn `cfg.shards` worker threads. `model_factory(shard_id)` builds
+    /// each shard's private [`TokenModel`] — build from one seed for a
+    /// homogeneous cluster (every shard then holds bitwise-identical
+    /// weights).
+    pub fn spawn<F>(cfg: ClusterConfig, model_factory: F) -> DecodeCluster
+    where
+        F: Fn(usize) -> Box<dyn TokenModel>,
+    {
+        assert!(cfg.shards > 0, "cluster needs at least one shard");
+        assert!(cfg.queue_depth > 0, "queue depth must be positive");
+        let workers = (0..cfg.shards)
+            .map(|shard_id| {
+                let (tx, rx) = sync_channel::<ShardMsg>(cfg.queue_depth);
+                let model = model_factory(shard_id);
+                let shard_cfg = cfg.shard;
+                let join = std::thread::spawn(move || shard_loop(shard_id, model, shard_cfg, rx));
+                ShardHandle { tx, join }
+            })
+            .collect();
+        DecodeCluster { cfg, workers, submitted: 0 }
+    }
+
+    /// Which shard serves request id `id`.
+    pub fn route(&self, id: u64) -> usize {
+        (mix_id(id) % self.cfg.shards as u64) as usize
+    }
+
+    /// Submit a request to its shard. **Blocks** while that shard's
+    /// submission queue is full — the cluster's backpressure: a slow
+    /// shard throttles its submitters instead of buffering without bound.
+    pub fn submit(&mut self, req: Request) -> Result<()> {
+        let shard = self.route(req.id);
+        let tx = &self.workers[shard].tx;
+        tx.send(ShardMsg::Req(req)).map_err(|_| anyhow!("shard {shard} is gone"))?;
+        self.submitted += 1;
+        Ok(())
+    }
+
+    /// Non-blocking submit: hands the request back if the shard's queue
+    /// is full right now (callers implement their own retry/shedding).
+    pub fn try_submit(&mut self, req: Request) -> Result<Option<Request>> {
+        let shard = self.route(req.id);
+        match self.workers[shard].tx.try_send(ShardMsg::Req(req)) {
+            Ok(()) => {
+                self.submitted += 1;
+                Ok(None)
+            }
+            Err(TrySendError::Full(ShardMsg::Req(req))) => Ok(Some(req)),
+            Err(TrySendError::Full(_)) => unreachable!("only requests are try-sent"),
+            Err(TrySendError::Disconnected(_)) => bail!("shard {shard} is gone"),
+        }
+    }
+
+    /// Requests submitted so far.
+    pub fn submitted(&self) -> usize {
+        self.submitted
+    }
+
+    /// Graceful drain: every shard finishes its queued and in-flight
+    /// sequences, then reports. Returns all completions (sorted by
+    /// request id) and the per-shard statistics.
+    ///
+    /// Every shard thread is joined even when one failed; the first
+    /// shard's own error (not a generic channel error) is what surfaces.
+    pub fn drain(self) -> Result<(Vec<Completion>, ClusterStats)> {
+        // Deliver the drain marker; a full queue blocks until the worker
+        // makes room. A dead shard has dropped its receiver — the send
+        // fails, and its real error is collected at join below.
+        for w in &self.workers {
+            let _ = w.tx.send(ShardMsg::Drain);
+        }
+        let mut completions = Vec::new();
+        let mut shards = Vec::with_capacity(self.workers.len());
+        let mut first_err = None;
+        for w in self.workers {
+            drop(w.tx);
+            match w.join.join() {
+                Ok(Ok((mut done, stats))) => {
+                    completions.append(&mut done);
+                    shards.push(stats);
+                }
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => first_err = first_err.or_else(|| Some(anyhow!("shard thread panicked"))),
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        shards.sort_by_key(|s| s.shard);
+        completions.sort_by_key(|c| c.id);
+        Ok((completions, ClusterStats { shards }))
+    }
+}
+
+/// One shard thread: interleave queue intake with serving steps. Blocks
+/// on the channel only when fully idle; while busy it polls between steps
+/// so mid-flight submissions join the continuous batch. Crucially it
+/// pulls a request off the channel only while a lane can absorb it
+/// ([`ShardWorker::wants_work`]) — the bounded channel itself is the
+/// shard's queue, so `queue_depth` is a real backpressure bound rather
+/// than a per-step trickle into an unbounded local buffer.
+fn shard_loop(
+    shard_id: usize,
+    model: Box<dyn TokenModel>,
+    cfg: ShardConfig,
+    rx: Receiver<ShardMsg>,
+) -> Result<(Vec<Completion>, ShardStats)> {
+    let mut w = ShardWorker::new(model, cfg);
+    let mut draining = false;
+    loop {
+        // Idle and not draining: nothing to do until a message arrives.
+        if w.is_idle() && !draining {
+            match rx.recv() {
+                Ok(ShardMsg::Req(req)) => w.submit(req),
+                Ok(ShardMsg::Drain) | Err(_) => draining = true,
+            }
+        }
+        // Lane-bounded intake. The drain marker trails every request in
+        // channel order, so stopping at full lanes never strands it.
+        while !draining && w.wants_work() {
+            match rx.try_recv() {
+                Ok(ShardMsg::Req(req)) => w.submit(req),
+                Ok(ShardMsg::Drain) => draining = true,
+                Err(_) => break, // empty or disconnected
+            }
+        }
+        if w.is_idle() {
+            if draining {
+                break;
+            }
+            continue;
+        }
+        w.step()?;
+    }
+    let done = w.take_done();
+    let stats = w.stats(shard_id);
+    Ok((done, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn router_is_stable_and_covers_shards() {
+        let cluster = DecodeCluster::spawn(
+            ClusterConfig { shards: 4, ..ClusterConfig::default() },
+            |_| Box::new(crate::serve::model::SimLm::new(Default::default())),
+        );
+        let mut seen = [false; 4];
+        for id in 0..64u64 {
+            let s = cluster.route(id);
+            assert_eq!(s, cluster.route(id), "routing must be deterministic");
+            seen[s] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "64 ids should touch all 4 shards");
+        let (done, stats) = cluster.drain().unwrap();
+        assert!(done.is_empty());
+        assert_eq!(stats.total_requests(), 0);
+    }
+
+    #[test]
+    fn empty_drain_does_not_hang() {
+        let cluster = DecodeCluster::spawn(ClusterConfig::default(), |_| {
+            Box::new(crate::serve::model::SimLm::new(Default::default()))
+        });
+        let (done, stats) = cluster.drain().unwrap();
+        assert!(done.is_empty());
+        assert_eq!(stats.shards.len(), 4);
+    }
+}

@@ -1,16 +1,64 @@
-//! Batched decode server over the FP4 paged KV cache (§5 future work).
+//! Serving over the FP4 paged KV cache: the sharded decode cluster
+//! (§5's deployment path, scaled out).
 //!
-//! Demonstrates the deployment path the paper motivates: the transformer's
-//! *non-attention* compute runs as compiled per-layer HLO artifacts
-//! (`lm_embed` / `lm_layer_pre` / `lm_layer_post` / `lm_head`, weights
-//! passed as inputs so one artifact serves every layer), while **attention
-//! itself runs natively in Rust over NVFP4-quantized KV pages** — real
-//! 4-bit storage on the decode hot path, no python anywhere.
+//! ```text
+//!   submit(Request) ─▶ DecodeCluster ── hash(request.id) % N ──┐
+//!                                                              ▼
+//!        ┌────────────────────┬────────────────────┬────────────────────┐
+//!        │ shard 0 (thread)   │ shard 1 (thread)   │ shard N−1 (thread) │
+//!        │  bounded queue     │  bounded queue     │  bounded queue     │
+//!        │  ShardWorker       │  ShardWorker       │  ShardWorker       │
+//!        │   ├ TokenModel     │   ├ TokenModel     │   ├ TokenModel     │
+//!        │   ├ PagedKvCache   │   ├ PagedKvCache   │   ├ PagedKvCache   │
+//!        │   │  (SeqSlot-     │   │                │   │                │
+//!        │   │   indexed)     │   │                │   │                │
+//!        │   └ AttnEngine per │   └ AttnEngine per │   └ AttnEngine per │
+//!        │     batch lane     │     batch lane     │     batch lane     │
+//!        └────────────────────┴────────────────────┴────────────────────┘
+//!                       drain() ─▶ completions + ClusterStats
+//! ```
 //!
-//! Scheduling is continuous batching at token granularity: up to the
-//! artifact batch width `B` sequences decode per step; finished sequences
-//! free their pages and queued requests join mid-flight (the vLLM loop in
-//! miniature).
+//! Three layers, shared-nothing by construction:
+//!
+//! * [`cluster::DecodeCluster`] — the router. Requests hash on id onto N
+//!   shard threads through **bounded** `sync_channel`s (a full shard
+//!   blocks its submitters: backpressure, not unbounded buffering).
+//!   [`cluster::DecodeCluster::drain`] finishes all in-flight work and
+//!   returns pooled completions plus per-shard
+//!   [`shard::ShardStats`] (tokens/s, queue peaks, p50/p99 per-token
+//!   latency, quantized-query-cache hit rates, KV memory peaks).
+//! * [`shard::ShardWorker`] — one shard's continuous-batching loop. Owns
+//!   a private [`crate::kvcache::PagedKvCache`] addressed by
+//!   [`crate::kvcache::SeqSlot`] handles (zero map lookups per token) and
+//!   one [`AttnEngine`] per batch lane; prompts are ingested through the
+//!   batched [`AttnEngine::prefill_slot`] path, then sequences decode
+//!   token-at-a-time until they finish and free their slot.
+//! * [`model::TokenModel`] — the pluggable non-attention compute.
+//!   [`model::SimLm`] (deterministic seeded weights) is the native
+//!   default, so the whole cluster runs, tests, and benchmarks **without
+//!   the PJRT runtime**; the compiled-artifact transformer fills the same
+//!   role for [`DecodeServer`] below.
+//!
+//! Sharding changes wall-clock, never tokens: a sequence's floats depend
+//! only on its own cache and sampling stream, so for any trace of
+//! **unique request ids** (the id keys the cache slot and the sampling
+//! stream; concurrent duplicates are rejected, but reuse of a finished id
+//! is timing-dependent) an N-shard run is bitwise identical to the
+//! single-worker server (pinned by `rust/tests/cluster_serve.rs`;
+//! scaling curves in `benches/cluster_serve.rs`).
+//!
+//! [`DecodeServer`] remains the single-threaded compiled-artifact demo:
+//! the transformer's non-attention compute runs as per-layer HLO
+//! artifacts while attention runs natively over the same FP4 pages — the
+//! path that needs a real PJRT backend.
+
+pub mod cluster;
+pub mod model;
+pub mod shard;
+
+pub use cluster::{ClusterConfig, ClusterStats, DecodeCluster};
+pub use model::{SimLm, SimLmConfig, TokenModel};
+pub use shard::{ShardConfig, ShardStats, ShardWorker};
 
 use std::collections::VecDeque;
 
@@ -355,7 +403,7 @@ impl<'rt> DecodeServer<'rt> {
     }
 }
 
-fn argmax(row: &[f32]) -> usize {
+pub(crate) fn argmax(row: &[f32]) -> usize {
     row.iter()
         .enumerate()
         .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
@@ -363,7 +411,7 @@ fn argmax(row: &[f32]) -> usize {
         .unwrap_or(0)
 }
 
-fn sample_temp(row: &[f32], temp: f32, rng: &mut Rng) -> usize {
+pub(crate) fn sample_temp(row: &[f32], temp: f32, rng: &mut Rng) -> usize {
     let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
     let weights: Vec<f32> = row.iter().map(|&x| ((x - m) / temp).exp()).collect();
     rng.categorical(&weights)

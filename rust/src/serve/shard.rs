@@ -1,0 +1,583 @@
+//! One decode shard: a self-contained continuous-batching worker.
+//!
+//! A [`ShardWorker`] owns everything one shard of the cluster needs — its
+//! own [`PagedKvCache`], one [`AttnEngine`] per batch lane, a
+//! [`TokenModel`], and the request queue — so shards share **nothing** and
+//! the cluster needs no locks: the router hands a shard its requests and
+//! the worker thread pumps [`ShardWorker::step`] until drained.
+//!
+//! Scheduling is continuous batching at token granularity, with **batched
+//! prompt admission**: an admitted request's whole prompt is ingested in
+//! one pass per layer through [`AttnEngine::prefill_slot`] (one page walk
+//! per query instead of one full decode call per prompt token), then the
+//! sequence joins the per-token decode loop alongside the other lanes.
+//! Sequences are addressed by their [`SeqSlot`] handle, resolved once at
+//! admission — the per-token path does zero map lookups.
+//!
+//! Determinism: every float a sequence sees depends only on its own
+//! tokens, its own cache pages, and the model weights — never on which
+//! lane or shard it landed in, or on what other sequences are in flight.
+//! Temperature sampling draws from a per-request stream seeded by the
+//! request id, so completions are bitwise reproducible under any shard
+//! count (pinned by `rust/tests/cluster_serve.rs`).
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::attention::{AttnConfig, AttnEngine};
+use crate::kvcache::{PagedKvCache, SeqSlot};
+use crate::rng::Rng;
+
+use super::model::{TokenModel, VOCAB};
+use super::{argmax, Completion, Request, sample_temp};
+
+/// Per-shard serving knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardConfig {
+    /// Concurrent batch lanes (sequences decoding per step).
+    pub slots: usize,
+    /// Attention session config for every lane engine —
+    /// [`AttnConfig::fp4`] is the fused packed path,
+    /// [`AttnConfig::f32`] the gather + f32 baseline.
+    pub attn: AttnConfig,
+    /// Hard cap on prompt + generated tokens per sequence.
+    pub seq_max: usize,
+    /// Seed of the per-request sampling streams (request id is mixed in,
+    /// so placement never shifts a sequence's draws).
+    pub sample_seed: u64,
+}
+
+impl Default for ShardConfig {
+    fn default() -> ShardConfig {
+        ShardConfig { slots: 4, attn: AttnConfig::fp4(), seq_max: 512, sample_seed: 0x5e7e }
+    }
+}
+
+/// Post-drain per-shard report: throughput, queueing, tail latency, and
+/// the aggregated quantized-query cache counters of the shard's engines.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Requests accepted into a lane.
+    pub requests: usize,
+    /// Requests rejected at admission (zero token budget, prompt beyond
+    /// `seq_max`, duplicate in-flight id); each still yields a completion
+    /// with `new_tokens == 0` so submitters see every id come back.
+    pub rejected: usize,
+    pub steps: usize,
+    /// Forward passes run (prompt rows + decode steps across sequences).
+    pub tokens: usize,
+    /// Wall time spent inside [`ShardWorker::step`].
+    pub busy_ms: f64,
+    pub tokens_per_s: f64,
+    /// Peak of the worker-local queue (submitted but not yet in a lane).
+    /// Under the cluster's lane-bounded intake this stays at most the
+    /// lane count — the bounded channel is the real waiting line; a
+    /// standalone worker's direct submissions all land here instead.
+    pub queue_peak: usize,
+    pub p50_token_ms: f64,
+    pub p99_token_ms: f64,
+    /// Quantized-query cache hits/misses summed over the shard's lane
+    /// engines (per-shard caches: no cross-shard thrash by construction).
+    pub qcache_hits: u64,
+    pub qcache_misses: u64,
+    pub kv_bytes_peak: usize,
+    pub kv_bytes_f32_equiv_peak: usize,
+}
+
+struct ActiveSeq {
+    req: Request,
+    slot: SeqSlot,
+    tokens: Vec<u8>,
+    /// Prompt rows actually decoded (1 for an empty prompt's pad byte) —
+    /// keeps `text.len() == prompt_tokens + new_tokens` exact.
+    prompt_tokens: usize,
+    generated: usize,
+    rng: Rng,
+    started: std::time::Instant,
+}
+
+/// Reused forward-pass buffers (token-major rows plus the head-major
+/// staging the engine's prefill layout needs); capacity persists across
+/// steps so the steady-state loop does not allocate.
+#[derive(Default)]
+struct StepBufs {
+    h: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn: Vec<f32>,
+    /// Head-major (heads × nq × head_dim) staging for prefill Q / output.
+    qhm: Vec<f32>,
+    ohm: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+/// A single decode shard (usable standalone as a native single-worker
+/// decode server — the cluster's reference for bitwise determinism).
+pub struct ShardWorker {
+    cfg: ShardConfig,
+    model: Box<dyn TokenModel>,
+    cache: PagedKvCache,
+    /// One engine per batch lane (lane i serves `active[i]`).
+    engines: Vec<AttnEngine>,
+    queue: VecDeque<Request>,
+    active: Vec<ActiveSeq>,
+    done: Vec<Completion>,
+    bufs: StepBufs,
+    // Stats accumulators.
+    requests: usize,
+    rejected: usize,
+    steps: usize,
+    tokens: usize,
+    busy_ns: f64,
+    queue_peak: usize,
+    token_ms: Vec<f64>,
+    kv_peak: usize,
+    kv_f32_peak: usize,
+}
+
+impl ShardWorker {
+    pub fn new(model: Box<dyn TokenModel>, cfg: ShardConfig) -> ShardWorker {
+        assert!(cfg.slots > 0, "shard needs at least one lane");
+        let cache = PagedKvCache::new(model.layers(), model.heads(), model.head_dim());
+        let engines = (0..cfg.slots).map(|_| AttnEngine::new(cfg.attn)).collect();
+        ShardWorker {
+            cfg,
+            model,
+            cache,
+            engines,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            done: Vec::new(),
+            bufs: StepBufs::default(),
+            requests: 0,
+            rejected: 0,
+            steps: 0,
+            tokens: 0,
+            busy_ns: 0.0,
+            queue_peak: 0,
+            token_ms: Vec::new(),
+            kv_peak: 0,
+            kv_f32_peak: 0,
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+        self.queue_peak = self.queue_peak.max(self.queue.len());
+    }
+
+    /// Nothing queued and no lane occupied.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+
+    /// Could another submission be admitted right now (a lane is free and
+    /// not already spoken for)? The cluster's shard loop pulls from its
+    /// bounded channel only while this holds, so the channel — not a
+    /// worker-local buffer — is the queue that `queue_depth` bounds.
+    pub fn wants_work(&self) -> bool {
+        self.queue.len() + self.active.len() < self.cfg.slots
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.active.len()
+    }
+
+    /// One scheduling round: admit queued requests into free lanes
+    /// (prefilling their prompts in batched passes), then decode one token
+    /// for every active lane. Returns the number of forward passes run.
+    pub fn step(&mut self) -> Result<usize> {
+        let t0 = std::time::Instant::now();
+        let mut processed = 0usize;
+
+        // Admission: prompt prefill + first sampled token per request.
+        while self.active.len() < self.cfg.slots {
+            let Some(req) = self.queue.pop_front() else { break };
+            processed += self.admit(req)?;
+        }
+
+        // Decode: one token per active lane.
+        if !self.active.is_empty() {
+            let dec0 = std::time::Instant::now();
+            let mut finished = Vec::new();
+            for lane in 0..self.active.len() {
+                let a = &self.active[lane];
+                let (slot, pos) = (a.slot, a.tokens.len() - 1);
+                let tok = *a.tokens.last().expect("active seq has tokens");
+                forward_rows(
+                    self.model.as_ref(),
+                    &mut self.cache,
+                    &mut self.engines[lane],
+                    &mut self.bufs,
+                    slot,
+                    &[tok],
+                    pos,
+                )?;
+                processed += 1;
+                let d = self.model.d_model();
+                self.bufs.logits.resize(VOCAB, 0.0);
+                self.model.logits(&self.bufs.h[..d], &mut self.bufs.logits);
+                let a = &mut self.active[lane];
+                let next = if a.req.temperature <= 0.0 {
+                    argmax(&self.bufs.logits)
+                } else {
+                    sample_temp(&self.bufs.logits, a.req.temperature, &mut a.rng)
+                } as u8;
+                a.tokens.push(next);
+                a.generated += 1;
+                if a.generated >= a.req.max_new_tokens
+                    || next == b'$'
+                    || a.tokens.len() >= self.cfg.seq_max
+                {
+                    finished.push(lane);
+                }
+            }
+            let per_tok_ms = dec0.elapsed().as_secs_f64() * 1e3 / self.active.len() as f64;
+            for _ in 0..self.active.len() {
+                self.token_ms.push(per_tok_ms);
+            }
+            for &lane in finished.iter().rev() {
+                self.finish(lane)?;
+            }
+        }
+
+        self.steps += 1;
+        self.tokens += processed;
+        self.busy_ns += t0.elapsed().as_nanos() as f64;
+        Ok(processed)
+    }
+
+    /// Record KV memory peaks. Cache bytes only grow between admissions
+    /// and completions (per-token appends are monotonic), so sampling at
+    /// those two points captures every peak without walking the page
+    /// lists on each decode step.
+    fn sample_kv_peaks(&mut self) {
+        let (used, equiv) = self.cache.memory_stats();
+        self.kv_peak = self.kv_peak.max(used);
+        self.kv_f32_peak = self.kv_f32_peak.max(equiv);
+    }
+
+    /// Admit one request: resolve its slot, ingest the whole prompt
+    /// through the batched prefill path, sample its first token. Returns
+    /// prompt rows processed. A request that finishes at admission (e.g.
+    /// `max_new_tokens == 1`) completes without occupying a lane.
+    ///
+    /// Invalid requests are **rejected, never shard-fatal**: a zero token
+    /// budget, a prompt beyond `seq_max`, or an id already in flight (it
+    /// would share that sequence's cache slot; the router hashes on id,
+    /// so a concurrent duplicate always reaches the same shard) completes
+    /// immediately with `new_tokens == 0` — the rejection marker, since
+    /// an accepted request always generates at least one token — leaving
+    /// every other request unharmed. Note the check only guards ids
+    /// currently *in flight*: an id resubmitted after its sequence
+    /// completed is served fresh, so whether a duplicate is rejected or
+    /// re-served depends on arrival timing — the bitwise-determinism
+    /// guarantee is scoped to traces of unique request ids.
+    fn admit(&mut self, req: Request) -> Result<usize> {
+        let too_long = req.prompt.len().max(1) + 1 > self.cfg.seq_max;
+        if req.max_new_tokens == 0 || too_long || self.cache.slot(req.id).is_ok() {
+            self.rejected += 1;
+            self.done.push(Completion {
+                id: req.id,
+                prompt_tokens: req.prompt.len(),
+                new_tokens: 0,
+                text: req.prompt,
+                wall_ms: 0.0,
+            });
+            return Ok(0);
+        }
+        // An empty prompt decodes from a single pad byte, which counts as
+        // its one prompt row.
+        let mut tokens = if req.prompt.is_empty() {
+            vec![b' ']
+        } else {
+            req.prompt.clone()
+        };
+        let started = std::time::Instant::now();
+        self.requests += 1;
+        let slot = self.cache.add_seq(req.id);
+        let lane = self.active.len();
+        let nq = tokens.len();
+        forward_rows(
+            self.model.as_ref(),
+            &mut self.cache,
+            &mut self.engines[lane],
+            &mut self.bufs,
+            slot,
+            &tokens,
+            0,
+        )?;
+        let d = self.model.d_model();
+        self.bufs.logits.resize(VOCAB, 0.0);
+        self.model.logits(&self.bufs.h[(nq - 1) * d..nq * d], &mut self.bufs.logits);
+        let mut rng = Rng::new(self.cfg.sample_seed).split(&format!("req-{}", req.id));
+        let next = if req.temperature <= 0.0 {
+            argmax(&self.bufs.logits)
+        } else {
+            sample_temp(&self.bufs.logits, req.temperature, &mut rng)
+        } as u8;
+        tokens.push(next);
+        let per_tok_ms = started.elapsed().as_secs_f64() * 1e3 / nq as f64;
+        for _ in 0..nq {
+            self.token_ms.push(per_tok_ms);
+        }
+        let a = ActiveSeq { req, slot, tokens, prompt_tokens: nq, generated: 1, rng, started };
+        self.active.push(a);
+        self.sample_kv_peaks();
+        let a = &self.active[lane];
+        if a.generated >= a.req.max_new_tokens
+            || next == b'$'
+            || a.tokens.len() >= self.cfg.seq_max
+        {
+            self.finish(lane)?;
+        }
+        Ok(nq)
+    }
+
+    /// Retire lane `lane`: free its cache slot, record the completion.
+    fn finish(&mut self, lane: usize) -> Result<()> {
+        self.sample_kv_peaks();
+        let a = self.active.swap_remove(lane);
+        self.cache.drop_slot(a.slot)?;
+        self.done.push(Completion {
+            id: a.req.id,
+            prompt_tokens: a.prompt_tokens,
+            new_tokens: a.generated,
+            text: a.tokens,
+            wall_ms: a.started.elapsed().as_secs_f64() * 1e3,
+        });
+        Ok(())
+    }
+
+    /// Pump [`ShardWorker::step`] until idle; returns all completions so
+    /// far (the standalone single-worker server loop).
+    pub fn run(&mut self) -> Result<Vec<Completion>> {
+        while !self.is_idle() {
+            self.step()?;
+        }
+        Ok(self.take_done())
+    }
+
+    pub fn take_done(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// Snapshot the shard's statistics (percentiles computed here).
+    pub fn stats(&self, shard: usize) -> ShardStats {
+        let mut sorted = self.token_ms.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| {
+            if sorted.is_empty() {
+                0.0
+            } else {
+                sorted[((sorted.len() - 1) as f64 * p).round() as usize]
+            }
+        };
+        let (mut hits, mut misses) = (0u64, 0u64);
+        for e in &self.engines {
+            let (h, m) = e.query_cache_stats();
+            hits += h;
+            misses += m;
+        }
+        let busy_s = self.busy_ns * 1e-9;
+        ShardStats {
+            shard,
+            requests: self.requests,
+            rejected: self.rejected,
+            steps: self.steps,
+            tokens: self.tokens,
+            busy_ms: self.busy_ns * 1e-6,
+            tokens_per_s: self.tokens as f64 / busy_s.max(1e-12),
+            queue_peak: self.queue_peak,
+            p50_token_ms: pct(0.5),
+            p99_token_ms: pct(0.99),
+            qcache_hits: hits,
+            qcache_misses: misses,
+            kv_bytes_peak: self.kv_peak,
+            kv_bytes_f32_equiv_peak: self.kv_f32_peak,
+        }
+    }
+}
+
+/// One forward pass over `tokens` (positions `pos0..`) for the sequence in
+/// `slot`: embed, then per layer project Q/K/V, append K/V to the paged
+/// cache, attend (single-query decode for one row, batched prefill for
+/// many), and mix. Leaves the final hidden rows in `bufs.h`
+/// (`tokens.len() × d_model`).
+///
+/// Free function over explicit parts (not `&mut self`) so the worker can
+/// borrow its model, cache, one lane engine, and the buffers
+/// simultaneously.
+fn forward_rows(
+    model: &dyn TokenModel,
+    cache: &mut PagedKvCache,
+    engine: &mut AttnEngine,
+    bufs: &mut StepBufs,
+    slot: SeqSlot,
+    tokens: &[u8],
+    pos0: usize,
+) -> Result<()> {
+    let d = model.d_model();
+    let hd = model.head_dim();
+    let heads = model.heads();
+    let nq = tokens.len();
+    let n = nq * d;
+    bufs.h.resize(n, 0.0);
+    bufs.q.resize(n, 0.0);
+    bufs.k.resize(n, 0.0);
+    bufs.v.resize(n, 0.0);
+    bufs.attn.resize(n, 0.0);
+    model.embed(tokens, pos0, &mut bufs.h[..n]);
+    for layer in 0..model.layers() {
+        model.qkv(layer, &bufs.h[..n], &mut bufs.q[..n], &mut bufs.k[..n], &mut bufs.v[..n]);
+        for i in 0..nq {
+            for head in 0..heads {
+                let off = i * d + head * hd;
+                cache.append_at(
+                    slot,
+                    layer,
+                    head,
+                    &bufs.k[off..off + hd],
+                    &bufs.v[off..off + hd],
+                )?;
+            }
+        }
+        if nq == 1 {
+            // A single row is already (heads × head_dim): fused decode.
+            engine.decode_slot(cache, slot, layer, &bufs.q[..d], &mut bufs.attn[..d])?;
+        } else {
+            // Restage token-major rows head-major for the batched prefill,
+            // then scatter the outputs back.
+            bufs.qhm.resize(n, 0.0);
+            bufs.ohm.resize(n, 0.0);
+            for head in 0..heads {
+                for i in 0..nq {
+                    let src = i * d + head * hd;
+                    let dst = head * nq * hd + i * hd;
+                    bufs.qhm[dst..dst + hd].copy_from_slice(&bufs.q[src..src + hd]);
+                }
+            }
+            engine.prefill_slot(cache, slot, layer, &bufs.qhm[..n], nq, &mut bufs.ohm[..n])?;
+            for head in 0..heads {
+                for i in 0..nq {
+                    let src = head * nq * hd + i * hd;
+                    let dst = i * d + head * hd;
+                    bufs.attn[dst..dst + hd].copy_from_slice(&bufs.ohm[src..src + hd]);
+                }
+            }
+        }
+        model.mix(layer, &mut bufs.h[..n], &bufs.attn[..n]);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::model::{SimLm, SimLmConfig};
+
+    fn worker(cfg: ShardConfig) -> ShardWorker {
+        ShardWorker::new(Box::new(SimLm::new(SimLmConfig::default())), cfg)
+    }
+
+    fn req(id: u64, prompt: &[u8], max_new: usize) -> Request {
+        Request { id, prompt: prompt.to_vec(), max_new_tokens: max_new, temperature: 0.0 }
+    }
+
+    #[test]
+    fn serves_requests_to_completion() {
+        let mut w = worker(ShardConfig::default());
+        for i in 0..6 {
+            w.submit(req(i + 1, b"A hello#", 6));
+        }
+        let done = w.run().unwrap();
+        assert_eq!(done.len(), 6);
+        for c in &done {
+            assert_eq!(c.prompt_tokens, 8);
+            assert!(c.new_tokens >= 1 && c.new_tokens <= 6);
+            assert_eq!(c.text.len(), c.prompt_tokens + c.new_tokens);
+            assert!(c.text.starts_with(b"A hello#"));
+        }
+        assert!(w.is_idle());
+        let s = w.stats(0);
+        assert_eq!(s.requests, 6);
+        assert!(s.tokens >= 6 * 8, "tokens {}", s.tokens);
+        assert!(s.p50_token_ms <= s.p99_token_ms);
+        // All slots freed: the drained cache holds nothing.
+        assert!(s.kv_bytes_peak > 0);
+    }
+
+    #[test]
+    fn deterministic_across_reruns_and_greedy_equals_itself() {
+        let trace: Vec<Request> = (0..5)
+            .map(|i| Request {
+                id: 100 + i,
+                prompt: format!("B q{i}#").into_bytes(),
+                max_new_tokens: 5,
+                temperature: if i % 2 == 0 { 0.0 } else { 0.8 },
+            })
+            .collect();
+        let mut a = worker(ShardConfig::default());
+        let mut b = worker(ShardConfig { slots: 2, ..ShardConfig::default() });
+        for r in &trace {
+            a.submit(r.clone());
+            b.submit(r.clone());
+        }
+        let mut da = a.run().unwrap();
+        let mut db = b.run().unwrap();
+        da.sort_by_key(|c| c.id);
+        db.sort_by_key(|c| c.id);
+        // Different lane counts reorder the work, never the tokens —
+        // including the temperature>0 requests (per-request rng streams).
+        for (x, y) in da.iter().zip(&db) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.text, y.text);
+            assert_eq!(x.new_tokens, y.new_tokens);
+        }
+    }
+
+    #[test]
+    fn empty_prompt_and_zero_budget_edges() {
+        let mut w = worker(ShardConfig::default());
+        w.submit(req(1, b"", 2));
+        let done = w.run().unwrap();
+        assert_eq!(done.len(), 1);
+        // The pad byte counts as the one decoded prompt row, keeping the
+        // text.len() == prompt_tokens + new_tokens invariant exact.
+        assert_eq!(done[0].prompt_tokens, 1);
+        assert_eq!(done[0].text.len(), done[0].prompt_tokens + done[0].new_tokens);
+        assert!(done[0].new_tokens >= 1);
+
+        // Zero-token budget: rejected (new_tokens == 0), never shard-fatal.
+        let mut w = worker(ShardConfig::default());
+        w.submit(req(2, b"x", 0));
+        w.submit(req(3, b"ok#", 2));
+        let done = w.run().unwrap();
+        assert_eq!(done.len(), 2, "rejection must not kill the healthy request");
+        let rej = done.iter().find(|c| c.id == 2).unwrap();
+        assert_eq!((rej.new_tokens, rej.text.as_slice()), (0, b"x".as_slice()));
+        assert!(done.iter().find(|c| c.id == 3).unwrap().new_tokens >= 1);
+        assert_eq!(w.stats(0).rejected, 1);
+    }
+
+    #[test]
+    fn duplicate_in_flight_ids_and_oversized_prompts_are_rejected() {
+        // slots=2: request 7 is still in flight (lane 0) when its
+        // duplicate reaches admission in the same scheduling round.
+        let mut w = worker(ShardConfig { slots: 2, ..ShardConfig::default() });
+        w.submit(req(7, b"first#", 4));
+        w.submit(req(7, b"second#", 4));
+        w.submit(req(8, &[b'L'; 600], 4)); // prompt beyond seq_max=512
+        let done = w.run().unwrap();
+        assert_eq!(done.len(), 3);
+        let dup: Vec<_> = done.iter().filter(|c| c.id == 7).collect();
+        assert_eq!(dup.len(), 2);
+        assert!(dup.iter().any(|c| c.new_tokens == 0), "duplicate rejected");
+        assert!(dup.iter().any(|c| c.new_tokens >= 1), "original served");
+        assert_eq!(done.iter().find(|c| c.id == 8).unwrap().new_tokens, 0);
+        assert_eq!(w.stats(0).rejected, 2);
+    }
+}
