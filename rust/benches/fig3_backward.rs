@@ -3,7 +3,11 @@
 //! Measures the native `qat::flash_backward` in its two recomputation
 //! regimes (the drop-in stock-FA backward and the Attn-QAT matched
 //! backward whose S/P rebuild runs in the packed 4-bit domain via the
-//! byte-pair LUT), plus the training forward that produces the residuals.
+//! byte-pair LUT), plus the training forward that produces the residuals,
+//! plus the S-row recompute primitive both ways — per-pair
+//! `lut::packed_row_dot` calls vs the batched `lut::packed_row_dots_into`
+//! the backward now uses (the before/after of the ROADMAP "batch the
+//! backward's per-row loops through the LUT block dots" lever).
 //! Appends JSONL history to `results/bench/fig3_backward.jsonl`, same
 //! format as `fig5_kernels`.
 //!
@@ -12,8 +16,10 @@
 //! BENCH_QUICK=1 cargo bench --bench fig3_backward
 //! ```
 
+use attn_qat::attention::engine::pack_qkv_for_attention;
 use attn_qat::attention::{AttnConfig, AttnEngine, BwdSwitches};
 use attn_qat::bench::{bench_units, Reporter};
+use attn_qat::formats::lut;
 use attn_qat::qat::flash_backward;
 use attn_qat::rng::Rng;
 
@@ -78,6 +84,40 @@ fn main() -> anyhow::Result<()> {
             || {
                 let t = qat_engine.forward_train(&q, &k, &v, 1, n, n, d);
                 std::hint::black_box(t.o[0]);
+            },
+        ));
+        // S-row recompute primitive: per-pair row dots (the old backward
+        // inner loop) vs one batched block-dot call per row (the new one).
+        // Same bits out — the delta is pure setup-hoisting.
+        let (q4, k4, _v4) = pack_qkv_for_attention(&q, &k, &v, n, n, d);
+        let lut = lut::pair_dot();
+        let mut s_row = vec![0.0f32; n];
+        rep.push(bench_units(
+            &format!("s_recompute_rowdot_s{n}_d{d}"),
+            1,
+            iters,
+            2.0 * (n * n * d) as f64,
+            "flop",
+            || {
+                for i in 0..n {
+                    for (j, s) in s_row.iter_mut().enumerate() {
+                        *s = lut::packed_row_dot(lut, &q4, i, &k4, j);
+                    }
+                    std::hint::black_box(s_row[0]);
+                }
+            },
+        ));
+        rep.push(bench_units(
+            &format!("s_recompute_blockdot_s{n}_d{d}"),
+            1,
+            iters,
+            2.0 * (n * n * d) as f64,
+            "flop",
+            || {
+                for i in 0..n {
+                    lut::packed_row_dots_into(lut, &q4, i, &k4, n, &mut s_row);
+                    std::hint::black_box(s_row[0]);
+                }
             },
         ));
     }

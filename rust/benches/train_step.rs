@@ -1,0 +1,52 @@
+//! Train-step bench: native `QatModel` + `TrainSession` throughput.
+//!
+//! Measures whole optimizer steps (corpus batch → training forward →
+//! per-layer QAT backward → Adam+clip update) in tokens/s across layer
+//! counts, fp4 (Attn-QAT) vs the f32 baseline attention config. Appends
+//! JSONL history to `results/bench/train_step.jsonl`.
+//!
+//! ```bash
+//! cargo bench --bench train_step
+//! BENCH_QUICK=1 cargo bench --bench train_step
+//! ```
+
+use attn_qat::attention::AttnConfig;
+use attn_qat::bench::{bench_units, Reporter};
+use attn_qat::model::{LmTrainTask, QatModel, QatModelConfig, TrainConfig, TrainSession};
+
+fn main() -> anyhow::Result<()> {
+    let mut rep = Reporter::new("train_step");
+    let quick = std::env::var("BENCH_QUICK").is_ok();
+    let layer_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let seq = 48usize;
+
+    for &layers in layer_counts {
+        for (name, attn) in [("fp4", AttnConfig::attn_qat()), ("f32", AttnConfig::f32())] {
+            let cfg = QatModelConfig {
+                layers,
+                heads: 2,
+                head_dim: 16,
+                ff: 64,
+                max_pos: 512,
+                seed: 7,
+                attn,
+            };
+            let task = LmTrainTask::new(QatModel::new(cfg), seq, 11);
+            let mut session = TrainSession::new(task, TrainConfig::adam(5e-3));
+            let iters = if quick { 3 } else { 5 };
+            rep.push(bench_units(
+                &format!("train_step_l{layers}_{name}_seq{seq}"),
+                1,
+                iters,
+                seq as f64,
+                "tok",
+                || {
+                    let m = session.step();
+                    std::hint::black_box(m.loss);
+                },
+            ));
+        }
+    }
+    rep.save()?;
+    Ok(())
+}

@@ -1,5 +1,6 @@
 //! Figure 3, natively: the Attn-QAT vs drop-in training-dynamics ablation
-//! with **no compiled artifacts and no XLA** — just the `qat` subsystem.
+//! with **no compiled artifacts and no XLA** — just the `qat` backward and
+//! the `model` training stack.
 //!
 //! ```bash
 //! cargo run --release --example fig3_native
@@ -8,11 +9,14 @@
 //! ```
 //!
 //! Trains the same toy attention-regression problem under all four
-//! backward ablations and prints the grad-norm story: the matched
-//! packed-FP4 backward (Attn-QAT) stays stable at a learning rate where
-//! the "drop-in" stock-FA backward spikes and diverges.
+//! backward ablations through `model::TrainSession` (the old
+//! `qat::NativeTrainer` survives only as a deprecated shim over this) and
+//! prints the grad-norm story: the matched packed-FP4 backward (Attn-QAT)
+//! stays stable at a learning rate where the "drop-in" stock-FA backward
+//! spikes and diverges.
 
-use attn_qat::qat::{NativeTrainer, QatVariant, TrainerConfig};
+use attn_qat::model::AttnRegressor;
+use attn_qat::qat::{QatVariant, TrainerConfig};
 
 fn main() {
     let steps = 150;
@@ -27,7 +31,7 @@ fn main() {
         ("- Fake quant P in BWD", QatVariant::NoFqP),
         ("naive drop-in (FP4 fwd + stock bwd)", QatVariant::DropIn),
     ] {
-        let mut t = NativeTrainer::new(TrainerConfig::default(), variant);
+        let mut t = AttnRegressor::session(TrainerConfig::default(), variant.config());
         t.run(steps, 0, |_| {});
         let final_loss = t.history.last().map(|m| m.loss).unwrap_or(f32::NAN);
         println!(

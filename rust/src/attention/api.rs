@@ -238,6 +238,22 @@ impl AttnConfig {
         self
     }
 
+    /// Toggle SageAttention3 Eq. 4 smoothing (quantized precisions only).
+    /// The matched native backward (`qat::flash_backward_cfg`) rebuilds
+    /// the smoothed operands, so e.g. the paper's smooth-K QAT ablation is
+    /// `AttnConfig::attn_qat().with_smooth(true)`.
+    pub fn with_smooth(mut self, smooth: bool) -> AttnConfig {
+        self.smooth = smooth;
+        self
+    }
+
+    /// Toggle two-level P quantization (per-row rescale into the E4M3
+    /// range before the NVFP4 pass; quantized precisions only).
+    pub fn with_two_level_p(mut self, two_level_p: bool) -> AttnConfig {
+        self.two_level_p = two_level_p;
+        self
+    }
+
     /// Does the forward run through a quantized engine?
     pub fn quantized(&self) -> bool {
         self.precision != Precision::F32
@@ -392,11 +408,12 @@ impl AttnEngine {
 
     /// Multi-head training forward: [`AttnEngine::forward`] plus the O′
     /// residual the QAT backward consumes (Fix B). O and lse stay bitwise
-    /// identical to the inference forward; for f32 sessions `o_prime == o`.
+    /// identical to the inference forward — including under smoothing and
+    /// two-level P, whose recompute terms `qat::flash_backward_cfg`
+    /// mirrors; for f32 sessions `o_prime == o`.
     ///
-    /// Smoothing / two-level P have no native backward yet (ROADMAP), and
-    /// the dequant comparator backend has no training path — training
-    /// sessions must configure all three off.
+    /// The dequant comparator backend has no training path — training
+    /// sessions must use the packed backend.
     #[allow(clippy::too_many_arguments)]
     pub fn forward_train(
         &mut self,
@@ -411,10 +428,6 @@ impl AttnEngine {
         assert_eq!(q.len(), heads * nq * d, "q must be (heads x nq x d)");
         assert_eq!(k.len(), heads * nk * d, "k must be (heads x nk x d)");
         assert_eq!(v.len(), heads * nk * d, "v must be (heads x nk x d)");
-        assert!(
-            !self.cfg.smooth && !self.cfg.two_level_p,
-            "training forward does not support smoothing / two-level P yet"
-        );
         assert!(
             self.cfg.backend == Backend::Packed,
             "training forward runs the packed engine only (no dequant comparator path)"
@@ -677,7 +690,19 @@ fn run_head_train(
         let o_prime = out.o.clone();
         (out, o_prime)
     } else {
-        attend_quantized_train(q, k, v, nq, nk, d, cfg.causal, scratch)
+        attend_quantized_train(
+            q,
+            k,
+            v,
+            nq,
+            nk,
+            d,
+            cfg.causal,
+            cfg.smooth,
+            cfg.two_level_p,
+            cfg.block_q,
+            scratch,
+        )
     }
 }
 
@@ -737,7 +762,12 @@ mod tests {
         let q = rng.normal_vec(h * n * d, 0.0, 1.0);
         let k = rng.normal_vec(h * n * d, 0.0, 1.0);
         let v = rng.normal_vec(h * n * d, 0.0, 1.0);
-        for cfg in [AttnConfig::fp4().with_causal(true), AttnConfig::f32()] {
+        for cfg in [
+            AttnConfig::fp4().with_causal(true),
+            AttnConfig::f32(),
+            AttnConfig::sage3(),
+            AttnConfig::attn_qat().with_smooth(true),
+        ] {
             let mut engine = AttnEngine::new(cfg);
             let fwd = engine.forward(&q, &k, &v, h, n, n, d);
             let train = engine.forward_train(&q, &k, &v, h, n, n, d);

@@ -87,10 +87,12 @@ pub fn pack_qkv_for_attention(
 }
 
 /// SageAttention3 Eq. 4 preprocessing, shared by the packed and legacy
-/// engines: subtract the global per-column key mean and the per-tile query
-/// mean. Returns the smoothed copies plus the per-tile means q̄
-/// (`⌈nq/block_q⌉ × d` row-major) needed for the high-precision ΔS fixup.
-fn smooth_qk(
+/// engines *and* the matched native backward (`qat::flash_backward_cfg`
+/// must rebuild exactly the operands the forward quantized): subtract the
+/// global per-column key mean and the per-tile query mean. Returns the
+/// smoothed copies plus the per-tile means q̄ (`⌈nq/block_q⌉ × d`
+/// row-major) needed for the high-precision ΔS fixup.
+pub(crate) fn smooth_qk(
     q: &[f32],
     k: &[f32],
     nq: usize,
@@ -167,9 +169,11 @@ pub(crate) fn attend_quantized(
     )
 }
 
-/// Training-forward core: [`attend_quantized`] (plain FP4) plus the
-/// high-precision `O′ = P·V^F / l` residual (Alg. 2 l.13). O and lse are
-/// bitwise identical to the inference path.
+/// Training-forward core: [`attend_quantized`] plus the high-precision
+/// `O′ = P·V^F / l` residual (Alg. 2 l.13). O and lse are bitwise
+/// identical to the inference path under the same smoothing / two-level-P
+/// knobs (the Q/K smoothing happens *before* the single quantization
+/// point, so O′ rides the same smoothed P rows).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn attend_quantized_train(
     q: &[f32],
@@ -179,9 +183,18 @@ pub(crate) fn attend_quantized_train(
     nk: usize,
     d: usize,
     causal: bool,
+    smooth: bool,
+    two_level_p: bool,
+    block_q: usize,
     scratch: &mut AttnScratch,
 ) -> (AttnOutput, Vec<f32>) {
-    let (qq, kq, vq) = pack_qkv_for_attention(q, k, v, nq, nk, d);
+    let (q_in, k_in, q_means): (Cow<[f32]>, Cow<[f32]>, Vec<f32>) = if smooth {
+        let (qi, ki, qm) = smooth_qk(q, k, nq, nk, d, block_q);
+        (Cow::Owned(qi), Cow::Owned(ki), qm)
+    } else {
+        (Cow::Borrowed(q), Cow::Borrowed(k), Vec::new())
+    };
+    let (qq, kq, vq) = pack_qkv_for_attention(&q_in, &k_in, v, nq, nk, d);
     let mut o_prime = vec![0.0f32; nq * d];
     let out = attend_packed_core(
         &qq,
@@ -191,9 +204,9 @@ pub(crate) fn attend_quantized_train(
         nk,
         d,
         causal,
-        None,
-        NVFP4_BLOCK,
-        false,
+        if smooth { Some(&q_means) } else { None },
+        block_q,
+        two_level_p,
         Some(&mut o_prime),
         scratch,
     );
@@ -228,7 +241,8 @@ pub fn attend_fp4_train(
     causal: bool,
 ) -> TrainOutput {
     let mut scratch = AttnScratch::new();
-    let (out, o_prime) = attend_quantized_train(q, k, v, nq, nk, d, causal, &mut scratch);
+    let (out, o_prime) =
+        attend_quantized_train(q, k, v, nq, nk, d, causal, false, false, NVFP4_BLOCK, &mut scratch);
     TrainOutput { o: out.o, o_prime, lse: out.lse }
 }
 

@@ -166,6 +166,31 @@ impl AttnScratch {
     }
 }
 
+/// Per-key ΔS fixup contributions (SageAttention3 Eq. 5): fill
+/// `delta[t·nk + j] = q̄_t · kf_row[..d]` for every query tile, given one
+/// dequantized smoothed key row. The forward score build here and the
+/// matched backward (`qat::flash_backward_cfg`) share this function so
+/// their accumulation order can never drift — the backward's bitwise
+/// rebuild of the forward's S depends on it.
+pub(crate) fn smooth_delta_for_key(
+    q_means: &[f32],
+    tiles: usize,
+    d: usize,
+    kf_row: &[f32],
+    j: usize,
+    nk: usize,
+    delta: &mut [f32],
+) {
+    for t in 0..tiles {
+        let qmt = &q_means[t * d..(t + 1) * d];
+        let mut acc = 0.0f32;
+        for c in 0..d {
+            acc += qmt[c] * kf_row[c];
+        }
+        delta[t * nk + j] = acc;
+    }
+}
+
 /// Aligned-ends causal limit: query `i` sees keys `j < limit`.
 ///
 /// Saturating: when `nk < nq` the leading queries legitimately see zero
@@ -269,14 +294,7 @@ pub(crate) fn attend_packed_core(
         scratch.delta.resize(tiles * nk, 0.0);
         for j in 0..nk {
             k.dequant_row_into(j, &mut scratch.kf_row);
-            for t in 0..tiles {
-                let qmt = &qm[t * d..(t + 1) * d];
-                let mut acc = 0.0f32;
-                for c in 0..d {
-                    acc += qmt[c] * scratch.kf_row[c];
-                }
-                scratch.delta[t * nk + j] = acc;
-            }
+            smooth_delta_for_key(qm, tiles, d, &scratch.kf_row, j, nk, &mut scratch.delta);
         }
     }
 
@@ -302,9 +320,12 @@ pub(crate) fn attend_packed_core(
             continue;
         }
         // --- S row: packed QKᵀ (FP4MM #1, f32 accumulate) -----------------
+        // One batched block-dot call per row: bitwise the per-pair dots,
+        // with the query-side row setup hoisted out of the key loop.
+        lut::packed_row_dots_into(lut, q, i, k, limit, &mut scratch.s_row);
         let mut m = f32::NEG_INFINITY;
         for j in 0..limit {
-            let mut acc = lut::packed_row_dot(lut, q, i, k, j);
+            let mut acc = scratch.s_row[j];
             if q_means.is_some() {
                 acc += scratch.delta[tile * nk + j];
             }

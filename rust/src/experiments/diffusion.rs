@@ -11,7 +11,8 @@ use super::common::{ensure_diff_base, f4, write_history, write_table};
 use crate::attention::AttnConfig;
 use crate::config::Config;
 use crate::coordinator::{LrSchedule, StepMetrics, Trainer};
-use crate::qat::{NativeTrainer, TrainerConfig};
+use crate::model::AttnRegressor;
+use crate::qat::TrainerConfig;
 use crate::data::latents::LatentGen;
 use crate::eval::judge::judge_pairwise;
 use crate::eval::video::{reference_stats, video_metrics, VideoMetrics, VideoRefStats};
@@ -355,7 +356,7 @@ pub fn fig3_dynamics_native(cfg: &Config) -> Result<()> {
         let attn = AttnConfig::parse(variant).expect("fig3 variant");
         println!("[fig3-native] training '{label}' for {steps} steps (lr {lr})...");
         let tc = TrainerConfig { lr, seed, ..TrainerConfig::default() };
-        let mut trainer = NativeTrainer::with_attention(tc, attn);
+        let mut trainer = AttnRegressor::session(tc, attn);
         trainer.run(steps, (steps / 5).max(1), |m| {
             println!(
                 "  [{label}] step {:>4} loss {:.4} gnorm {:.3}",

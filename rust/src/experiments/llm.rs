@@ -14,7 +14,8 @@ use crate::coordinator::{LrSchedule, StepMetrics, Trainer};
 use crate::data::corpus::Corpus;
 use crate::data::tasks::{sft_batch, MC_SUITES};
 use crate::eval::lm::{mc_accuracy, perplexity};
-use crate::qat::{NativeTrainer, TrainerConfig};
+use crate::model::AttnRegressor;
+use crate::qat::TrainerConfig;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
@@ -255,7 +256,7 @@ pub fn fig3c_native(cfg: &Config) -> Result<()> {
     {
         println!("[fig3c-native] training '{label}' for {steps} steps (lr {lr})...");
         let tc = TrainerConfig { lr, seed, init_jitter: 0.125, ..TrainerConfig::default() };
-        let mut trainer = NativeTrainer::with_attention(tc, attn);
+        let mut trainer = AttnRegressor::session(tc, attn);
         trainer.run(steps, (steps / 5).max(1), |m| {
             println!(
                 "  [{label}] step {:>4} loss {:.4} gnorm {:.3}",

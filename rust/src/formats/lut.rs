@@ -105,6 +105,48 @@ pub fn packed_row_dot(
     acc
 }
 
+/// Batched row dots: `out[rb] = dot(row ra of a, row rb of b)` for
+/// `rb < nb` — one full S-row recompute in a single call.
+///
+/// Bitwise identical to `nb` independent [`packed_row_dot`] calls (same
+/// per-block products, same accumulation order); the win is hoisting the
+/// `a`-side row slicing and bounds work out of the inner loop, which the
+/// per-pair entry point redoes for every key. This is the backward's
+/// S-recompute hot path (`qat::flash_backward` rebuilds one score row per
+/// query); the `fig3_backward` bench records the per-pair vs batched
+/// comparison.
+pub fn packed_row_dots_into(
+    lut: &[f32],
+    a: &PackedNvfp4,
+    ra: usize,
+    b: &PackedNvfp4,
+    nb: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.cols, b.cols);
+    debug_assert!(ra < a.rows && nb <= b.rows);
+    debug_assert!(out.len() >= nb);
+    let spb = a.cols / NVFP4_BLOCK; // scale blocks per row
+    let bpr = a.cols / 2; // bytes per row
+    let a_codes = &a.codes[ra * bpr..(ra + 1) * bpr];
+    let a_scales = &a.scales[ra * spb..(ra + 1) * spb];
+    for (rb, o) in out[..nb].iter_mut().enumerate() {
+        let b_codes = &b.codes[rb * bpr..(rb + 1) * bpr];
+        let b_scales = &b.scales[rb * spb..(rb + 1) * spb];
+        let mut acc = 0.0f32;
+        for bi in 0..spb {
+            let s = e4m3::decode(a_scales[bi]) * e4m3::decode(b_scales[bi]);
+            let d = bytes_dot(
+                lut,
+                &a_codes[bi * BLOCK_BYTES..(bi + 1) * BLOCK_BYTES],
+                &b_codes[bi * BLOCK_BYTES..(bi + 1) * BLOCK_BYTES],
+            );
+            acc += d * s;
+        }
+        *o = acc;
+    }
+}
+
 /// Quantize one row straight into packed form (codes 2-per-byte + scale
 /// bytes), reusing the caller's buffers — the allocation-free counterpart
 /// of [`PackedNvfp4::quantize`] for hot paths (decode queries, P rows).
@@ -167,6 +209,25 @@ mod tests {
                     want += blk;
                 }
                 assert_eq!(got, want, "rows {ra},{rb}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_row_dots_match_per_pair_bitwise() {
+        // The batched S-row recompute must be bit-identical to independent
+        // per-pair dots (same block products, same accumulation order).
+        let (rows, cols) = (7, 48);
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|i| ((i * 2246822519usize) % 1777) as f32 / 200.0 - 4.4)
+            .collect();
+        let p = PackedNvfp4::quantize(&data, rows, cols).unwrap();
+        let lut = pair_dot();
+        let mut out = vec![0.0f32; rows];
+        for ra in 0..rows {
+            packed_row_dots_into(lut, &p, ra, &p, rows, &mut out);
+            for rb in 0..rows {
+                assert_eq!(out[rb], packed_row_dot(lut, &p, ra, &p, rb), "({ra},{rb})");
             }
         }
     }

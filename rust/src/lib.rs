@@ -12,7 +12,8 @@
 //! * numeric formats: [`formats`] (E2M1 / E4M3 / E8M0 / NVFP4 / MXFP4)
 //! * runtime: [`runtime`] (PJRT + artifact registry)
 //! * engines: [`attention`] (f32 / real-quant FP4 / Sage3)
-//! * training: [`qat`] (native FP4-recomputed backward + STE + trainer)
+//! * training: [`qat`] (native FP4-recomputed backward + STE),
+//!   [`model`] (QatModel / TrainSession — the native train→serve stack)
 //! * pipeline: [`data`], [`coordinator`], [`eval`]
 //! * serving: [`kvcache`], [`serve`]
 //! * analysis: [`perfmodel`], [`experiments`]
@@ -31,6 +32,7 @@ pub mod data;
 pub mod eval;
 pub mod experiments;
 pub mod kvcache;
+pub mod model;
 pub mod perfmodel;
 pub mod qat;
 pub mod runtime;

@@ -1,0 +1,175 @@
+//! Native model stack: one layered API for training **and** serving.
+//!
+//! Before this module the repo had two disjoint model worlds: the `qat`
+//! trainer drove a bespoke single-attention toy, while `serve` ran a
+//! forward-only `SimLm` it could not train. `model` unifies them the way
+//! `attention::AttnEngine` unified the attention kernels:
+//!
+//! * [`modules`] — composable trainable pieces ([`Linear`], [`Embedding`],
+//!   [`Mlp`], rms-norm kernels) exposing `forward` / `forward_train` /
+//!   `backward` with parameter+gradient views ([`Module::visit_params`]).
+//! * [`QatModel`] — a pre-norm byte transformer (embedding → N× {attention
+//!   via [`crate::attention::AttnEngine`] with a **per-layer**
+//!   [`crate::attention::AttnConfig`], MLP, norm} → logits). Training
+//!   attention runs `forward_train` + `qat::flash_backward_cfg`, so the
+//!   Fig-3 `BwdSwitches` ablations (and smooth-K / two-level P̃) apply per
+//!   layer; the same weights implement [`crate::serve::TokenModel`], so a
+//!   finetuned model serves directly from the sharded
+//!   [`crate::serve::DecodeCluster`] — the repo's first train→serve round
+//!   trip ([`QatModel::save_quantized`] / [`QatModel::load`] move the
+//!   quantized weights between the two).
+//! * [`TrainSession`] — the config-driven training loop ([`TrainConfig`]:
+//!   [`Optimizer`] choice — SGD+momentum or Adam — global grad-clip, lr
+//!   schedule, `StepMetrics` history). [`AttnRegressor`] is the old
+//!   Fig-3 toy task as a [`TrainableModel`]; `qat::NativeTrainer` remains
+//!   as a deprecated shim over [`AttnRegressor::session`].
+//!
+//! ```no_run
+//! use attn_qat::model::{LmTrainTask, QatModel, QatModelConfig, TrainConfig, TrainSession};
+//!
+//! // Finetune with Adam + grad-clip (the paper's recipe) ...
+//! let task = LmTrainTask::new(QatModel::new(QatModelConfig::default()), 48, 42);
+//! let mut session = TrainSession::new(task, TrainConfig::adam(5e-3));
+//! session.run(100, 10, |m| println!("step {} loss {:.4}", m.step, m.loss));
+//! // ... then serve the same weights from the cluster.
+//! let model = session.model.into_model();
+//! # let _ = model;
+//! ```
+
+pub mod modules;
+pub mod optim;
+pub mod qat_model;
+pub mod regressor;
+pub mod session;
+
+pub use modules::{cross_entropy, Embedding, Linear, Mlp, Module};
+pub use optim::{Adam, Optimizer, Sgd};
+pub use qat_model::{LmTrainTask, ModelActs, QatModel, QatModelConfig};
+pub use regressor::AttnRegressor;
+pub use session::{OptimizerKind, TrainConfig, TrainSession, TrainableModel};
+
+use anyhow::{ensure, Result};
+
+use crate::attention::{AttnConfig, AttnEngine};
+use crate::kvcache::{PagedKvCache, SeqSlot};
+use crate::serve::argmax;
+use crate::serve::model::{TokenModel, VOCAB};
+
+use self::modules::{to_head_major, to_token_major};
+
+/// Standalone greedy decode over any [`TokenModel`], using the serving
+/// dataflow (own paged FP4 cache + one [`AttnEngine`]): batched prompt
+/// prefill, then token-at-a-time decode until `max_new` tokens, a `'$'`
+/// terminator, or `seq_max`.
+///
+/// This replicates the per-sequence math of `serve::ShardWorker` exactly
+/// (same cache appends, same engine calls, same sampling rule), so it is
+/// the **direct model eval** the cluster-parity tests compare against:
+/// cluster(N) == cluster(1) == this function, bitwise, for greedy
+/// requests.
+pub fn greedy_decode(
+    model: &dyn TokenModel,
+    attn: AttnConfig,
+    prompt: &[u8],
+    max_new: usize,
+    seq_max: usize,
+) -> Result<Vec<u8>> {
+    ensure!(max_new > 0, "need a token budget");
+    ensure!(prompt.len().max(1) + 1 <= seq_max, "prompt beyond seq_max");
+    let mut cache = PagedKvCache::new(model.layers(), model.heads(), model.head_dim());
+    let slot = cache.add_seq(0);
+    let mut engine = AttnEngine::new(attn);
+    let mut tokens = if prompt.is_empty() { vec![b' '] } else { prompt.to_vec() };
+    let d = model.d_model();
+    let mut logits = vec![0.0f32; VOCAB];
+    // Prompt prefill + first sampled token.
+    let nq = tokens.len();
+    let h = forward_rows(model, &mut cache, &mut engine, slot, &tokens, 0)?;
+    model.logits(&h[(nq - 1) * d..nq * d], &mut logits);
+    let mut next = argmax(&logits) as u8;
+    tokens.push(next);
+    let mut generated = 1usize;
+    // Token-at-a-time decode.
+    while generated < max_new && next != b'$' && tokens.len() < seq_max {
+        let pos = tokens.len() - 1;
+        let tok = *tokens.last().expect("non-empty");
+        let h = forward_rows(model, &mut cache, &mut engine, slot, &[tok], pos)?;
+        model.logits(&h[..d], &mut logits);
+        next = argmax(&logits) as u8;
+        tokens.push(next);
+        generated += 1;
+    }
+    Ok(tokens)
+}
+
+/// One forward pass over `tokens` for the sequence in `slot` — the same
+/// per-layer dataflow as `serve::shard`'s worker (embed → qkv → append →
+/// attend (decode for one row, batched prefill for many) → mix). Returns
+/// the final hidden rows.
+fn forward_rows(
+    model: &dyn TokenModel,
+    cache: &mut PagedKvCache,
+    engine: &mut AttnEngine,
+    slot: SeqSlot,
+    tokens: &[u8],
+    pos0: usize,
+) -> Result<Vec<f32>> {
+    let d = model.d_model();
+    let hd = model.head_dim();
+    let heads = model.heads();
+    let nq = tokens.len();
+    let n = nq * d;
+    let mut h = vec![0.0f32; n];
+    let mut q = vec![0.0f32; n];
+    let mut k = vec![0.0f32; n];
+    let mut v = vec![0.0f32; n];
+    let mut attn = vec![0.0f32; n];
+    model.embed(tokens, pos0, &mut h);
+    for layer in 0..model.layers() {
+        model.qkv(layer, &h, &mut q, &mut k, &mut v);
+        for i in 0..nq {
+            for head in 0..heads {
+                let off = i * d + head * hd;
+                cache.append_at(slot, layer, head, &k[off..off + hd], &v[off..off + hd])?;
+            }
+        }
+        if nq == 1 {
+            engine.decode_slot(cache, slot, layer, &q[..d], &mut attn[..d])?;
+        } else {
+            // Restage token-major rows head-major for the batched prefill.
+            let qhm = to_head_major(&q, nq, heads, hd);
+            let mut ohm = vec![0.0f32; n];
+            engine.prefill_slot(cache, slot, layer, &qhm, nq, &mut ohm)?;
+            attn = to_token_major(&ohm, nq, heads, hd);
+        }
+        model.mix(layer, &mut h, &attn);
+    }
+    Ok(h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{SimLm, SimLmConfig};
+
+    #[test]
+    fn greedy_decode_runs_on_sim_lm_and_is_deterministic() {
+        let lm = SimLm::new(SimLmConfig::default());
+        let a = greedy_decode(&lm, AttnConfig::fp4(), b"A hello#", 6, 128).unwrap();
+        let b = greedy_decode(&lm, AttnConfig::fp4(), b"A hello#", 6, 128).unwrap();
+        assert_eq!(a, b);
+        assert!(a.starts_with(b"A hello#"));
+        assert!(a.len() > 8 && a.len() <= 8 + 6);
+        // The f32 baseline config runs the gather path.
+        let c = greedy_decode(&lm, AttnConfig::f32(), b"A hello#", 6, 128).unwrap();
+        assert!(c.starts_with(b"A hello#"));
+    }
+
+    #[test]
+    fn greedy_decode_empty_prompt_pads() {
+        let lm = SimLm::new(SimLmConfig::default());
+        let out = greedy_decode(&lm, AttnConfig::fp4(), b"", 3, 64).unwrap();
+        assert_eq!(out[0], b' ');
+        assert!(out.len() >= 2);
+    }
+}

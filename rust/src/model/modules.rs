@@ -1,0 +1,486 @@
+//! Composable trainable modules: the building blocks of [`super::QatModel`].
+//!
+//! Each module owns its parameters **and** their gradient accumulators as
+//! plain f32 buffers, exposed through the [`Module`] trait's
+//! `visit_params` — the parameter+gradient views the
+//! [`super::TrainSession`] optimizer and grad-clip loop consume. Forward
+//! passes take `&self` (so the same weights serve inference through
+//! `serve::model::TokenModel`); backward passes take `&mut self` and
+//! *accumulate* into the grad buffers, which the session zeroes at the
+//! start of every step.
+//!
+//! The row-level kernels ([`rms_norm`], [`vec_mat_acc`]) are the single
+//! definitions shared with `serve::model::SimLm`, so a `QatModel`'s
+//! non-attention serving math is the training forward's math — only the
+//! attention kernel differs between the two (engine training forward vs
+//! paged FP4 decode).
+//!
+//! All backward formulas are pinned by finite differences in
+//! `rust/tests/grad_check.rs` (module level) and by the whole-model FD
+//! check simulated for the `model` subsystem (worst relative error ~2e-8
+//! in f64; the f32 asserts carry orders-of-magnitude margins).
+
+/// RMS-normalization epsilon (matches `serve::model::SimLm`).
+pub const RMS_EPS: f32 = 1e-6;
+
+/// RMS-normalize `x` into `out` (same length).
+pub fn rms_norm(x: &[f32], out: &mut [f32]) {
+    let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + RMS_EPS).sqrt();
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = v * inv;
+    }
+}
+
+/// [`rms_norm`] over `(rows × d)` row-major views.
+pub fn rms_norm_rows(x: &[f32], d: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), out.len());
+    debug_assert_eq!(x.len() % d, 0);
+    for (xr, or) in x.chunks(d).zip(out.chunks_mut(d)) {
+        rms_norm(xr, or);
+    }
+}
+
+/// Backward of [`rms_norm`]: with `y = x·inv`, `inv = (mean(x²)+ε)^-1/2`,
+///
+/// ```text
+/// dx_j += dy_j·inv − x_j·inv³·(Σ_i dy_i·x_i)/n
+/// ```
+///
+/// **Accumulates** into `dx`.
+pub fn rms_norm_bwd(x: &[f32], dy: &[f32], dx: &mut [f32]) {
+    let n = x.len();
+    debug_assert!(dy.len() == n && dx.len() == n);
+    let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / n as f32;
+    let inv = 1.0 / (ms + RMS_EPS).sqrt();
+    let dot: f32 = dy.iter().zip(x).map(|(&g, &v)| g * v).sum();
+    let c = inv * inv * inv * dot / n as f32;
+    for ((o, &g), &v) in dx.iter_mut().zip(dy).zip(x) {
+        *o += g * inv - v * c;
+    }
+}
+
+/// [`rms_norm_bwd`] over `(rows × d)` row-major views (accumulating).
+pub fn rms_norm_bwd_rows(x: &[f32], dy: &[f32], d: usize, dx: &mut [f32]) {
+    debug_assert!(x.len() == dy.len() && x.len() == dx.len());
+    for ((xr, gr), or) in x.chunks(d).zip(dy.chunks(d)).zip(dx.chunks_mut(d)) {
+        rms_norm_bwd(xr, gr, or);
+    }
+}
+
+/// `out[p] += Σ_m x[m]·w[m·p_dim + p]` — row-vector × matrix accumulate
+/// (the serving-side kernel, shared with `serve::model`).
+pub fn vec_mat_acc(x: &[f32], w: &[f32], p_dim: usize, out: &mut [f32]) {
+    for (m, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let wrow = &w[m * p_dim..(m + 1) * p_dim];
+        for (o, &wv) in out.iter_mut().zip(wrow) {
+            *o += xv * wv;
+        }
+    }
+}
+
+/// `(n×m) · (m×p)` row-major f32 matmul (the training-side batch kernel;
+/// same accumulation order as the original native trainer's).
+pub(crate) fn matmul(a: &[f32], b: &[f32], n: usize, m: usize, p: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * p];
+    for i in 0..n {
+        for kk in 0..m {
+            let aik = a[i * m + kk];
+            let brow = &b[kk * p..(kk + 1) * p];
+            let orow = &mut out[i * p..(i + 1) * p];
+            for (x, &bv) in orow.iter_mut().zip(brow) {
+                *x += aik * bv;
+            }
+        }
+    }
+    out
+}
+
+/// `aᵀ · b` for `a (n×m)`, `b (n×p)` → `(m×p)` (the projection-weight
+/// chain rule dW = Xᵀ·dY).
+pub(crate) fn matmul_tn(a: &[f32], b: &[f32], n: usize, m: usize, p: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * p];
+    for i in 0..n {
+        for kk in 0..m {
+            let aik = a[i * m + kk];
+            let brow = &b[i * p..(i + 1) * p];
+            let orow = &mut out[kk * p..(kk + 1) * p];
+            for (x, &bv) in orow.iter_mut().zip(brow) {
+                *x += aik * bv;
+            }
+        }
+    }
+    out
+}
+
+/// Token-major `(n × heads·hd)` → head-major `(heads × n × hd)` — the
+/// staging the attention engines' multi-head views expect.
+pub(crate) fn to_head_major(x: &[f32], n: usize, heads: usize, hd: usize) -> Vec<f32> {
+    let d = heads * hd;
+    let mut out = vec![0.0f32; x.len()];
+    for h in 0..heads {
+        for i in 0..n {
+            let src = i * d + h * hd;
+            let dst = h * n * hd + i * hd;
+            out[dst..dst + hd].copy_from_slice(&x[src..src + hd]);
+        }
+    }
+    out
+}
+
+/// Head-major `(heads × n × hd)` → token-major `(n × heads·hd)`.
+pub(crate) fn to_token_major(x: &[f32], n: usize, heads: usize, hd: usize) -> Vec<f32> {
+    let d = heads * hd;
+    let mut out = vec![0.0f32; x.len()];
+    for h in 0..heads {
+        for i in 0..n {
+            let src = h * n * hd + i * hd;
+            let dst = i * d + h * hd;
+            out[dst..dst + hd].copy_from_slice(&x[src..src + hd]);
+        }
+    }
+    out
+}
+
+/// A parameter-owning module: every trainable tensor is exposed as a
+/// `(weights, gradients)` slice pair in a stable order.
+pub trait Module {
+    /// Visit every (param, grad) pair. The order is fixed per type — the
+    /// optimizer keys its per-tensor state on the visit index.
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut [f32], &mut [f32]));
+
+    /// Zero every gradient accumulator.
+    fn zero_grad(&mut self) {
+        self.visit_params(&mut |_, g| g.fill(0.0));
+    }
+}
+
+/// A dense projection `y = x·W` with `W` `(in_dim × out_dim)` row-major —
+/// the layout `serve::model::SimLm` serves with.
+#[derive(Clone, Debug)]
+pub struct Linear {
+    pub w: Vec<f32>,
+    pub g: Vec<f32>,
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+impl Linear {
+    pub fn new(w: Vec<f32>, in_dim: usize, out_dim: usize) -> Linear {
+        assert_eq!(w.len(), in_dim * out_dim);
+        let g = vec![0.0f32; w.len()];
+        Linear { w, g, in_dim, out_dim }
+    }
+
+    /// `out = x·W` over `n` rows (`out` is overwritten).
+    pub fn forward(&self, x: &[f32], n: usize, out: &mut [f32]) {
+        debug_assert_eq!(x.len(), n * self.in_dim);
+        debug_assert_eq!(out.len(), n * self.out_dim);
+        out.fill(0.0);
+        self.forward_acc(x, n, out);
+    }
+
+    /// `out += x·W` over `n` rows (residual-style accumulate).
+    pub fn forward_acc(&self, x: &[f32], n: usize, out: &mut [f32]) {
+        debug_assert_eq!(x.len(), n * self.in_dim);
+        debug_assert_eq!(out.len(), n * self.out_dim);
+        for (xr, or) in x.chunks(self.in_dim).zip(out.chunks_mut(self.out_dim)) {
+            vec_mat_acc(xr, &self.w, self.out_dim, or);
+        }
+    }
+
+    /// Backward over `n` rows: accumulates `g += xᵀ·dy` and (when `dx` is
+    /// given) `dx += dy·Wᵀ`.
+    pub fn backward(&mut self, x: &[f32], dy: &[f32], n: usize, mut dx: Option<&mut [f32]>) {
+        debug_assert_eq!(x.len(), n * self.in_dim);
+        debug_assert_eq!(dy.len(), n * self.out_dim);
+        let (ind, outd) = (self.in_dim, self.out_dim);
+        for r in 0..n {
+            let xr = &x[r * ind..(r + 1) * ind];
+            let dyr = &dy[r * outd..(r + 1) * outd];
+            for (m, &xv) in xr.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let grow = &mut self.g[m * outd..(m + 1) * outd];
+                for (gg, &dv) in grow.iter_mut().zip(dyr) {
+                    *gg += xv * dv;
+                }
+            }
+            if let Some(dx) = dx.as_deref_mut() {
+                debug_assert_eq!(dx.len(), n * ind);
+                let dxr = &mut dx[r * ind..(r + 1) * ind];
+                for (m, o) in dxr.iter_mut().enumerate() {
+                    let wrow = &self.w[m * outd..(m + 1) * outd];
+                    let mut acc = 0.0f32;
+                    for (&wv, &dv) in wrow.iter().zip(dyr) {
+                        acc += wv * dv;
+                    }
+                    *o += acc;
+                }
+            }
+        }
+    }
+}
+
+impl Module for Linear {
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut [f32], &mut [f32])) {
+        f(&mut self.w, &mut self.g);
+    }
+}
+
+/// Token + positional embedding table (byte vocabulary).
+#[derive(Clone, Debug)]
+pub struct Embedding {
+    pub tok: Vec<f32>,
+    pub tok_g: Vec<f32>,
+    pub pos: Vec<f32>,
+    pub pos_g: Vec<f32>,
+    pub d: usize,
+    pub max_pos: usize,
+    pub vocab: usize,
+}
+
+impl Embedding {
+    pub fn new(tok: Vec<f32>, pos: Vec<f32>, d: usize, max_pos: usize) -> Embedding {
+        assert_eq!(tok.len() % d, 0);
+        assert_eq!(pos.len(), max_pos * d);
+        let vocab = tok.len() / d;
+        let (tok_g, pos_g) = (vec![0.0f32; tok.len()], vec![0.0f32; pos.len()]);
+        Embedding { tok, tok_g, pos, pos_g, d, max_pos, vocab }
+    }
+
+    /// `h[i] = tok[tokens[i]] + pos[(pos0+i) mod max_pos]`.
+    pub fn forward(&self, tokens: &[u8], pos0: usize, h: &mut [f32]) {
+        let d = self.d;
+        debug_assert_eq!(h.len(), tokens.len() * d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let row = &mut h[i * d..(i + 1) * d];
+            let te = &self.tok[tok as usize * d..(tok as usize + 1) * d];
+            let p = (pos0 + i) % self.max_pos;
+            let pe = &self.pos[p * d..(p + 1) * d];
+            for ((o, &t), &pv) in row.iter_mut().zip(te).zip(pe) {
+                *o = t + pv;
+            }
+        }
+    }
+
+    /// Scatter-accumulate `dh` rows back into the tables' gradients.
+    pub fn backward(&mut self, tokens: &[u8], pos0: usize, dh: &[f32]) {
+        let d = self.d;
+        debug_assert_eq!(dh.len(), tokens.len() * d);
+        for (i, &tok) in tokens.iter().enumerate() {
+            let row = &dh[i * d..(i + 1) * d];
+            let tg = &mut self.tok_g[tok as usize * d..(tok as usize + 1) * d];
+            for (g, &v) in tg.iter_mut().zip(row) {
+                *g += v;
+            }
+            let p = (pos0 + i) % self.max_pos;
+            let pg = &mut self.pos_g[p * d..(p + 1) * d];
+            for (g, &v) in pg.iter_mut().zip(row) {
+                *g += v;
+            }
+        }
+    }
+}
+
+impl Module for Embedding {
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut [f32], &mut [f32])) {
+        f(&mut self.tok, &mut self.tok_g);
+        f(&mut self.pos, &mut self.pos_g);
+    }
+}
+
+/// Pre-norm tanh feed-forward with residual:
+/// `h ← h + tanh(rms(h)·W_in)·W_out` (the `SimLm` MLP shape).
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub win: Linear,
+    pub wout: Linear,
+}
+
+/// Residual-branch activations [`Mlp::forward_train`] caches for backward.
+#[derive(Clone, Debug)]
+pub struct MlpActs {
+    /// rms-normed input rows (`n × d`).
+    pub xn: Vec<f32>,
+    /// post-tanh hidden rows (`n × ff`).
+    pub f: Vec<f32>,
+}
+
+impl Mlp {
+    pub fn new(win: Linear, wout: Linear) -> Mlp {
+        assert_eq!(win.out_dim, wout.in_dim);
+        assert_eq!(win.in_dim, wout.out_dim);
+        Mlp { win, wout }
+    }
+
+    /// Inference forward, in place on `h` (`n × d`).
+    pub fn forward(&self, h: &mut [f32], n: usize) {
+        let d = self.win.in_dim;
+        let ff = self.win.out_dim;
+        debug_assert_eq!(h.len(), n * d);
+        let mut xn = vec![0.0f32; d];
+        let mut f = vec![0.0f32; ff];
+        for hr in h.chunks_mut(d) {
+            rms_norm(hr, &mut xn);
+            f.fill(0.0);
+            vec_mat_acc(&xn, &self.win.w, ff, &mut f);
+            for x in f.iter_mut() {
+                *x = x.tanh();
+            }
+            vec_mat_acc(&f, &self.wout.w, d, hr);
+        }
+    }
+
+    /// Training forward, in place on `h`; returns the branch activations.
+    /// Bitwise identical to [`Mlp::forward`] (same per-row kernels).
+    pub fn forward_train(&self, h: &mut [f32], n: usize) -> MlpActs {
+        let d = self.win.in_dim;
+        let ff = self.win.out_dim;
+        debug_assert_eq!(h.len(), n * d);
+        let mut xn = vec![0.0f32; n * d];
+        let mut f = vec![0.0f32; n * ff];
+        for ((hr, xr), fr) in h.chunks_mut(d).zip(xn.chunks_mut(d)).zip(f.chunks_mut(ff)) {
+            rms_norm(hr, xr);
+            vec_mat_acc(xr, &self.win.w, ff, fr);
+            for x in fr.iter_mut() {
+                *x = x.tanh();
+            }
+            vec_mat_acc(fr, &self.wout.w, d, hr);
+        }
+        MlpActs { xn, f }
+    }
+
+    /// Backward: `dh` holds dL/d(output); on return it holds dL/d(input)
+    /// (residual term plus the branch's chain through the norm). `h_in`
+    /// is the block *input* (pre-residual) the forward normed.
+    pub fn backward(&mut self, h_in: &[f32], acts: &MlpActs, dh: &mut [f32], n: usize) {
+        let d = self.win.in_dim;
+        let ff = self.win.out_dim;
+        debug_assert_eq!(h_in.len(), n * d);
+        debug_assert_eq!(dh.len(), n * d);
+        let mut df = vec![0.0f32; n * ff];
+        self.wout.backward(&acts.f, dh, n, Some(&mut df));
+        // tanh'(x) = 1 − f².
+        for (dfv, &fv) in df.iter_mut().zip(&acts.f) {
+            *dfv *= 1.0 - fv * fv;
+        }
+        let mut dxn = vec![0.0f32; n * d];
+        self.win.backward(&acts.xn, &df, n, Some(&mut dxn));
+        rms_norm_bwd_rows(h_in, &dxn, d, dh);
+    }
+}
+
+impl Module for Mlp {
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut [f32], &mut [f32])) {
+        self.win.visit_params(f);
+        self.wout.visit_params(f);
+    }
+}
+
+/// Mean cross-entropy over next-token logits: returns `(loss, dlogits)`
+/// with `dlogits = (softmax − onehot)/rows` — the gradient `QatModel`'s
+/// backward consumes.
+pub fn cross_entropy(logits: &[f32], vocab: usize, targets: &[u8]) -> (f32, Vec<f32>) {
+    let rows = targets.len();
+    debug_assert_eq!(logits.len(), rows * vocab);
+    let mut dl = vec![0.0f32; logits.len()];
+    let mut loss = 0.0f64;
+    let inv = 1.0 / rows as f32;
+    for (i, &t) in targets.iter().enumerate() {
+        let row = &logits[i * vocab..(i + 1) * vocab];
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let l: f32 = row.iter().map(|&x| (x - m).exp()).sum();
+        let lse = m + l.ln();
+        loss += (lse - row[t as usize]) as f64;
+        let drow = &mut dl[i * vocab..(i + 1) * vocab];
+        for (g, &x) in drow.iter_mut().zip(row) {
+            *g = (x - lse).exp() * inv;
+        }
+        drow[t as usize] -= inv;
+    }
+    ((loss / rows as f64) as f32, dl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn linear_forward_backward_shapes_and_simple_values() {
+        // 1×2 · (2×3): y = [x0·w00 + x1·w10, ...]; dW = xᵀdy; dx = dy·Wᵀ.
+        let w = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut lin = Linear::new(w, 2, 3);
+        let x = vec![2.0f32, -1.0];
+        let mut y = vec![0.0f32; 3];
+        lin.forward(&x, 1, &mut y);
+        assert_eq!(y, vec![2.0 - 4.0, 4.0 - 5.0, 6.0 - 6.0]);
+        let dy = vec![1.0f32, 0.0, -1.0];
+        let mut dx = vec![0.0f32; 2];
+        lin.backward(&x, &dy, 1, Some(&mut dx));
+        assert_eq!(dx, vec![1.0 - 3.0, 4.0 - 6.0]);
+        assert_eq!(lin.g, vec![2.0, 0.0, -2.0, -1.0, 0.0, 1.0]);
+        // zero_grad clears the accumulators.
+        lin.zero_grad();
+        assert!(lin.g.iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn rms_norm_row_and_bwd_finiteness() {
+        let mut rng = Rng::new(3);
+        let x = rng.normal_vec(24, 0.0, 2.0);
+        let mut y = vec![0.0f32; 24];
+        rms_norm_rows(&x, 8, &mut y);
+        // Each row has (approximately) unit RMS.
+        for row in y.chunks(8) {
+            let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / 8.0;
+            assert!((ms - 1.0).abs() < 1e-3, "{ms}");
+        }
+        let dy = rng.normal_vec(24, 0.0, 1.0);
+        let mut dx = vec![0.0f32; 24];
+        rms_norm_bwd_rows(&x, &dy, 8, &mut dx);
+        assert!(dx.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn cross_entropy_uniform_logits() {
+        // All-zero logits: loss = ln(V); dl = (1/V − onehot)/rows.
+        let vocab = 8;
+        let targets = [3u8, 5u8];
+        let logits = vec![0.0f32; 2 * vocab];
+        let (loss, dl) = cross_entropy(&logits, vocab, &targets);
+        assert!((loss - (vocab as f32).ln()).abs() < 1e-6, "{loss}");
+        for (i, &t) in targets.iter().enumerate() {
+            for j in 0..vocab {
+                let uniform = 1.0 / vocab as f32;
+                let base = if j == t as usize { uniform - 1.0 } else { uniform };
+                assert!((dl[i * vocab + j] - base / 2.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_helpers_agree_with_vec_mat_acc() {
+        let (n, m, p) = (3, 4, 5);
+        let mut rng = Rng::new(4);
+        let a = rng.normal_vec(n * m, 0.0, 1.0);
+        let b = rng.normal_vec(m * p, 0.0, 1.0);
+        let want = matmul(&a, &b, n, m, p);
+        let lin = Linear::new(b.clone(), m, p);
+        let mut got = vec![0.0f32; n * p];
+        lin.forward(&a, n, &mut got);
+        assert_eq!(got, want, "Linear::forward must match the batch matmul");
+        // matmul_tn is the dW chain rule: (aᵀ·a) symmetric sanity.
+        let tn = matmul_tn(&a, &a, n, m, m);
+        for i in 0..m {
+            for j in 0..m {
+                assert!((tn[i * m + j] - tn[j * m + i]).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Optimizers behind one trait: SGD+momentum (ported from the old
+//! `NativeTrainer`'s hand-rolled update, bitwise) and Adam (the paper's
+//! finetune recipe, used with the session's global grad-clip).
+//!
+//! Per-tensor state (momentum / moment buffers) is keyed on the visit
+//! index the session assigns while walking `Module::visit_params` — the
+//! visit order is stable per model type, so state lines up across steps.
+//! Buffers are sized lazily on first use.
+
+/// One optimizer step over a model's parameter tensors.
+pub trait Optimizer: Send {
+    /// Called once per training step, before any [`Optimizer::update`]
+    /// (Adam advances its bias-correction step count here).
+    fn begin_step(&mut self) {}
+
+    /// Update parameter tensor `idx` in place from its gradient.
+    fn update(&mut self, idx: usize, w: &mut [f32], g: &[f32], lr: f32);
+}
+
+/// SGD with momentum: `v ← μ·v + g`, `w ← w − lr·v` — element-for-element
+/// the update the deprecated `qat::NativeTrainer` applied, so a session
+/// configured with it reproduces the old trainer's history bitwise.
+pub struct Sgd {
+    momentum: f32,
+    vel: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(momentum: f32) -> Sgd {
+        Sgd { momentum, vel: Vec::new() }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn update(&mut self, idx: usize, w: &mut [f32], g: &[f32], lr: f32) {
+        while self.vel.len() <= idx {
+            self.vel.push(Vec::new());
+        }
+        let v = &mut self.vel[idx];
+        if v.len() != g.len() {
+            v.clear();
+            v.resize(g.len(), 0.0);
+        }
+        let mu = self.momentum;
+        for ((w, v), &gx) in w.iter_mut().zip(v.iter_mut()).zip(g) {
+            *v = mu * *v + gx;
+            *w -= lr * *v;
+        }
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction:
+///
+/// ```text
+/// m ← β₁m + (1−β₁)g        v ← β₂v + (1−β₂)g²
+/// w ← w − lr · (m/(1−β₁ᵗ)) / (√(v/(1−β₂ᵗ)) + ε)
+/// ```
+///
+/// Pinned by the single-step golden in `rust/tests/grad_check.rs` (first
+/// step moves every weight by `≈ lr·sign(g)`).
+pub struct Adam {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: i32,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    /// The standard defaults (β₁ 0.9, β₂ 0.999, ε 1e-8).
+    pub fn new() -> Adam {
+        Adam::with_params(0.9, 0.999, 1e-8)
+    }
+
+    pub fn with_params(beta1: f32, beta2: f32, eps: f32) -> Adam {
+        Adam { beta1, beta2, eps, t: 0, m: Vec::new(), v: Vec::new() }
+    }
+}
+
+impl Default for Adam {
+    fn default() -> Adam {
+        Adam::new()
+    }
+}
+
+impl Optimizer for Adam {
+    fn begin_step(&mut self) {
+        self.t += 1;
+    }
+
+    fn update(&mut self, idx: usize, w: &mut [f32], g: &[f32], lr: f32) {
+        while self.m.len() <= idx {
+            self.m.push(Vec::new());
+            self.v.push(Vec::new());
+        }
+        if self.m[idx].len() != g.len() {
+            self.m[idx].clear();
+            self.m[idx].resize(g.len(), 0.0);
+            self.v[idx].clear();
+            self.v[idx].resize(g.len(), 0.0);
+        }
+        let t = self.t.max(1);
+        let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+        let bc1 = 1.0 - b1.powi(t);
+        let bc2 = 1.0 - b2.powi(t);
+        let (ms, vs) = (&mut self.m[idx], &mut self.v[idx]);
+        for (((w, m), v), &gx) in w.iter_mut().zip(ms.iter_mut()).zip(vs.iter_mut()).zip(g) {
+            *m = b1 * *m + (1.0 - b1) * gx;
+            *v = b2 * *v + (1.0 - b2) * gx * gx;
+            let mh = *m / bc1;
+            let vh = *v / bc2;
+            *w -= lr * mh / (vh.sqrt() + eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_matches_hand_rolled_update() {
+        let mut opt = Sgd::new(0.9);
+        let mut w = vec![1.0f32, 2.0];
+        let g = vec![0.5f32, -0.5];
+        opt.update(0, &mut w, &g, 0.1);
+        // v = g; w -= 0.1·v.
+        assert_eq!(w, vec![1.0 - 0.05, 2.0 + 0.05]);
+        opt.update(0, &mut w, &g, 0.1);
+        // v = 0.9·0.5 + 0.5 = 0.95.
+        assert!((w[0] - (0.95 - 0.095)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_first_step_is_signed_lr() {
+        // With fresh moments, mhat/(√vhat+ε) = g/(|g|+ε′) ≈ sign(g).
+        let mut opt = Adam::new();
+        opt.begin_step();
+        let mut w = vec![0.0f32, 0.0];
+        let g = vec![3.0f32, -0.001];
+        opt.update(0, &mut w, &g, 0.01);
+        assert!((w[0] + 0.01).abs() < 1e-5, "{}", w[0]);
+        assert!((w[1] - 0.01).abs() < 1e-4, "{}", w[1]);
+    }
+
+    #[test]
+    fn per_tensor_state_is_independent() {
+        let mut opt = Sgd::new(0.5);
+        let (mut w0, mut w1) = (vec![0.0f32], vec![0.0f32]);
+        opt.update(0, &mut w0, &[1.0], 1.0);
+        opt.update(1, &mut w1, &[1.0], 1.0);
+        opt.update(0, &mut w0, &[0.0], 1.0);
+        // Tensor 0's momentum (0.5) applies only to tensor 0.
+        assert_eq!(w0[0], -1.5);
+        assert_eq!(w1[0], -1.0);
+    }
+}

@@ -1,0 +1,290 @@
+//! The training session: one config-driven loop over any
+//! [`TrainableModel`] — the replacement for `qat::NativeTrainer`'s
+//! hand-rolled step.
+//!
+//! A [`TrainSession`] owns the model, the optimizer state, and the
+//! [`crate::coordinator::StepMetrics`]-compatible history (the same time
+//! series the compiled-path `coordinator::Trainer` records, so every
+//! Fig-3 writer consumes either interchangeably). Each step:
+//!
+//! 1. zero the grad buffers, run the model's `train_step` (forward +
+//!    backward on a fresh self-generated batch),
+//! 2. measure the **global** gradient norm (recorded pre-clip, matching
+//!    both the old native trainer and the compiled trainer),
+//! 3. optionally clip by global norm ([`TrainConfig::grad_clip`] — the
+//!    paper's finetune recipe pairs this with Adam),
+//! 4. apply the optimizer at the scheduled learning rate.
+//!
+//! Divergence is data, not a crash: steps keep running past the
+//! threshold and the history records the spikes/NaNs for the figures.
+
+use crate::coordinator::{LrSchedule, StepMetrics};
+
+use super::optim::{Adam, Optimizer, Sgd};
+
+/// A model the session can drive: owns its parameters, gradients, and
+/// data source.
+pub trait TrainableModel {
+    /// Forward + backward on a fresh batch; **accumulates** gradients into
+    /// the (already zeroed) grad buffers and returns the scalar loss.
+    fn train_step(&mut self) -> f32;
+
+    /// Visit every (param, grad) tensor pair in a stable order (the
+    /// optimizer keys per-tensor state on the visit index).
+    fn visit_params(&mut self, f: &mut dyn FnMut(&mut [f32], &mut [f32]));
+}
+
+/// Optimizer selection for [`TrainConfig`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OptimizerKind {
+    /// SGD + momentum — the old `NativeTrainer` update, bitwise.
+    Sgd { momentum: f32 },
+    /// Adam with bias correction.
+    Adam { beta1: f32, beta2: f32, eps: f32 },
+}
+
+impl OptimizerKind {
+    fn build(self) -> Box<dyn Optimizer> {
+        match self {
+            OptimizerKind::Sgd { momentum } => Box::new(Sgd::new(momentum)),
+            OptimizerKind::Adam { beta1, beta2, eps } => {
+                Box::new(Adam::with_params(beta1, beta2, eps))
+            }
+        }
+    }
+}
+
+/// Everything a training run is configurable on.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub optimizer: OptimizerKind,
+    pub schedule: LrSchedule,
+    /// Global-norm gradient clip (`None` = off). The recorded
+    /// `grad_norm` is always the pre-clip norm.
+    pub grad_clip: Option<f32>,
+    /// Same semantics as `coordinator::Trainer`: runs continue past this —
+    /// divergence is observable data.
+    pub divergence_threshold: f32,
+}
+
+impl TrainConfig {
+    /// SGD + momentum at a constant lr, no clipping — exactly the old
+    /// `NativeTrainer` loop.
+    pub fn sgd(lr: f32, momentum: f32) -> TrainConfig {
+        TrainConfig {
+            optimizer: OptimizerKind::Sgd { momentum },
+            schedule: LrSchedule::Constant(lr),
+            grad_clip: None,
+            divergence_threshold: 1e6,
+        }
+    }
+
+    /// Adam (standard betas) + global grad-clip at 1.0 — the paper's
+    /// finetune recipe.
+    pub fn adam(lr: f32) -> TrainConfig {
+        TrainConfig {
+            optimizer: OptimizerKind::Adam { beta1: 0.9, beta2: 0.999, eps: 1e-8 },
+            schedule: LrSchedule::Constant(lr),
+            grad_clip: Some(1.0),
+            divergence_threshold: 1e6,
+        }
+    }
+
+    pub fn with_schedule(mut self, schedule: LrSchedule) -> TrainConfig {
+        self.schedule = schedule;
+        self
+    }
+
+    pub fn with_grad_clip(mut self, clip: Option<f32>) -> TrainConfig {
+        self.grad_clip = clip;
+        self
+    }
+}
+
+/// A training run: model + optimizer state + metric history.
+pub struct TrainSession<M: TrainableModel> {
+    pub model: M,
+    pub cfg: TrainConfig,
+    opt: Box<dyn Optimizer>,
+    step: usize,
+    pub history: Vec<StepMetrics>,
+}
+
+impl<M: TrainableModel> TrainSession<M> {
+    pub fn new(model: M, cfg: TrainConfig) -> TrainSession<M> {
+        TrainSession { model, cfg, opt: cfg.optimizer.build(), step: 0, history: Vec::new() }
+    }
+
+    /// Steps completed so far.
+    pub fn steps_done(&self) -> usize {
+        self.step
+    }
+
+    /// One optimizer step on a fresh batch. Returns the step metrics.
+    pub fn step(&mut self) -> StepMetrics {
+        let t0 = std::time::Instant::now();
+        self.model.visit_params(&mut |_, g| g.fill(0.0));
+        let loss = self.model.train_step();
+
+        // Global grad norm: per-tensor f64 sums added in visit order (the
+        // exact accumulation the old trainer used), recorded pre-clip.
+        let mut sq = 0.0f64;
+        self.model.visit_params(&mut |_, g| {
+            sq += g.iter().map(|&x| x as f64 * x as f64).sum::<f64>();
+        });
+        let grad_norm = sq.sqrt() as f32;
+        if let Some(clip) = self.cfg.grad_clip {
+            if grad_norm.is_finite() && grad_norm > clip {
+                let s = clip / grad_norm;
+                self.model.visit_params(&mut |_, g| {
+                    for x in g.iter_mut() {
+                        *x *= s;
+                    }
+                });
+            }
+        }
+
+        let lr = self.cfg.schedule.at(self.step);
+        self.opt.begin_step();
+        let opt = &mut self.opt;
+        let mut idx = 0usize;
+        self.model.visit_params(&mut |w, g| {
+            opt.update(idx, w, g, lr);
+            idx += 1;
+        });
+
+        self.step += 1;
+        let m = StepMetrics {
+            step: self.step,
+            loss,
+            grad_norm,
+            lr,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        };
+        self.history.push(m);
+        m
+    }
+
+    /// Run `steps` steps; `on_log` fires every `log_every` steps (and on
+    /// the last one). `log_every = 0` is silent.
+    pub fn run(&mut self, steps: usize, log_every: usize, mut on_log: impl FnMut(&StepMetrics)) {
+        for i in 0..steps {
+            let m = self.step();
+            if log_every > 0 && (i % log_every == 0 || i + 1 == steps) {
+                on_log(&m);
+            }
+        }
+    }
+
+    /// True if any recorded step went non-finite or past the threshold.
+    pub fn diverged(&self) -> bool {
+        self.history.iter().any(|m| {
+            !m.loss.is_finite()
+                || !m.grad_norm.is_finite()
+                || m.loss.abs() > self.cfg.divergence_threshold
+                || m.grad_norm > self.cfg.divergence_threshold
+        })
+    }
+
+    /// Largest finite grad norm seen (0.0 if none recorded).
+    pub fn max_grad_norm(&self) -> f32 {
+        self.history
+            .iter()
+            .map(|m| m.grad_norm)
+            .filter(|g| g.is_finite())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Mean loss over the last `k` finite steps (NaN if none).
+    pub fn tail_loss(&self, k: usize) -> f32 {
+        let tail: Vec<f32> = self
+            .history
+            .iter()
+            .rev()
+            .take(k)
+            .map(|m| m.loss)
+            .filter(|l| l.is_finite())
+            .collect();
+        if tail.is_empty() {
+            f32::NAN
+        } else {
+            tail.iter().sum::<f32>() / tail.len() as f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fixed-gradient toy: loss = Σw, grad = 1 everywhere.
+    struct Toy {
+        w: Vec<f32>,
+        g: Vec<f32>,
+        grad: Vec<f32>,
+    }
+
+    impl TrainableModel for Toy {
+        fn train_step(&mut self) -> f32 {
+            for (g, &v) in self.g.iter_mut().zip(&self.grad) {
+                *g += v;
+            }
+            self.w.iter().sum()
+        }
+
+        fn visit_params(&mut self, f: &mut dyn FnMut(&mut [f32], &mut [f32])) {
+            f(&mut self.w, &mut self.g);
+        }
+    }
+
+    #[test]
+    fn sgd_session_descends_and_records_history() {
+        let toy = Toy { w: vec![1.0; 4], g: vec![0.0; 4], grad: vec![1.0; 4] };
+        let mut s = TrainSession::new(toy, TrainConfig::sgd(0.1, 0.0));
+        s.run(3, 0, |_| {});
+        assert_eq!(s.history.len(), 3);
+        assert_eq!(s.history[0].step, 1);
+        // grad norm = √4 = 2 every step; w decreases by 0.1 each step.
+        assert_eq!(s.history[0].grad_norm, 2.0);
+        assert!((s.model.w[0] - 0.7).abs() < 1e-6);
+        assert!(s.history[0].loss > s.history[2].loss);
+        assert!(!s.diverged());
+    }
+
+    #[test]
+    fn grad_clip_scales_update_but_records_preclip_norm() {
+        // grad = 3 per element over 4 elements: global norm 6 > clip 1.5;
+        // with lr 0.1 and no momentum the step is lr·g·(1.5/6) = 0.075.
+        let toy = Toy { w: vec![0.0; 4], g: vec![0.0; 4], grad: vec![3.0; 4] };
+        let cfg = TrainConfig::sgd(0.1, 0.0).with_grad_clip(Some(1.5));
+        let mut s = TrainSession::new(toy, cfg);
+        let m = s.step();
+        assert_eq!(m.grad_norm, 6.0, "recorded norm must be pre-clip");
+        for &w in &s.model.w {
+            assert!((w + 0.075).abs() < 1e-6, "{w}");
+        }
+        // Below the threshold nothing is scaled.
+        let toy = Toy { w: vec![0.0; 4], g: vec![0.0; 4], grad: vec![0.1; 4] };
+        let mut s = TrainSession::new(toy, TrainConfig::sgd(0.1, 0.0).with_grad_clip(Some(1.5)));
+        s.step();
+        for &w in &s.model.w {
+            assert!((w + 0.01).abs() < 1e-7, "{w}");
+        }
+    }
+
+    #[test]
+    fn cosine_schedule_is_consumed() {
+        let toy = Toy { w: vec![0.0; 2], g: vec![0.0; 2], grad: vec![1.0; 2] };
+        let cfg = TrainConfig::sgd(1.0, 0.0).with_schedule(LrSchedule::Cosine {
+            warmup: 2,
+            peak: 1.0,
+            total: 10,
+            floor_frac: 0.1,
+        });
+        let mut s = TrainSession::new(toy, cfg);
+        s.run(3, 0, |_| {});
+        assert!((s.history[0].lr - 0.5).abs() < 1e-6, "warmup step 0");
+        assert!((s.history[1].lr - 1.0).abs() < 1e-6, "warmup step 1");
+        assert!(s.history[2].lr <= 1.0);
+    }
+}

@@ -6,9 +6,27 @@
 //! packed 4-bit domain** — `S_ij = LUT-dot(Q̂_i, K̂_j) · scale` over the same
 //! packed codes the forward consumed, so forward and backward see bitwise
 //! identical scores (the per-block LUT dots are exact; see `formats::lut`).
-//! The recomputed probabilities `P = exp(S − lse)` are then fake-quantized
-//! along the key axis before the dV accumulation (Alg. 3 l.11), exactly as
-//! the forward quantized P̃.
+//! The whole score row is rebuilt in one [`lut::packed_row_dots_into`]
+//! call — the forward's block-dot path with the query-side row setup
+//! hoisted out of the key loop (the `fig3_backward` bench records the
+//! per-pair vs batched comparison). The recomputed probabilities
+//! `P = exp(S − lse)` are then fake-quantized along the key axis before
+//! the dV accumulation (Alg. 3 l.11), exactly as the forward quantized P̃.
+//!
+//! [`flash_backward_cfg`] extends the matched recompute to the forward's
+//! SageAttention3 knobs, mirroring `attention::AttnConfig` exactly:
+//!
+//! * **smoothing** — the backward re-applies Eq. 4 (per-column K mean,
+//!   per-tile Q mean) with the *same* `attention::engine::smooth_qk`
+//!   preprocessing, quantizes the smoothed operands, and rebuilds
+//!   `S = (Q̂·K̂ + q̄_tile·K^F)·scale` including the high-precision ΔS fixup
+//!   — bitwise the forward's score. Under the STE the q̄ terms cancel in
+//!   dQ (`∂S/∂q̄ = (−B + B) = 0`), while dK picks up the mean-subtraction
+//!   chain rule: `dK_j = dB_j − mean_j′(dB_j′)` with
+//!   `dB_j = Σ_i dS_ij·(Q̂^F_i + q̄_tile)`.
+//! * **two-level P̃** — the Fix-A fake-quantization of the recomputed P
+//!   first rescales the row into the E4M3 range (`448·6 / rowmax`) and
+//!   divides back after, matching the forward's two-level quantizer.
 //!
 //! The remaining matmuls (dV = P^Fᵀ·dO, dP = dO·V^Fᵀ, dQ = dS·K^F,
 //! dK = dSᵀ·Q^F) contract along axes that do not line up with the NVFP4
@@ -21,9 +39,13 @@
 //!
 //! Pinned to the JAX oracle by `rust/tests/golden/attention_bwd_golden.json`
 //! (parity for every ablation mode) and by finite-difference checks in
-//! `rust/tests/grad_check.rs`.
+//! `rust/tests/grad_check.rs` (including the smooth / two-level recompute:
+//! simulated cosine vs the FD gradient ≥ 0.98 where a *mismatched*
+//! non-smooth recompute of the same residuals drops to ≈ 0.3–0.44).
 
-use crate::attention::packed::causal_limit;
+use crate::attention::engine::smooth_qk;
+use crate::attention::packed::{causal_limit, smooth_delta_for_key};
+use crate::attention::AttnConfig;
 use crate::formats::block::{nvfp4_fake_quant_row, NVFP4_BLOCK};
 use crate::formats::lut;
 
@@ -48,6 +70,10 @@ pub use crate::attention::BwdSwitches;
 /// are `nq×d`; `lse` is the per-row logsumexp from the forward (rows with
 /// `lse = -inf` — empty causal rows when `nk < nq` — contribute nothing).
 /// Causality uses aligned ends, identical to the forward engines.
+///
+/// This entry point covers the plain-FP4 forwards; a forward configured
+/// with smoothing or two-level P̃ needs the matching recompute of
+/// [`flash_backward_cfg`].
 #[allow(clippy::too_many_arguments)]
 pub fn flash_backward(
     q: &[f32],
@@ -63,6 +89,68 @@ pub fn flash_backward(
     dout: &[f32],
     sw: BwdSwitches,
 ) -> AttnGrads {
+    flash_backward_core(
+        q, k, v, nq, nk, d, causal, o, o_prime, lse, dout, sw, false, false, NVFP4_BLOCK,
+    )
+}
+
+/// Config-driven backward: [`flash_backward`] whose recompute mirrors
+/// *every* forward knob of the [`AttnConfig`] — causal flag, ablation
+/// switches, smoothing, two-level P̃, and the Q-tile size. This is what
+/// `model::QatModel` routes each layer's backward through, so the Fig-3
+/// `BwdSwitches` ablations (and the smooth-K / Sage3 variants) apply per
+/// layer.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_backward_cfg(
+    cfg: &AttnConfig,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    o: &[f32],
+    o_prime: &[f32],
+    lse: &[f32],
+    dout: &[f32],
+) -> AttnGrads {
+    flash_backward_core(
+        q,
+        k,
+        v,
+        nq,
+        nk,
+        d,
+        cfg.causal,
+        o,
+        o_prime,
+        lse,
+        dout,
+        cfg.bwd,
+        cfg.smooth,
+        cfg.two_level_p,
+        cfg.block_q,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn flash_backward_core(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    nq: usize,
+    nk: usize,
+    d: usize,
+    causal: bool,
+    o: &[f32],
+    o_prime: &[f32],
+    lse: &[f32],
+    dout: &[f32],
+    sw: BwdSwitches,
+    smooth: bool,
+    two_level_p: bool,
+    block_q: usize,
+) -> AttnGrads {
     debug_assert_eq!(q.len(), nq * d);
     debug_assert_eq!(k.len(), nk * d);
     debug_assert_eq!(v.len(), nk * d);
@@ -74,17 +162,39 @@ pub fn flash_backward(
     let nkp = nk.div_ceil(NVFP4_BLOCK) * NVFP4_BLOCK;
 
     // Fix A precondition: the backward's operands. Quantized (packed +
-    // dequantized views sharing one set of bits) or raw f32.
-    let quant = if sw.fq_inputs {
-        Some(quantize_attn_inputs_ste(q, k, v, nq, nk, d))
+    // dequantized views sharing one set of bits) or raw f32. Smoothing is
+    // a pre-quantization transform, so it applies before the single
+    // quantization point — exactly as the forward's engine does.
+    let smooth = smooth && sw.fq_inputs;
+    let tiles = nq.div_ceil(block_q);
+    let (quant, q_means) = if sw.fq_inputs {
+        if smooth {
+            let (qs, ks, qm) = smooth_qk(q, k, nq, nk, d, block_q);
+            (Some(quantize_attn_inputs_ste(&qs, &ks, v, nq, nk, d)), qm)
+        } else {
+            (Some(quantize_attn_inputs_ste(q, k, v, nq, nk, d)), Vec::new())
+        }
     } else {
-        None
+        (None, Vec::new())
     };
     let (qf, kf, vf): (&[f32], &[f32], &[f32]) = match &quant {
         Some(inp) => (&inp.qf, &inp.kf, &inp.vf),
         None => (q, k, v),
     };
     let lut_table = lut::pair_dot();
+
+    // Smooth ΔS fixup, rebuilt with the forward's own helper (same
+    // accumulation order ⇒ the recomputed S matches the forward bitwise):
+    // per (tile, j) high-precision q̄_t · K^F_j over the dequantized
+    // smoothed K rows.
+    let mut delta = Vec::new();
+    if smooth {
+        delta.resize(tiles * nk, 0.0f32);
+        for j in 0..nk {
+            let kj = &kf[j * d..(j + 1) * d];
+            smooth_delta_for_key(&q_means, tiles, d, kj, j, nk, &mut delta);
+        }
+    }
 
     // Fix B: D = rowsum(dO ∘ O′) — or the naive rowsum(dO ∘ O).
     let o_for_d = if sw.high_prec_o { o_prime } else { o };
@@ -100,30 +210,43 @@ pub fn flash_backward(
     let mut dq = vec![0.0f32; nq * d];
     let mut dk = vec![0.0f32; nk * d];
     let mut dv = vec![0.0f32; nk * d];
+    let mut s_row = vec![0.0f32; nk];
     let mut p_row = vec![0.0f32; nkp];
     let mut pf_row = vec![0.0f32; nkp];
+    let mut q_eff = vec![0.0f32; d];
 
     for i in 0..nq {
+        let tile = i / block_q;
         let limit = if causal { causal_limit(i, nq, nk) } else { nk };
         if limit == 0 {
             continue; // empty causal row: zero gradient everywhere
         }
         let doi = &dout[i * d..(i + 1) * d];
         // --- recompute S, P (Alg. 3 l.9-10) -------------------------------
-        for j in 0..limit {
-            let s = match &quant {
-                Some(inp) => lut::packed_row_dot(lut_table, &inp.q4, i, &inp.k4, j),
-                None => {
-                    let qi = &q[i * d..(i + 1) * d];
+        match &quant {
+            Some(inp) => {
+                // One batched block-dot call per score row (the forward's
+                // LUT path, query-side setup hoisted out of the key loop).
+                lut::packed_row_dots_into(lut_table, &inp.q4, i, &inp.k4, limit, &mut s_row);
+            }
+            None => {
+                let qi = &q[i * d..(i + 1) * d];
+                for (j, s) in s_row[..limit].iter_mut().enumerate() {
                     let kj = &k[j * d..(j + 1) * d];
                     let mut acc = 0.0f32;
                     for c in 0..d {
                         acc += qi[c] * kj[c];
                     }
-                    acc
+                    *s = acc;
                 }
-            } * scale;
-            p_row[j] = (s - lse[i]).exp();
+            }
+        }
+        for j in 0..limit {
+            let mut acc = s_row[j];
+            if smooth {
+                acc += delta[tile * nk + j];
+            }
+            p_row[j] = (acc * scale - lse[i]).exp();
         }
         for p in p_row[limit..].iter_mut() {
             *p = 0.0;
@@ -131,7 +254,22 @@ pub fn flash_backward(
         // --- Fix A: fake-quantize the recomputed P (Alg. 3 l.11) ----------
         let pf: &[f32] = if sw.fq_p {
             pf_row.copy_from_slice(&p_row);
-            nvfp4_fake_quant_row(&mut pf_row);
+            if two_level_p {
+                // Two-level P̃: rescale into the E4M3 range before the
+                // NVFP4 pass, divide back after (the forward's quantizer).
+                let rmax = pf_row[..limit].iter().fold(0.0f32, |a, &b| a.max(b));
+                let factor = if rmax > 0.0 { 448.0 * 6.0 / rmax } else { 1.0 };
+                for p in pf_row.iter_mut() {
+                    *p *= factor;
+                }
+                nvfp4_fake_quant_row(&mut pf_row);
+                let inv_factor = 1.0 / factor;
+                for p in pf_row.iter_mut() {
+                    *p *= inv_factor;
+                }
+            } else {
+                nvfp4_fake_quant_row(&mut pf_row);
+            }
             &pf_row
         } else {
             &p_row
@@ -150,6 +288,18 @@ pub fn flash_backward(
         // --- dS = P ∘ (dP − D) · scale; dQ, dK (Alg. 3 l.13-16) -----------
         let dqi = &mut dq[i * d..(i + 1) * d];
         let qfi = &qf[i * d..(i + 1) * d];
+        // dK accumulates against the *effective* query coefficient
+        // ∂S/∂K^F_j: the quantized row itself, plus the tile mean under
+        // smoothing (the ΔS term's factor).
+        let q_row: &[f32] = if smooth {
+            let qmt = &q_means[tile * d..(tile + 1) * d];
+            for ((x, &a), &b) in q_eff.iter_mut().zip(qfi).zip(qmt) {
+                *x = a + b;
+            }
+            &q_eff
+        } else {
+            qfi
+        };
         for j in 0..limit {
             let p = p_row[j];
             if p == 0.0 {
@@ -166,8 +316,24 @@ pub fn flash_backward(
                 *x += ds * kc;
             }
             let dkj = &mut dk[j * d..(j + 1) * d];
-            for (x, &qc) in dkj.iter_mut().zip(qfi) {
+            for (x, &qc) in dkj.iter_mut().zip(q_row) {
                 *x += ds * qc;
+            }
+        }
+    }
+    // Smoothing chain rule for the K mean: K^F_j = φ(k_j − k̄) with
+    // k̄ = mean_j(k_j), so dk_j = dB_j − mean_j′(dB_j′). (The q̄ terms
+    // cancel exactly in dQ: ∂S/∂q̄ = (−K^F + K^F) = 0.)
+    if smooth && nk > 0 {
+        let inv = 1.0 / nk as f32;
+        for c in 0..d {
+            let mut mean = 0.0f32;
+            for j in 0..nk {
+                mean += dk[j * d + c];
+            }
+            mean *= inv;
+            for j in 0..nk {
+                dk[j * d + c] -= mean;
             }
         }
     }
@@ -182,6 +348,7 @@ mod tests {
     use super::*;
     use crate::attention::engine::attend_fp4_train;
     use crate::attention::flash::attend_f32;
+    use crate::attention::{AttnConfig, AttnEngine};
     use crate::rng::Rng;
 
     const QAT: BwdSwitches = BwdSwitches::MATCHED;
@@ -285,6 +452,59 @@ mod tests {
                 let want = dout[c] / nk as f32;
                 assert!((g.dv[j * d + c] - want).abs() < 1e-5, "dv[{j},{c}]");
             }
+        }
+    }
+
+    #[test]
+    fn cfg_entry_point_matches_plain_backward_bitwise() {
+        // flash_backward_cfg with no smoothing / two-level knobs must be
+        // the old entry point exactly — the wrapper cannot drift.
+        let (nq, nk, d) = (9, 13, 16);
+        let (q, k, v, dout) = rand_case(nq, nk, d, 45);
+        for causal in [false, true] {
+            let t = attend_fp4_train(&q, &k, &v, nq, nk, d, causal);
+            let cfg = AttnConfig::attn_qat().with_causal(causal);
+            let a = flash_backward_cfg(&cfg, &q, &k, &v, nq, nk, d, &t.o, &t.o_prime, &t.lse, &dout);
+            let b = flash_backward(
+                &q, &k, &v, nq, nk, d, causal, &t.o, &t.o_prime, &t.lse, &dout, QAT,
+            );
+            assert_eq!(a.dq, b.dq, "causal={causal}");
+            assert_eq!(a.dk, b.dk, "causal={causal}");
+            assert_eq!(a.dv, b.dv, "causal={causal}");
+        }
+    }
+
+    #[test]
+    fn smooth_recompute_changes_gradients_and_stays_finite() {
+        // A large shared K offset is what smoothing absorbs; the matched
+        // smooth backward must (a) differ from the non-smooth recompute on
+        // the same residuals and (b) produce finite, softmax-consistent
+        // gradients. (Gradient *quality* vs FD is pinned in grad_check.)
+        let (nq, nk, d) = (16, 16, 16);
+        let (q, mut k, v, dout) = rand_case(nq, nk, d, 46);
+        for x in k.iter_mut() {
+            *x += 4.0;
+        }
+        let cfg = AttnConfig::attn_qat().with_smooth(true).with_two_level_p(true);
+        let mut engine = AttnEngine::new(cfg);
+        let t = engine.forward_train(&q, &k, &v, 1, nq, nk, d);
+        let a = flash_backward_cfg(&cfg, &q, &k, &v, nq, nk, d, &t.o, &t.o_prime, &t.lse, &dout);
+        let plain = AttnConfig::attn_qat();
+        let b =
+            flash_backward_cfg(&plain, &q, &k, &v, nq, nk, d, &t.o, &t.o_prime, &t.lse, &dout);
+        let diff: f32 =
+            a.dk.iter().zip(&b.dk).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+        assert!(diff > 1e-3, "smooth recompute must differ: {diff}");
+        for x in a.dq.iter().chain(&a.dk).chain(&a.dv) {
+            assert!(x.is_finite());
+        }
+        // The K-mean chain rule zeroes every column sum of the dB
+        // redistribution: Σ_j dk_j must be (numerically) tiny compared to
+        // the per-row magnitudes.
+        let mag: f32 = a.dk.iter().map(|x| x.abs()).fold(0.0, f32::max);
+        for c in 0..d {
+            let col: f32 = (0..nk).map(|j| a.dk[j * d + c]).sum();
+            assert!(col.abs() <= 1e-4 * mag.max(1.0) * nk as f32, "col {c}: {col} vs {mag}");
         }
     }
 }

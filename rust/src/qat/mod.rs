@@ -1,10 +1,11 @@
 //! Native Attn-QAT training subsystem: the paper's backward pass, in Rust.
 //!
-//! The crate's engines were forward-only until this module: gradients were
-//! reachable solely through compiled train-step artifacts, which need the
-//! (stubbed) PJRT runtime. `qat` lands the training side natively so the
-//! paper's headline result — Figure 3's "drop-in QAT destabilises, Attn-QAT
-//! doesn't" — reproduces with plain `cargo run -- exp fig3`, no XLA.
+//! `qat` owns the **attention gradient math**; the model/optimizer layers
+//! above it live in [`crate::model`] ([`crate::model::QatModel`] routes
+//! every attention layer's backward through here, and
+//! [`crate::model::TrainSession`] drives the optimizer loop). Together
+//! they make the paper's training-side results reproduce with plain
+//! `cargo run -- exp fig3` — no XLA, no compiled artifacts.
 //!
 //! The paper identifies two principles for stable FP4 attention training
 //! (§3.2), both implemented by [`backward::flash_backward`]:
@@ -24,6 +25,12 @@
 //!    also returns the high-precision `O′ = P·V^F / l` (Alg. 2 l.13) and
 //!    the backward computes `D = rowsum(dO ∘ O′)` (Alg. 3 l.3).
 //!
+//! [`backward::flash_backward_cfg`] extends the matched recompute to the
+//! forward's SageAttention3 knobs — smooth-K/Q (Eq. 4, including the
+//! high-precision ΔS fixup and the K-mean chain rule) and two-level P̃ —
+//! so every `attention::AttnConfig` a training forward accepts has a
+//! matching backward.
+//!
 //! Ablation switches → Figure-3 curves (same labels as the compiled path):
 //!
 //! | [`QatVariant`]   | recompute      | P in dV     | D from | Fig. 3 curve |
@@ -35,15 +42,20 @@
 //! | `F32`            | raw f32        | high-prec   | O (=O′)| "BF16" baseline (f32 fwd too) |
 //!
 //! Gradients leave the subsystem with respect to the **raw** Q/K/V via the
-//! straight-through estimator ([`ste`], Eq. 7); [`trainer`] chains them
-//! into projection-weight gradients and runs SGD+momentum natively.
+//! straight-through estimator ([`ste`], Eq. 7). The optimizer side moved
+//! to [`crate::model`]: [`trainer::NativeTrainer`] survives only as a
+//! `#[deprecated]` shim over `model::AttnRegressor::session` (bitwise —
+//! see its migration table), and `model::TrainSession` adds Adam + global
+//! grad-clip (the paper's finetune recipe) behind an optimizer trait.
 
 pub mod backward;
 pub mod ste;
 pub mod trainer;
 
-pub use backward::{flash_backward, AttnGrads, BwdSwitches};
-pub use trainer::{NativeTrainer, TrainerConfig};
+pub use backward::{flash_backward, flash_backward_cfg, AttnGrads, BwdSwitches};
+#[allow(deprecated)]
+pub use trainer::NativeTrainer;
+pub use trainer::TrainerConfig;
 
 use crate::attention::AttnConfig;
 

@@ -1,31 +1,31 @@
-//! Minimal native trainer: the Figure-3 training-dynamics harness.
+//! The old native trainer, now a deprecated shim over the unified model
+//! stack.
 //!
-//! A deliberately small attention-regression problem that needs **no
-//! compiled artifacts**: a frozen f32 teacher attention generates targets,
-//! and a student with trainable Q/K/V projections chases them through the
-//! variant's forward/backward ([`QatVariant`]). SGD + momentum, per-step
-//! loss and pre-clip grad-norm history in [`StepMetrics`] form — the same
-//! time series the compiled-path `coordinator::Trainer` records, so the
-//! Fig-3 writers consume either interchangeably.
+//! The Figure-3 harness lives on as [`crate::model::AttnRegressor`] (the
+//! task: a frozen f32 teacher attention chased by trainable Q/K/V
+//! projections) driven by a [`crate::model::TrainSession`] (the loop:
+//! optimizer trait, lr schedule, grad clip, `StepMetrics` history).
+//! [`NativeTrainer`] simply wraps `AttnRegressor::session` — its step
+//! math was ported verbatim, so histories match the pre-refactor trainer
+//! **bitwise** (pinned by `shim_matches_session_bitwise` below plus the
+//! Fig-3 behavior tests, which run on the session API).
 //!
-//! Why this reproduces the paper's instability: the student starts *at*
-//! the teacher (the finetune setting), so the only initial loss is FP4
-//! quantization error. The drop-in backward recomputes S from the raw f32
-//! Q/K while the forward ran on quantized ones — `P = exp(S_raw − lse_quant)`
-//! overshoots wherever quantization moved a score down, and the naive
-//! `D = rowsum(dO ∘ O)` adds a spurious non-cancelling component to every
-//! dS row (Fix B's missing term). Both biases grow with |S|, larger weights
-//! mean larger |S|, and at the Fig-3 learning rate the feedback loop spikes
-//! the grad norm and diverges — while the matched Attn-QAT backward trains
-//! through the identical forward without incident. Divergence is *data*
-//! here (mirroring `coordinator::Trainer`): steps keep running and the
-//! history records the NaNs/spikes for the figure.
+//! Migration:
+//!
+//! | old | new |
+//! |-----|-----|
+//! | `NativeTrainer::new(cfg, variant)` | `AttnRegressor::session(cfg, variant.config())` |
+//! | `NativeTrainer::with_attention(cfg, attn)` | `AttnRegressor::session(cfg, attn)` |
+//! | `trainer.history` (field) | `session.history` (field) |
+//! | `trainer.step()/run()/diverged()/...` | same methods on `TrainSession` |
+//! | hand-rolled SGD | `TrainConfig::sgd(lr, momentum)` |
+//! | — | `TrainConfig::adam(lr)` (+ global grad-clip, lr schedules) |
 
-use crate::attention::{AttnConfig, AttnEngine};
+use crate::attention::AttnConfig;
 use crate::coordinator::StepMetrics;
-use crate::rng::Rng;
+use crate::model::{AttnRegressor, TrainSession};
 
-use super::{flash_backward, QatVariant};
+use super::QatVariant;
 
 /// Native trainer hyper-parameters (defaults = the Fig-3a/b setting).
 #[derive(Clone, Debug)]
@@ -64,262 +64,85 @@ impl Default for TrainerConfig {
     }
 }
 
-/// `(n×m) · (m×p)` row-major f32 matmul.
-fn matmul(a: &[f32], b: &[f32], n: usize, m: usize, p: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n * p];
-    for i in 0..n {
-        for kk in 0..m {
-            let aik = a[i * m + kk];
-            let brow = &b[kk * p..(kk + 1) * p];
-            let orow = &mut out[i * p..(i + 1) * p];
-            for (x, &bv) in orow.iter_mut().zip(brow) {
-                *x += aik * bv;
-            }
-        }
-    }
-    out
-}
-
-/// `aᵀ · b` for `a (n×m)`, `b (n×p)` → `(m×p)` (the projection-weight
-/// chain rule dW = Xᵀ·dY).
-fn matmul_tn(a: &[f32], b: &[f32], n: usize, m: usize, p: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * p];
-    for i in 0..n {
-        for kk in 0..m {
-            let aik = a[i * m + kk];
-            let brow = &b[i * p..(i + 1) * p];
-            let orow = &mut out[kk * p..(kk + 1) * p];
-            for (x, &bv) in orow.iter_mut().zip(brow) {
-                *x += aik * bv;
-            }
-        }
-    }
-    out
-}
-
-/// One trainable projection with its SGD-momentum velocity.
-struct Param {
-    w: Vec<f32>,
-    vel: Vec<f32>,
-}
-
-impl Param {
-    fn new(w: Vec<f32>) -> Param {
-        let vel = vec![0.0f32; w.len()];
-        Param { w, vel }
-    }
-
-    /// v ← μv + g;  w ← w − lr·v. Returns Σ g² (for the grad norm).
-    fn apply(&mut self, grad: &[f32], lr: f32, momentum: f32) -> f64 {
-        let sq: f64 = grad.iter().map(|&g| g as f64 * g as f64).sum();
-        for ((w, v), &g) in self.w.iter_mut().zip(self.vel.iter_mut()).zip(grad) {
-            *v = momentum * *v + g;
-            *w -= lr * *v;
-        }
-        sq
-    }
-}
-
-/// Native SGD+momentum trainer over one attention layer.
+/// Deprecated shim over [`TrainSession`]`<`[`AttnRegressor`]`>` — see the
+/// module docs for the migration table.
+#[deprecated(note = "use model::AttnRegressor::session (TrainSession over the Fig-3 task)")]
 pub struct NativeTrainer {
-    pub cfg: TrainerConfig,
-    /// The unified attention config driving the student's forward and the
-    /// backward ablation switches.
-    pub attn: AttnConfig,
-    /// Student attention session (the variant's engine).
-    engine: AttnEngine,
-    /// Frozen f32 teacher session.
-    teacher: AttnEngine,
-    wq: Param,
-    wk: Param,
-    wv: Param,
-    /// Frozen teacher projections (the "pretrained base").
-    tq: Vec<f32>,
-    tk: Vec<f32>,
-    tv: Vec<f32>,
-    data: Rng,
-    step: usize,
-    pub history: Vec<StepMetrics>,
-    /// Same semantics as `coordinator::Trainer`: runs continue past this —
-    /// divergence is observable data, not a crash.
-    pub divergence_threshold: f32,
+    session: TrainSession<AttnRegressor>,
 }
 
+#[allow(deprecated)]
 impl NativeTrainer {
     /// Build a trainer from one of the named ablation presets.
     pub fn new(cfg: TrainerConfig, variant: QatVariant) -> NativeTrainer {
-        let attn = variant.config();
-        NativeTrainer::with_attention(cfg, attn)
+        NativeTrainer::with_attention(cfg, variant.config())
     }
 
-    /// Build a trainer from an explicit [`AttnConfig`] (e.g. from
-    /// `AttnConfig::parse`); `cfg.causal` overrides the config's causal
-    /// flag so the teacher and student always agree with the trainer
-    /// setting.
+    /// Build a trainer from an explicit [`AttnConfig`]; `cfg.causal`
+    /// overrides the config's causal flag.
     pub fn with_attention(cfg: TrainerConfig, attn: AttnConfig) -> NativeTrainer {
-        let attn = attn.with_causal(cfg.causal);
-        let (dm, dh) = (cfg.d_model, cfg.d_head);
-        assert_eq!(dh % 16, 0, "d_head must be a multiple of 16");
-        let root = Rng::new(cfg.seed);
-        let std = 1.0 / (dm as f32).sqrt();
-        let mut teacher = root.split("teacher");
-        let tq = teacher.normal_vec(dm * dh, 0.0, std);
-        let tk = teacher.normal_vec(dm * dh, 0.0, std);
-        let tv = teacher.normal_vec(dm * dh, 0.0, std);
-        let (mut wq, mut wk, mut wv) = (tq.clone(), tk.clone(), tv.clone());
-        if cfg.init_jitter > 0.0 {
-            let mut init = root.split("init");
-            for w in [&mut wq, &mut wk, &mut wv] {
-                for (x, j) in w.iter_mut().zip(init.normal_vec(dm * dh, 0.0, cfg.init_jitter)) {
-                    *x += j;
-                }
-            }
-        }
-        let data = root.split("data");
-        NativeTrainer {
-            cfg,
-            attn,
-            engine: AttnEngine::new(attn),
-            teacher: AttnEngine::new(AttnConfig::f32().with_causal(attn.causal)),
-            wq: Param::new(wq),
-            wk: Param::new(wk),
-            wv: Param::new(wv),
-            tq,
-            tk,
-            tv,
-            data,
-            step: 0,
-            history: Vec::new(),
-            divergence_threshold: 1e6,
-        }
+        NativeTrainer { session: AttnRegressor::session(cfg, attn) }
+    }
+
+    /// The unified attention config driving the student (causal resolved).
+    pub fn attn(&self) -> AttnConfig {
+        self.session.model.attn
     }
 
     /// One SGD step on a fresh synthetic batch. Returns the step metrics.
     pub fn step(&mut self) -> StepMetrics {
-        let t0 = std::time::Instant::now();
-        let (n, dm, dh) = (self.cfg.n, self.cfg.d_model, self.cfg.d_head);
-        let causal = self.cfg.causal;
-
-        // Heavy-tailed batch: N(0,1) with every 8th feature amplified.
-        let mut x = self.data.normal_vec(n * dm, 0.0, 1.0);
-        for r in 0..n {
-            for c in (0..dm).step_by(8) {
-                x[r * dm + c] *= self.cfg.outlier;
-            }
-        }
-
-        // Teacher target (always f32).
-        let qs = matmul(&x, &self.tq, n, dm, dh);
-        let ks = matmul(&x, &self.tk, n, dm, dh);
-        let vs = matmul(&x, &self.tv, n, dm, dh);
-        let y = self.teacher.forward(&qs, &ks, &vs, 1, n, n, dh).o;
-
-        // Student training forward through the session's engine (for f32
-        // sessions O′ == O, so one call covers every variant).
-        let q = matmul(&x, &self.wq.w, n, dm, dh);
-        let k = matmul(&x, &self.wk.w, n, dm, dh);
-        let v = matmul(&x, &self.wv.w, n, dm, dh);
-        let t = self.engine.forward_train(&q, &k, &v, 1, n, n, dh);
-        let (o, o_prime, lse) = (t.o, t.o_prime, t.lse);
-
-        // MSE on the quantized-path output.
-        let numel = (n * dh) as f32;
-        let mut loss_acc = 0.0f64;
-        let mut dout = vec![0.0f32; n * dh];
-        for (g, (&oc, &yc)) in dout.iter_mut().zip(o.iter().zip(&y)) {
-            let e = oc - yc;
-            loss_acc += e as f64 * e as f64;
-            *g = 2.0 * e / numel;
-        }
-        let loss = (loss_acc / numel as f64) as f32;
-
-        // Attention backward (STE grads w.r.t. raw Q/K/V) → weight grads.
-        let g = flash_backward(
-            &q,
-            &k,
-            &v,
-            n,
-            n,
-            dh,
-            causal,
-            &o,
-            &o_prime,
-            &lse,
-            &dout,
-            self.attn.bwd,
-        );
-        let gq = matmul_tn(&x, &g.dq, n, dm, dh);
-        let gk = matmul_tn(&x, &g.dk, n, dm, dh);
-        let gv = matmul_tn(&x, &g.dv, n, dm, dh);
-
-        let (lr, mu) = (self.cfg.lr, self.cfg.momentum);
-        let sq = self.wq.apply(&gq, lr, mu) + self.wk.apply(&gk, lr, mu)
-            + self.wv.apply(&gv, lr, mu);
-        let grad_norm = sq.sqrt() as f32;
-
-        self.step += 1;
-        let m = StepMetrics {
-            step: self.step,
-            loss,
-            grad_norm,
-            lr,
-            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
-        };
-        self.history.push(m);
-        m
+        self.session.step()
     }
 
     /// Run `steps` steps; `on_log` fires every `log_every` steps (and on
     /// the last one). `log_every = 0` is silent.
-    pub fn run(&mut self, steps: usize, log_every: usize, mut on_log: impl FnMut(&StepMetrics)) {
-        for i in 0..steps {
-            let m = self.step();
-            if log_every > 0 && (i % log_every == 0 || i + 1 == steps) {
-                on_log(&m);
-            }
-        }
+    pub fn run(&mut self, steps: usize, log_every: usize, on_log: impl FnMut(&StepMetrics)) {
+        self.session.run(steps, log_every, on_log)
+    }
+
+    /// Recorded step history (same `StepMetrics` series as before).
+    pub fn history(&self) -> &[StepMetrics] {
+        &self.session.history
     }
 
     /// True if any recorded step went non-finite or past the threshold.
     pub fn diverged(&self) -> bool {
-        self.history.iter().any(|m| {
-            !m.loss.is_finite()
-                || !m.grad_norm.is_finite()
-                || m.loss.abs() > self.divergence_threshold
-                || m.grad_norm > self.divergence_threshold
-        })
+        self.session.diverged()
     }
 
     /// Largest finite grad norm seen (0.0 if none recorded).
     pub fn max_grad_norm(&self) -> f32 {
-        self.history
-            .iter()
-            .map(|m| m.grad_norm)
-            .filter(|g| g.is_finite())
-            .fold(0.0f32, f32::max)
+        self.session.max_grad_norm()
     }
 
     /// Mean loss over the last `k` finite steps (NaN if none).
     pub fn tail_loss(&self, k: usize) -> f32 {
-        let tail: Vec<f32> = self
-            .history
-            .iter()
-            .rev()
-            .take(k)
-            .map(|m| m.loss)
-            .filter(|l| l.is_finite())
-            .collect();
-        if tail.is_empty() {
-            f32::NAN
-        } else {
-            tail.iter().sum::<f32>() / tail.len() as f32
-        }
+        self.session.tail_loss(k)
     }
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the shim is exactly what these tests pin
 mod tests {
     use super::*;
+    use crate::model::AttnRegressor;
+
+    #[test]
+    fn shim_matches_session_bitwise() {
+        // The deprecated shim and a hand-built session must produce the
+        // same float sequence — the API migration cannot change fig3.
+        let mut shim = NativeTrainer::new(TrainerConfig::default(), QatVariant::AttnQat);
+        let mut session =
+            AttnRegressor::session(TrainerConfig::default(), QatVariant::AttnQat.config());
+        shim.run(10, 0, |_| {});
+        session.run(10, 0, |_| {});
+        assert_eq!(shim.history().len(), session.history.len());
+        for (a, b) in shim.history().iter().zip(&session.history) {
+            assert_eq!(a.loss, b.loss);
+            assert_eq!(a.grad_norm, b.grad_norm);
+            assert_eq!(a.lr, b.lr);
+        }
+    }
 
     #[test]
     fn deterministic_history() {
@@ -327,7 +150,7 @@ mod tests {
         let mut b = NativeTrainer::new(TrainerConfig::default(), QatVariant::AttnQat);
         a.run(5, 0, |_| {});
         b.run(5, 0, |_| {});
-        for (x, y) in a.history.iter().zip(&b.history) {
+        for (x, y) in a.history().iter().zip(b.history()) {
             assert_eq!(x.loss, y.loss);
             assert_eq!(x.grad_norm, y.grad_norm);
         }
@@ -335,10 +158,11 @@ mod tests {
 
     #[test]
     fn fig3_dropin_unstable_attn_qat_stable() {
-        // The paper's headline training-dynamics result (Fig. 3a/b), on the
-        // native path. Margins are wide: in simulation across seeds the
-        // drop-in max grad-norm is ≥ 361 (often NaN) while Attn-QAT stays
-        // ≤ 1.7 under the same hot learning rate.
+        // The paper's headline training-dynamics result (Fig. 3a/b),
+        // through the shim (the session-API version lives in
+        // model::regressor). Margins are wide: in simulation across seeds
+        // the drop-in max grad-norm is ≥ 361 (often NaN) while Attn-QAT
+        // stays ≤ 1.7 under the same hot learning rate.
         let steps = 150;
         let mut qat = NativeTrainer::new(TrainerConfig::default(), QatVariant::AttnQat);
         qat.run(steps, 0, |_| {});
@@ -385,7 +209,7 @@ mod tests {
             let mut t = NativeTrainer::new(cfg.clone(), variant);
             t.run(150, 0, |_| {});
             assert!(!t.diverged(), "{variant:?} diverged");
-            let first = t.history[0].loss;
+            let first = t.history()[0].loss;
             let tail = t.tail_loss(10);
             assert!(
                 first / tail > min_improvement,

@@ -36,8 +36,27 @@
 //! * [`model::TokenModel`] — the pluggable non-attention compute.
 //!   [`model::SimLm`] (deterministic seeded weights) is the native
 //!   default, so the whole cluster runs, tests, and benchmarks **without
-//!   the PJRT runtime**; the compiled-artifact transformer fills the same
-//!   role for [`DecodeServer`] below.
+//!   the PJRT runtime**; [`crate::model::QatModel`] implements the same
+//!   trait, and the compiled-artifact transformer fills the role for
+//!   [`DecodeServer`] below.
+//!
+//! ## Train→serve
+//!
+//! Since the `model` subsystem landed, the cluster serves **trained**
+//! weights, not just simulated ones:
+//!
+//! ```text
+//! model::TrainSession (Adam + grad-clip, per-layer Attn-QAT backward)
+//!   └─ model::QatModel ── save_quantized() ─▶ checkpoint ─▶ load()
+//!        └─ impl TokenModel ──▶ DecodeCluster::spawn(|_| Box::new(model.clone()))
+//! ```
+//!
+//! `QatModel` shares the per-row kernels of `SimLm` (`model::modules`),
+//! so its serving math is its training math — only attention switches
+//! from the engine training forward to the paged FP4 decode. The round
+//! trip — finetune, export, import, serve at 1 and 4 shards, compare
+//! bitwise against `model::greedy_decode` — is pinned by
+//! `rust/tests/train_serve.rs` and demoed by `repro train native`.
 //!
 //! Sharding changes wall-clock, never tokens: a sequence's floats depend
 //! only on its own cache and sampling stream, so for any trace of

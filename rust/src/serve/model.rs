@@ -8,7 +8,10 @@
 //! PJRT artifacts fill the same role for `DecodeServer`; [`SimLm`] is the
 //! native default — a deterministic simulated byte-LM built from seeded
 //! random weights, so the whole serving stack runs, tests, and benchmarks
-//! **without any compiled artifact or PJRT backend**.
+//! **without any compiled artifact or PJRT backend**. A
+//! [`crate::model::QatModel`] finetuned by `model::TrainSession`
+//! implements the same trait (sharing these row kernels via
+//! `model::modules`), which is how trained weights reach the cluster.
 //!
 //! The per-token contract mirrors a pre-norm transformer step:
 //!
@@ -24,6 +27,7 @@
 //! model instance can be moved into a shard worker thread (each shard
 //! builds its own from the same seed — weights are bitwise identical).
 
+use crate::model::modules::{rms_norm, vec_mat_acc};
 use crate::rng::Rng;
 
 /// Byte-level vocabulary: the serving path speaks raw bytes end to end.
@@ -119,28 +123,6 @@ pub struct SimLm {
     wout: Vec<f32>,
     /// (d × VOCAB) LM head.
     whead: Vec<f32>,
-}
-
-/// RMS-normalize `x` into `out` (same length).
-fn rms_norm(x: &[f32], out: &mut [f32]) {
-    let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
-    let inv = 1.0 / (ms + 1e-6).sqrt();
-    for (o, &v) in out.iter_mut().zip(x) {
-        *o = v * inv;
-    }
-}
-
-/// `out[p] += Σ_m x[m]·w[m·p_dim + p]` — row-vector × matrix accumulate.
-fn vec_mat_acc(x: &[f32], w: &[f32], p_dim: usize, out: &mut [f32]) {
-    for (m, &xv) in x.iter().enumerate() {
-        if xv == 0.0 {
-            continue;
-        }
-        let wrow = &w[m * p_dim..(m + 1) * p_dim];
-        for (o, &wv) in out.iter_mut().zip(wrow) {
-            *o += xv * wv;
-        }
-    }
 }
 
 impl SimLm {
