@@ -9,13 +9,23 @@
 //! hit totals, and KV memory peaks. On a multi-core host the multi-shard
 //! fp4 rows should beat the single-shard row on tokens/s; the recorded
 //! history is the scale-out before/after log.
+//!
+//! A faults scenario then serves the same trace through one injected
+//! mid-decode shard panic (supervised respawn + journal replay) and
+//! prices the recovery: tokens/s with 0 vs 1 panic, completions checked
+//! bitwise against the clean run. The headline numbers — scaling, tail
+//! latency, and fault-recovery overhead — are written to
+//! `BENCH_cluster.json` at the repo root, the per-PR perf trajectory.
 
 use std::io::Write;
 
 use attn_qat::attention::AttnConfig;
-use attn_qat::experiments::cluster::{demo_trace, serve_trace};
+use attn_qat::experiments::cluster::{demo_trace, serve_trace, serve_trace_faulty};
 use attn_qat::json::Json;
-use attn_qat::serve::Request;
+use attn_qat::serve::{FaultPlan, Request, SupervisorConfig};
+
+/// Headline summary path: the repo root, next to ROADMAP.md.
+const HEADLINE_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_cluster.json");
 
 struct Run {
     name: String,
@@ -108,6 +118,34 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // Faults scenario: the same 4-shard fp4 serve, clean vs one injected
+    // mid-decode shard panic — what supervised recovery costs.
+    let sup = SupervisorConfig::default();
+    let (clean_s, clean_stats, clean_done) =
+        serve_trace_faulty(4, AttnConfig::fp4(), 4, 7, &trace, FaultPlan::none(), sup)?;
+    let target = clean_stats.shards.iter().max_by_key(|s| s.tokens).map(|s| s.shard).unwrap_or(0);
+    let plan = FaultPlan::panic_at(target, 12);
+    let (fault_s, fault_stats, fault_done) =
+        serve_trace_faulty(4, AttnConfig::fp4(), 4, 7, &trace, plan, sup)?;
+    assert!(fault_stats.restarts >= 1, "the injected panic must force a respawn");
+    assert!(
+        clean_done.len() == fault_done.len()
+            && clean_done.iter().zip(&fault_done).all(|(a, b)| a.id == b.id && a.text == b.text),
+        "faulted completions must be bitwise identical to the clean run"
+    );
+    let clean_tps = clean_stats.total_tokens() as f64 / clean_s.max(1e-9);
+    let fault_tps = fault_stats.total_tokens() as f64 / fault_s.max(1e-9);
+    println!(
+        "cluster_serve_fp4_4shards faults: {:.0}/s clean vs {:.0}/s with 1 panic \
+         ({:.2}x overhead, {} restart(s), {} request(s) replayed, {} passes recomputed)",
+        clean_tps,
+        fault_tps,
+        clean_tps / fault_tps.max(1e-9),
+        fault_stats.restarts,
+        fault_stats.replayed_requests,
+        fault_stats.recomputed_passes,
+    );
+
     std::fs::create_dir_all("results/bench")?;
     let mut f = std::fs::OpenOptions::new()
         .create(true)
@@ -117,5 +155,28 @@ fn main() -> anyhow::Result<()> {
         writeln!(f, "{}", r.to_json())?;
     }
     println!("-> results/bench/cluster_serve.jsonl ({} rows)", rows.len());
+
+    // Headline summary at the repo root (overwritten each run: it is the
+    // per-PR trajectory snapshot, the jsonl above is the full history).
+    let find = |name: &str| rows.iter().find(|r| r.name == name);
+    let tps_1 = find("cluster_serve_fp4_1shards").map_or(0.0, |r| r.tok_per_s);
+    let tps_4 = find("cluster_serve_fp4_4shards").map_or(0.0, |r| r.tok_per_s);
+    let p99_4 = find("cluster_serve_fp4_4shards").map_or(0.0, |r| r.p99_token_ms);
+    let headline = Json::obj(vec![
+        ("bench", Json::Str("cluster_serve".to_string())),
+        ("requests", Json::Num(trace.len() as f64)),
+        ("fp4_tok_per_s_1shard", Json::Num(tps_1)),
+        ("fp4_tok_per_s_4shard", Json::Num(tps_4)),
+        ("fp4_scaling_4shard_x", Json::Num(tps_4 / tps_1.max(1e-9))),
+        ("fp4_p99_token_ms_4shard", Json::Num(p99_4)),
+        ("fault_clean_tok_per_s", Json::Num(clean_tps)),
+        ("fault_1panic_tok_per_s", Json::Num(fault_tps)),
+        ("fault_recovery_overhead_x", Json::Num(clean_tps / fault_tps.max(1e-9))),
+        ("fault_restarts", Json::Num(fault_stats.restarts as f64)),
+        ("fault_replayed_requests", Json::Num(fault_stats.replayed_requests as f64)),
+        ("fault_recomputed_passes", Json::Num(fault_stats.recomputed_passes as f64)),
+    ]);
+    std::fs::write(HEADLINE_PATH, format!("{headline}\n"))?;
+    println!("-> {HEADLINE_PATH}");
     Ok(())
 }

@@ -166,6 +166,7 @@ fn main() -> anyhow::Result<()> {
                     prompt: b"C:ab#".to_vec(),
                     max_new_tokens: 2,
                     temperature: 0.0,
+                    deadline_ms: None,
                 });
                 s.run()?;
             }
@@ -178,6 +179,7 @@ fn main() -> anyhow::Result<()> {
                         prompt: b"C:abcd#".to_vec(),
                         max_new_tokens: 16,
                         temperature: 0.0,
+                        deadline_ms: None,
                     });
                 }
                 s.run().unwrap();

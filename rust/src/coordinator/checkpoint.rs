@@ -1,12 +1,24 @@
-//! Checkpoint format (substrate): a simple self-describing binary container
-//! for named f32 tensors — magic, version, then per-tensor
-//! `name_len|name|rank|dims|f32 data` records (little endian).
+//! Checkpoint format (substrate): a self-describing binary container for
+//! named f32 tensors — magic, version, then per-tensor
+//! `name_len|name|rank|dims|f32 data` records (little endian), sealed by
+//! a `payload_len|fnv1a64|footer-magic` trailer.
 //!
 //! Used to persist trained parameters between experiment phases (continued
-//! pretraining → SFT → serving) without re-running training.
+//! pretraining → SFT → serving) without re-running training. Because a
+//! checkpoint may be the only surviving copy of hours of training, the
+//! format is hardened against the two failure modes that actually eat
+//! checkpoints in practice:
+//!
+//! - **Torn writes** (crash / disk-full mid-save): [`save`] writes to a
+//!   `.tmp` sibling and atomically renames it into place, so `path` only
+//!   ever holds a complete file.
+//! - **Silent corruption** (truncation, bit rot): the trailer records the
+//!   payload length and an FNV-1a 64 checksum; [`load`] verifies both
+//!   before parsing and returns a descriptive error instead of garbage
+//!   tensors.
 
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::Write;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -14,85 +26,170 @@ use anyhow::{bail, Context, Result};
 use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 8] = b"AQATCKPT";
-const VERSION: u32 = 1;
+const FOOTER_MAGIC: &[u8; 8] = b"AQATCKSM";
+const VERSION: u32 = 2;
+/// Trailer: payload_len u64 | fnv1a64 u64 | footer magic.
+const FOOTER_LEN: usize = 8 + 8 + 8;
+const HEADER_LEN: usize = 8 + 4;
 
-/// Write named tensors to `path`.
+/// FNV-1a 64-bit over `bytes` — tiny, dependency-free, and plenty to
+/// catch truncation and bit flips (this is an integrity check, not a
+/// cryptographic seal).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Write named tensors to `path` atomically: the bytes land in
+/// `path.tmp` first and are renamed over `path` only once fully written
+/// and synced, so a crash mid-save never leaves a torn checkpoint at
+/// `path` (at worst a stale `.tmp` sibling, which the next save
+/// overwrites).
 pub fn save(path: &Path, named: &[(String, &Tensor)]) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
-    let mut w = BufWriter::new(File::create(path).with_context(|| format!("{path:?}"))?);
-    w.write_all(MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&(named.len() as u32).to_le_bytes())?;
+
+    // Serialize the payload in memory so the checksum covers exactly the
+    // bytes that hit disk.
+    let mut payload = Vec::new();
+    payload.extend_from_slice(&(named.len() as u32).to_le_bytes());
     for (name, t) in named {
         let nb = name.as_bytes();
-        w.write_all(&(nb.len() as u32).to_le_bytes())?;
-        w.write_all(nb)?;
-        w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        payload.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+        payload.extend_from_slice(nb);
+        payload.extend_from_slice(&(t.shape.len() as u32).to_le_bytes());
         for &d in &t.shape {
-            w.write_all(&(d as u64).to_le_bytes())?;
+            payload.extend_from_slice(&(d as u64).to_le_bytes());
         }
         for &x in &t.data {
-            w.write_all(&x.to_le_bytes())?;
+            payload.extend_from_slice(&x.to_le_bytes());
         }
     }
+
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = File::create(&tmp).with_context(|| format!("{tmp:?}"))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&payload)?;
+        f.write_all(&(payload.len() as u64).to_le_bytes())?;
+        f.write_all(&fnv1a64(&payload).to_le_bytes())?;
+        f.write_all(FOOTER_MAGIC)?;
+        f.sync_all().with_context(|| format!("sync {tmp:?}"))?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
     Ok(())
 }
 
-/// Read all tensors back, in file order.
-pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>> {
-    let mut r = BufReader::new(File::open(path).with_context(|| format!("{path:?}"))?);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("not a checkpoint file: {path:?}");
-    }
-    let version = read_u32(&mut r)?;
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version}");
-    }
-    let count = read_u32(&mut r)? as usize;
-    let mut out = Vec::with_capacity(count);
-    for _ in 0..count {
-        let name_len = read_u32(&mut r)? as usize;
-        let mut name = vec![0u8; name_len];
-        r.read_exact(&mut name)?;
-        let rank = read_u32(&mut r)? as usize;
-        let mut shape = Vec::with_capacity(rank);
-        for _ in 0..rank {
-            let mut b = [0u8; 8];
-            r.read_exact(&mut b)?;
-            shape.push(u64::from_le_bytes(b) as usize);
-        }
-        let n: usize = shape.iter().product();
-        let mut data = vec![0.0f32; n];
-        let mut buf = [0u8; 4];
-        for x in data.iter_mut() {
-            r.read_exact(&mut buf)?;
-            *x = f32::from_le_bytes(buf);
-        }
-        out.push((String::from_utf8(name)?, Tensor::new(shape, data)?));
-    }
-    Ok(out)
+/// A bounds-checked cursor over the in-memory payload: every read is
+/// validated against the (already checksummed) buffer, so a malformed
+/// record errors instead of panicking.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
 }
 
-fn read_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        match end {
+            Some(end) => {
+                let s = &self.buf[self.pos..end];
+                self.pos = end;
+                Ok(s)
+            }
+            None => bail!(
+                "truncated checkpoint payload: wanted {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            ),
+        }
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+/// Read all tensors back, in file order. Fails with a descriptive error
+/// (rather than returning corrupt tensors) if the file is truncated,
+/// bit-flipped, or not a checkpoint at all.
+pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>> {
+    let bytes = std::fs::read(path).with_context(|| format!("{path:?}"))?;
+    if bytes.len() < HEADER_LEN || &bytes[..8] != MAGIC {
+        bail!("not a checkpoint file: {path:?}");
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version} (expected {VERSION}): {path:?}");
+    }
+    if bytes.len() < HEADER_LEN + FOOTER_LEN {
+        bail!("truncated checkpoint (no integrity footer): {path:?}");
+    }
+    let (body, footer) = bytes.split_at(bytes.len() - FOOTER_LEN);
+    if &footer[16..24] != FOOTER_MAGIC {
+        bail!("truncated checkpoint (integrity footer missing or cut short): {path:?}");
+    }
+    let payload = &body[HEADER_LEN..];
+    let stored_len = u64::from_le_bytes(footer[..8].try_into().unwrap());
+    if stored_len != payload.len() as u64 {
+        bail!(
+            "truncated checkpoint: footer says {stored_len} payload bytes, found {}: {path:?}",
+            payload.len()
+        );
+    }
+    let stored_sum = u64::from_le_bytes(footer[8..16].try_into().unwrap());
+    let actual_sum = fnv1a64(payload);
+    if stored_sum != actual_sum {
+        bail!(
+            "checkpoint checksum mismatch (stored {stored_sum:#018x}, computed \
+             {actual_sum:#018x}) — file is corrupt: {path:?}"
+        );
+    }
+
+    let mut c = Cursor { buf: payload, pos: 0 };
+    let count = c.u32()? as usize;
+    let mut out = Vec::with_capacity(count.min(4096));
+    for _ in 0..count {
+        let name_len = c.u32()? as usize;
+        let name = String::from_utf8(c.take(name_len)?.to_vec())?;
+        let rank = c.u32()? as usize;
+        let mut shape = Vec::with_capacity(rank.min(64));
+        for _ in 0..rank {
+            shape.push(c.u64()? as usize);
+        }
+        let n: usize = shape.iter().product();
+        let raw = c.take(n.checked_mul(4).context("tensor element count overflows")?)?;
+        let data = raw.chunks_exact(4).map(|b| f32::from_le_bytes(b.try_into().unwrap())).collect();
+        out.push((name, Tensor::new(shape, data)?));
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn sample() -> (Tensor, Tensor) {
+        let t1 = Tensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]).unwrap();
+        let t2 = Tensor::scalar(42.0);
+        (t1, t2)
+    }
+
     #[test]
     fn roundtrip() {
         let dir = std::env::temp_dir().join("attn_qat_ckpt_test");
         let path = dir.join("a.ckpt");
-        let t1 = Tensor::new(vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 5.0, -6.25]).unwrap();
-        let t2 = Tensor::scalar(42.0);
+        let (t1, t2) = sample();
         save(&path, &[("w".into(), &t1), ("b".into(), &t2)]).unwrap();
         let back = load(&path).unwrap();
         assert_eq!(back.len(), 2);
@@ -103,12 +200,78 @@ mod tests {
     }
 
     #[test]
+    fn save_is_atomic_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir().join("attn_qat_ckpt_test_atomic");
+        let path = dir.join("a.ckpt");
+        let (t1, _) = sample();
+        save(&path, &[("w".into(), &t1)]).unwrap();
+        assert!(path.exists());
+        assert!(!path.with_extension("tmp").exists(), "tmp must be renamed away");
+        // Overwriting an existing checkpoint also goes through the tmp.
+        save(&path, &[("w".into(), &t1)]).unwrap();
+        assert!(!path.with_extension("tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn rejects_garbage() {
         let dir = std::env::temp_dir().join("attn_qat_ckpt_test2");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("bad.ckpt");
         std::fs::write(&path, b"NOTACKPTxxxx").unwrap();
-        assert!(load(&path).is_err());
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("not a checkpoint"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let dir = std::env::temp_dir().join("attn_qat_ckpt_test_trunc");
+        let path = dir.join("a.ckpt");
+        let (t1, t2) = sample();
+        save(&path, &[("w".into(), &t1), ("b".into(), &t2)]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // Chop bytes off the end at several depths: all must error, none
+        // may return a partial tensor list.
+        for cut in [1, FOOTER_LEN, FOOTER_LEN + 5, bytes.len() - HEADER_LEN - 1] {
+            let short = &bytes[..bytes.len() - cut];
+            std::fs::write(&path, short).unwrap();
+            let err = load(&path).unwrap_err().to_string();
+            assert!(err.contains("truncated") || err.contains("not a checkpoint"), "{err}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn detects_bit_flips() {
+        let dir = std::env::temp_dir().join("attn_qat_ckpt_test_flip");
+        let path = dir.join("a.ckpt");
+        let (t1, t2) = sample();
+        save(&path, &[("w".into(), &t1), ("b".into(), &t2)]).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        // Flip one bit in every payload byte position in turn — the
+        // checksum must catch each one.
+        for pos in HEADER_LEN..clean.len() - FOOTER_LEN {
+            let mut bytes = clean.clone();
+            bytes[pos] ^= 0x10;
+            std::fs::write(&path, &bytes).unwrap();
+            let err = load(&path).unwrap_err().to_string();
+            assert!(err.contains("checksum mismatch"), "pos {pos}: {err}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_old_versions() {
+        let dir = std::env::temp_dir().join("attn_qat_ckpt_test_ver");
+        let path = dir.join("a.ckpt");
+        let (t1, _) = sample();
+        save(&path, &[("w".into(), &t1)]).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8..12].copy_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("unsupported checkpoint version 1"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

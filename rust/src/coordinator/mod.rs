@@ -47,6 +47,9 @@ pub struct StepMetrics {
     pub grad_norm: f32,
     pub lr: f32,
     pub wall_ms: f64,
+    /// True if the training watchdog rolled this step back (the recorded
+    /// loss/grad_norm keep the bad values; the params do not).
+    pub rollback: bool,
 }
 
 /// Model + optimizer state as host tensors, threaded between executions.
@@ -167,6 +170,7 @@ impl<'rt> Trainer<'rt> {
             grad_norm,
             lr,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            rollback: false,
         };
         self.history.push(m);
         Ok(m)

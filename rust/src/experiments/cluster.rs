@@ -14,7 +14,10 @@ use anyhow::Result;
 use crate::attention::AttnConfig;
 use crate::config::Config;
 use crate::data::corpus::Corpus;
-use crate::serve::{ClusterConfig, DecodeCluster, Request, ShardConfig, SimLm, SimLmConfig};
+use crate::serve::{
+    ClusterConfig, Completion, DecodeCluster, FaultPlan, Request, ShardConfig, SimLm, SimLmConfig,
+    SupervisorConfig,
+};
 
 use super::common;
 
@@ -30,6 +33,7 @@ pub fn demo_trace(n_req: usize, max_new: usize, seed: u64) -> Vec<Request> {
             prompt: corpus.stream(16 + (i % 5) * 8),
             max_new_tokens: max_new,
             temperature: 0.0,
+            deadline_ms: None,
         })
         .collect()
 }
@@ -45,20 +49,49 @@ pub fn serve_trace(
     seed: u64,
     trace: &[Request],
 ) -> Result<(f64, crate::serve::ClusterStats)> {
+    let (wall, stats, _) = serve_trace_faulty(
+        shards,
+        attn,
+        lanes,
+        seed,
+        trace,
+        FaultPlan::none(),
+        SupervisorConfig::default(),
+    )?;
+    Ok((wall, stats))
+}
+
+/// [`serve_trace`] with an injected [`FaultPlan`] and an explicit
+/// supervisor policy; also returns the (id-sorted) completions so
+/// callers can check faulty runs for bitwise identity against clean
+/// ones. The zero-lost-requests invariant is asserted here: every
+/// submitted request must come back, faults or not. Shared by `repro
+/// exp faults` and `benches/cluster_serve.rs`.
+pub fn serve_trace_faulty(
+    shards: usize,
+    attn: AttnConfig,
+    lanes: usize,
+    seed: u64,
+    trace: &[Request],
+    faults: FaultPlan,
+    supervisor: SupervisorConfig,
+) -> Result<(f64, crate::serve::ClusterStats, Vec<Completion>)> {
     let cfg = ClusterConfig {
         shards,
         queue_depth: trace.len().max(1),
         shard: ShardConfig { slots: lanes, attn, seq_max: 512, sample_seed: seed },
+        supervisor,
     };
     let lm = SimLmConfig { seed, ..SimLmConfig::default() };
-    let mut cluster = DecodeCluster::spawn(cfg, |_| Box::new(SimLm::new(lm)));
+    let mut cluster =
+        DecodeCluster::spawn(cfg, move |shard| faults.wrap(shard, Box::new(SimLm::new(lm))));
     let t0 = std::time::Instant::now();
     for r in trace {
         cluster.submit(r.clone())?;
     }
     let (done, stats) = cluster.drain()?;
     anyhow::ensure!(done.len() == trace.len(), "lost completions");
-    Ok((t0.elapsed().as_secs_f64(), stats))
+    Ok((t0.elapsed().as_secs_f64(), stats, done))
 }
 
 /// `repro exp cluster` — shard-scaling table.
@@ -110,6 +143,63 @@ pub fn cluster_scaling(cfg: &Config) -> Result<()> {
         "cluster_scaling",
         "Sharded decode cluster: scaling and FP4-vs-f32 serving throughput",
         &["shards", "attn", "tokens", "tok/s", "vs 1-shard fp4", "p99/tok (ms)", "KV saving"],
+        &rows,
+    )
+}
+
+/// `repro exp faults` — fault-tolerance table: the same trace served
+/// clean, through a mid-decode shard panic, and through a shard stall,
+/// each checked for zero lost requests and *bitwise identical*
+/// completions against the clean run (the supervisor's deterministic-
+/// replay contract). Writes `results/fault_tolerance.{md,json}`.
+pub fn fault_tolerance(cfg: &Config) -> Result<()> {
+    let n_req = cfg.usize_or("faults.requests", 24);
+    let max_new = cfg.usize_or("faults.max_new_tokens", 16);
+    let seed = cfg.u64_or("seed", 42);
+    let shards = 4usize;
+    let trace = demo_trace(n_req, max_new, seed);
+
+    let sup = SupervisorConfig { stall_timeout_ms: 150.0, ..SupervisorConfig::default() };
+    let scenarios: [(&str, FaultPlan); 3] = [
+        ("clean", FaultPlan::none()),
+        ("panic shard0 @pass12", FaultPlan::panic_at(0, 12)),
+        ("stall shard0 @pass8 400ms", FaultPlan::stall_at(0, 8, 400)),
+    ];
+
+    let mut baseline: Option<Vec<(u64, Vec<u8>)>> = None;
+    let mut rows = Vec::new();
+    for (name, plan) in scenarios {
+        let (wall_s, stats, done) =
+            serve_trace_faulty(shards, AttnConfig::fp4(), 4, seed, &trace, plan, sup)?;
+        let texts: Vec<(u64, Vec<u8>)> = done.iter().map(|c| (c.id, c.text.clone())).collect();
+        let bitwise = match &baseline {
+            None => {
+                baseline = Some(texts);
+                "baseline".to_string()
+            }
+            Some(clean) => {
+                anyhow::ensure!(
+                    *clean == texts,
+                    "scenario {name:?}: completions diverged from the clean run"
+                );
+                "identical".to_string()
+            }
+        };
+        let tokens = stats.total_tokens();
+        rows.push(vec![
+            name.to_string(),
+            stats.restarts.to_string(),
+            stats.replayed_requests.to_string(),
+            stats.recomputed_passes.to_string(),
+            tokens.to_string(),
+            format!("{:.0}", tokens as f64 / wall_s.max(1e-9)),
+            bitwise,
+        ]);
+    }
+    common::write_table(
+        "fault_tolerance",
+        "Supervised cluster under injected faults: zero lost requests, bitwise replay",
+        &["scenario", "restarts", "replayed", "recomputed passes", "tokens", "tok/s", "vs clean"],
         &rows,
     )
 }

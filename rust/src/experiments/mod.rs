@@ -34,17 +34,19 @@ pub fn run(rt: &Runtime, id: &str, cfg: &Config) -> Result<()> {
         "fig5" => kernels::fig5(rt, cfg),
         // Serving-side scale-out study; native models, no artifacts used.
         "cluster" => cluster::cluster_scaling(cfg),
+        // Fault-injected serving: zero lost requests + bitwise replay.
+        "faults" => cluster::fault_tolerance(cfg),
         "all" => {
             for id in [
                 "table2", "table1", "table4", "table3", "fig1", "fig2", "fig3", "fig4", "fig5",
-                "cluster",
+                "cluster", "faults",
             ] {
                 println!("\n===== {id} =====");
                 run(rt, id, cfg)?;
             }
             Ok(())
         }
-        other => bail!("unknown experiment '{other}' (table1-4, fig1-5, cluster, all)"),
+        other => bail!("unknown experiment '{other}' (table1-4, fig1-5, cluster, faults, all)"),
     }
 }
 
@@ -59,14 +61,17 @@ pub fn run_native(id: &str, cfg: &Config) -> Result<()> {
             llm::fig3c_native(cfg)
         }
         "cluster" => cluster::cluster_scaling(cfg),
+        "faults" => cluster::fault_tolerance(cfg),
         "all" => {
-            println!("(native mode: only fig3 and cluster run without compiled artifacts)");
+            println!("(native mode: only fig3, cluster, and faults run without artifacts)");
             run_native("fig3", cfg)?;
-            run_native("cluster", cfg)
+            run_native("cluster", cfg)?;
+            run_native("faults", cfg)
         }
         other => bail!(
             "experiment '{other}' needs compiled HLO artifacts and a real PJRT backend \
-             (the stub xla crate is active); only 'fig3' and 'cluster' have native paths"
+             (the stub xla crate is active); only 'fig3', 'cluster', and 'faults' have \
+             native paths"
         ),
     }
 }

@@ -245,8 +245,10 @@ fn cmd_train_native(cli: &Cli) -> Result<()> {
         shards,
         queue_depth: 16,
         shard: ShardConfig { slots: 2, attn: serve_attn, seq_max: 512, sample_seed: seed },
+        ..ClusterConfig::default()
     };
-    let mut cluster = DecodeCluster::spawn(cluster_cfg, |_| Box::new(served.clone()));
+    let served_factory = served.clone();
+    let mut cluster = DecodeCluster::spawn(cluster_cfg, move |_| Box::new(served_factory.clone()));
     for r in trace.iter().cloned() {
         cluster.submit(r)?;
     }
@@ -323,6 +325,7 @@ fn cmd_serve(rt: &Runtime, cli: &Cli) -> Result<()> {
             prompt: format!("C:hello{i}#").into_bytes(),
             max_new_tokens: max_new,
             temperature: 0.0,
+            deadline_ms: None,
         });
     }
     let done = server.run()?;
@@ -351,17 +354,27 @@ fn cmd_serve(rt: &Runtime, cli: &Cli) -> Result<()> {
 }
 
 /// `repro serve cluster [--shards N] [--requests R] [--max-new M]
-/// [--queue-depth Q] [--lanes L] [--variant fp4|f32] [--seed S]`
+/// [--queue-depth Q] [--lanes L] [--variant fp4|f32] [--seed S]
+/// [--deadline-ms D] [--faults SPEC] [--stall-timeout-ms T]
+/// [--max-restarts K]`
 ///
 /// Native sharded decode: routes a deterministic request trace (prompts
-/// drawn from the synthetic corpus) across N shard workers, each with its
-/// own FP4 paged KV cache and per-lane attention engines, then drains and
-/// prints per-shard and aggregate throughput. Runs end to end without the
-/// PJRT runtime. Flags also read from config keys `serve.shards`,
-/// `serve.requests`, `serve.max_new_tokens`, `serve.queue_depth`,
-/// `serve.lanes`, `serve.variant`, `seed`.
+/// drawn from the synthetic corpus) across N supervised shard workers,
+/// each with its own FP4 paged KV cache and per-lane attention engines,
+/// then drains and prints per-shard and aggregate throughput. Runs end to
+/// end without the PJRT runtime. Flags also read from config keys
+/// `serve.shards`, `serve.requests`, `serve.max_new_tokens`,
+/// `serve.queue_depth`, `serve.lanes`, `serve.variant`, `seed`.
+///
+/// `--deadline-ms` tags every request with an SLO so the cluster sheds
+/// infeasible work at admission; `--faults` injects seeded shard faults
+/// (comma-separated `panic:S:P`, `stall:S:P:MS`, `every:S:K`) that the
+/// supervisor must survive without losing a single request.
 fn cmd_serve_cluster(cli: &Cli) -> Result<()> {
-    use attn_qat::serve::{ClusterConfig, DecodeCluster, ShardConfig, SimLm, SimLmConfig};
+    use attn_qat::serve::{
+        Admission, ClusterConfig, DecodeCluster, FaultPlan, ShardConfig, SimLm, SimLmConfig,
+        SupervisorConfig,
+    };
 
     // `--flag value` pairs after the `cluster` subcommand override config.
     let mut flags = std::collections::BTreeMap::new();
@@ -395,8 +408,32 @@ fn cmd_serve_cluster(cli: &Cli) -> Result<()> {
         .cloned()
         .unwrap_or_else(|| cli.cfg.str_or("serve.variant", "fp4"));
     let attn = attn_qat::attention::AttnConfig::parse(&variant).map_err(|e| anyhow!("{e}"))?;
-    const KNOWN: [&str; 7] =
-        ["shards", "requests", "max-new", "queue-depth", "lanes", "seed", "variant"];
+    let deadline_ms: Option<f64> = match flags.get("deadline-ms") {
+        Some(v) => Some(v.parse().map_err(|_| anyhow!("--deadline-ms wants a number"))?),
+        None => None,
+    };
+    let faults = match flags.get("faults") {
+        Some(spec) => FaultPlan::parse(spec)?,
+        None => FaultPlan::none(),
+    };
+    let stall_timeout_ms: f64 = match flags.get("stall-timeout-ms") {
+        Some(v) => v.parse().map_err(|_| anyhow!("--stall-timeout-ms wants a number"))?,
+        None => cli.cfg.f32_or("serve.stall_timeout_ms", 2_000.0) as f64,
+    };
+    let max_restarts = get_usize("max-restarts", "serve.max_restarts", 4)?;
+    const KNOWN: [&str; 11] = [
+        "shards",
+        "requests",
+        "max-new",
+        "queue-depth",
+        "lanes",
+        "seed",
+        "variant",
+        "deadline-ms",
+        "faults",
+        "stall-timeout-ms",
+        "max-restarts",
+    ];
     if let Some(unknown) = flags.keys().find(|k| !KNOWN.contains(&k.as_str())) {
         bail!("unknown flag --{unknown} (expected one of: --{})", KNOWN.join(", --"));
     }
@@ -412,15 +449,27 @@ fn cmd_serve_cluster(cli: &Cli) -> Result<()> {
         shards,
         queue_depth,
         shard: ShardConfig { slots: lanes, attn, seq_max: 512, sample_seed: seed },
+        supervisor: SupervisorConfig {
+            stall_timeout_ms,
+            max_restarts,
+            ..SupervisorConfig::default()
+        },
     };
     let lm_cfg = SimLmConfig { seed, ..SimLmConfig::default() };
-    let mut cluster = DecodeCluster::spawn(cluster_cfg, |_| Box::new(SimLm::new(lm_cfg)));
+    let plan = faults.clone();
+    let mut cluster = DecodeCluster::spawn(cluster_cfg, move |shard| {
+        plan.wrap(shard, Box::new(SimLm::new(lm_cfg)))
+    });
 
     // Deterministic trace, shared with `exp cluster` and the bench so
     // all three drive the same workload.
     let t0 = std::time::Instant::now();
-    for r in attn_qat::experiments::cluster::demo_trace(n_req, max_new, seed) {
-        cluster.submit(r)?;
+    let mut shed = 0usize;
+    for mut r in attn_qat::experiments::cluster::demo_trace(n_req, max_new, seed) {
+        r.deadline_ms = deadline_ms;
+        if cluster.submit(r)? != Admission::Accepted {
+            shed += 1;
+        }
     }
     let (done, stats) = cluster.drain()?;
     let wall = t0.elapsed().as_secs_f64();
@@ -452,8 +501,31 @@ fn cmd_serve_cluster(cli: &Cli) -> Result<()> {
         stats.p99_token_ms(),
         stats.kv_bytes_peak(),
     );
-    if done.len() != n_req {
-        bail!("lost completions: submitted {n_req}, drained {}", done.len());
+    if stats.restarts > 0 || faults.trips() > 0 {
+        println!(
+            "supervision: {} fault(s) tripped, {} restart(s), {} request(s) replayed, \
+             {} pass(es) recomputed",
+            faults.trips(),
+            stats.restarts,
+            stats.replayed_requests,
+            stats.recomputed_passes,
+        );
+    }
+    if deadline_ms.is_some() {
+        println!(
+            "admission: {} accepted, {} shed on deadline, {} shed on capacity \
+             ({} submit retry(ies))",
+            n_req - shed,
+            stats.shed_deadline,
+            stats.shed_capacity,
+            stats.submit_retries,
+        );
+    }
+    if done.len() + shed != n_req {
+        bail!(
+            "lost completions: submitted {n_req}, shed {shed}, drained {}",
+            done.len()
+        );
     }
     Ok(())
 }
@@ -475,9 +547,14 @@ COMMANDS:
     serve [size]                 batched decode demo over the FP4 KV cache
     serve cluster [--shards N] [--requests R] [--max-new M]
                   [--queue-depth Q] [--lanes L] [--variant fp4|f32]
-                                 native sharded decode cluster (no PJRT
-                                 runtime or artifacts needed)
+                  [--deadline-ms D] [--faults SPEC]
+                  [--stall-timeout-ms T] [--max-restarts K]
+                                 native sharded decode cluster with shard
+                                 supervision, deadline-aware shedding, and
+                                 seeded fault injection (--faults takes
+                                 comma-separated panic:S:P, stall:S:P:MS,
+                                 every:S:K); no PJRT runtime or artifacts
     exp <id>                     regenerate a paper table/figure:
                                  table1 table2 table3 table4 fig1..fig5
-                                 cluster all
+                                 cluster faults all
 ";

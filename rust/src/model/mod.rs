@@ -43,10 +43,10 @@ pub mod regressor;
 pub mod session;
 
 pub use modules::{cross_entropy, Embedding, Linear, Mlp, Module};
-pub use optim::{Adam, Optimizer, Sgd};
+pub use optim::{Adam, Optimizer, OptimizerState, Sgd};
 pub use qat_model::{LmTrainTask, ModelActs, QatModel, QatModelConfig};
 pub use regressor::AttnRegressor;
-pub use session::{OptimizerKind, TrainConfig, TrainSession, TrainableModel};
+pub use session::{OptimizerKind, TrainConfig, TrainSession, TrainableModel, WatchdogConfig};
 
 use anyhow::{ensure, Result};
 

@@ -7,6 +7,16 @@
 //! visit order is stable per model type, so state lines up across steps.
 //! Buffers are sized lazily on first use.
 
+/// A snapshot of an optimizer's full mutable state, for the training
+/// watchdog's rollback: `step` is Adam's bias-correction counter (0 for
+/// SGD) and `slots` the per-kind state buffers (SGD: `[vel]`; Adam:
+/// `[m, v]`), each indexed per tensor.
+#[derive(Clone, Debug, Default)]
+pub struct OptimizerState {
+    pub step: i32,
+    pub slots: Vec<Vec<Vec<f32>>>,
+}
+
 /// One optimizer step over a model's parameter tensors.
 pub trait Optimizer: Send {
     /// Called once per training step, before any [`Optimizer::update`]
@@ -15,6 +25,12 @@ pub trait Optimizer: Send {
 
     /// Update parameter tensor `idx` in place from its gradient.
     fn update(&mut self, idx: usize, w: &mut [f32], g: &[f32], lr: f32);
+
+    /// Capture the full mutable state (for watchdog rollback).
+    fn snapshot(&self) -> OptimizerState;
+
+    /// Restore a state captured by [`Optimizer::snapshot`].
+    fn restore(&mut self, state: &OptimizerState);
 }
 
 /// SGD with momentum: `v ← μ·v + g`, `w ← w − lr·v` — element-for-element
@@ -46,6 +62,14 @@ impl Optimizer for Sgd {
             *v = mu * *v + gx;
             *w -= lr * *v;
         }
+    }
+
+    fn snapshot(&self) -> OptimizerState {
+        OptimizerState { step: 0, slots: vec![self.vel.clone()] }
+    }
+
+    fn restore(&mut self, state: &OptimizerState) {
+        self.vel = state.slots.first().cloned().unwrap_or_default();
     }
 }
 
@@ -113,6 +137,16 @@ impl Optimizer for Adam {
             *w -= lr * mh / (vh.sqrt() + eps);
         }
     }
+
+    fn snapshot(&self) -> OptimizerState {
+        OptimizerState { step: self.t, slots: vec![self.m.clone(), self.v.clone()] }
+    }
+
+    fn restore(&mut self, state: &OptimizerState) {
+        self.t = state.step;
+        self.m = state.slots.first().cloned().unwrap_or_default();
+        self.v = state.slots.get(1).cloned().unwrap_or_default();
+    }
 }
 
 #[cfg(test)]
@@ -142,6 +176,27 @@ mod tests {
         opt.update(0, &mut w, &g, 0.01);
         assert!((w[0] + 0.01).abs() < 1e-5, "{}", w[0]);
         assert!((w[1] - 0.01).abs() < 1e-4, "{}", w[1]);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrips_adam_state() {
+        let mut opt = Adam::new();
+        opt.begin_step();
+        let mut w = vec![0.0f32, 0.0];
+        opt.update(0, &mut w, &[1.0, -2.0], 0.01);
+        let snap = opt.snapshot();
+        let w_snap = w.clone();
+        opt.begin_step();
+        opt.update(0, &mut w, &[5.0, 5.0], 0.01);
+        let diverged = w.clone();
+        assert_ne!(diverged, w_snap);
+        // Restore moments + step count, replay the same step: bitwise
+        // identical trajectory — the watchdog's rollback contract.
+        opt.restore(&snap);
+        let mut w2 = w_snap.clone();
+        opt.begin_step();
+        opt.update(0, &mut w2, &[5.0, 5.0], 0.01);
+        assert_eq!(w2, diverged);
     }
 
     #[test]

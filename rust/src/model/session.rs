@@ -17,10 +17,19 @@
 //!
 //! Divergence is data, not a crash: steps keep running past the
 //! threshold and the history records the spikes/NaNs for the figures.
+//!
+//! With a [`WatchdogConfig`] armed, divergence is also *recoverable*:
+//! the session snapshots params + optimizer state every K good steps,
+//! and a step whose loss goes non-finite or whose pre-clip grad norm
+//! blows past the configured limit is rolled back to the last good
+//! snapshot with the learning rate backed off (bounded retries). The
+//! rollback is recorded in the step's [`StepMetrics::rollback`] flag —
+//! the history keeps the spike (divergence stays observable data) while
+//! the parameters survive it.
 
 use crate::coordinator::{LrSchedule, StepMetrics};
 
-use super::optim::{Adam, Optimizer, Sgd};
+use super::optim::{Adam, Optimizer, OptimizerState, Sgd};
 
 /// A model the session can drive: owns its parameters, gradients, and
 /// data source.
@@ -54,6 +63,27 @@ impl OptimizerKind {
     }
 }
 
+/// Divergence watchdog: snapshot/rollback policy for [`TrainSession`].
+#[derive(Clone, Copy, Debug)]
+pub struct WatchdogConfig {
+    /// Take a params+optimizer snapshot every this many *good* steps.
+    pub snapshot_every: usize,
+    /// A step whose pre-clip grad norm exceeds this (or whose loss or
+    /// grad norm goes non-finite) is rolled back.
+    pub grad_limit: f32,
+    /// Learning-rate multiplier applied on every rollback (compounds).
+    pub lr_backoff: f32,
+    /// Rollback budget; past it bad steps are kept (the run then
+    /// records divergence as data, exactly like a watchdog-less run).
+    pub max_rollbacks: usize,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> WatchdogConfig {
+        WatchdogConfig { snapshot_every: 10, grad_limit: 50.0, lr_backoff: 0.5, max_rollbacks: 8 }
+    }
+}
+
 /// Everything a training run is configurable on.
 #[derive(Clone, Copy, Debug)]
 pub struct TrainConfig {
@@ -65,6 +95,9 @@ pub struct TrainConfig {
     /// Same semantics as `coordinator::Trainer`: runs continue past this —
     /// divergence is observable data.
     pub divergence_threshold: f32,
+    /// `Some` arms the divergence watchdog (snapshot + rollback + lr
+    /// backoff); `None` keeps the record-only behaviour.
+    pub watchdog: Option<WatchdogConfig>,
 }
 
 impl TrainConfig {
@@ -76,6 +109,7 @@ impl TrainConfig {
             schedule: LrSchedule::Constant(lr),
             grad_clip: None,
             divergence_threshold: 1e6,
+            watchdog: None,
         }
     }
 
@@ -87,6 +121,7 @@ impl TrainConfig {
             schedule: LrSchedule::Constant(lr),
             grad_clip: Some(1.0),
             divergence_threshold: 1e6,
+            watchdog: None,
         }
     }
 
@@ -99,6 +134,12 @@ impl TrainConfig {
         self.grad_clip = clip;
         self
     }
+
+    /// Arm the divergence watchdog.
+    pub fn with_watchdog(mut self, wd: WatchdogConfig) -> TrainConfig {
+        self.watchdog = Some(wd);
+        self
+    }
 }
 
 /// A training run: model + optimizer state + metric history.
@@ -108,11 +149,25 @@ pub struct TrainSession<M: TrainableModel> {
     opt: Box<dyn Optimizer>,
     step: usize,
     pub history: Vec<StepMetrics>,
+    /// Last good (params, optimizer) snapshot, kept only when the
+    /// watchdog is armed.
+    snapshot: Option<(Vec<Vec<f32>>, OptimizerState)>,
+    lr_scale: f32,
+    rollbacks: usize,
 }
 
 impl<M: TrainableModel> TrainSession<M> {
     pub fn new(model: M, cfg: TrainConfig) -> TrainSession<M> {
-        TrainSession { model, cfg, opt: cfg.optimizer.build(), step: 0, history: Vec::new() }
+        TrainSession {
+            model,
+            cfg,
+            opt: cfg.optimizer.build(),
+            step: 0,
+            history: Vec::new(),
+            snapshot: None,
+            lr_scale: 1.0,
+            rollbacks: 0,
+        }
     }
 
     /// Steps completed so far.
@@ -120,9 +175,47 @@ impl<M: TrainableModel> TrainSession<M> {
         self.step
     }
 
+    /// Watchdog rollbacks performed so far (0 when unarmed).
+    pub fn rollbacks(&self) -> usize {
+        self.rollbacks
+    }
+
+    /// Current learning-rate backoff multiplier (1.0 until a rollback).
+    pub fn lr_scale(&self) -> f32 {
+        self.lr_scale
+    }
+
+    fn take_snapshot(&mut self) -> (Vec<Vec<f32>>, OptimizerState) {
+        let mut params = Vec::new();
+        self.model.visit_params(&mut |w, _| params.push(w.to_vec()));
+        (params, self.opt.snapshot())
+    }
+
+    fn restore_snapshot(&mut self) {
+        let (params, opt_state) =
+            self.snapshot.as_ref().expect("watchdog rollback without a snapshot");
+        let mut idx = 0usize;
+        self.model.visit_params(&mut |w, _| {
+            w.copy_from_slice(&params[idx]);
+            idx += 1;
+        });
+        self.opt.restore(opt_state);
+    }
+
     /// One optimizer step on a fresh batch. Returns the step metrics.
+    ///
+    /// With the watchdog armed, a step whose loss/grad-norm is bad is
+    /// *not applied*: params + optimizer roll back to the last good
+    /// snapshot, the lr backs off, and the metric (which keeps the bad
+    /// loss and pre-clip grad norm, so figures still show the spike) is
+    /// flagged with [`StepMetrics::rollback`]. Past the rollback budget
+    /// bad steps apply as usual and the run records divergence as data.
     pub fn step(&mut self) -> StepMetrics {
         let t0 = std::time::Instant::now();
+        if self.cfg.watchdog.is_some() && self.snapshot.is_none() {
+            // Baseline: the initial params are the first "last good" state.
+            self.snapshot = Some(self.take_snapshot());
+        }
         self.model.visit_params(&mut |_, g| g.fill(0.0));
         let loss = self.model.train_step();
 
@@ -133,33 +226,56 @@ impl<M: TrainableModel> TrainSession<M> {
             sq += g.iter().map(|&x| x as f64 * x as f64).sum::<f64>();
         });
         let grad_norm = sq.sqrt() as f32;
-        if let Some(clip) = self.cfg.grad_clip {
-            if grad_norm.is_finite() && grad_norm > clip {
-                let s = clip / grad_norm;
-                self.model.visit_params(&mut |_, g| {
-                    for x in g.iter_mut() {
-                        *x *= s;
-                    }
-                });
+
+        let lr = self.cfg.schedule.at(self.step) * self.lr_scale;
+        let mut rolled_back = false;
+        if let Some(wd) = self.cfg.watchdog {
+            let bad = !loss.is_finite() || !grad_norm.is_finite() || grad_norm > wd.grad_limit;
+            if bad && self.rollbacks < wd.max_rollbacks {
+                self.restore_snapshot();
+                self.lr_scale *= wd.lr_backoff;
+                self.rollbacks += 1;
+                rolled_back = true;
             }
         }
 
-        let lr = self.cfg.schedule.at(self.step);
-        self.opt.begin_step();
-        let opt = &mut self.opt;
-        let mut idx = 0usize;
-        self.model.visit_params(&mut |w, g| {
-            opt.update(idx, w, g, lr);
-            idx += 1;
-        });
+        if !rolled_back {
+            if let Some(clip) = self.cfg.grad_clip {
+                if grad_norm.is_finite() && grad_norm > clip {
+                    let s = clip / grad_norm;
+                    self.model.visit_params(&mut |_, g| {
+                        for x in g.iter_mut() {
+                            *x *= s;
+                        }
+                    });
+                }
+            }
+            self.opt.begin_step();
+            let opt = &mut self.opt;
+            let mut idx = 0usize;
+            self.model.visit_params(&mut |w, g| {
+                opt.update(idx, w, g, lr);
+                idx += 1;
+            });
+        }
 
         self.step += 1;
+        if let Some(wd) = self.cfg.watchdog {
+            if !rolled_back
+                && loss.is_finite()
+                && grad_norm.is_finite()
+                && self.step % wd.snapshot_every.max(1) == 0
+            {
+                self.snapshot = Some(self.take_snapshot());
+            }
+        }
         let m = StepMetrics {
             step: self.step,
             loss,
             grad_norm,
             lr,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            rollback: rolled_back,
         };
         self.history.push(m);
         m
@@ -270,6 +386,92 @@ mod tests {
         for &w in &s.model.w {
             assert!((w + 0.01).abs() < 1e-7, "{w}");
         }
+    }
+
+    /// Scalar quadratic bowl: loss = (λ/2)·w², grad = λ·w. With
+    /// lr·λ > 2 plain gradient descent oscillates with growing
+    /// amplitude — the canonical recoverable divergence.
+    struct Bowl {
+        lambda: f32,
+        w: Vec<f32>,
+        g: Vec<f32>,
+    }
+
+    impl TrainableModel for Bowl {
+        fn train_step(&mut self) -> f32 {
+            self.g[0] += self.lambda * self.w[0];
+            0.5 * self.lambda * self.w[0] * self.w[0]
+        }
+
+        fn visit_params(&mut self, f: &mut dyn FnMut(&mut [f32], &mut [f32])) {
+            f(&mut self.w, &mut self.g);
+        }
+    }
+
+    #[test]
+    fn watchdog_rolls_back_divergence_and_backs_off_lr() {
+        // λ=3, lr=1 → each step multiplies w by (1 − lr·λ) = −2, so
+        // |w| doubles per step: 1, −2, 4, −8, … The grad at w=−8 is
+        // −24, past the limit of 20 → rollback to the step-2 snapshot
+        // (w=4) and halve the lr; at lr=0.5 the factor is −0.5 and the
+        // run converges: 4 → −2 → 1 → −0.5 → 0.25.
+        let bowl = Bowl { lambda: 3.0, w: vec![1.0], g: vec![0.0] };
+        let wd = WatchdogConfig {
+            snapshot_every: 2,
+            grad_limit: 20.0,
+            lr_backoff: 0.5,
+            max_rollbacks: 8,
+        };
+        let mut s = TrainSession::new(bowl, TrainConfig::sgd(1.0, 0.0).with_watchdog(wd));
+        s.run(8, 0, |_| {});
+
+        assert_eq!(s.rollbacks(), 1);
+        assert_eq!(s.lr_scale(), 0.5);
+        assert!((s.model.w[0] - 0.25).abs() < 1e-6, "w = {}", s.model.w[0]);
+        // The rolled-back step keeps the spike in the record.
+        let bad = &s.history[3];
+        assert!(bad.rollback);
+        assert!((bad.grad_norm - 24.0).abs() < 1e-5);
+        assert!((bad.loss - 96.0).abs() < 1e-4);
+        assert_eq!(s.history.iter().filter(|m| m.rollback).count(), 1);
+        // lr history: 1.0 up to the rollback, 0.5 after.
+        assert_eq!(s.history[2].lr, 1.0);
+        assert_eq!(s.history[4].lr, 0.5);
+        assert_eq!(s.history[7].lr, 0.5);
+    }
+
+    #[test]
+    fn watchdog_budget_exhaustion_reverts_to_record_only() {
+        // grad_limit 0 trips every step; with max_rollbacks 2 the first
+        // two steps roll back (w stays put) and later steps apply.
+        let bowl = Bowl { lambda: 1.0, w: vec![1.0], g: vec![0.0] };
+        let wd = WatchdogConfig {
+            snapshot_every: 1,
+            grad_limit: 0.0,
+            lr_backoff: 0.5,
+            max_rollbacks: 2,
+        };
+        let mut s = TrainSession::new(bowl, TrainConfig::sgd(0.1, 0.0).with_watchdog(wd));
+        s.run(2, 0, |_| {});
+        assert_eq!(s.rollbacks(), 2);
+        assert_eq!(s.model.w[0], 1.0, "rolled-back steps must not move params");
+        s.run(1, 0, |_| {});
+        assert_eq!(s.rollbacks(), 2, "budget exhausted: no further rollbacks");
+        // Step applied at lr 0.1·0.25: w = 1 − 0.025.
+        assert!((s.model.w[0] - 0.975).abs() < 1e-6, "w = {}", s.model.w[0]);
+        assert!(!s.history[2].rollback);
+    }
+
+    #[test]
+    fn unarmed_session_never_rolls_back() {
+        let bowl = Bowl { lambda: 3.0, w: vec![1.0], g: vec![0.0] };
+        let mut s = TrainSession::new(bowl, TrainConfig::sgd(1.0, 0.0));
+        s.run(6, 0, |_| {});
+        assert_eq!(s.rollbacks(), 0);
+        assert!(s.history.iter().all(|m| !m.rollback));
+        // |w| = 2⁶ — divergence stays observable data.
+        assert_eq!(s.model.w[0].abs(), 64.0);
+        assert!(s.diverged() || s.max_grad_norm() > 50.0);
     }
 
     #[test]

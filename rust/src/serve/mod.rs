@@ -18,15 +18,21 @@
 //!                       drain() ─▶ completions + ClusterStats
 //! ```
 //!
-//! Three layers, shared-nothing by construction:
+//! Four layers, shared-nothing by construction:
 //!
-//! * [`cluster::DecodeCluster`] — the router. Requests hash on id onto N
-//!   shard threads through **bounded** `sync_channel`s (a full shard
-//!   blocks its submitters: backpressure, not unbounded buffering).
-//!   [`cluster::DecodeCluster::drain`] finishes all in-flight work and
-//!   returns pooled completions plus per-shard
+//! * [`cluster::DecodeCluster`] — the router + admission controller.
+//!   Requests hash on id onto N shard threads through **bounded**
+//!   `sync_channel`s. [`cluster::DecodeCluster::drain`] finishes all
+//!   in-flight work and returns pooled completions plus per-shard
 //!   [`shard::ShardStats`] (tokens/s, queue peaks, p50/p99 per-token
-//!   latency, quantized-query-cache hit rates, KV memory peaks).
+//!   latency, quantized-query-cache hit rates, KV memory peaks) and the
+//!   recovery counters (restarts, replays, shed counts).
+//! * `supervisor::Supervisor` (crate-internal) — shard lifecycle.
+//!   Workers run under `catch_unwind` with a heartbeat; dead or stalled
+//!   shards are respawned from the cluster's model factory and their
+//!   journaled requests replayed. [`supervisor::FaultPlan`] is the
+//!   deterministic fault-injection seam used by the fault-tolerance
+//!   tests, `exp faults`, and the bench's faulted scenario.
 //! * [`shard::ShardWorker`] — one shard's continuous-batching loop. Owns
 //!   a private [`crate::kvcache::PagedKvCache`] addressed by
 //!   [`crate::kvcache::SeqSlot`] handles (zero map lookups per token) and
@@ -39,6 +45,46 @@
 //!   the PJRT runtime**; [`crate::model::QatModel`] implements the same
 //!   trait, and the compiled-artifact transformer fills the role for
 //!   [`DecodeServer`] below.
+//!
+//! ## Failure model
+//!
+//! Survivable faults, all recovered without losing a single accepted
+//! request (pinned by `rust/tests/fault_tolerance.rs`):
+//!
+//! * **shard panic** — caught by the worker's unwind guard; the
+//!   supervisor joins the dead thread, respawns the shard from the
+//!   model factory, and replays its journal;
+//! * **shard stall** — a busy worker whose heartbeat freezes past the
+//!   configured timeout is *abandoned* (threads can't be killed; the
+//!   orphan exits once it sees its channel disconnect, its late results
+//!   are discarded) and a fresh incarnation replays the journal;
+//! * **channel disconnect** — a dead receiver surfaces on the submit
+//!   path and heals the same way, transparently to the submitter.
+//!
+//! **Replay determinism contract.** Replay restarts a shard's requests
+//! from scratch, and the result is *bitwise identical* to a fault-free
+//! run because a sequence's floats depend only on (a) its own tokens,
+//! (b) its own cache pages, (c) the model weights, and (d) its
+//! per-request sampling stream seeded by request id — never on timing,
+//! lane, shard, or co-resident sequences. The model factory must
+//! rebuild identical weights (same seed) for this to hold; partial
+//! output is never surfaced (completions only leave a shard at drain),
+//! so recovery is exactly-once delivery per accepted request. Restarts
+//! are bounded per shard; a shard that exhausts its budget surfaces its
+//! error at drain, after every healthy shard is collected.
+//!
+//! **Shed vs backpressure.** A request without a deadline is never
+//! rejected by admission: a full shard queue *blocks* the submitter
+//! (backpressure). A request carrying [`Request::deadline_ms`] is
+//! instead **shed** when infeasible — up front, when the shard's
+//! per-pass-latency EWMA times its outstanding work exceeds the
+//! deadline, or after bounded full-queue retries with exponential
+//! backoff. Shed counts are reported in [`ClusterStats`] separately
+//! from everything else ([`cluster::Admission`] is the per-submit
+//! verdict); shed requests produce **no completion** — distinct from
+//! shard-level *rejections* (invalid requests: zero budget, oversized
+//! prompt, duplicate in-flight id), which do complete with
+//! `new_tokens == 0`.
 //!
 //! ## Train→serve
 //!
@@ -74,10 +120,12 @@
 pub mod cluster;
 pub mod model;
 pub mod shard;
+pub mod supervisor;
 
-pub use cluster::{ClusterConfig, ClusterStats, DecodeCluster};
+pub use cluster::{Admission, ClusterConfig, ClusterStats, DecodeCluster};
 pub use model::{SimLm, SimLmConfig, TokenModel};
 pub use shard::{ShardConfig, ShardStats, ShardWorker};
+pub use supervisor::{FaultKind, FaultPlan, FaultSpec, SupervisorConfig};
 
 use std::collections::VecDeque;
 
@@ -97,6 +145,20 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// 0.0 = greedy; otherwise softmax temperature sampling.
     pub temperature: f32,
+    /// Optional SLO: milliseconds from submission within which the whole
+    /// completion must land. The cluster sheds the request at admission
+    /// when its estimate says the deadline is infeasible (see the module
+    /// docs' shed-vs-backpressure contract); `None` never sheds. The
+    /// single-threaded [`DecodeServer`] demo ignores it.
+    pub deadline_ms: Option<f64>,
+}
+
+impl Request {
+    /// Tag this request with an SLO deadline (ms from submission).
+    pub fn with_deadline_ms(mut self, ms: f64) -> Request {
+        self.deadline_ms = Some(ms);
+        self
+    }
 }
 
 /// A finished generation.

@@ -39,6 +39,12 @@ pub const VOCAB: usize = 256;
 /// with heads concatenated along the feature axis (`d_model = heads ×
 /// head_dim`), matching the layouts `AttnEngine::decode` expects for a
 /// single row. Multi-row calls serve batched prompt prefill.
+///
+/// The trait is also the cluster's **fault-injection seam**:
+/// [`crate::serve::FaultPlan::wrap`] interposes a wrapper that counts
+/// forward passes in [`TokenModel::embed`] — called exactly once per
+/// pass (one batched call per prefill, one per decode step) — and fires
+/// seeded panics/stalls at exact pass numbers for the recovery tests.
 pub trait TokenModel: Send {
     /// Transformer layers (== KV-cache layers).
     fn layers(&self) -> usize;

@@ -78,6 +78,9 @@ pub struct ShardStats {
     pub queue_peak: usize,
     pub p50_token_ms: f64,
     pub p99_token_ms: f64,
+    /// EWMA (α from the supervisor's live estimator) over the per-token
+    /// latency series; `None` when no token was served — never NaN.
+    pub ewma_token_ms: Option<f64>,
     /// Quantized-query cache hits/misses summed over the shard's lane
     /// engines (per-shard caches: no cross-shard thrash by construction).
     pub qcache_hits: u64,
@@ -383,6 +386,11 @@ impl ShardWorker {
             misses += m;
         }
         let busy_s = self.busy_ns * 1e-9;
+        let alpha = crate::serve::supervisor::EWMA_ALPHA;
+        let ewma = self.token_ms.iter().fold(None, |acc, &ms| match acc {
+            None => Some(ms),
+            Some(prev) => Some((1.0 - alpha) * prev + alpha * ms),
+        });
         ShardStats {
             shard,
             requests: self.requests,
@@ -394,6 +402,7 @@ impl ShardWorker {
             queue_peak: self.queue_peak,
             p50_token_ms: pct(0.5),
             p99_token_ms: pct(0.99),
+            ewma_token_ms: ewma,
             qcache_hits: hits,
             qcache_misses: misses,
             kv_bytes_peak: self.kv_peak,
@@ -484,7 +493,13 @@ mod tests {
     }
 
     fn req(id: u64, prompt: &[u8], max_new: usize) -> Request {
-        Request { id, prompt: prompt.to_vec(), max_new_tokens: max_new, temperature: 0.0 }
+        Request {
+            id,
+            prompt: prompt.to_vec(),
+            max_new_tokens: max_new,
+            temperature: 0.0,
+            deadline_ms: None,
+        }
     }
 
     #[test]
@@ -518,6 +533,7 @@ mod tests {
                 prompt: format!("B q{i}#").into_bytes(),
                 max_new_tokens: 5,
                 temperature: if i % 2 == 0 { 0.0 } else { 0.8 },
+                deadline_ms: None,
             })
             .collect();
         let mut a = worker(ShardConfig::default());

@@ -1,0 +1,847 @@
+//! Shard supervision: catch_unwind workers, heartbeats, deterministic
+//! replay, and seeded fault injection.
+//!
+//! The cluster's failure model (see [`crate::serve`] module docs) is
+//! implemented here. Every shard worker thread runs its serving loop
+//! under [`std::panic::catch_unwind`] and publishes a heartbeat through
+//! a shared [`ShardTelemetry`]. The crate-internal `Supervisor` owns the worker
+//! handles and, whenever it is consulted (on submits and while
+//! draining), classifies each shard as:
+//!
+//! * **healthy** — heartbeat advancing, thread alive;
+//! * **dead** — the thread finished outside a drain (a panic caught by
+//!   the unwind guard, a worker `Err`, or a dropped channel);
+//! * **stalled** — the heartbeat has not advanced for
+//!   [`SupervisorConfig::stall_timeout_ms`] while the worker claims to
+//!   be busy.
+//!
+//! Dead and stalled shards are **respawned** from the cluster's model
+//! factory and their journaled requests are **replayed** from scratch.
+//! Replay is exact because serving is placement-invariant: a sequence's
+//! floats depend only on its own tokens, its own cache pages, the
+//! (seed-determined) model weights, and its per-request sampling stream
+//! — none of which the crash touched. A recovered run is therefore
+//! bitwise identical to a fault-free run (pinned by
+//! `rust/tests/fault_tolerance.rs`). A stalled thread cannot be killed,
+//! so it is *abandoned*: its channel is dropped (it exits on its own
+//! once it observes the disconnect) and its eventual results are
+//! discarded — the replacement recomputes them. Respawns are bounded by
+//! [`SupervisorConfig::max_restarts`] per shard; past the budget the
+//! shard is declared dead and its original error surfaces at drain.
+//!
+//! [`FaultPlan`] is the deterministic fault-injection seam: it wraps a
+//! shard's [`TokenModel`] and counts forward passes (`embed` is called
+//! exactly once per pass), firing configured panics or stalls at exact
+//! pass numbers. Fault state is shared across incarnations, so a
+//! one-shot fault does not re-fire after the respawn replays the journal
+//! — while [`FaultKind::PanicEvery`] deliberately re-fires to exercise
+//! the bounded-restart give-up path.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Once};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::model::TokenModel;
+use super::shard::{ShardConfig, ShardStats, ShardWorker};
+use super::{Completion, Request};
+
+/// Supervision knobs (carried by `ClusterConfig`).
+#[derive(Clone, Copy, Debug)]
+pub struct SupervisorConfig {
+    /// A busy shard whose heartbeat is frozen longer than this is
+    /// declared stalled, abandoned, and respawned.
+    pub stall_timeout_ms: f64,
+    /// Respawn budget per shard; exceeding it marks the shard dead and
+    /// surfaces its error at drain.
+    pub max_restarts: usize,
+    /// Bounded retry count for deadline-carrying submits against a full
+    /// shard queue (deadline-less submits keep blocking — backpressure).
+    pub submit_retries: usize,
+    /// Initial submit retry backoff (doubles per attempt, capped).
+    pub retry_backoff_us: u64,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> SupervisorConfig {
+        SupervisorConfig {
+            stall_timeout_ms: 2_000.0,
+            max_restarts: 4,
+            submit_retries: 16,
+            retry_backoff_us: 50,
+        }
+    }
+}
+
+/// What a [`FaultPlan`] injects, per fault.
+#[derive(Clone, Copy, Debug)]
+pub enum FaultKind {
+    /// Panic once, on the first forward pass `>= at_pass` of the shard.
+    /// Fires once *across incarnations* — replay does not re-trip it.
+    Panic { at_pass: u64 },
+    /// Sleep `ms` inside one forward pass (a stall the heartbeat
+    /// exposes). Also one-shot across incarnations.
+    Stall { at_pass: u64, ms: u64 },
+    /// Panic on every `period`-th pass, counted across incarnations —
+    /// each respawn dies again, exhausting the restart budget.
+    PanicEvery { period: u64 },
+}
+
+/// One injected fault: which shard, and what happens.
+#[derive(Clone, Copy, Debug)]
+pub struct FaultSpec {
+    pub shard: usize,
+    pub kind: FaultKind,
+}
+
+struct FaultState {
+    faults: Vec<FaultSpec>,
+    /// One-shot latches (Panic/Stall), shared across incarnations.
+    fired: Vec<AtomicBool>,
+    /// Passes counted across incarnations (drives `PanicEvery`).
+    global_passes: AtomicU64,
+    /// Total faults actually triggered.
+    trips: AtomicU64,
+}
+
+/// A seeded, deterministic set of injected faults, shared by every
+/// incarnation of the shards it targets. Cloning shares state, so the
+/// submitter can observe [`FaultPlan::trips`] after the run.
+#[derive(Clone)]
+pub struct FaultPlan {
+    state: Arc<FaultState>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan::none()
+    }
+}
+
+impl FaultPlan {
+    /// A plan with no faults — `wrap` is then a free pass-through.
+    pub fn none() -> FaultPlan {
+        FaultPlan::from_specs(Vec::new())
+    }
+
+    fn from_specs(faults: Vec<FaultSpec>) -> FaultPlan {
+        let fired = faults.iter().map(|_| AtomicBool::new(false)).collect();
+        FaultPlan {
+            state: Arc::new(FaultState {
+                faults,
+                fired,
+                global_passes: AtomicU64::new(0),
+                trips: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Panic `shard` once at its `pass`-th forward pass (1-based).
+    pub fn panic_at(shard: usize, pass: u64) -> FaultPlan {
+        FaultPlan::from_specs(vec![FaultSpec { shard, kind: FaultKind::Panic { at_pass: pass } }])
+    }
+
+    /// Stall `shard` for `ms` milliseconds at its `pass`-th forward pass.
+    pub fn stall_at(shard: usize, pass: u64, ms: u64) -> FaultPlan {
+        FaultPlan::from_specs(vec![FaultSpec {
+            shard,
+            kind: FaultKind::Stall { at_pass: pass, ms },
+        }])
+    }
+
+    /// Panic `shard` on every `period`-th pass, forever.
+    pub fn panic_every(shard: usize, period: u64) -> FaultPlan {
+        FaultPlan::from_specs(vec![FaultSpec {
+            shard,
+            kind: FaultKind::PanicEvery { period: period.max(1) },
+        }])
+    }
+
+    /// Parse a CLI spec: comma-separated `panic:SHARD:PASS`,
+    /// `stall:SHARD:PASS:MS`, or `every:SHARD:PERIOD` clauses.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut faults = Vec::new();
+        for clause in spec.split(',').filter(|c| !c.trim().is_empty()) {
+            let parts: Vec<&str> = clause.trim().split(':').collect();
+            let num = |i: usize| -> Result<u64> {
+                parts
+                    .get(i)
+                    .and_then(|p| p.parse::<u64>().ok())
+                    .ok_or_else(|| anyhow!("bad fault clause {clause:?}"))
+            };
+            let kind = match parts[0] {
+                "panic" if parts.len() == 3 => FaultKind::Panic { at_pass: num(2)? },
+                "stall" if parts.len() == 4 => {
+                    FaultKind::Stall { at_pass: num(2)?, ms: num(3)? }
+                }
+                "every" if parts.len() == 3 => FaultKind::PanicEvery { period: num(2)?.max(1) },
+                _ => bail!(
+                    "bad fault clause {clause:?} (want panic:S:P, stall:S:P:MS, or every:S:K)"
+                ),
+            };
+            faults.push(FaultSpec { shard: num(1)? as usize, kind });
+        }
+        Ok(FaultPlan::from_specs(faults))
+    }
+
+    /// No faults configured at all.
+    pub fn is_empty(&self) -> bool {
+        self.state.faults.is_empty()
+    }
+
+    /// Faults actually triggered so far (across all shards/incarnations).
+    pub fn trips(&self) -> u64 {
+        self.state.trips.load(Ordering::SeqCst)
+    }
+
+    /// Wrap shard `shard`'s model with this plan's fault injection. A
+    /// plan with no fault aimed at `shard` returns the model unwrapped.
+    pub fn wrap(&self, shard: usize, inner: Box<dyn TokenModel>) -> Box<dyn TokenModel> {
+        if self.state.faults.iter().all(|f| f.shard != shard) {
+            return inner;
+        }
+        Box::new(FaultyModel { inner, shard, passes: AtomicU64::new(0), state: self.state.clone() })
+    }
+}
+
+/// [`TokenModel`] wrapper that counts forward passes in `embed` (called
+/// exactly once per pass: one batched call per prefill, one per decode
+/// step) and fires the plan's faults for its shard.
+struct FaultyModel {
+    inner: Box<dyn TokenModel>,
+    shard: usize,
+    /// Passes of *this incarnation* (one-shot faults key on it so "pass
+    /// N" means the same pass before and after a replay).
+    passes: AtomicU64,
+    state: Arc<FaultState>,
+}
+
+impl FaultyModel {
+    fn tick(&self) {
+        let pass = self.passes.fetch_add(1, Ordering::SeqCst) + 1;
+        let global = self.state.global_passes.fetch_add(1, Ordering::SeqCst) + 1;
+        for (spec, fired) in self.state.faults.iter().zip(&self.state.fired) {
+            if spec.shard != self.shard {
+                continue;
+            }
+            match spec.kind {
+                FaultKind::Panic { at_pass } => {
+                    if pass >= at_pass && !fired.swap(true, Ordering::SeqCst) {
+                        self.state.trips.fetch_add(1, Ordering::SeqCst);
+                        panic!("injected fault: shard {} panic at pass {pass}", self.shard);
+                    }
+                }
+                FaultKind::Stall { at_pass, ms } => {
+                    if pass >= at_pass && !fired.swap(true, Ordering::SeqCst) {
+                        self.state.trips.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                }
+                FaultKind::PanicEvery { period } => {
+                    if global % period == 0 {
+                        self.state.trips.fetch_add(1, Ordering::SeqCst);
+                        panic!(
+                            "injected fault: shard {} periodic panic (period {period})",
+                            self.shard
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl TokenModel for FaultyModel {
+    fn layers(&self) -> usize {
+        self.inner.layers()
+    }
+
+    fn heads(&self) -> usize {
+        self.inner.heads()
+    }
+
+    fn head_dim(&self) -> usize {
+        self.inner.head_dim()
+    }
+
+    fn d_model(&self) -> usize {
+        self.inner.d_model()
+    }
+
+    fn embed(&self, tokens: &[u8], pos0: usize, h: &mut [f32]) {
+        self.tick();
+        self.inner.embed(tokens, pos0, h)
+    }
+
+    fn qkv(&self, layer: usize, h: &[f32], q: &mut [f32], k: &mut [f32], v: &mut [f32]) {
+        self.inner.qkv(layer, h, q, k, v)
+    }
+
+    fn mix(&self, layer: usize, h: &mut [f32], attn: &[f32]) {
+        self.inner.mix(layer, h, attn)
+    }
+
+    fn logits(&self, h: &[f32], logits: &mut [f32]) {
+        self.inner.logits(h, logits)
+    }
+}
+
+/// Live per-incarnation health/progress counters a worker publishes and
+/// the supervisor (and admission estimator) read lock-free.
+#[derive(Debug, Default)]
+pub struct ShardTelemetry {
+    /// Incremented once per worker loop iteration — the heartbeat.
+    beats: AtomicU64,
+    /// True while the worker is between intake and step (i.e. a frozen
+    /// heartbeat means a wedged step, not an idle blocking recv).
+    busy: AtomicBool,
+    /// Forward passes completed by this incarnation.
+    passes: AtomicU64,
+    /// EWMA of per-pass wall ms, stored as f64 bits (0 = no sample yet).
+    ewma_bits: AtomicU64,
+}
+
+/// EWMA smoothing factor for the per-pass latency estimate (shared with
+/// the post-drain `ShardStats::ewma_token_ms` so the two agree).
+pub(crate) const EWMA_ALPHA: f64 = 0.2;
+
+impl ShardTelemetry {
+    fn beat(&self) {
+        self.beats.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn beats(&self) -> u64 {
+        self.beats.load(Ordering::SeqCst)
+    }
+
+    fn set_busy(&self, busy: bool) {
+        self.busy.store(busy, Ordering::SeqCst);
+    }
+
+    fn busy(&self) -> bool {
+        self.busy.load(Ordering::SeqCst)
+    }
+
+    /// Forward passes completed by the current incarnation.
+    pub fn passes(&self) -> u64 {
+        self.passes.load(Ordering::SeqCst)
+    }
+
+    /// Smoothed per-pass latency, `None` until a first step completes.
+    pub fn ewma_token_ms(&self) -> Option<f64> {
+        match self.ewma_bits.load(Ordering::SeqCst) {
+            0 => None,
+            bits => Some(f64::from_bits(bits)),
+        }
+    }
+
+    fn record_step(&self, passes: usize, ms_per_pass: f64) {
+        self.passes.fetch_add(passes as u64, Ordering::SeqCst);
+        let next = match self.ewma_token_ms() {
+            None => ms_per_pass,
+            Some(prev) => (1.0 - EWMA_ALPHA) * prev + EWMA_ALPHA * ms_per_pass,
+        };
+        self.ewma_bits.store(next.to_bits(), Ordering::SeqCst);
+    }
+}
+
+/// Messages on a shard's bounded submission channel.
+pub(crate) enum ShardMsg {
+    Req(Request),
+    Drain,
+}
+
+/// Outcome of a non-blocking journaled send.
+pub(crate) enum SendOutcome {
+    Sent,
+    /// Queue full right now; the request comes back to the caller.
+    Full(Request),
+    /// Channel disconnected (the worker died); the caller should run a
+    /// health check — the next send reaches the respawned worker.
+    Gone(Request),
+}
+
+type ShardResult = Result<(Vec<Completion>, ShardStats)>;
+
+struct Slot {
+    tx: SyncSender<ShardMsg>,
+    join: Option<JoinHandle<ShardResult>>,
+    telemetry: Arc<ShardTelemetry>,
+    /// Heartbeat watermark + when it last advanced.
+    last_beat: u64,
+    last_beat_at: Instant,
+    restarts: usize,
+    /// Every request routed here since spawn. Completions only surface
+    /// at drain, so the whole journal is potentially in flight — replay
+    /// resends all of it into a fresh worker (dedup is unnecessary: the
+    /// fresh worker has served none of them).
+    journal: Vec<Request>,
+    draining: bool,
+    /// Set once the restart budget is exhausted; the message surfaces at
+    /// drain.
+    dead: Option<String>,
+}
+
+/// Everything drain recovers from the supervised shards.
+pub(crate) struct SupervisorReport {
+    pub completions: Vec<Completion>,
+    pub shards: Vec<ShardStats>,
+    pub restarts: usize,
+    pub replayed: usize,
+    pub recomputed_passes: usize,
+}
+
+/// Owns the shard worker threads: spawn, health checks, respawn+replay,
+/// and the supervised drain. The cluster's router delegates all shard
+/// lifecycle to this.
+pub(crate) struct Supervisor {
+    cfg: SupervisorConfig,
+    shard_cfg: ShardConfig,
+    queue_depth: usize,
+    factory: Box<dyn Fn(usize) -> Box<dyn TokenModel>>,
+    shards: Vec<Slot>,
+    restarts: usize,
+    replayed: usize,
+    recomputed_passes: usize,
+}
+
+impl Supervisor {
+    pub(crate) fn new(
+        n_shards: usize,
+        queue_depth: usize,
+        shard_cfg: ShardConfig,
+        cfg: SupervisorConfig,
+        factory: Box<dyn Fn(usize) -> Box<dyn TokenModel>>,
+    ) -> Supervisor {
+        let shards = (0..n_shards)
+            .map(|id| {
+                let (tx, join, telemetry) = spawn_shard(id, factory(id), shard_cfg, queue_depth);
+                Slot {
+                    tx,
+                    join: Some(join),
+                    telemetry,
+                    last_beat: 0,
+                    last_beat_at: Instant::now(),
+                    restarts: 0,
+                    journal: Vec::new(),
+                    draining: false,
+                    dead: None,
+                }
+            })
+            .collect();
+        Supervisor {
+            cfg,
+            shard_cfg,
+            queue_depth,
+            factory,
+            shards,
+            restarts: 0,
+            replayed: 0,
+            recomputed_passes: 0,
+        }
+    }
+
+    pub(crate) fn config(&self) -> SupervisorConfig {
+        self.cfg
+    }
+
+    /// Live smoothed per-pass latency of `shard`'s current incarnation.
+    pub(crate) fn ewma_token_ms(&self, shard: usize) -> Option<f64> {
+        self.shards[shard].telemetry.ewma_token_ms()
+    }
+
+    /// Journaled passes not yet executed by the current incarnation
+    /// (prompt rows + token budgets, an upper bound on remaining work).
+    pub(crate) fn backlog_passes(&self, shard: usize) -> usize {
+        let queued: usize = self.shards[shard]
+            .journal
+            .iter()
+            .map(|r| r.prompt.len().max(1) + r.max_new_tokens)
+            .sum();
+        queued.saturating_sub(self.shards[shard].telemetry.passes() as usize)
+    }
+
+    /// Journaled, non-blocking send to `shard`.
+    pub(crate) fn try_send(&mut self, shard: usize, req: Request) -> SendOutcome {
+        self.shards[shard].journal.push(req.clone());
+        match self.shards[shard].tx.try_send(ShardMsg::Req(req)) {
+            Ok(()) => SendOutcome::Sent,
+            Err(TrySendError::Full(ShardMsg::Req(r))) => {
+                self.shards[shard].journal.pop();
+                SendOutcome::Full(r)
+            }
+            Err(TrySendError::Disconnected(ShardMsg::Req(r))) => {
+                self.shards[shard].journal.pop();
+                SendOutcome::Gone(r)
+            }
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                unreachable!("only requests are try-sent")
+            }
+        }
+    }
+
+    /// Health-check one shard: join-and-respawn a dead worker, abandon-
+    /// and-respawn a stalled one. `Err` only once the shard has exhausted
+    /// its restart budget. Called on the submit path (pre-drain only —
+    /// any finished thread here is abnormal).
+    pub(crate) fn check(&mut self, shard: usize) -> Result<()> {
+        if let Some(msg) = &self.shards[shard].dead {
+            bail!("shard {shard} is dead: {msg}");
+        }
+        if self.shards[shard].join.as_ref().is_some_and(|j| j.is_finished()) {
+            let why = match self.shards[shard].join.take().expect("handle present").join() {
+                Ok(Err(e)) => e.to_string(),
+                Ok(Ok(_)) => "worker exited before drain".to_string(),
+                Err(p) => format!("worker panicked outside catch_unwind: {}", panic_msg(&p)),
+            };
+            return self.respawn_and_replay(shard, why);
+        }
+        if heartbeat_stalled(&mut self.shards[shard], self.cfg.stall_timeout_ms) {
+            let why =
+                format!("stalled (no heartbeat within {:.0} ms)", self.cfg.stall_timeout_ms);
+            return self.respawn_and_replay(shard, why);
+        }
+        Ok(())
+    }
+
+    /// Replace `shard`'s worker with a fresh incarnation and replay its
+    /// journal into it. Loops while replay itself keeps dying, up to the
+    /// restart budget.
+    fn respawn_and_replay(&mut self, shard: usize, mut why: String) -> Result<()> {
+        loop {
+            if self.shards[shard].restarts >= self.cfg.max_restarts {
+                let msg = format!(
+                    "gave up after {} restarts; last failure: {why}",
+                    self.shards[shard].restarts
+                );
+                self.shards[shard].dead = Some(msg.clone());
+                return Err(anyhow!("shard {shard} {msg}"));
+            }
+            self.shards[shard].restarts += 1;
+            self.restarts += 1;
+            // The dead incarnation's finished passes are lost with it and
+            // recomputed by replay.
+            self.recomputed_passes += self.shards[shard].telemetry.passes() as usize;
+            eprintln!(
+                "[supervisor] shard {shard}: {why}; respawn {}/{} replaying {} request(s)",
+                self.shards[shard].restarts,
+                self.cfg.max_restarts,
+                self.shards[shard].journal.len()
+            );
+            let model = (self.factory)(shard);
+            let (tx, join, telemetry) =
+                spawn_shard(shard, model, self.shard_cfg, self.queue_depth);
+            // Replacing tx abandons the old incarnation: if it was merely
+            // stalled (unkillable), it exits on its own once it observes
+            // the disconnected channel, and its late results are dropped
+            // — replay recomputes them deterministically.
+            let slot = &mut self.shards[shard];
+            slot.tx = tx;
+            slot.join = Some(join);
+            slot.telemetry = telemetry;
+            slot.last_beat = 0;
+            slot.last_beat_at = Instant::now();
+            let journal = slot.journal.clone();
+            self.replayed += journal.len();
+            match self.replay(shard, journal) {
+                None => return Ok(()),
+                Some(failure) => why = failure,
+            }
+        }
+    }
+
+    /// Feed `journal` (and the drain marker, if draining) into the fresh
+    /// worker. Returns `Some(reason)` if the worker died or stalled
+    /// mid-replay.
+    fn replay(&mut self, shard: usize, journal: Vec<Request>) -> Option<String> {
+        for req in journal {
+            let mut pending = req;
+            loop {
+                match self.shards[shard].tx.try_send(ShardMsg::Req(pending)) {
+                    Ok(()) => break,
+                    Err(TrySendError::Full(ShardMsg::Req(r))) => {
+                        pending = r;
+                        if heartbeat_stalled(&mut self.shards[shard], self.cfg.stall_timeout_ms)
+                        {
+                            return Some("stalled during journal replay".to_string());
+                        }
+                        std::thread::sleep(Duration::from_micros(100));
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        return Some("died during journal replay".to_string());
+                    }
+                    Err(TrySendError::Full(_)) => unreachable!("only requests are try-sent"),
+                }
+            }
+        }
+        if self.shards[shard].draining
+            && self.shards[shard].tx.send(ShardMsg::Drain).is_err()
+        {
+            return Some("died before accepting the drain marker".to_string());
+        }
+        None
+    }
+
+    /// Supervised drain: deliver drain markers, then poll every shard to
+    /// completion — collecting clean results, respawning + replaying dead
+    /// or stalled shards (which then re-drain), and recording permanent
+    /// failures. All shards are driven to a terminal state before the
+    /// first error (if any) is returned.
+    pub(crate) fn drain(mut self) -> Result<SupervisorReport> {
+        let n = self.shards.len();
+        for i in 0..n {
+            self.shards[i].draining = true;
+            if self.shards[i].dead.is_none() {
+                // A dead worker's send fails; the poll below handles it.
+                let _ = self.shards[i].tx.send(ShardMsg::Drain);
+            }
+        }
+        let mut completions = Vec::new();
+        let mut stats = Vec::new();
+        let mut first_err: Option<anyhow::Error> = None;
+        let mut open: Vec<usize> = (0..n).collect();
+        while !open.is_empty() {
+            let mut next_open = Vec::with_capacity(open.len());
+            for i in open {
+                if let Some(msg) = self.shards[i].dead.clone() {
+                    first_err = first_err.or_else(|| Some(anyhow!("shard {i} {msg}")));
+                    continue;
+                }
+                if self.shards[i].join.as_ref().is_some_and(|j| j.is_finished()) {
+                    match self.shards[i].join.take().expect("handle present").join() {
+                        Ok(Ok((mut done, s))) => {
+                            completions.append(&mut done);
+                            stats.push(s);
+                        }
+                        Ok(Err(e)) => match self.respawn_and_replay(i, e.to_string()) {
+                            Ok(()) => next_open.push(i),
+                            Err(fatal) => first_err = first_err.or(Some(fatal)),
+                        },
+                        Err(p) => {
+                            let why = format!(
+                                "worker panicked outside catch_unwind: {}",
+                                panic_msg(&p)
+                            );
+                            match self.respawn_and_replay(i, why) {
+                                Ok(()) => next_open.push(i),
+                                Err(fatal) => first_err = first_err.or(Some(fatal)),
+                            }
+                        }
+                    }
+                    continue;
+                }
+                if heartbeat_stalled(&mut self.shards[i], self.cfg.stall_timeout_ms) {
+                    match self.respawn_and_replay(i, "stalled during drain".to_string()) {
+                        Ok(()) => next_open.push(i),
+                        Err(fatal) => first_err = first_err.or(Some(fatal)),
+                    }
+                    continue;
+                }
+                next_open.push(i);
+            }
+            open = next_open;
+            if !open.is_empty() {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok(SupervisorReport {
+            completions,
+            shards: stats,
+            restarts: self.restarts,
+            replayed: self.replayed,
+            recomputed_passes: self.recomputed_passes,
+        })
+    }
+}
+
+/// Advance the heartbeat watermark; true when the shard claims busy but
+/// its heartbeat has been frozen past `timeout_ms`.
+fn heartbeat_stalled(slot: &mut Slot, timeout_ms: f64) -> bool {
+    let beats = slot.telemetry.beats();
+    if beats != slot.last_beat {
+        slot.last_beat = beats;
+        slot.last_beat_at = Instant::now();
+        return false;
+    }
+    slot.telemetry.busy() && slot.last_beat_at.elapsed().as_secs_f64() * 1e3 > timeout_ms
+}
+
+thread_local! {
+    /// True on threads whose panics the supervisor will catch + report.
+    static SUPERVISED: Cell<bool> = const { Cell::new(false) };
+}
+
+static HOOK: Once = Once::new();
+
+/// Silence the default panic printout on supervised worker threads: the
+/// panic is caught by the unwind guard and reported by the supervisor
+/// (one line with shard + restart context) instead of splatting the raw
+/// panic over the console. All other threads keep the previous hook.
+fn install_supervised_hook() {
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if !SUPERVISED.with(|s| s.get()) {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Spawn one shard worker thread running [`shard_loop`] under an unwind
+/// guard, with a fresh channel + telemetry.
+fn spawn_shard(
+    shard_id: usize,
+    model: Box<dyn TokenModel>,
+    cfg: ShardConfig,
+    queue_depth: usize,
+) -> (SyncSender<ShardMsg>, JoinHandle<ShardResult>, Arc<ShardTelemetry>) {
+    install_supervised_hook();
+    let (tx, rx) = sync_channel::<ShardMsg>(queue_depth);
+    let telemetry = Arc::new(ShardTelemetry::default());
+    let tele = telemetry.clone();
+    let join = std::thread::spawn(move || {
+        SUPERVISED.with(|s| s.set(true));
+        match catch_unwind(AssertUnwindSafe(|| shard_loop(shard_id, model, cfg, rx, tele))) {
+            Ok(res) => res,
+            Err(p) => Err(anyhow!("shard {shard_id} panicked: {}", panic_msg(&p))),
+        }
+    });
+    (tx, join, telemetry)
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// One shard thread: interleave queue intake with serving steps,
+/// publishing a heartbeat each iteration. Blocks on the channel only
+/// when fully idle (marked not-busy, so a frozen heartbeat there is not
+/// a stall); while busy it polls between steps so mid-flight submissions
+/// join the continuous batch. It pulls a request off the channel only
+/// while a lane can absorb it ([`ShardWorker::wants_work`]) — the
+/// bounded channel itself is the shard's queue, so `queue_depth` is a
+/// real backpressure bound rather than a per-step trickle into an
+/// unbounded local buffer. The drain marker trails every request in
+/// channel order, so stopping intake at full lanes never strands it.
+fn shard_loop(
+    shard_id: usize,
+    model: Box<dyn TokenModel>,
+    cfg: ShardConfig,
+    rx: Receiver<ShardMsg>,
+    telemetry: Arc<ShardTelemetry>,
+) -> ShardResult {
+    let mut w = ShardWorker::new(model, cfg);
+    let mut draining = false;
+    loop {
+        telemetry.beat();
+        if w.is_idle() && !draining {
+            telemetry.set_busy(false);
+            match rx.recv() {
+                Ok(ShardMsg::Req(req)) => w.submit(req),
+                Ok(ShardMsg::Drain) | Err(_) => draining = true,
+            }
+            telemetry.set_busy(true);
+        }
+        while !draining && w.wants_work() {
+            match rx.try_recv() {
+                Ok(ShardMsg::Req(req)) => w.submit(req),
+                Ok(ShardMsg::Drain) => draining = true,
+                Err(_) => break, // empty or disconnected
+            }
+        }
+        if w.is_idle() {
+            if draining {
+                break;
+            }
+            continue;
+        }
+        let t0 = Instant::now();
+        let processed = w.step()?;
+        if processed > 0 {
+            let ms = t0.elapsed().as_secs_f64() * 1e3 / processed as f64;
+            telemetry.record_step(processed, ms);
+        }
+    }
+    telemetry.set_busy(false);
+    let done = w.take_done();
+    let stats = w.stats(shard_id);
+    Ok((done, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::model::{SimLm, SimLmConfig};
+
+    #[test]
+    fn fault_plan_parses_and_fires_once() {
+        let plan = FaultPlan::parse("stall:1:3:25,every:2:4").unwrap();
+        assert!(!plan.is_empty());
+        assert!(FaultPlan::parse("panic:0").is_err());
+        assert!(FaultPlan::parse("panic:0:notanum").is_err());
+        assert!(FaultPlan::none().is_empty());
+
+        // A one-shot stall fires exactly once even when re-armed passes
+        // keep flowing (and never on the wrong shard).
+        let plan = FaultPlan::stall_at(0, 2, 1);
+        let wrong = plan.wrap(1, Box::new(SimLm::new(SimLmConfig::default())));
+        let m = plan.wrap(0, Box::new(SimLm::new(SimLmConfig::default())));
+        let d = m.d_model();
+        let mut h = vec![0.0f32; d];
+        for _ in 0..4 {
+            m.embed(b"x", 0, &mut h);
+            wrong.embed(b"x", 0, &mut h);
+        }
+        assert_eq!(plan.trips(), 1, "stall is one-shot across all passes");
+    }
+
+    #[test]
+    fn fault_plan_periodic_counts_across_incarnations() {
+        let plan = FaultPlan::panic_every(0, 3);
+        let m = plan.wrap(0, Box::new(SimLm::new(SimLmConfig::default())));
+        let d = m.d_model();
+        let mut h = vec![0.0f32; d];
+        m.embed(b"x", 0, &mut h);
+        m.embed(b"x", 0, &mut h);
+        // Third pass fires — from a *fresh incarnation*, proving the
+        // period is counted on shared cross-incarnation state. Mark this
+        // thread supervised so the expected panic prints nothing.
+        install_supervised_hook();
+        SUPERVISED.with(|s| s.set(true));
+        let m2 = plan.wrap(0, Box::new(SimLm::new(SimLmConfig::default())));
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let mut h2 = vec![0.0f32; d];
+            m2.embed(b"x", 0, &mut h2);
+        }));
+        SUPERVISED.with(|s| s.set(false));
+        assert!(err.is_err(), "every-3rd pass must panic");
+        assert_eq!(plan.trips(), 1);
+    }
+
+    #[test]
+    fn telemetry_ewma_smooths_and_defaults_to_none() {
+        let t = ShardTelemetry::default();
+        assert_eq!(t.ewma_token_ms(), None);
+        t.record_step(1, 10.0);
+        assert_eq!(t.ewma_token_ms(), Some(10.0));
+        t.record_step(1, 20.0);
+        let e = t.ewma_token_ms().unwrap();
+        assert!((e - 12.0).abs() < 1e-12, "0.8*10 + 0.2*20 = {e}");
+        assert_eq!(t.passes(), 2);
+    }
+}

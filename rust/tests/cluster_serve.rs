@@ -37,6 +37,7 @@ fn fixed_trace() -> Vec<Request> {
             prompt: format!("A q{i} x={i};#").into_bytes(),
             max_new_tokens: 4 + (i as usize % 5),
             temperature: if i % 4 == 3 { 0.7 } else { 0.0 },
+            deadline_ms: None,
         })
         .collect()
 }
@@ -56,7 +57,8 @@ fn run_cluster(
     attn: AttnConfig,
     trace: &[Request],
 ) -> (Vec<Completion>, attn_qat::serve::ClusterStats) {
-    let cfg = ClusterConfig { shards, queue_depth: 4, shard: shard_cfg(attn) };
+    let cfg =
+        ClusterConfig { shards, queue_depth: 4, shard: shard_cfg(attn), ..Default::default() };
     let mut cluster = DecodeCluster::spawn(cfg, |_| Box::new(SimLm::new(lm_cfg())));
     for r in trace {
         cluster.submit(r.clone()).expect("submit");
@@ -121,6 +123,7 @@ fn fp4_and_f32_clusters_diverge_on_long_contexts() {
                 .collect(),
             max_new_tokens: 12,
             temperature: 0.0,
+            deadline_ms: None,
         })
         .collect();
     let fp4 = run_single(AttnConfig::fp4(), &trace);
@@ -154,6 +157,7 @@ fn qcache_stats_aggregate_per_shard_without_cross_thrash() {
             prompt: format!("p{i}#").into_bytes(), // 3 bytes < 4 cache ways
             max_new_tokens: 3 + (i as usize % 3),
             temperature: 0.0,
+            deadline_ms: None,
         })
         .collect();
     let run = |shards: usize| {
@@ -166,8 +170,9 @@ fn qcache_stats_aggregate_per_shard_without_cross_thrash() {
                 seq_max: 128,
                 sample_seed: SAMPLE_SEED,
             },
+            ..Default::default()
         };
-        let mut cluster = DecodeCluster::spawn(cfg, |_| Box::new(SimLm::new(lm)));
+        let mut cluster = DecodeCluster::spawn(cfg, move |_| Box::new(SimLm::new(lm)));
         for r in &trace {
             cluster.submit(r.clone()).expect("submit");
         }
@@ -196,9 +201,15 @@ fn bounded_queues_backpressure_without_losing_requests() {
             prompt: b"B hold#".to_vec(),
             max_new_tokens: 3,
             temperature: 0.0,
+            deadline_ms: None,
         })
         .collect();
-    let cfg = ClusterConfig { shards: 2, queue_depth: 1, shard: shard_cfg(AttnConfig::fp4()) };
+    let cfg = ClusterConfig {
+        shards: 2,
+        queue_depth: 1,
+        shard: shard_cfg(AttnConfig::fp4()),
+        ..Default::default()
+    };
     let mut cluster = DecodeCluster::spawn(cfg, |_| Box::new(SimLm::new(lm_cfg())));
     for r in &trace {
         cluster.submit(r.clone()).expect("submit blocks but succeeds");

@@ -1,0 +1,205 @@
+//! Fault-tolerance integration tests: the supervised cluster's three
+//! contracts under injected faults, end to end.
+//!
+//! 1. **Zero lost requests** — every submitted request either completes
+//!    or is shed *at admission* with an explicit verdict; faults mid-
+//!    decode never silently drop work.
+//! 2. **Deterministic replay** — a respawned shard recomputes its
+//!    journal from scratch, and placement invariance makes the rerun
+//!    bitwise identical to a fault-free run of the same trace.
+//! 3. **Bounded supervision** — stalls are detected by heartbeat age
+//!    (not by waiting the stall out), and a shard that keeps dying
+//!    exhausts its restart budget and surfaces an error instead of
+//!    looping forever.
+//!
+//! Plus the training-side analogue: the divergence watchdog recovers the
+//! paper's Fig-3 drop-in instability while leaving Attn-QAT untouched.
+
+use std::time::{Duration, Instant};
+
+use attn_qat::attention::AttnConfig;
+use attn_qat::experiments::cluster::{demo_trace, serve_trace_faulty};
+use attn_qat::model::{AttnRegressor, WatchdogConfig};
+use attn_qat::qat::{QatVariant, TrainerConfig};
+use attn_qat::serve::{
+    Admission, ClusterConfig, ClusterStats, Completion, DecodeCluster, FaultPlan, Request,
+    ShardConfig, SimLm, SimLmConfig, SupervisorConfig,
+};
+
+const SEED: u64 = 0xfa17;
+
+fn run(
+    plan: FaultPlan,
+    sup: SupervisorConfig,
+    trace: &[Request],
+) -> (ClusterStats, Vec<Completion>) {
+    let (_, stats, done) =
+        serve_trace_faulty(4, AttnConfig::fp4(), 3, SEED, trace, plan, sup).expect("serve");
+    (stats, done)
+}
+
+fn assert_bitwise(label: &str, clean: &[Completion], faulty: &[Completion]) {
+    assert_eq!(clean.len(), faulty.len(), "{label}: completion counts");
+    for (a, b) in clean.iter().zip(faulty) {
+        assert_eq!(a.id, b.id, "{label}: ids");
+        assert_eq!(a.text, b.text, "{label}: req {} tokens", a.id);
+        assert_eq!(a.new_tokens, b.new_tokens, "{label}: req {}", a.id);
+    }
+}
+
+/// The busiest shard of the clean run — guaranteed to execute enough
+/// forward passes for a mid-stream fault to actually fire.
+fn busiest_shard(stats: &ClusterStats) -> usize {
+    stats.shards.iter().max_by_key(|s| s.tokens).expect("shards").shard
+}
+
+#[test]
+fn mid_decode_panic_replays_bitwise_with_zero_lost_requests() {
+    let trace = demo_trace(20, 12, SEED);
+    let sup = SupervisorConfig::default();
+    let (clean_stats, clean) = run(FaultPlan::none(), sup, &trace);
+    assert_eq!(clean.len(), trace.len());
+    assert_eq!(clean_stats.restarts, 0, "clean run must not restart");
+
+    let plan = FaultPlan::panic_at(busiest_shard(&clean_stats), 6);
+    let (stats, faulty) = run(plan.clone(), sup, &trace);
+    assert_eq!(plan.trips(), 1, "one-shot fault must fire exactly once");
+    assert!(stats.restarts >= 1, "the killed shard must be respawned");
+    assert!(stats.replayed_requests >= 1, "its journal must be replayed");
+    assert_eq!(faulty.len(), trace.len(), "zero lost requests");
+    assert_bitwise("panic vs clean", &clean, &faulty);
+}
+
+#[test]
+fn stalled_shard_is_abandoned_by_heartbeat_not_waited_out() {
+    let trace = demo_trace(12, 8, SEED ^ 1);
+    let sup = SupervisorConfig { stall_timeout_ms: 200.0, ..SupervisorConfig::default() };
+    let (clean_stats, clean) = run(FaultPlan::none(), sup, &trace);
+
+    // The injected stall sleeps 8 s mid-pass; heartbeat detection at
+    // 200 ms must abandon + respawn the shard long before that sleep
+    // ends, so the whole faulty run finishes in a fraction of it.
+    let plan = FaultPlan::stall_at(busiest_shard(&clean_stats), 4, 8_000);
+    let t0 = Instant::now();
+    let (stats, faulty) = run(plan.clone(), sup, &trace);
+    let wall = t0.elapsed();
+    assert_eq!(plan.trips(), 1);
+    assert!(stats.restarts >= 1, "the stalled shard must be abandoned and respawned");
+    assert!(
+        wall < Duration::from_secs(5),
+        "supervision must not wait out the 8 s stall (took {wall:?})"
+    );
+    assert_bitwise("stall vs clean", &clean, &faulty);
+}
+
+#[test]
+fn deadline_shedding_rejects_only_infeasible_requests() {
+    let req = |id: u64, deadline_ms: Option<f64>| Request {
+        id,
+        prompt: b"shed me?#".to_vec(),
+        max_new_tokens: 6,
+        temperature: 0.0,
+        deadline_ms,
+    };
+    let cfg = ClusterConfig {
+        shards: 1,
+        queue_depth: 16,
+        shard: ShardConfig { slots: 2, attn: AttnConfig::fp4(), seq_max: 128, sample_seed: SEED },
+        ..ClusterConfig::default()
+    };
+    let lm = SimLmConfig::default();
+    let mut cluster = DecodeCluster::spawn(cfg, move |_| Box::new(SimLm::new(lm)));
+
+    // Deadline-less requests are never shed — they warm the latency
+    // estimator instead (the cold estimator admits everything).
+    for id in 1..=4 {
+        assert_eq!(cluster.submit(req(id, None)).unwrap(), Admission::Accepted);
+    }
+    let mut warmed = false;
+    for _ in 0..5_000 {
+        if cluster.token_latency_ewma(0).is_some() {
+            warmed = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(warmed, "serving work must warm the EWMA estimator");
+
+    // An impossible deadline is shed at admission; a generous one is not.
+    assert_eq!(cluster.submit(req(100, Some(1e-9))).unwrap(), Admission::ShedDeadline);
+    assert_eq!(cluster.submit(req(101, Some(1e9))).unwrap(), Admission::Accepted);
+
+    let (done, stats) = cluster.drain().expect("drain");
+    let ids: Vec<u64> = done.iter().map(|c| c.id).collect();
+    assert_eq!(ids, vec![1, 2, 3, 4, 101], "shed request must yield no completion");
+    assert_eq!(stats.shed_deadline, 1);
+    assert_eq!(stats.shed_capacity, 0);
+    assert_eq!(stats.total_shed(), 1);
+}
+
+#[test]
+fn repeated_panics_exhaust_the_restart_budget_and_surface_an_error() {
+    let plan = FaultPlan::panic_every(0, 1); // every pass dies, forever
+    let sup = SupervisorConfig { max_restarts: 2, ..SupervisorConfig::default() };
+    let cfg = ClusterConfig {
+        shards: 1,
+        queue_depth: 4,
+        shard: ShardConfig { slots: 2, attn: AttnConfig::fp4(), seq_max: 128, sample_seed: SEED },
+        supervisor: sup,
+    };
+    let lm = SimLmConfig::default();
+    let wrapped = plan.clone();
+    let mut cluster =
+        DecodeCluster::spawn(cfg, move |shard| wrapped.wrap(shard, Box::new(SimLm::new(lm))));
+    let req = Request {
+        id: 1,
+        prompt: b"doomed#".to_vec(),
+        max_new_tokens: 4,
+        temperature: 0.0,
+        deadline_ms: None,
+    };
+    // Depending on timing the budget can exhaust during submit (the
+    // retry loop re-checks the shard) or during drain — either way the
+    // give-up must surface as an error, never as a hang or lost work.
+    let err = match cluster.submit(req) {
+        Err(e) => e,
+        Ok(_) => cluster.drain().expect_err("a permanently dying shard cannot drain"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("gave up"), "error should name the exhausted budget: {msg}");
+    assert!(plan.trips() >= 2, "each respawn re-hits the periodic fault ({})", plan.trips());
+}
+
+#[test]
+fn watchdog_recovers_fig3_drop_in_and_never_touches_attn_qat() {
+    // The training-side robustness contract, on the paper's Fig-3 task:
+    // the same watchdog that rescues the drop-in QAT divergence must be
+    // a no-op for Attn-QAT (whose grad norms stay far under the limit).
+    let steps = 150;
+    let wd =
+        WatchdogConfig { grad_limit: 100.0, max_rollbacks: steps, ..WatchdogConfig::default() };
+
+    let mut qat = AttnRegressor::session(TrainerConfig::default(), QatVariant::AttnQat.config());
+    qat.cfg.watchdog = Some(wd);
+    qat.run(steps, 0, |_| {});
+    assert_eq!(qat.rollbacks(), 0, "Attn-QAT must never trip the watchdog");
+    assert!(!qat.diverged());
+
+    let mut dropin = AttnRegressor::session(TrainerConfig::default(), QatVariant::DropIn.config());
+    dropin.cfg.watchdog = Some(wd);
+    dropin.run(steps, 0, |_| {});
+    assert!(dropin.rollbacks() >= 1, "drop-in QAT must trip the watchdog");
+    assert!(dropin.lr_scale() < 1.0, "rollbacks must back the lr off");
+    // Recovery, not just bookkeeping: every step the watchdog let
+    // through stayed finite and inside the guard rail — the instability
+    // lives only in the rolled-back (never-applied) spikes.
+    for m in dropin.history.iter().filter(|m| !m.rollback) {
+        assert!(m.loss.is_finite(), "applied step {} lost finiteness", m.step);
+        assert!(m.grad_norm <= 100.0, "applied step {} grad {}", m.step, m.grad_norm);
+    }
+    assert_eq!(
+        dropin.history.len(),
+        steps,
+        "rollbacks consume the step budget without aborting the run"
+    );
+}

@@ -246,6 +246,7 @@ fn serve_decodes_with_fp4_kv() {
             prompt: b"C:abc#".to_vec(),
             max_new_tokens: 5,
             temperature: 0.0,
+            deadline_ms: None,
         });
     }
     let done = server.run().unwrap();
@@ -287,6 +288,7 @@ fn serve_fused_decode_matches_baseline_completions() {
                 prompt: b"C:abc#".to_vec(),
                 max_new_tokens: 8,
                 temperature: 0.0,
+                deadline_ms: None,
             });
         }
         let mut done: Vec<(u64, Vec<u8>)> = server

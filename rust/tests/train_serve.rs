@@ -49,6 +49,7 @@ fn trace() -> Vec<Request> {
             prompt: format!("t{i} serve#").into_bytes(),
             max_new_tokens: 5 + (i as usize % 3),
             temperature: 0.0, // greedy: comparable to greedy_decode
+            deadline_ms: None,
         })
         .collect()
 }
@@ -73,6 +74,7 @@ fn finetuned_model_serves_bitwise_across_shardings_and_direct_eval() {
                 seq_max: 128,
                 sample_seed: SEED,
             },
+            ..ClusterConfig::default()
         };
         let model = served.clone();
         let mut cluster = DecodeCluster::spawn(cfg, move |_| Box::new(model.clone()));
@@ -153,11 +155,13 @@ fn f32_serving_config_also_round_trips() {
         prompt: b"base ab#".to_vec(),
         max_new_tokens: 5,
         temperature: 0.0,
+        deadline_ms: None,
     };
     let cfg = ClusterConfig {
         shards: 2,
         queue_depth: 4,
         shard: ShardConfig { slots: 2, attn: serve_attn, seq_max: 128, sample_seed: SEED },
+        ..ClusterConfig::default()
     };
     let model = served.clone();
     let mut cluster = DecodeCluster::spawn(cfg, move |_| Box::new(model.clone()));
