@@ -20,9 +20,12 @@
 use std::io::Write;
 
 use attn_qat::attention::AttnConfig;
-use attn_qat::experiments::cluster::{demo_trace, serve_trace, serve_trace_faulty};
+use attn_qat::experiments::cluster::{
+    demo_trace, serve_trace, serve_trace_faulty, serve_trace_observed,
+};
 use attn_qat::json::Json;
 use attn_qat::serve::{FaultPlan, Request, SupervisorConfig};
+use attn_qat::telemetry::{runmeta, Telemetry};
 
 /// Headline summary path: the repo root, next to ROADMAP.md.
 const HEADLINE_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_cluster.json");
@@ -146,15 +149,67 @@ fn main() -> anyhow::Result<()> {
         fault_stats.recomputed_passes,
     );
 
+    // Telemetry overhead guard: the same 4-shard fp4 serve with live
+    // probes vs a disabled handle. Publishing is relaxed atomic stores off
+    // the decode hot path and disabled spans are a single load, so the
+    // instrumented run must stay within 3% of the dark one on tokens/s
+    // (best-of-3 each, to shave scheduler noise).
+    let best_tps = |make: &dyn Fn() -> Telemetry| -> anyhow::Result<f64> {
+        let mut best = 0.0f64;
+        for _ in 0..3 {
+            let (wall_s, stats, _done, _snap) = serve_trace_observed(
+                4,
+                AttnConfig::fp4(),
+                4,
+                7,
+                &trace,
+                FaultPlan::none(),
+                sup,
+                make(),
+            )?;
+            best = best.max(stats.total_tokens() as f64 / wall_s.max(1e-9));
+        }
+        Ok(best)
+    };
+    let tps_tele_on = best_tps(&Telemetry::new)?;
+    let tps_tele_off = best_tps(&Telemetry::disabled)?;
+    let tele_overhead = tps_tele_off / tps_tele_on.max(1e-9);
+    println!(
+        "cluster_serve_fp4_4shards telemetry: {:.0}/s enabled vs {:.0}/s disabled \
+         ({tele_overhead:.3}x overhead, guard <= 1.03x)",
+        tps_tele_on, tps_tele_off,
+    );
+
+    let meta = runmeta(
+        "cluster_serve",
+        &format!("requests={} max_new=24 seed=7 lanes=4 shards=1/2/4/8", trace.len()),
+    );
     std::fs::create_dir_all("results/bench")?;
     let mut f = std::fs::OpenOptions::new()
         .create(true)
         .append(true)
         .open("results/bench/cluster_serve.jsonl")?;
+    writeln!(f, "{meta}")?;
     for r in &rows {
         writeln!(f, "{}", r.to_json())?;
     }
-    println!("-> results/bench/cluster_serve.jsonl ({} rows)", rows.len());
+    writeln!(
+        f,
+        "{}",
+        Json::obj(vec![
+            ("name", Json::Str("cluster_serve_fp4_4shards_telemetry_guard".to_string())),
+            ("tok_per_s_enabled", Json::Num(tps_tele_on)),
+            ("tok_per_s_disabled", Json::Num(tps_tele_off)),
+            ("overhead_x", Json::Num(tele_overhead)),
+            ("max_overhead_x", Json::Num(1.03)),
+        ])
+    )?;
+    println!("-> results/bench/cluster_serve.jsonl ({} rows)", rows.len() + 1);
+    assert!(
+        tps_tele_on >= 0.97 * tps_tele_off,
+        "telemetry overhead guard tripped: {tps_tele_on:.0} tok/s enabled vs \
+         {tps_tele_off:.0} tok/s disabled ({tele_overhead:.3}x > 1.03x)"
+    );
 
     // Headline summary at the repo root (overwritten each run: it is the
     // per-PR trajectory snapshot, the jsonl above is the full history).
@@ -164,7 +219,11 @@ fn main() -> anyhow::Result<()> {
     let p99_4 = find("cluster_serve_fp4_4shards").map_or(0.0, |r| r.p99_token_ms);
     let headline = Json::obj(vec![
         ("bench", Json::Str("cluster_serve".to_string())),
+        ("runmeta", meta),
         ("requests", Json::Num(trace.len() as f64)),
+        ("telemetry_tok_per_s_enabled", Json::Num(tps_tele_on)),
+        ("telemetry_tok_per_s_disabled", Json::Num(tps_tele_off)),
+        ("telemetry_overhead_x", Json::Num(tele_overhead)),
         ("fp4_tok_per_s_1shard", Json::Num(tps_1)),
         ("fp4_tok_per_s_4shard", Json::Num(tps_4)),
         ("fp4_scaling_4shard_x", Json::Num(tps_4 / tps_1.max(1e-9))),

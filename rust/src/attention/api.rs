@@ -30,6 +30,7 @@
 use anyhow::{ensure, Result};
 
 use crate::formats::tensor4::PackedNvfp4;
+use crate::json::Json;
 use crate::kvcache::{DecodeScratch, PagedKvCache, SeqSlot};
 
 use super::engine::{
@@ -257,6 +258,52 @@ impl AttnConfig {
     /// Does the forward run through a quantized engine?
     pub fn quantized(&self) -> bool {
         self.precision != Precision::F32
+    }
+
+    /// The [`AttnConfig::parse`] name this config round-trips to, ignoring
+    /// the knobs no preset pins (`causal`, `block_q`, `backend`);
+    /// `"custom"` when no preset matches. Aliased presets report their
+    /// first name in [`AttnConfig::VARIANT_NAMES`] (`f32`, not `bf16`).
+    pub fn variant_name(&self) -> &'static str {
+        let normalized =
+            AttnConfig { causal: false, block_q: 16, backend: Backend::Packed, ..*self };
+        for name in AttnConfig::VARIANT_NAMES {
+            if AttnConfig::parse(name).expect("known variant name") == normalized {
+                return name;
+            }
+        }
+        "custom"
+    }
+
+    /// Reflect every field (plus the resolved variant name) for the
+    /// telemetry snapshot's `config` section.
+    pub fn to_json(&self) -> Json {
+        let precision = match self.precision {
+            Precision::F32 => "f32",
+            Precision::Fp4 => "fp4",
+            Precision::Sage3 => "sage3",
+        };
+        let backend = match self.backend {
+            Backend::Packed => "packed",
+            Backend::Dequant => "dequant",
+        };
+        Json::obj(vec![
+            ("variant", Json::Str(self.variant_name().to_string())),
+            ("precision", Json::Str(precision.to_string())),
+            ("causal", Json::Bool(self.causal)),
+            ("smooth", Json::Bool(self.smooth)),
+            ("two_level_p", Json::Bool(self.two_level_p)),
+            ("block_q", Json::Num(self.block_q as f64)),
+            ("backend", Json::Str(backend.to_string())),
+            (
+                "bwd",
+                Json::obj(vec![
+                    ("fq_inputs", Json::Bool(self.bwd.fq_inputs)),
+                    ("fq_p", Json::Bool(self.bwd.fq_p)),
+                    ("high_prec_o", Json::Bool(self.bwd.high_prec_o)),
+                ]),
+            ),
+        ])
     }
 }
 
@@ -726,6 +773,26 @@ mod tests {
         assert_eq!(AttnConfig::parse("dropin").unwrap().bwd, BwdSwitches::STOCK);
         assert!(!AttnConfig::parse("qat_no_o_prime").unwrap().bwd.high_prec_o);
         assert!(!AttnConfig::parse("qat_no_fq_p").unwrap().bwd.fq_p);
+    }
+
+    #[test]
+    fn variant_name_round_trips_and_reflects() {
+        // Every parseable name resolves back to a name that re-parses to
+        // the same config (aliases collapse to their canonical spelling).
+        for name in AttnConfig::VARIANT_NAMES {
+            let cfg = AttnConfig::parse(name).unwrap();
+            let back = cfg.variant_name();
+            assert_eq!(AttnConfig::parse(back).unwrap(), cfg, "{name} -> {back}");
+        }
+        // Knobs no preset pins don't break resolution...
+        assert_eq!(AttnConfig::fp4().with_causal(true).with_block_q(64).variant_name(), "fp4");
+        // ...while genuinely off-preset configs report custom.
+        assert_eq!(AttnConfig::fp4().with_smooth(true).variant_name(), "custom");
+        let doc = AttnConfig::attn_qat().with_causal(true).to_json();
+        assert_eq!(doc.get("variant").as_str(), Some("attn_qat"));
+        assert_eq!(doc.get("precision").as_str(), Some("fp4"));
+        assert_eq!(doc.get("causal"), &Json::Bool(true));
+        assert_eq!(doc.get("bwd").get("high_prec_o"), &Json::Bool(true));
     }
 
     #[test]

@@ -152,6 +152,18 @@ impl QuantQueryCache {
         e.last_used = self.tick;
         &e.q4
     }
+
+    /// Fraction of lookups served from a resident entry (0.0 before any
+    /// lookup) — the quantity the telemetry gauge
+    /// `serve.shard{i}.qcache_hit_rate` reports per shard.
+    pub fn hit_rate(&self) -> f64 {
+        let lookups = self.hits + self.misses;
+        if lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / lookups as f64
+        }
+    }
 }
 
 impl Default for QuantQueryCache {

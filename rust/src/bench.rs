@@ -87,6 +87,9 @@ pub fn bench_units<F: FnMut()>(
 /// Collects results, prints a table, persists JSONL under `results/bench/`.
 pub struct Reporter {
     group: String,
+    /// Free-form run-configuration string stamped into the provenance
+    /// header ([`Reporter::set_config`]); empty by default.
+    config: String,
     results: Vec<BenchResult>,
 }
 
@@ -97,7 +100,15 @@ impl Reporter {
             "{:<44} {:>12} {:>12} {:>12} {:>16}",
             "name", "median", "p10", "p90", "throughput"
         );
-        Reporter { group: group.to_string(), results: Vec::new() }
+        Reporter { group: group.to_string(), config: String::new(), results: Vec::new() }
+    }
+
+    /// Describe the run's configuration (shape, iteration counts, ...):
+    /// recorded verbatim in the `runmeta` provenance line [`save`] writes.
+    ///
+    /// [`save`]: Reporter::save
+    pub fn set_config(&mut self, config: &str) {
+        self.config = config.to_string();
     }
 
     pub fn push(&mut self, r: BenchResult) {
@@ -121,7 +132,10 @@ impl Reporter {
         &self.results
     }
 
-    /// Append all results to `results/bench/<group>.jsonl`.
+    /// Append all results to `results/bench/<group>.jsonl`, preceded by a
+    /// `{"kind":"runmeta",...}` provenance header (git rev, bench name,
+    /// config string, wall-clock stamp) so accumulated rows stay
+    /// attributable to the commit and configuration that produced them.
     pub fn save(&self) -> std::io::Result<()> {
         let dir = std::path::Path::new("results/bench");
         std::fs::create_dir_all(dir)?;
@@ -129,6 +143,7 @@ impl Reporter {
             .create(true)
             .append(true)
             .open(dir.join(format!("{}.jsonl", self.group)))?;
+        writeln!(f, "{}", crate::telemetry::runmeta(&self.group, &self.config))?;
         for r in &self.results {
             writeln!(f, "{}", r.to_json())?;
         }

@@ -14,10 +14,12 @@ use anyhow::Result;
 use crate::attention::AttnConfig;
 use crate::config::Config;
 use crate::data::corpus::Corpus;
+use crate::json::Json;
 use crate::serve::{
     ClusterConfig, Completion, DecodeCluster, FaultPlan, Request, ShardConfig, SimLm, SimLmConfig,
     SupervisorConfig,
 };
+use crate::telemetry::Telemetry;
 
 use super::common;
 
@@ -76,6 +78,36 @@ pub fn serve_trace_faulty(
     faults: FaultPlan,
     supervisor: SupervisorConfig,
 ) -> Result<(f64, crate::serve::ClusterStats, Vec<Completion>)> {
+    let (wall, stats, done, _snapshot) = serve_trace_observed(
+        shards,
+        attn,
+        lanes,
+        seed,
+        trace,
+        faults,
+        supervisor,
+        Telemetry::new(),
+    )?;
+    Ok((wall, stats, done))
+}
+
+/// [`serve_trace_faulty`] with a caller-supplied [`Telemetry`] handle;
+/// additionally returns the post-drain [`Telemetry::snapshot`] so
+/// experiments can persist the registry view (live config, per-shard
+/// gauges, supervisor counters) in the same document as throughput.
+/// Pass [`Telemetry::disabled`] to measure the zero-instrumentation
+/// path (`benches/cluster_serve.rs` uses this for its overhead guard).
+#[allow(clippy::too_many_arguments)]
+pub fn serve_trace_observed(
+    shards: usize,
+    attn: AttnConfig,
+    lanes: usize,
+    seed: u64,
+    trace: &[Request],
+    faults: FaultPlan,
+    supervisor: SupervisorConfig,
+    telemetry: Telemetry,
+) -> Result<(f64, crate::serve::ClusterStats, Vec<Completion>, Json)> {
     let cfg = ClusterConfig {
         shards,
         queue_depth: trace.len().max(1),
@@ -83,15 +115,18 @@ pub fn serve_trace_faulty(
         supervisor,
     };
     let lm = SimLmConfig { seed, ..SimLmConfig::default() };
-    let mut cluster =
-        DecodeCluster::spawn(cfg, move |shard| faults.wrap(shard, Box::new(SimLm::new(lm))));
+    let mut cluster = DecodeCluster::spawn_observed(cfg, telemetry.clone(), move |shard| {
+        faults.wrap(shard, Box::new(SimLm::new(lm)))
+    });
     let t0 = std::time::Instant::now();
     for r in trace {
         cluster.submit(r.clone())?;
     }
     let (done, stats) = cluster.drain()?;
     anyhow::ensure!(done.len() == trace.len(), "lost completions");
-    Ok((t0.elapsed().as_secs_f64(), stats, done))
+    // Snapshot after drain: shard workers republish their authoritative
+    // final stats into the registry as part of the drain handshake.
+    Ok((t0.elapsed().as_secs_f64(), stats, done, telemetry.snapshot()))
 }
 
 /// `repro exp cluster` — shard-scaling table.
@@ -166,11 +201,21 @@ pub fn fault_tolerance(cfg: &Config) -> Result<()> {
         ("stall shard0 @pass8 400ms", FaultPlan::stall_at(0, 8, 400)),
     ];
 
+    let want_json = cfg.bool_or("json", false);
     let mut baseline: Option<Vec<(u64, Vec<u8>)>> = None;
     let mut rows = Vec::new();
+    let mut snapshots = Vec::new();
     for (name, plan) in scenarios {
-        let (wall_s, stats, done) =
-            serve_trace_faulty(shards, AttnConfig::fp4(), 4, seed, &trace, plan, sup)?;
+        let (wall_s, stats, done, snapshot) = serve_trace_observed(
+            shards,
+            AttnConfig::fp4(),
+            4,
+            seed,
+            &trace,
+            plan,
+            sup,
+            Telemetry::new(),
+        )?;
         let texts: Vec<(u64, Vec<u8>)> = done.iter().map(|c| (c.id, c.text.clone())).collect();
         let bitwise = match &baseline {
             None => {
@@ -186,15 +231,33 @@ pub fn fault_tolerance(cfg: &Config) -> Result<()> {
             }
         };
         let tokens = stats.total_tokens();
+        let tps = tokens as f64 / wall_s.max(1e-9);
+        if want_json {
+            snapshots.push(Json::obj(vec![
+                ("scenario", Json::Str(name.to_string())),
+                ("tokens_per_sec", Json::Num(tps)),
+                ("telemetry", snapshot),
+            ]));
+        }
         rows.push(vec![
             name.to_string(),
             stats.restarts.to_string(),
             stats.replayed_requests.to_string(),
             stats.recomputed_passes.to_string(),
             tokens.to_string(),
-            format!("{:.0}", tokens as f64 / wall_s.max(1e-9)),
+            format!("{tps:.0}"),
             bitwise,
         ]);
+    }
+    if want_json {
+        // One schema-versioned doc per scenario: supervisor restart /
+        // replay / shed counters land next to throughput, so dashboards
+        // consume fault runs without parsing the markdown table.
+        let doc = Json::obj(vec![("scenarios", Json::Arr(snapshots))]);
+        let path = common::results_dir().join("fault_tolerance_snapshot.json");
+        std::fs::write(&path, doc.to_string())?;
+        println!("{doc}");
+        println!("-> results/fault_tolerance_snapshot.json");
     }
     common::write_table(
         "fault_tolerance",

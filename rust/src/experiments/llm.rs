@@ -7,17 +7,22 @@
 
 use anyhow::{anyhow, Result};
 
-use super::common::{ensure_lm_base, f4, write_history, write_table};
+use super::common::{ensure_lm_base, f4, results_dir, write_history, write_table};
 use crate::attention::AttnConfig;
 use crate::config::Config;
 use crate::coordinator::{LrSchedule, StepMetrics, Trainer};
 use crate::data::corpus::Corpus;
 use crate::data::tasks::{sft_batch, MC_SUITES};
 use crate::eval::lm::{mc_accuracy, perplexity};
-use crate::model::AttnRegressor;
+use crate::json::Json;
+use crate::model::{
+    AttnRegressor, LmTrainTask, QatModel, QatModelConfig, TrainConfig, TrainSession,
+    WatchdogConfig,
+};
 use crate::qat::TrainerConfig;
 use crate::rng::Rng;
 use crate::runtime::Runtime;
+use crate::telemetry::Telemetry;
 use crate::tensor::Tensor;
 
 /// Eval artifact variant for a trained variant (QAT models infer in FP4).
@@ -275,4 +280,92 @@ pub fn fig3c_native(cfg: &Config) -> Result<()> {
         &["Config", "Final loss", "Tail-10 mean loss"],
         &rows,
     )
+}
+
+/// Per-layer QAT health probes on the Fig-3 divergence setting (runs as
+/// part of `repro exp fig3`, artifact-free): a two-layer [`QatModel`]
+/// where layer 0 trains with the full Attn-QAT recipe and layer 1 with
+/// the DropIn config (stock STE backward over plain FP4) — the
+/// combination Figure 3 shows blowing up. SGD at a hot learning rate
+/// with the divergence watchdog armed and telemetry sampled every step;
+/// writes `results/fig3_probes.json` with the per-layer grad-norm
+/// series, the first step where the DropIn layer's grad norm exceeds 4x
+/// the QAT layer's (`detection_step`), and the watchdog's first rollback
+/// (`first_rollback_step`). Divergence is recorded as data, never
+/// asserted — the point is that the per-layer gauges localize it to the
+/// DropIn layer before the global watchdog trips.
+pub fn fig3_probes(cfg: &Config) -> Result<()> {
+    let steps = cfg.usize_or("fig3.probe_steps", 40);
+    let lr = cfg.f32_or("fig3.probe_lr", 0.8);
+    let seed = cfg.u64_or("seed", 42);
+
+    let model = QatModel::new(QatModelConfig { seed, ..QatModelConfig::default() });
+    let mut task = LmTrainTask::new(model, 48, seed ^ 0xf193);
+    // Layer 1 is the DropIn ablation: plain FP4 forward, STOCK backward.
+    task.set_layer_attn(1, AttnConfig::fp4());
+    let telemetry = Telemetry::new();
+    task.attach_telemetry(&telemetry, 1);
+
+    let train_cfg = TrainConfig::sgd(lr, 0.9).with_watchdog(WatchdogConfig::default());
+    let mut session = TrainSession::new(task, train_cfg);
+    session.attach_telemetry(&telemetry);
+
+    let reg = telemetry.registry();
+    let g_qat = reg.gauge("train.layer0.grad_norm");
+    let g_drop = reg.gauge("train.layer1.grad_norm");
+
+    println!("[fig3-probes] layer0 attn_qat vs layer1 DropIn, {steps} steps at lr {lr}...");
+    let mut qat_series = Vec::new();
+    let mut drop_series = Vec::new();
+    let mut loss_series = Vec::new();
+    let mut detection_step: Option<usize> = None;
+    let mut first_rollback_step: Option<usize> = None;
+    for step in 0..steps {
+        let m = session.step();
+        // The gauges hold the pre-rollback values: a diverged step's
+        // gradients are sampled inside train_step, before the watchdog
+        // decides to restore — exactly the early-warning view we want.
+        let q = g_qat.get().unwrap_or(f64::NAN);
+        let d = g_drop.get().unwrap_or(f64::NAN);
+        qat_series.push(q as f32);
+        drop_series.push(d as f32);
+        loss_series.push(m.loss);
+        if detection_step.is_none() && d.is_finite() && d > 4.0 * q.max(1e-12) {
+            detection_step = Some(step);
+        }
+        if first_rollback_step.is_none() && session.rollbacks() > 0 {
+            first_rollback_step = Some(step);
+        }
+    }
+
+    let opt_step = |v: Option<usize>| v.map_or(Json::Null, |s| Json::Num(s as f64));
+    let doc = Json::obj(vec![
+        ("schema_version", Json::Num(1.0)),
+        ("steps", Json::Num(steps as f64)),
+        ("lr", Json::Num(lr as f64)),
+        (
+            "layer_attn",
+            Json::obj(vec![
+                ("layer0", Json::Str("attn_qat".to_string())),
+                ("layer1", Json::Str("fp4".to_string())),
+            ]),
+        ),
+        (
+            "grad_norm",
+            Json::obj(vec![
+                ("layer0_attn_qat", Json::arr_f32(&qat_series)),
+                ("layer1_drop_in", Json::arr_f32(&drop_series)),
+            ]),
+        ),
+        ("loss", Json::arr_f32(&loss_series)),
+        ("detection_step", opt_step(detection_step)),
+        ("first_rollback_step", opt_step(first_rollback_step)),
+        ("rollbacks", Json::Num(session.rollbacks() as f64)),
+    ]);
+    std::fs::write(results_dir().join("fig3_probes.json"), doc.to_string())?;
+    println!(
+        "[fig3-probes] detection_step {detection_step:?}, first_rollback {first_rollback_step:?}"
+    );
+    println!("-> results/fig3_probes.json");
+    Ok(())
 }

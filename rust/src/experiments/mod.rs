@@ -28,7 +28,8 @@ pub fn run(rt: &Runtime, id: &str, cfg: &Config) -> Result<()> {
         "fig2" => diffusion::fig2(rt, cfg),
         "fig3" => {
             diffusion::fig3_dynamics(rt, cfg)?;
-            llm::fig3c(rt, cfg)
+            llm::fig3c(rt, cfg)?;
+            llm::fig3_probes(cfg)
         }
         "fig4" => consistency::fig4(rt, cfg),
         "fig5" => kernels::fig5(rt, cfg),
@@ -58,7 +59,8 @@ pub fn run_native(id: &str, cfg: &Config) -> Result<()> {
     match id {
         "fig3" => {
             diffusion::fig3_dynamics_native(cfg)?;
-            llm::fig3c_native(cfg)
+            llm::fig3c_native(cfg)?;
+            llm::fig3_probes(cfg)
         }
         "cluster" => cluster::cluster_scaling(cfg),
         "faults" => cluster::fault_tolerance(cfg),

@@ -38,6 +38,7 @@ use crate::attention::packed::QuantQueryCache;
 use crate::formats::e4m3;
 use crate::formats::lut;
 use crate::formats::tensor4::PackedNvfp4;
+use crate::json::Json;
 
 /// Tokens per page == NVFP4 block size.
 pub const PAGE_SIZE: usize = 16;
@@ -542,6 +543,24 @@ impl PagedKvCache {
             }
         }
         (used, f32_equiv)
+    }
+
+    /// Number of live sequences currently holding a slot.
+    pub fn live_seqs(&self) -> usize {
+        self.slots.iter().filter(|s| s.live).count()
+    }
+
+    /// Occupancy as one JSON object for the telemetry snapshot: live
+    /// sequence count, packed bytes in use, and the f32-equivalent bytes
+    /// the same tokens would occupy (their ratio is the paper's ~7×
+    /// KV-memory reduction).
+    pub fn memory_json(&self) -> Json {
+        let (used, f32_equiv) = self.memory_stats();
+        Json::obj(vec![
+            ("live_seqs", Json::Num(self.live_seqs() as f64)),
+            ("kv_bytes", Json::Num(used as f64)),
+            ("kv_bytes_f32_equiv", Json::Num(f32_equiv as f64)),
+        ])
     }
 }
 

@@ -16,6 +16,7 @@
 //!   [`model`] (QatModel / TrainSession — the native train→serve stack)
 //! * pipeline: [`data`], [`coordinator`], [`eval`]
 //! * serving: [`kvcache`], [`serve`]
+//! * observability: [`telemetry`] (metrics registry, JSON reflection, spans)
 //! * analysis: [`perfmodel`], [`experiments`]
 
 pub mod bench;
@@ -37,3 +38,4 @@ pub mod perfmodel;
 pub mod qat;
 pub mod runtime;
 pub mod serve;
+pub mod telemetry;

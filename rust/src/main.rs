@@ -72,7 +72,12 @@ fn main() -> Result<()> {
     if cli.command == "serve" && cli.args.first().map(String::as_str) == Some("cluster") {
         // The sharded native cluster needs no compiled artifacts and no
         // PJRT backend — dispatch before the runtime is even attempted.
-        return cmd_serve_cluster(&cli);
+        return cmd_serve_cluster(&cli, false);
+    }
+    if cli.command == "serve" && cli.args.first().map(String::as_str) == Some("stats") {
+        // `serve cluster` with JSON output forced on: one machine-readable
+        // telemetry snapshot on stdout, nothing else.
+        return cmd_serve_cluster(&cli, true);
     }
     if cli.command == "train" && cli.args.first().map(String::as_str) == Some("native") {
         // Native QatModel finetune + train→serve round trip: no PJRT.
@@ -356,7 +361,7 @@ fn cmd_serve(rt: &Runtime, cli: &Cli) -> Result<()> {
 /// `repro serve cluster [--shards N] [--requests R] [--max-new M]
 /// [--queue-depth Q] [--lanes L] [--variant fp4|f32] [--seed S]
 /// [--deadline-ms D] [--faults SPEC] [--stall-timeout-ms T]
-/// [--max-restarts K]`
+/// [--max-restarts K] [--json] [--stats-every-ms T]`
 ///
 /// Native sharded decode: routes a deterministic request trace (prompts
 /// drawn from the synthetic corpus) across N supervised shard workers,
@@ -370,20 +375,34 @@ fn cmd_serve(rt: &Runtime, cli: &Cli) -> Result<()> {
 /// infeasible work at admission; `--faults` injects seeded shard faults
 /// (comma-separated `panic:S:P`, `stall:S:P:MS`, `every:S:K`) that the
 /// supervisor must survive without losing a single request.
-fn cmd_serve_cluster(cli: &Cli) -> Result<()> {
+///
+/// `--json` (the whole of `repro serve stats`) replaces the human
+/// summary with one schema-versioned [`attn_qat::telemetry`] snapshot on
+/// stdout — live config, per-shard gauges, supervisor counters, span
+/// stats. `--stats-every-ms T` additionally appends a snapshot line to
+/// `results/serve_cluster_stats.jsonl` every T ms while the run drains.
+fn cmd_serve_cluster(cli: &Cli, force_json: bool) -> Result<()> {
     use attn_qat::serve::{
         Admission, ClusterConfig, DecodeCluster, FaultPlan, ShardConfig, SimLm, SimLmConfig,
         SupervisorConfig,
     };
+    use attn_qat::telemetry::Telemetry;
 
-    // `--flag value` pairs after the `cluster` subcommand override config.
+    // `--flag value` pairs after the `cluster` subcommand override config
+    // (`--json` stands alone: it takes no value).
     let mut flags = std::collections::BTreeMap::new();
+    let mut json_flag = false;
     let rest = &cli.args[1..];
     let mut i = 0;
     while i < rest.len() {
         let key = rest[i]
             .strip_prefix("--")
             .ok_or_else(|| anyhow!("expected --flag, got '{}'", rest[i]))?;
+        if key == "json" {
+            json_flag = true;
+            i += 1;
+            continue;
+        }
         let val = rest.get(i + 1).ok_or_else(|| anyhow!("--{key} needs a value"))?;
         flags.insert(key.to_string(), val.clone());
         i += 2;
@@ -421,7 +440,9 @@ fn cmd_serve_cluster(cli: &Cli) -> Result<()> {
         None => cli.cfg.f32_or("serve.stall_timeout_ms", 2_000.0) as f64,
     };
     let max_restarts = get_usize("max-restarts", "serve.max_restarts", 4)?;
-    const KNOWN: [&str; 11] = [
+    let stats_every_ms = get_usize("stats-every-ms", "serve.stats_every_ms", 0)?;
+    let want_json = force_json || json_flag || cli.cfg.bool_or("serve.json", false);
+    const KNOWN: [&str; 13] = [
         "shards",
         "requests",
         "max-new",
@@ -433,6 +454,8 @@ fn cmd_serve_cluster(cli: &Cli) -> Result<()> {
         "faults",
         "stall-timeout-ms",
         "max-restarts",
+        "json",
+        "stats-every-ms",
     ];
     if let Some(unknown) = flags.keys().find(|k| !KNOWN.contains(&k.as_str())) {
         bail!("unknown flag --{unknown} (expected one of: --{})", KNOWN.join(", --"));
@@ -441,10 +464,12 @@ fn cmd_serve_cluster(cli: &Cli) -> Result<()> {
         bail!("need at least one shard, request, lane, and queue slot");
     }
 
-    println!(
-        "serve cluster: {shards} shard(s) x {lanes} lane(s), {n_req} requests, \
-         max_new={max_new}, attn={variant}, queue_depth={queue_depth}, seed={seed}"
-    );
+    if !want_json {
+        println!(
+            "serve cluster: {shards} shard(s) x {lanes} lane(s), {n_req} requests, \
+             max_new={max_new}, attn={variant}, queue_depth={queue_depth}, seed={seed}"
+        );
+    }
     let cluster_cfg = ClusterConfig {
         shards,
         queue_depth,
@@ -457,9 +482,37 @@ fn cmd_serve_cluster(cli: &Cli) -> Result<()> {
     };
     let lm_cfg = SimLmConfig { seed, ..SimLmConfig::default() };
     let plan = faults.clone();
-    let mut cluster = DecodeCluster::spawn(cluster_cfg, move |shard| {
+    let telemetry = Telemetry::new();
+    let mut cluster = DecodeCluster::spawn_observed(cluster_cfg, telemetry.clone(), move |shard| {
         plan.wrap(shard, Box::new(SimLm::new(lm_cfg)))
     });
+
+    // Periodic snapshot writer: one JSON doc per line, readable while the
+    // run is still in flight (the registry is lock-cheap to walk).
+    let stop_writer = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let writer = if stats_every_ms > 0 {
+        let tele = telemetry.clone();
+        let stop = stop_writer.clone();
+        std::fs::create_dir_all("results").ok();
+        Some(std::thread::spawn(move || {
+            use std::io::Write;
+            let Ok(mut f) = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open("results/serve_cluster_stats.jsonl")
+            else {
+                return;
+            };
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_millis(stats_every_ms as u64));
+                if writeln!(f, "{}", tele.snapshot()).is_err() {
+                    return;
+                }
+            }
+        }))
+    } else {
+        None
+    };
 
     // Deterministic trace, shared with `exp cluster` and the bench so
     // all three drive the same workload.
@@ -473,53 +526,67 @@ fn cmd_serve_cluster(cli: &Cli) -> Result<()> {
     }
     let (done, stats) = cluster.drain()?;
     let wall = t0.elapsed().as_secs_f64();
+    stop_writer.store(true, std::sync::atomic::Ordering::Relaxed);
+    if let Some(h) = writer {
+        let _ = h.join();
+        if !want_json {
+            println!("snapshots (every {stats_every_ms} ms) -> results/serve_cluster_stats.jsonl");
+        }
+    }
 
-    for s in &stats.shards {
+    if want_json {
+        // Machine-readable mode: the one schema-versioned telemetry doc
+        // (post-drain, so shard gauges hold their final published stats)
+        // is the entire stdout output.
+        println!("{}", telemetry.snapshot());
+    } else {
+        for s in &stats.shards {
+            println!(
+                "shard {:>2}: {:>4} req {:>7} tok  {:>9.1} tok/s  queue<= {:<3} \
+                 p50 {:.3} ms  p99 {:.3} ms  qcache {}h/{}m  kv<= {} B",
+                s.shard,
+                s.requests,
+                s.tokens,
+                s.tokens_per_s,
+                s.queue_peak,
+                s.p50_token_ms,
+                s.p99_token_ms,
+                s.qcache_hits,
+                s.qcache_misses,
+                s.kv_bytes_peak,
+            );
+        }
+        let total_tok = stats.total_tokens();
         println!(
-            "shard {:>2}: {:>4} req {:>7} tok  {:>9.1} tok/s  queue<= {:<3} \
-             p50 {:.3} ms  p99 {:.3} ms  qcache {}h/{}m  kv<= {} B",
-            s.shard,
-            s.requests,
-            s.tokens,
-            s.tokens_per_s,
-            s.queue_peak,
-            s.p50_token_ms,
-            s.p99_token_ms,
-            s.qcache_hits,
-            s.qcache_misses,
-            s.kv_bytes_peak,
+            "\n{} completions, {} tokens in {:.2}s = {:.1} tok/s aggregate | \
+             cluster p99 {:.3} ms | KV peak {} B",
+            done.len(),
+            total_tok,
+            wall,
+            total_tok as f64 / wall.max(1e-9),
+            stats.p99_token_ms(),
+            stats.kv_bytes_peak(),
         );
-    }
-    let total_tok = stats.total_tokens();
-    println!(
-        "\n{} completions, {} tokens in {:.2}s = {:.1} tok/s aggregate | \
-         cluster p99 {:.3} ms | KV peak {} B",
-        done.len(),
-        total_tok,
-        wall,
-        total_tok as f64 / wall.max(1e-9),
-        stats.p99_token_ms(),
-        stats.kv_bytes_peak(),
-    );
-    if stats.restarts > 0 || faults.trips() > 0 {
-        println!(
-            "supervision: {} fault(s) tripped, {} restart(s), {} request(s) replayed, \
-             {} pass(es) recomputed",
-            faults.trips(),
-            stats.restarts,
-            stats.replayed_requests,
-            stats.recomputed_passes,
-        );
-    }
-    if deadline_ms.is_some() {
-        println!(
-            "admission: {} accepted, {} shed on deadline, {} shed on capacity \
-             ({} submit retry(ies))",
-            n_req - shed,
-            stats.shed_deadline,
-            stats.shed_capacity,
-            stats.submit_retries,
-        );
+        if stats.restarts > 0 || faults.trips() > 0 {
+            println!(
+                "supervision: {} fault(s) tripped, {} restart(s), {} request(s) replayed, \
+                 {} pass(es) recomputed",
+                faults.trips(),
+                stats.restarts,
+                stats.replayed_requests,
+                stats.recomputed_passes,
+            );
+        }
+        if deadline_ms.is_some() {
+            println!(
+                "admission: {} accepted, {} shed on deadline, {} shed on capacity \
+                 ({} submit retry(ies))",
+                n_req - shed,
+                stats.shed_deadline,
+                stats.shed_capacity,
+                stats.submit_retries,
+            );
+        }
     }
     if done.len() + shed != n_req {
         bail!(
@@ -549,11 +616,19 @@ COMMANDS:
                   [--queue-depth Q] [--lanes L] [--variant fp4|f32]
                   [--deadline-ms D] [--faults SPEC]
                   [--stall-timeout-ms T] [--max-restarts K]
+                  [--json] [--stats-every-ms T]
                                  native sharded decode cluster with shard
                                  supervision, deadline-aware shedding, and
                                  seeded fault injection (--faults takes
                                  comma-separated panic:S:P, stall:S:P:MS,
-                                 every:S:K); no PJRT runtime or artifacts
+                                 every:S:K); no PJRT runtime or artifacts;
+                                 --json emits one telemetry snapshot doc,
+                                 --stats-every-ms streams snapshot lines to
+                                 results/serve_cluster_stats.jsonl
+    serve stats [flags]          serve cluster with --json forced on: the
+                                 schema-versioned telemetry snapshot (live
+                                 config, per-shard gauges, supervisor
+                                 counters, spans) is the entire output
     exp <id>                     regenerate a paper table/figure:
                                  table1 table2 table3 table4 fig1..fig5
                                  cluster faults all

@@ -39,6 +39,8 @@ use crate::formats::block::nvfp4_fake_quant_row;
 use crate::qat::flash_backward_cfg;
 use crate::rng::Rng;
 use crate::serve::model::{TokenModel, VOCAB};
+use crate::telemetry::probes::e2m1_health;
+use crate::telemetry::{Gauge, Telemetry};
 use crate::tensor::Tensor;
 
 use super::modules::{
@@ -326,6 +328,23 @@ impl QatModel {
         self.emb.backward(tokens, 0, &dh);
     }
 
+    /// Per-block (layer) global gradient norm over the block's Wq/Wk/Wv/
+    /// Wo/MLP grads, in layer order — the Fig-3 per-layer divergence
+    /// probe (`train.layer{l}.grad_norm`). Read *after* a backward pass;
+    /// embeddings and the LM head are shared across layers and excluded.
+    pub fn layer_grad_norms(&mut self) -> Vec<f32> {
+        self.blocks
+            .iter_mut()
+            .map(|b| {
+                let mut sq = 0.0f64;
+                b.visit(&mut |_, g| {
+                    sq += g.iter().map(|&x| x as f64 * x as f64).sum::<f64>();
+                });
+                sq.sqrt() as f32
+            })
+            .collect()
+    }
+
     /// Fake-quantize a weight matrix onto the NVFP4 lattice, row-blocked
     /// along `cols` (the output dim — a multiple of 16 by construction).
     fn quantize_weights(w: &[f32], cols: usize) -> Vec<f32> {
@@ -524,6 +543,19 @@ impl TokenModel for QatModel {
     }
 }
 
+/// Pre-registered `train.layer{l}.*` gauges sampled every `every`-th
+/// step (see the [`crate::telemetry`] module docs for the name map).
+struct LayerProbes {
+    telemetry: Telemetry,
+    every: u64,
+    tick: u64,
+    grad_norm: Vec<Gauge>,
+    q_sat: Vec<Gauge>,
+    k_sat: Vec<Gauge>,
+    v_sat: Vec<Gauge>,
+    scale_range: Vec<Gauge>,
+}
+
 /// Next-byte language modelling over the synthetic corpus: the
 /// [`TrainableModel`] that drives a [`QatModel`] through a
 /// [`super::TrainSession`] — the paper's finetune setting, natively.
@@ -533,13 +565,60 @@ pub struct LmTrainTask {
     corpus: Corpus,
     /// Tokens per step (causal window).
     pub seq: usize,
+    /// `None` until [`LmTrainTask::attach_telemetry`] — a detached task
+    /// samples nothing and behaves bitwise as before.
+    probes: Option<LayerProbes>,
 }
 
 impl LmTrainTask {
     pub fn new(model: QatModel, seq: usize, data_seed: u64) -> LmTrainTask {
         assert!(seq > 0);
         let engines = model.engines();
-        LmTrainTask { model, engines, corpus: Corpus::new(data_seed), seq }
+        LmTrainTask { model, engines, corpus: Corpus::new(data_seed), seq, probes: None }
+    }
+
+    /// Register per-layer quantization-health gauges
+    /// (`train.layer{l}.grad_norm` / `.{q,k,v}_sat_frac` /
+    /// `.scale_range`) and sample them every `every`-th training step
+    /// (clamped to ≥ 1). Sampling is skipped entirely while `telemetry`
+    /// is disabled, so the probe costs nothing on production loops.
+    pub fn attach_telemetry(&mut self, telemetry: &Telemetry, every: usize) {
+        let reg = telemetry.registry();
+        let layers = self.model.config().layers;
+        let g = |l: usize, metric: &str| reg.gauge(&format!("train.layer{l}.{metric}"));
+        self.probes = Some(LayerProbes {
+            telemetry: telemetry.clone(),
+            every: every.max(1) as u64,
+            tick: 0,
+            grad_norm: (0..layers).map(|l| g(l, "grad_norm")).collect(),
+            q_sat: (0..layers).map(|l| g(l, "q_sat_frac")).collect(),
+            k_sat: (0..layers).map(|l| g(l, "k_sat_frac")).collect(),
+            v_sat: (0..layers).map(|l| g(l, "v_sat_frac")).collect(),
+            scale_range: (0..layers).map(|l| g(l, "scale_range")).collect(),
+        });
+    }
+
+    /// Publish the per-layer gauges from this step's activations + the
+    /// just-accumulated gradients (every K-th step, enabled domains only).
+    fn sample_probes(&mut self, acts: &ModelActs) {
+        let Some(p) = &mut self.probes else { return };
+        p.tick += 1;
+        if !p.telemetry.is_enabled() || p.tick % p.every != 0 {
+            return;
+        }
+        for (l, norm) in self.model.layer_grad_norms().iter().enumerate() {
+            p.grad_norm[l].set(*norm as f64);
+        }
+        for (l, c) in acts.layers.iter().enumerate() {
+            let q = e2m1_health(&c.qhm);
+            let k = e2m1_health(&c.khm);
+            let v = e2m1_health(&c.vhm);
+            p.q_sat[l].set(q.sat_frac as f64);
+            p.k_sat[l].set(k.sat_frac as f64);
+            p.v_sat[l].set(v.sat_frac as f64);
+            let range = q.scale_range().max(k.scale_range()).max(v.scale_range());
+            p.scale_range[l].set(range as f64);
+        }
     }
 
     /// Take the finetuned model out (e.g. to export and serve it).
@@ -561,9 +640,17 @@ impl TrainableModel for LmTrainTask {
         let bytes = self.corpus.stream(self.seq + 1);
         let inputs = &bytes[..self.seq];
         let targets = &bytes[1..];
-        let acts = self.model.forward_train(inputs, &mut self.engines);
+        let spans = self.probes.as_ref().map(|p| p.telemetry.spans().clone());
+        let acts = {
+            let _span = spans.as_ref().map(|s| crate::span!(s, "train.forward"));
+            self.model.forward_train(inputs, &mut self.engines)
+        };
         let (loss, dlogits) = cross_entropy(&acts.logits, VOCAB, targets);
-        self.model.backward(inputs, &acts, &dlogits);
+        {
+            let _span = spans.as_ref().map(|s| crate::span!(s, "train.backward"));
+            self.model.backward(inputs, &acts, &dlogits);
+        }
+        self.sample_probes(&acts);
         loss
     }
 
@@ -629,6 +716,29 @@ mod tests {
             tail < first,
             "loss should improve: first {first}, tail {tail}"
         );
+    }
+
+    #[test]
+    fn layer_probes_publish_grad_norms_and_sat_fracs() {
+        let model = QatModel::new(tiny_cfg());
+        let mut task = LmTrainTask::new(model, 16, 0xabcd);
+        let t = Telemetry::new();
+        task.attach_telemetry(&t, 1);
+        let mut session = TrainSession::new(task, TrainConfig::adam(1e-3));
+        session.attach_telemetry(&t);
+        session.run(2, 0, |_| {});
+        let reg = t.registry();
+        assert_eq!(reg.counter("train.steps").get(), 2);
+        let g0 = reg.gauge("train.layer0.grad_norm").get().unwrap();
+        assert!(g0.is_finite() && g0 > 0.0, "layer grad norm {g0}");
+        for metric in ["q_sat_frac", "k_sat_frac", "v_sat_frac"] {
+            let sat = reg.gauge(&format!("train.layer1.{metric}")).get().unwrap();
+            assert!((0.0..=1.0).contains(&sat), "{metric} = {sat}");
+        }
+        assert!(reg.gauge("train.layer0.scale_range").get().unwrap() >= 1.0);
+        let doc = t.snapshot();
+        assert_eq!(doc.get("config").get("train").get("optimizer").as_str(), Some("adam"));
+        assert!(doc.get("metrics").get("train").get("step_ms").get("count").as_f64().is_some());
     }
 
     #[test]

@@ -28,6 +28,8 @@
 //! the parameters survive it.
 
 use crate::coordinator::{LrSchedule, StepMetrics};
+use crate::json::Json;
+use crate::telemetry::{Counter, Gauge, Histogram, Telemetry};
 
 use super::optim::{Adam, Optimizer, OptimizerState, Sgd};
 
@@ -140,6 +142,47 @@ impl TrainConfig {
         self.watchdog = Some(wd);
         self
     }
+
+    /// Reflect the run's hyperparameters for the telemetry snapshot's
+    /// `config.train` section.
+    pub fn to_json(&self) -> Json {
+        let optimizer = match self.optimizer {
+            OptimizerKind::Sgd { .. } => "sgd",
+            OptimizerKind::Adam { .. } => "adam",
+        };
+        Json::obj(vec![
+            ("optimizer", Json::Str(optimizer.to_string())),
+            ("schedule", Json::Str(format!("{:?}", self.schedule))),
+            (
+                "grad_clip",
+                self.grad_clip.map_or(Json::Null, |c| Json::Num(c as f64)),
+            ),
+            ("divergence_threshold", Json::Num(self.divergence_threshold as f64)),
+            (
+                "watchdog",
+                self.watchdog.map_or(Json::Null, |wd| {
+                    Json::obj(vec![
+                        ("snapshot_every", Json::Num(wd.snapshot_every as f64)),
+                        ("grad_limit", Json::Num(wd.grad_limit as f64)),
+                        ("lr_backoff", Json::Num(wd.lr_backoff as f64)),
+                        ("max_rollbacks", Json::Num(wd.max_rollbacks as f64)),
+                    ])
+                }),
+            ),
+        ])
+    }
+}
+
+/// Pre-registered `train.*` handles (see the [`crate::telemetry`] module
+/// docs for the name map).
+struct SessionProbes {
+    telemetry: Telemetry,
+    steps: Counter,
+    rollbacks: Counter,
+    loss: Gauge,
+    grad_norm: Gauge,
+    lr: Gauge,
+    step_ms: Histogram,
 }
 
 /// A training run: model + optimizer state + metric history.
@@ -154,6 +197,9 @@ pub struct TrainSession<M: TrainableModel> {
     snapshot: Option<(Vec<Vec<f32>>, OptimizerState)>,
     lr_scale: f32,
     rollbacks: usize,
+    /// `None` until [`TrainSession::attach_telemetry`] — a detached
+    /// session publishes nothing and behaves bitwise as before.
+    probes: Option<SessionProbes>,
 }
 
 impl<M: TrainableModel> TrainSession<M> {
@@ -167,7 +213,25 @@ impl<M: TrainableModel> TrainSession<M> {
             snapshot: None,
             lr_scale: 1.0,
             rollbacks: 0,
+            probes: None,
         }
+    }
+
+    /// Register this session's `train.*` metrics in `telemetry`, reflect
+    /// the [`TrainConfig`] into the snapshot's `config.train` section,
+    /// and publish per-step gauges + spans from here on.
+    pub fn attach_telemetry(&mut self, telemetry: &Telemetry) {
+        telemetry.set_config("train", self.cfg.to_json());
+        let reg = telemetry.registry();
+        self.probes = Some(SessionProbes {
+            telemetry: telemetry.clone(),
+            steps: reg.counter("train.steps"),
+            rollbacks: reg.counter("train.rollbacks"),
+            loss: reg.gauge("train.loss"),
+            grad_norm: reg.gauge("train.grad_norm"),
+            lr: reg.gauge("train.lr"),
+            step_ms: reg.histogram("train.step_ms"),
+        });
     }
 
     /// Steps completed so far.
@@ -212,6 +276,10 @@ impl<M: TrainableModel> TrainSession<M> {
     /// bad steps apply as usual and the run records divergence as data.
     pub fn step(&mut self) -> StepMetrics {
         let t0 = std::time::Instant::now();
+        // Recorder cloned out of the probes (Arc bump) so span guards
+        // never hold a borrow of `self` across `&mut self` calls.
+        let spans = self.probes.as_ref().map(|p| p.telemetry.spans().clone());
+        let _step_span = spans.as_ref().map(|s| crate::span!(s, "train.step"));
         if self.cfg.watchdog.is_some() && self.snapshot.is_none() {
             // Baseline: the initial params are the first "last good" state.
             self.snapshot = Some(self.take_snapshot());
@@ -242,6 +310,7 @@ impl<M: TrainableModel> TrainSession<M> {
         if !rolled_back {
             if let Some(clip) = self.cfg.grad_clip {
                 if grad_norm.is_finite() && grad_norm > clip {
+                    let _span = spans.as_ref().map(|s| crate::span!(s, "train.clip"));
                     let s = clip / grad_norm;
                     self.model.visit_params(&mut |_, g| {
                         for x in g.iter_mut() {
@@ -250,6 +319,7 @@ impl<M: TrainableModel> TrainSession<M> {
                     });
                 }
             }
+            let _span = spans.as_ref().map(|s| crate::span!(s, "train.optim"));
             self.opt.begin_step();
             let opt = &mut self.opt;
             let mut idx = 0usize;
@@ -277,6 +347,16 @@ impl<M: TrainableModel> TrainSession<M> {
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
             rollback: rolled_back,
         };
+        if let Some(p) = &self.probes {
+            p.steps.inc();
+            if rolled_back {
+                p.rollbacks.inc();
+            }
+            p.loss.set(loss as f64);
+            p.grad_norm.set(grad_norm as f64);
+            p.lr.set(lr as f64);
+            p.step_ms.record(m.wall_ms);
+        }
         self.history.push(m);
         m
     }

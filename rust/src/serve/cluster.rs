@@ -41,6 +41,9 @@ use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::json::Json;
+use crate::telemetry::{Counter, Telemetry};
+
 use super::model::TokenModel;
 use super::shard::{ShardConfig, ShardStats};
 use super::supervisor::{SendOutcome, Supervisor, SupervisorConfig};
@@ -67,6 +70,35 @@ impl Default for ClusterConfig {
             shard: ShardConfig::default(),
             supervisor: SupervisorConfig::default(),
         }
+    }
+}
+
+impl ClusterConfig {
+    /// Reflect the full cluster shape for the telemetry snapshot's
+    /// `config.cluster` section.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shards", Json::Num(self.shards as f64)),
+            ("queue_depth", Json::Num(self.queue_depth as f64)),
+            (
+                "shard",
+                Json::obj(vec![
+                    ("slots", Json::Num(self.shard.slots as f64)),
+                    ("seq_max", Json::Num(self.shard.seq_max as f64)),
+                    ("sample_seed", Json::Num(self.shard.sample_seed as f64)),
+                    ("attn", self.shard.attn.to_json()),
+                ]),
+            ),
+            (
+                "supervisor",
+                Json::obj(vec![
+                    ("stall_timeout_ms", Json::Num(self.supervisor.stall_timeout_ms)),
+                    ("max_restarts", Json::Num(self.supervisor.max_restarts as f64)),
+                    ("submit_retries", Json::Num(self.supervisor.submit_retries as f64)),
+                    ("retry_backoff_us", Json::Num(self.supervisor.retry_backoff_us as f64)),
+                ]),
+            ),
+        ])
     }
 }
 
@@ -164,10 +196,20 @@ fn mix_id(id: u64) -> u64 {
     crate::rng::splitmix64(&mut state)
 }
 
+/// Pre-registered `serve.cluster.*` counters (admission outcomes).
+struct ClusterProbes {
+    submitted: Counter,
+    shed_deadline: Counter,
+    shed_capacity: Counter,
+    submit_retries: Counter,
+}
+
 /// The sharded decode cluster (see module docs).
 pub struct DecodeCluster {
     cfg: ClusterConfig,
     sup: Supervisor,
+    telemetry: Telemetry,
+    probes: ClusterProbes,
     submitted: usize,
     shed_deadline: usize,
     shed_capacity: usize,
@@ -181,27 +223,72 @@ impl DecodeCluster {
     /// bitwise-identical weights). The factory is retained: the
     /// supervisor re-invokes it to respawn a dead or stalled shard, so
     /// it must rebuild an identical model (same seed ⇒ replay is exact).
+    ///
+    /// Observability comes on by default (a fresh enabled [`Telemetry`]
+    /// domain); use [`DecodeCluster::spawn_observed`] to share a domain
+    /// with the caller or to serve with telemetry disabled.
     pub fn spawn<F>(cfg: ClusterConfig, model_factory: F) -> DecodeCluster
+    where
+        F: Fn(usize) -> Box<dyn TokenModel> + 'static,
+    {
+        DecodeCluster::spawn_observed(cfg, Telemetry::new(), model_factory)
+    }
+
+    /// [`DecodeCluster::spawn`] publishing into a caller-owned
+    /// [`Telemetry`] domain. The caller keeps a clone of `telemetry` to
+    /// read snapshots during the run and after [`DecodeCluster::drain`]
+    /// (which consumes the cluster).
+    pub fn spawn_observed<F>(
+        cfg: ClusterConfig,
+        telemetry: Telemetry,
+        model_factory: F,
+    ) -> DecodeCluster
     where
         F: Fn(usize) -> Box<dyn TokenModel> + 'static,
     {
         assert!(cfg.shards > 0, "cluster needs at least one shard");
         assert!(cfg.queue_depth > 0, "queue depth must be positive");
+        telemetry.set_config("cluster", cfg.to_json());
+        let reg = telemetry.registry();
+        let probes = ClusterProbes {
+            submitted: reg.counter("serve.cluster.submitted"),
+            shed_deadline: reg.counter("serve.cluster.shed_deadline"),
+            shed_capacity: reg.counter("serve.cluster.shed_capacity"),
+            submit_retries: reg.counter("serve.cluster.submit_retries"),
+        };
         let sup = Supervisor::new(
             cfg.shards,
             cfg.queue_depth,
             cfg.shard,
             cfg.supervisor,
+            telemetry.clone(),
             Box::new(model_factory),
         );
         DecodeCluster {
             cfg,
             sup,
+            telemetry,
+            probes,
             submitted: 0,
             shed_deadline: 0,
             shed_capacity: 0,
             submit_retries: 0,
         }
+    }
+
+    /// The cluster's observability domain (clone it to keep reading after
+    /// drain).
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.telemetry
+    }
+
+    /// One schema-versioned JSON document reflecting live config, the
+    /// full metric registry (per-shard queue depths, throughput, tail
+    /// latency, qcache hit rates, KV occupancy, supervisor health), and
+    /// the span summary — [`Telemetry::snapshot`] over the cluster's
+    /// domain. The shape is pinned by `rust/tests/telemetry.rs`.
+    pub fn introspect(&self) -> Json {
+        self.telemetry.snapshot()
     }
 
     /// Which shard serves request id `id`.
@@ -238,9 +325,12 @@ impl DecodeCluster {
     /// (the only `Err` case).
     pub fn submit(&mut self, req: Request) -> Result<Admission> {
         let shard = self.route(req.id);
+        let spans = self.telemetry.spans().clone();
+        let _span = crate::span!(spans, "route", shard = shard);
         self.sup.check(shard)?;
         if self.infeasible(shard, &req) {
             self.shed_deadline += 1;
+            self.probes.shed_deadline.inc();
             return Ok(Admission::ShedDeadline);
         }
         let mut attempts = 0usize;
@@ -249,15 +339,18 @@ impl DecodeCluster {
             match self.sup.try_send(shard, req) {
                 SendOutcome::Sent => {
                     self.submitted += 1;
+                    self.probes.submitted.inc();
                     return Ok(Admission::Accepted);
                 }
                 SendOutcome::Full(r) | SendOutcome::Gone(r) => {
                     req = r;
                     attempts += 1;
                     self.submit_retries += 1;
+                    self.probes.submit_retries.inc();
                     let sup_cfg = self.sup.config();
                     if req.deadline_ms.is_some() && attempts > sup_cfg.submit_retries {
                         self.shed_capacity += 1;
+                        self.probes.shed_capacity.inc();
                         return Ok(Admission::ShedCapacity);
                     }
                     // Exponential backoff, capped at 5 ms per wait.
@@ -269,6 +362,7 @@ impl DecodeCluster {
                     // The wait may have made the deadline infeasible.
                     if self.infeasible(shard, &req) {
                         self.shed_deadline += 1;
+                        self.probes.shed_deadline.inc();
                         return Ok(Admission::ShedDeadline);
                     }
                 }
@@ -294,6 +388,7 @@ impl DecodeCluster {
         match self.sup.try_send(shard, req) {
             SendOutcome::Sent => {
                 self.submitted += 1;
+                self.probes.submitted.inc();
                 Ok(None)
             }
             SendOutcome::Full(r) | SendOutcome::Gone(r) => Ok(Some(r)),
@@ -314,6 +409,8 @@ impl DecodeCluster {
     pub fn drain(self) -> Result<(Vec<Completion>, ClusterStats)> {
         let (shed_deadline, shed_capacity, submit_retries) =
             (self.shed_deadline, self.shed_capacity, self.submit_retries);
+        let spans = self.telemetry.spans().clone();
+        let _span = crate::span!(spans, "drain");
         let report = self.sup.drain()?;
         let mut shards = report.shards;
         shards.sort_by_key(|s| s.shard);

@@ -86,6 +86,37 @@
 //! prompt, duplicate in-flight id), which do complete with
 //! `new_tokens == 0`.
 //!
+//! ## Observability
+//!
+//! Every layer publishes into the unified [`crate::telemetry`] registry:
+//! shard workers own `serve.shard{i}.*` gauges/histograms (queue depth,
+//! tokens/s, p50/p99 per-token latency, aggregated quantized-query-cache
+//! hit rate, KV bytes), the supervisor counts `serve.supervisor.*`
+//! restarts/replays/recomputes, and the router counts `serve.cluster.*`
+//! admissions and sheds — the full metric-name → source-site map lives
+//! in the [`crate::telemetry`] module docs. The typed [`ClusterStats`] /
+//! [`shard::ShardStats`] facades remain the drain-time source of truth;
+//! the registry republishes exactly those values at drain (pinned by the
+//! parity test in `rust/tests/telemetry.rs`), so dashboards and tests
+//! never disagree.
+//!
+//! The reflection endpoint is [`cluster::DecodeCluster::introspect`] /
+//! [`crate::telemetry::Telemetry::snapshot`]: one schema-versioned JSON
+//! doc with the live [`ClusterConfig`] (per-layer attention included),
+//! every metric, and span-ring statistics over the
+//! admission→route→prefill→decode→drain path. `repro serve cluster
+//! --json` (or `repro serve stats`) prints it; `--stats-every-ms T`
+//! streams snapshot lines to `results/serve_cluster_stats.jsonl` while
+//! the run is live.
+//!
+//! Instrumentation never perturbs the math: probes are relaxed atomic
+//! stores off the per-token float path, a detached or disabled
+//! [`crate::telemetry::Telemetry`] costs one atomic load per span site,
+//! and respawned shard incarnations re-attach to the same metric names.
+//! The bitwise placement-invariance and replay contracts below hold with
+//! telemetry on or off (guarded within 3% tokens/s by
+//! `benches/cluster_serve.rs`).
+//!
 //! ## Train→serve
 //!
 //! Since the `model` subsystem landed, the cluster serves **trained**

@@ -28,6 +28,7 @@ use anyhow::Result;
 use crate::attention::{AttnConfig, AttnEngine};
 use crate::kvcache::{PagedKvCache, SeqSlot};
 use crate::rng::Rng;
+use crate::telemetry::{Counter, Gauge, Histogram, Telemetry};
 
 use super::model::{TokenModel, VOCAB};
 use super::{argmax, Completion, Request, sample_temp};
@@ -117,6 +118,58 @@ struct StepBufs {
     logits: Vec<f32>,
 }
 
+/// Pre-registered `serve.shard{i}.*` telemetry handles (the full name →
+/// site map lives in the [`crate::telemetry`] module docs). Handles are
+/// resolved once at [`ShardWorker::attach_telemetry`]; the per-pass
+/// publish path is relaxed atomic stores only.
+struct ShardProbes {
+    telemetry: Telemetry,
+    shard: usize,
+    queue_depth: Gauge,
+    active: Gauge,
+    requests: Counter,
+    rejected: Counter,
+    steps: Counter,
+    tokens: Counter,
+    tokens_per_s: Gauge,
+    p50_token_ms: Gauge,
+    p99_token_ms: Gauge,
+    ewma_token_ms: Gauge,
+    token_ms: Histogram,
+    qcache_hits: Gauge,
+    qcache_misses: Gauge,
+    qcache_hit_rate: Gauge,
+    kv_bytes: Gauge,
+    kv_bytes_peak: Gauge,
+    kv_bytes_f32_equiv_peak: Gauge,
+}
+
+impl ShardProbes {
+    /// Republish the authoritative drain-time values so the registry view
+    /// and the [`ShardStats`] facade agree exactly (pinned by the parity
+    /// test in `rust/tests/telemetry.rs`).
+    fn publish_final(&self, s: &ShardStats) {
+        self.requests.set(s.requests as u64);
+        self.rejected.set(s.rejected as u64);
+        self.steps.set(s.steps as u64);
+        self.tokens.set(s.tokens as u64);
+        self.tokens_per_s.set(s.tokens_per_s);
+        self.p50_token_ms.set(s.p50_token_ms);
+        self.p99_token_ms.set(s.p99_token_ms);
+        if let Some(ewma) = s.ewma_token_ms {
+            self.ewma_token_ms.set(ewma);
+        }
+        self.qcache_hits.set(s.qcache_hits as f64);
+        self.qcache_misses.set(s.qcache_misses as f64);
+        let lookups = s.qcache_hits + s.qcache_misses;
+        if lookups > 0 {
+            self.qcache_hit_rate.set(s.qcache_hits as f64 / lookups as f64);
+        }
+        self.kv_bytes_peak.set(s.kv_bytes_peak as f64);
+        self.kv_bytes_f32_equiv_peak.set(s.kv_bytes_f32_equiv_peak as f64);
+    }
+}
+
 /// A single decode shard (usable standalone as a native single-worker
 /// decode server — the cluster's reference for bitwise determinism).
 pub struct ShardWorker {
@@ -139,6 +192,9 @@ pub struct ShardWorker {
     token_ms: Vec<f64>,
     kv_peak: usize,
     kv_f32_peak: usize,
+    /// `None` until [`ShardWorker::attach_telemetry`] — a detached worker
+    /// publishes nothing and behaves bitwise as before.
+    probes: Option<ShardProbes>,
 }
 
 impl ShardWorker {
@@ -164,7 +220,38 @@ impl ShardWorker {
             token_ms: Vec::new(),
             kv_peak: 0,
             kv_f32_peak: 0,
+            probes: None,
         }
+    }
+
+    /// Register this worker's `serve.shard{shard}.*` metrics in
+    /// `telemetry` and publish into them from here on — live gauges from
+    /// [`ShardWorker::step`], authoritative totals from
+    /// [`ShardWorker::stats`] at drain.
+    pub fn attach_telemetry(&mut self, telemetry: &Telemetry, shard: usize) {
+        let reg = telemetry.registry();
+        let name = |metric: &str| format!("serve.shard{shard}.{metric}");
+        self.probes = Some(ShardProbes {
+            telemetry: telemetry.clone(),
+            shard,
+            queue_depth: reg.gauge(&name("queue_depth")),
+            active: reg.gauge(&name("active")),
+            requests: reg.counter(&name("requests")),
+            rejected: reg.counter(&name("rejected")),
+            steps: reg.counter(&name("steps")),
+            tokens: reg.counter(&name("tokens")),
+            tokens_per_s: reg.gauge(&name("tokens_per_s")),
+            p50_token_ms: reg.gauge(&name("p50_token_ms")),
+            p99_token_ms: reg.gauge(&name("p99_token_ms")),
+            ewma_token_ms: reg.gauge(&name("ewma_token_ms")),
+            token_ms: reg.histogram(&name("token_ms")),
+            qcache_hits: reg.gauge(&name("qcache_hits")),
+            qcache_misses: reg.gauge(&name("qcache_misses")),
+            qcache_hit_rate: reg.gauge(&name("qcache_hit_rate")),
+            kv_bytes: reg.gauge(&name("kv_bytes")),
+            kv_bytes_peak: reg.gauge(&name("kv_bytes_peak")),
+            kv_bytes_f32_equiv_peak: reg.gauge(&name("kv_bytes_f32_equiv_peak")),
+        });
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -196,14 +283,22 @@ impl ShardWorker {
         let t0 = std::time::Instant::now();
         let mut processed = 0usize;
 
+        // Span recorder cloned out of the probes (Arc bump, no alloc) so
+        // guards never hold a borrow of `self` across `&mut self` calls.
+        let spans = self.probes.as_ref().map(|p| (p.telemetry.spans().clone(), p.shard));
+
         // Admission: prompt prefill + first sampled token per request.
-        while self.active.len() < self.cfg.slots {
-            let Some(req) = self.queue.pop_front() else { break };
-            processed += self.admit(req)?;
+        if !self.queue.is_empty() {
+            let _span = spans.as_ref().map(|(s, sh)| crate::span!(s, "admit", shard = *sh));
+            while self.active.len() < self.cfg.slots {
+                let Some(req) = self.queue.pop_front() else { break };
+                processed += self.admit(req)?;
+            }
         }
 
         // Decode: one token per active lane.
         if !self.active.is_empty() {
+            let _span = spans.as_ref().map(|(s, sh)| crate::span!(s, "decode", shard = *sh));
             let dec0 = std::time::Instant::now();
             let mut finished = Vec::new();
             for lane in 0..self.active.len() {
@@ -241,6 +336,9 @@ impl ShardWorker {
             let per_tok_ms = dec0.elapsed().as_secs_f64() * 1e3 / self.active.len() as f64;
             for _ in 0..self.active.len() {
                 self.token_ms.push(per_tok_ms);
+                if let Some(p) = &self.probes {
+                    p.token_ms.record(per_tok_ms);
+                }
             }
             for &lane in finished.iter().rev() {
                 self.finish(lane)?;
@@ -250,6 +348,12 @@ impl ShardWorker {
         self.steps += 1;
         self.tokens += processed;
         self.busy_ns += t0.elapsed().as_nanos() as f64;
+        if let Some(p) = &self.probes {
+            p.queue_depth.set(self.queue.len() as f64);
+            p.active.set(self.active.len() as f64);
+            p.steps.set(self.steps as u64);
+            p.tokens.set(self.tokens as u64);
+        }
         Ok(processed)
     }
 
@@ -261,6 +365,9 @@ impl ShardWorker {
         let (used, equiv) = self.cache.memory_stats();
         self.kv_peak = self.kv_peak.max(used);
         self.kv_f32_peak = self.kv_f32_peak.max(equiv);
+        if let Some(p) = &self.probes {
+            p.kv_bytes.set(used as f64);
+        }
     }
 
     /// Admit one request: resolve its slot, ingest the whole prompt
@@ -304,15 +411,21 @@ impl ShardWorker {
         let slot = self.cache.add_seq(req.id);
         let lane = self.active.len();
         let nq = tokens.len();
-        forward_rows(
-            self.model.as_ref(),
-            &mut self.cache,
-            &mut self.engines[lane],
-            &mut self.bufs,
-            slot,
-            &tokens,
-            0,
-        )?;
+        {
+            let _span = self
+                .probes
+                .as_ref()
+                .map(|p| crate::span!(p.telemetry.spans(), "prefill", shard = p.shard));
+            forward_rows(
+                self.model.as_ref(),
+                &mut self.cache,
+                &mut self.engines[lane],
+                &mut self.bufs,
+                slot,
+                &tokens,
+                0,
+            )?;
+        }
         let d = self.model.d_model();
         self.bufs.logits.resize(VOCAB, 0.0);
         self.model.logits(&self.bufs.h[(nq - 1) * d..nq * d], &mut self.bufs.logits);
@@ -326,6 +439,9 @@ impl ShardWorker {
         let per_tok_ms = started.elapsed().as_secs_f64() * 1e3 / nq as f64;
         for _ in 0..nq {
             self.token_ms.push(per_tok_ms);
+            if let Some(p) = &self.probes {
+                p.token_ms.record(per_tok_ms);
+            }
         }
         let a = ActiveSeq { req, slot, tokens, prompt_tokens: nq, generated: 1, rng, started };
         self.active.push(a);
@@ -368,6 +484,16 @@ impl ShardWorker {
         std::mem::take(&mut self.done)
     }
 
+    /// Quantized-query cache hits/misses aggregated across this shard's
+    /// engine lanes — the one authoritative per-shard rollup behind both
+    /// [`ShardStats`] and the `serve.shard{i}.qcache_*` gauges.
+    pub fn qcache_totals(&self) -> (u64, u64) {
+        self.engines.iter().fold((0u64, 0u64), |(hits, misses), e| {
+            let (h, m) = e.query_cache_stats();
+            (hits + h, misses + m)
+        })
+    }
+
     /// Snapshot the shard's statistics (percentiles computed here).
     pub fn stats(&self, shard: usize) -> ShardStats {
         let mut sorted = self.token_ms.clone();
@@ -379,19 +505,14 @@ impl ShardWorker {
                 sorted[((sorted.len() - 1) as f64 * p).round() as usize]
             }
         };
-        let (mut hits, mut misses) = (0u64, 0u64);
-        for e in &self.engines {
-            let (h, m) = e.query_cache_stats();
-            hits += h;
-            misses += m;
-        }
+        let (hits, misses) = self.qcache_totals();
         let busy_s = self.busy_ns * 1e-9;
         let alpha = crate::serve::supervisor::EWMA_ALPHA;
         let ewma = self.token_ms.iter().fold(None, |acc, &ms| match acc {
             None => Some(ms),
             Some(prev) => Some((1.0 - alpha) * prev + alpha * ms),
         });
-        ShardStats {
+        let stats = ShardStats {
             shard,
             requests: self.requests,
             rejected: self.rejected,
@@ -407,7 +528,11 @@ impl ShardWorker {
             qcache_misses: misses,
             kv_bytes_peak: self.kv_peak,
             kv_bytes_f32_equiv_peak: self.kv_f32_peak,
+        };
+        if let Some(p) = &self.probes {
+            p.publish_final(&stats);
         }
+        stats
     }
 }
 

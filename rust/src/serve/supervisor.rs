@@ -47,6 +47,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::telemetry::{Counter, Telemetry};
+
 use super::model::TokenModel;
 use super::shard::{ShardConfig, ShardStats, ShardWorker};
 use super::{Completion, Request};
@@ -408,6 +410,12 @@ pub(crate) struct Supervisor {
     restarts: usize,
     replayed: usize,
     recomputed_passes: usize,
+    /// Cluster-wide observability domain; each (re)spawned worker
+    /// attaches its `serve.shard{i}.*` handles to this.
+    obs: Telemetry,
+    restarts_ctr: Counter,
+    replayed_ctr: Counter,
+    recomputed_ctr: Counter,
 }
 
 impl Supervisor {
@@ -416,11 +424,13 @@ impl Supervisor {
         queue_depth: usize,
         shard_cfg: ShardConfig,
         cfg: SupervisorConfig,
+        obs: Telemetry,
         factory: Box<dyn Fn(usize) -> Box<dyn TokenModel>>,
     ) -> Supervisor {
         let shards = (0..n_shards)
             .map(|id| {
-                let (tx, join, telemetry) = spawn_shard(id, factory(id), shard_cfg, queue_depth);
+                let (tx, join, telemetry) =
+                    spawn_shard(id, factory(id), shard_cfg, queue_depth, obs.clone());
                 Slot {
                     tx,
                     join: Some(join),
@@ -434,6 +444,10 @@ impl Supervisor {
                 }
             })
             .collect();
+        let reg = obs.registry();
+        let restarts_ctr = reg.counter("serve.supervisor.restarts");
+        let replayed_ctr = reg.counter("serve.supervisor.replayed_requests");
+        let recomputed_ctr = reg.counter("serve.supervisor.recomputed_passes");
         Supervisor {
             cfg,
             shard_cfg,
@@ -443,6 +457,10 @@ impl Supervisor {
             restarts: 0,
             replayed: 0,
             recomputed_passes: 0,
+            obs,
+            restarts_ctr,
+            replayed_ctr,
+            recomputed_ctr,
         }
     }
 
@@ -524,9 +542,12 @@ impl Supervisor {
             }
             self.shards[shard].restarts += 1;
             self.restarts += 1;
+            self.restarts_ctr.inc();
             // The dead incarnation's finished passes are lost with it and
             // recomputed by replay.
-            self.recomputed_passes += self.shards[shard].telemetry.passes() as usize;
+            let lost = self.shards[shard].telemetry.passes();
+            self.recomputed_passes += lost as usize;
+            self.recomputed_ctr.add(lost);
             eprintln!(
                 "[supervisor] shard {shard}: {why}; respawn {}/{} replaying {} request(s)",
                 self.shards[shard].restarts,
@@ -535,7 +556,7 @@ impl Supervisor {
             );
             let model = (self.factory)(shard);
             let (tx, join, telemetry) =
-                spawn_shard(shard, model, self.shard_cfg, self.queue_depth);
+                spawn_shard(shard, model, self.shard_cfg, self.queue_depth, self.obs.clone());
             // Replacing tx abandons the old incarnation: if it was merely
             // stalled (unkillable), it exits on its own once it observes
             // the disconnected channel, and its late results are dropped
@@ -548,6 +569,7 @@ impl Supervisor {
             slot.last_beat_at = Instant::now();
             let journal = slot.journal.clone();
             self.replayed += journal.len();
+            self.replayed_ctr.add(journal.len() as u64);
             match self.replay(shard, journal) {
                 None => return Ok(()),
                 Some(failure) => why = failure,
@@ -703,6 +725,7 @@ fn spawn_shard(
     model: Box<dyn TokenModel>,
     cfg: ShardConfig,
     queue_depth: usize,
+    obs: Telemetry,
 ) -> (SyncSender<ShardMsg>, JoinHandle<ShardResult>, Arc<ShardTelemetry>) {
     install_supervised_hook();
     let (tx, rx) = sync_channel::<ShardMsg>(queue_depth);
@@ -710,7 +733,8 @@ fn spawn_shard(
     let tele = telemetry.clone();
     let join = std::thread::spawn(move || {
         SUPERVISED.with(|s| s.set(true));
-        match catch_unwind(AssertUnwindSafe(|| shard_loop(shard_id, model, cfg, rx, tele))) {
+        let loop_body = || shard_loop(shard_id, model, cfg, rx, tele, obs);
+        match catch_unwind(AssertUnwindSafe(loop_body)) {
             Ok(res) => res,
             Err(p) => Err(anyhow!("shard {shard_id} panicked: {}", panic_msg(&p))),
         }
@@ -744,8 +768,10 @@ fn shard_loop(
     cfg: ShardConfig,
     rx: Receiver<ShardMsg>,
     telemetry: Arc<ShardTelemetry>,
+    obs: Telemetry,
 ) -> ShardResult {
     let mut w = ShardWorker::new(model, cfg);
+    w.attach_telemetry(&obs, shard_id);
     let mut draining = false;
     loop {
         telemetry.beat();

@@ -1,0 +1,229 @@
+//! Unified observability: metrics registry + JSON reflection + tracing
+//! spans.
+//!
+//! One [`Telemetry`] handle (cheaply cloneable — everything inside is
+//! `Arc`-shared) is threaded through a cluster or train session; every
+//! component publishes into the same [`Registry`] and span ring, and
+//! [`Telemetry::snapshot`] reflects registry + live config into **one
+//! schema-versioned JSON document** (the rhai `export_to_json`
+//! reflections idiom): what `serve cluster --json`, `serve stats`,
+//! `DecodeCluster::introspect`, and the `--stats-every-ms` periodic
+//! writer all emit, and what `rust/tests/telemetry.rs` pins as a golden
+//! schema. The typed stat structs (`serve::ClusterStats`,
+//! `coordinator::StepMetrics`) remain the bitwise facades existing tests
+//! consume; the registry carries the same values under stable names.
+//!
+//! # Metric-name map
+//!
+//! | name | kind | published by |
+//! |------|------|--------------|
+//! | `serve.shard{i}.queue_depth` | gauge | `ShardWorker::step` (live backlog) |
+//! | `serve.shard{i}.active` | gauge | `ShardWorker::step` (occupied decode lanes) |
+//! | `serve.shard{i}.requests` | counter | `ShardWorker::stats` (admitted requests) |
+//! | `serve.shard{i}.rejected` | counter | `ShardWorker::stats` |
+//! | `serve.shard{i}.steps` | counter | `ShardWorker::stats` (decode passes) |
+//! | `serve.shard{i}.tokens` | counter | `ShardWorker::step` live, finalized in `stats` |
+//! | `serve.shard{i}.tokens_per_s` | gauge | `ShardWorker::stats` |
+//! | `serve.shard{i}.p50_token_ms` / `.p99_token_ms` / `.ewma_token_ms` | gauge | `ShardWorker::stats` |
+//! | `serve.shard{i}.token_ms` | histogram | `ShardWorker::step` (per-lane per-pass) |
+//! | `serve.shard{i}.qcache_hits` / `.qcache_misses` | gauge | `ShardWorker` (summed over engine lanes) |
+//! | `serve.shard{i}.qcache_hit_rate` | gauge | `ShardWorker` (hits / lookups) |
+//! | `serve.shard{i}.kv_bytes` | gauge | `ShardWorker` (live KV occupancy) |
+//! | `serve.shard{i}.kv_bytes_peak` / `.kv_bytes_f32_equiv_peak` | gauge | `ShardWorker::stats` |
+//! | `serve.cluster.submitted` | counter | `DecodeCluster::submit` |
+//! | `serve.cluster.shed_deadline` / `.shed_capacity` | counter | `DecodeCluster` admission |
+//! | `serve.cluster.submit_retries` | counter | `DecodeCluster` backpressure loop |
+//! | `serve.supervisor.restarts` | counter | `Supervisor::respawn_and_replay` |
+//! | `serve.supervisor.replayed_requests` | counter | `Supervisor::respawn_and_replay` |
+//! | `serve.supervisor.recomputed_passes` | counter | `Supervisor::respawn_and_replay` |
+//! | `train.steps` | counter | `TrainSession::step` |
+//! | `train.rollbacks` | counter | `TrainSession::step` (watchdog) |
+//! | `train.loss` / `train.grad_norm` / `train.lr` | gauge | `TrainSession::step` |
+//! | `train.step_ms` | histogram | `TrainSession::step` |
+//! | `train.layer{l}.grad_norm` | gauge | `LmTrainTask` probe (every K steps) |
+//! | `train.layer{l}.q_sat_frac` / `.k_sat_frac` / `.v_sat_frac` | gauge | `LmTrainTask` probe ([`probes::e2m1_health`]) |
+//! | `train.layer{l}.scale_range` | gauge | `LmTrainTask` probe (per-block scale spread) |
+//!
+//! Span names (ring-buffered, see [`SpanRecorder`]): serve-side
+//! `admit`, `route`, `prefill`, `decode`, `drain` (tagged `shard`);
+//! train-side `train.step`, `train.forward`, `train.backward`,
+//! `train.clip`, `train.optim`.
+//!
+//! # Schema
+//!
+//! `snapshot()` returns `{schema_version, enabled, config, metrics,
+//! spans}`. `config` holds reflected live configuration (cluster shape,
+//! attention variant, train hyperparameters) installed via
+//! [`Telemetry::set_config`]; `metrics` is the registry rendered as a
+//! nested tree (dotted names split on `.`); `spans` is
+//! [`SpanRecorder::to_json`]. The schema is versioned and **additive
+//! only**: removing or renaming a key requires bumping
+//! [`SCHEMA_VERSION`], and the golden test in `rust/tests/telemetry.rs`
+//! enforces the current shape.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::json::Json;
+
+pub mod probes;
+pub mod registry;
+pub mod runmeta;
+pub mod span;
+
+pub use registry::{Counter, Gauge, Histogram, Metric, Registry};
+pub use runmeta::{git_rev, runmeta};
+pub use span::{SpanGuard, SpanRecord, SpanRecorder};
+
+/// Version stamped into every snapshot document. Bump on any
+/// non-additive schema change.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One observability domain: registry + span ring + reflected config.
+///
+/// Clone freely — clones share state. Components take a `Telemetry` (or
+/// pre-registered handles derived from one) at attach time and publish
+/// unconditionally; the `disabled` constructor turns the span recorder
+/// off and lets sampling sites skip probe work via
+/// [`Telemetry::is_enabled`], so a disabled domain costs a few relaxed
+/// atomic stores per pass and allocates nothing.
+#[derive(Clone)]
+pub struct Telemetry {
+    enabled: Arc<AtomicBool>,
+    registry: Registry,
+    spans: SpanRecorder,
+    config: Arc<Mutex<BTreeMap<String, Json>>>,
+}
+
+impl Telemetry {
+    /// Enabled telemetry with the default span-ring capacity.
+    pub fn new() -> Telemetry {
+        Telemetry::with_span_capacity(SpanRecorder::DEFAULT_CAPACITY)
+    }
+
+    /// Enabled telemetry retaining the newest `capacity` spans.
+    pub fn with_span_capacity(capacity: usize) -> Telemetry {
+        Telemetry {
+            enabled: Arc::new(AtomicBool::new(true)),
+            registry: Registry::new(),
+            spans: SpanRecorder::new(capacity),
+            config: Arc::new(Mutex::new(BTreeMap::new())),
+        }
+    }
+
+    /// Disabled telemetry: spans are no-ops, [`Telemetry::is_enabled`]
+    /// gates sampling work off, handle publishes stay (cheap) atomic
+    /// stores.
+    pub fn disabled() -> Telemetry {
+        let t = Telemetry::new();
+        t.set_enabled(false);
+        t
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+        self.spans.set_enabled(on);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn spans(&self) -> &SpanRecorder {
+        &self.spans
+    }
+
+    /// Install (or replace) a reflected-config subtree, e.g.
+    /// `set_config("cluster", cfg.to_json())`. Keys surface under the
+    /// snapshot's `config` object.
+    pub fn set_config(&self, key: &str, value: Json) {
+        self.config.lock().unwrap().insert(key.to_string(), value);
+    }
+
+    /// Reflect everything into one schema-versioned JSON document (see
+    /// module docs for the shape).
+    pub fn snapshot(&self) -> Json {
+        let mut metrics = BTreeMap::new();
+        self.registry.visit(&mut |name, metric| {
+            insert_path(&mut metrics, name, metric.to_json());
+        });
+        Json::obj(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+            ("enabled", Json::Bool(self.is_enabled())),
+            ("config", Json::Obj(self.config.lock().unwrap().clone())),
+            ("metrics", Json::Obj(metrics)),
+            ("spans", self.spans.to_json()),
+        ])
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Telemetry {
+        Telemetry::new()
+    }
+}
+
+/// Insert `leaf` at the dotted `path` inside a nested object tree,
+/// creating intermediate objects (and overwriting a non-object
+/// intermediate — dotted names are expected to be prefix-free).
+fn insert_path(root: &mut BTreeMap<String, Json>, path: &str, leaf: Json) {
+    let mut segs: Vec<&str> = path.split('.').collect();
+    let last = segs.pop().unwrap_or(path);
+    let mut node = root;
+    for seg in segs {
+        let child = node.entry(seg.to_string()).or_insert_with(|| Json::Obj(BTreeMap::new()));
+        if !matches!(child, Json::Obj(_)) {
+            *child = Json::Obj(BTreeMap::new());
+        }
+        node = match child {
+            Json::Obj(obj) => obj,
+            _ => unreachable!("just normalized to an object"),
+        };
+    }
+    node.insert(last.to_string(), leaf);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_nests_dotted_names() {
+        let t = Telemetry::new();
+        t.registry().counter("serve.shard0.tokens").add(7);
+        t.registry().gauge("serve.shard0.queue_depth").set(3.0);
+        t.registry().counter("train.steps").add(2);
+        t.set_config("cluster", Json::obj(vec![("shards", Json::Num(4.0))]));
+        let doc = t.snapshot();
+        assert_eq!(doc.get("schema_version").as_f64(), Some(1.0));
+        assert_eq!(doc.get("config").get("cluster").get("shards").as_f64(), Some(4.0));
+        let shard0 = doc.get("metrics").get("serve").get("shard0");
+        assert_eq!(shard0.get("tokens").as_f64(), Some(7.0));
+        assert_eq!(shard0.get("queue_depth").as_f64(), Some(3.0));
+        assert_eq!(doc.get("metrics").get("train").get("steps").as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let t = Telemetry::new();
+        let u = t.clone();
+        u.registry().counter("n").inc();
+        assert_eq!(t.registry().counter("n").get(), 1);
+        u.set_enabled(false);
+        assert!(!t.is_enabled());
+    }
+
+    #[test]
+    fn disabled_snapshot_still_reflects() {
+        let t = Telemetry::disabled();
+        t.registry().counter("c").add(5);
+        let doc = t.snapshot();
+        assert_eq!(doc.get("enabled"), &Json::Bool(false));
+        assert_eq!(doc.get("metrics").get("c").as_f64(), Some(5.0));
+    }
+}

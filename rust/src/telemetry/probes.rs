@@ -1,0 +1,130 @@
+//! Quantization-health probes: the numeric side of the per-layer QAT
+//! gauges (`train.layer{l}.*` — see the module docs in
+//! [`super`]).
+//!
+//! *Full-Stack FP4* and *FP4 All the Way* (PAPERS.md) both argue FP4
+//! instability is per-component and shows up in the quantizer statistics
+//! before the loss diverges. [`e2m1_health`] measures exactly that over a
+//! staged activation buffer: blocks are scaled the way every quantized
+//! path in this repo scales them (per-16-element absmax mapped onto
+//! [`e2m1::MAX`]), and the probe reports what fraction of elements land
+//! on the top E2M1 code plus the spread of per-block scales. A layer
+//! whose gradients are blowing up flattens its activation distribution —
+//! `sat_frac` climbs and the scale range widens steps before the
+//! watchdog's global grad-norm limit trips (see `exp fig3`'s
+//! `fig3_probes.json`).
+
+use crate::formats::e2m1;
+
+/// Quantization block length shared by every packed path in the repo.
+pub const QUANT_BLOCK: usize = 16;
+
+/// Per-block E2M1 health statistics from [`e2m1_health`].
+#[derive(Clone, Copy, Debug)]
+pub struct QuantHealth {
+    /// Fraction of (non-zero-block) elements encoding to the top
+    /// magnitude code (±6 after scaling). Healthy bell-shaped blocks sit
+    /// well below 1/16; a flattening distribution pushes this up.
+    pub sat_frac: f32,
+    /// Smallest per-block scale (absmax / 6) over non-zero blocks.
+    pub scale_min: f32,
+    /// Largest per-block scale over non-zero blocks.
+    pub scale_max: f32,
+    /// Non-zero blocks measured.
+    pub blocks: usize,
+}
+
+impl QuantHealth {
+    /// `scale_max / scale_min` (1.0 = uniform; 0.0 when nothing was
+    /// measured) — the "P̃ scale range" style dynamic-range gauge.
+    pub fn scale_range(&self) -> f32 {
+        if self.blocks == 0 || self.scale_min <= 0.0 {
+            0.0
+        } else {
+            self.scale_max / self.scale_min
+        }
+    }
+}
+
+/// Measure E2M1 block-quantization health of `x` (any staged activation
+/// buffer — per-layer Q/K/V in practice), per 16-element block: scale =
+/// absmax / [`e2m1::MAX`], an element is *saturated* when it rounds to
+/// the top magnitude. All-zero or non-finite blocks are skipped.
+pub fn e2m1_health(x: &[f32]) -> QuantHealth {
+    let mut saturated = 0usize;
+    let mut total = 0usize;
+    let mut scale_min = f32::INFINITY;
+    let mut scale_max = 0.0f32;
+    let mut blocks = 0usize;
+    for block in x.chunks(QUANT_BLOCK) {
+        let absmax = block.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        if absmax == 0.0 || !absmax.is_finite() {
+            continue;
+        }
+        let scale = absmax / e2m1::MAX;
+        blocks += 1;
+        scale_min = scale_min.min(scale);
+        scale_max = scale_max.max(scale);
+        for v in block {
+            total += 1;
+            if e2m1::encode(v / scale) & 0x7 == 0x7 {
+                saturated += 1;
+            }
+        }
+    }
+    QuantHealth {
+        sat_frac: if total == 0 { 0.0 } else { saturated as f32 / total as f32 },
+        scale_min: if blocks == 0 { 0.0 } else { scale_min },
+        scale_max,
+        blocks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_zero_blocks_measure_nothing() {
+        let h = e2m1_health(&[]);
+        assert_eq!(h.blocks, 0);
+        assert_eq!(h.sat_frac, 0.0);
+        assert_eq!(h.scale_range(), 0.0);
+        let h = e2m1_health(&[0.0; 32]);
+        assert_eq!(h.blocks, 0);
+    }
+
+    #[test]
+    fn absmax_always_saturates_and_midrange_does_not() {
+        // One block: absmax 6.0 → scale 1.0. The 6.0 element encodes to
+        // the top code; 3.0 encodes to code 5; tiny values to low codes.
+        let mut block = [0.1f32; 16];
+        block[0] = 6.0;
+        block[1] = 3.0;
+        block[2] = -6.0;
+        let h = e2m1_health(&block);
+        assert_eq!(h.blocks, 1);
+        assert!((h.scale_min - 1.0).abs() < 1e-6);
+        assert!((h.sat_frac - 2.0 / 16.0).abs() < 1e-6, "sat_frac {}", h.sat_frac);
+    }
+
+    #[test]
+    fn scale_range_tracks_block_spread() {
+        // Two blocks with absmax 6 and 0.6 → scales 1.0 and 0.1.
+        let mut x = [0.01f32; 32];
+        x[0] = 6.0;
+        x[16] = 0.6;
+        let h = e2m1_health(&x);
+        assert_eq!(h.blocks, 2);
+        assert!((h.scale_range() - 10.0).abs() < 1e-4, "range {}", h.scale_range());
+    }
+
+    #[test]
+    fn flat_distribution_saturates_fully() {
+        // Every element at the block absmax → everything on the top code.
+        let x = [2.5f32; 16];
+        let h = e2m1_health(&x);
+        assert!((h.sat_frac - 1.0).abs() < 1e-6);
+        assert_eq!(h.scale_range(), 1.0);
+    }
+}

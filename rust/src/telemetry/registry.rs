@@ -1,0 +1,314 @@
+//! Lock-cheap metrics registry: named [`Counter`] / [`Gauge`] /
+//! [`Histogram`] handles behind atomics.
+//!
+//! Registration (name → handle) takes a mutex once, at attach time; the
+//! publish path — a shard worker bumping `serve.shard3.tokens` per decode
+//! pass, a train session setting `train.loss` per step — is a relaxed
+//! atomic op with no lock and no allocation. Handles for the same name
+//! share one cell: `counter("x")` called from N threads yields N clones of
+//! a single atomic, so concurrent totals are exact (pinned by
+//! `rust/tests/telemetry.rs`). Names are hierarchical dotted paths
+//! (`serve.shard3.queue_depth`, `train.layer2.grad_norm`); the snapshot
+//! API in [`super::Telemetry::snapshot`] splits them into a nested JSON
+//! tree.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::json::Json;
+
+/// Monotone event count (requests served, tokens emitted, restarts).
+///
+/// `set` exists for sites that publish an externally accumulated total
+/// (e.g. `ShardWorker::stats` republishing its authoritative counters at
+/// drain) — the registry view then matches the typed stats facade exactly.
+#[derive(Clone, Debug, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Overwrite with an absolute total (see type docs).
+    pub fn set(&self, n: u64) {
+        self.0.store(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// "No sample yet" sentinel: `f64::from_bits(u64::MAX)` is a NaN payload
+/// no arithmetic produces, so a never-set gauge is distinguishable from a
+/// gauge legitimately set to `0.0` (the supervisor's `ewma_bits` idiom
+/// uses bits 0 the same way — that works there because an EWMA sample is
+/// never exactly `0.0`, which a queue-depth gauge very much can be).
+const GAUGE_UNSET: u64 = u64::MAX;
+
+/// Last-write-wins scalar sample (queue depth, loss, tokens/s), stored as
+/// f64 bits in one atomic.
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        let mut bits = v.to_bits();
+        if bits == GAUGE_UNSET {
+            bits = f64::NAN.to_bits();
+        }
+        self.0.store(bits, Ordering::Relaxed);
+    }
+
+    /// `None` until the first [`Gauge::set`].
+    pub fn get(&self) -> Option<f64> {
+        let bits = self.0.load(Ordering::Relaxed);
+        if bits == GAUGE_UNSET {
+            None
+        } else {
+            Some(f64::from_bits(bits))
+        }
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge(Arc::new(AtomicU64::new(GAUGE_UNSET)))
+    }
+}
+
+/// Power-of-two microsecond buckets: bucket `i` counts samples whose
+/// microsecond value needs `i` bits, i.e. lies in `2^(i-1) ..= 2^i - 1`
+/// (bucket 0 is the sub-microsecond bin). 40 buckets reach ~6.4 days.
+const HIST_BUCKETS: usize = 40;
+
+#[derive(Debug)]
+struct HistogramCells {
+    count: AtomicU64,
+    /// f64 bits of the running sum, updated by CAS (contention on a
+    /// histogram is a handful of publishers, not a hot loop).
+    sum_bits: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+/// Latency distribution in milliseconds over log2-microsecond buckets:
+/// `record` is two relaxed atomic adds plus one CAS; quantiles are bucket
+/// upper bounds (≤ 2× relative error — ranking, not timing precision).
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistogramCells>);
+
+impl Histogram {
+    pub fn record(&self, ms: f64) {
+        let ms = if ms.is_finite() { ms.max(0.0) } else { 0.0 };
+        let us = (ms * 1000.0) as u64;
+        let idx = (64 - us.leading_zeros() as usize).min(HIST_BUCKETS - 1);
+        let cells = &*self.0;
+        cells.count.fetch_add(1, Ordering::Relaxed);
+        cells.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        let mut cur = cells.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + ms).to_bits();
+            let cas = cells.sum_bits.compare_exchange_weak(
+                cur,
+                new,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+            match cas {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of recorded samples, ms.
+    pub fn sum_ms(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Bucket-upper-bound estimate of quantile `q` (ms); `None` when no
+    /// samples have been recorded.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let count = self.count();
+        if count == 0 {
+            return None;
+        }
+        let rank = (q.clamp(0.0, 1.0) * (count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.0.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen > rank {
+                return Some((1u64 << i) as f64 / 1000.0);
+            }
+        }
+        Some((1u64 << (HIST_BUCKETS - 1)) as f64 / 1000.0)
+    }
+
+    fn to_json(&self) -> Json {
+        let count = self.count();
+        Json::obj(vec![
+            ("count", Json::Num(count as f64)),
+            ("sum_ms", Json::Num(self.sum_ms())),
+            ("p50_ms", self.quantile(0.5).map_or(Json::Null, Json::Num)),
+            ("p99_ms", self.quantile(0.99).map_or(Json::Null, Json::Num)),
+        ])
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram(Arc::new(HistogramCells {
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }))
+    }
+}
+
+/// One registered metric (what [`Registry::visit`] yields).
+#[derive(Clone)]
+pub enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+impl Metric {
+    /// Snapshot value: counters and set gauges are numbers, unset gauges
+    /// are `null`, histograms are `{count, sum_ms, p50_ms, p99_ms}`.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Metric::Counter(c) => Json::Num(c.get() as f64),
+            Metric::Gauge(g) => g.get().map_or(Json::Null, Json::Num),
+            Metric::Histogram(h) => h.to_json(),
+        }
+    }
+}
+
+/// Name → metric map. Cloning shares the underlying map (`Arc`), so every
+/// component attached to one [`super::Telemetry`] publishes into the same
+/// registry.
+#[derive(Clone, Default)]
+pub struct Registry(Arc<Mutex<BTreeMap<String, Metric>>>);
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-create the counter `name`. Panics if `name` is already
+    /// registered as a different metric kind (a programming error — the
+    /// metric-name map in the module docs is the single vocabulary).
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut map = self.0.lock().unwrap();
+        let m = map.entry(name.to_string()).or_insert_with(|| Metric::Counter(Counter::default()));
+        match m {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("metric '{name}' already registered with a different kind"),
+        }
+    }
+
+    /// Get-or-create the gauge `name` (see [`Registry::counter`]).
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut map = self.0.lock().unwrap();
+        let m = map.entry(name.to_string()).or_insert_with(|| Metric::Gauge(Gauge::default()));
+        match m {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("metric '{name}' already registered with a different kind"),
+        }
+    }
+
+    /// Get-or-create the histogram `name` (see [`Registry::counter`]).
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let mut map = self.0.lock().unwrap();
+        let m = map
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Histogram::default()));
+        match m {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("metric '{name}' already registered with a different kind"),
+        }
+    }
+
+    /// Visit every registered metric in name order (holds the registry
+    /// lock for the duration — snapshot-path only).
+    pub fn visit(&self, f: &mut dyn FnMut(&str, &Metric)) {
+        for (name, metric) in self.0.lock().unwrap().iter() {
+            f(name, metric);
+        }
+    }
+
+    /// Registered names, in order (test/debug convenience).
+    pub fn names(&self) -> Vec<String> {
+        self.0.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_handles_share_one_cell() {
+        let reg = Registry::new();
+        let a = reg.counter("x.y");
+        let b = reg.counter("x.y");
+        a.add(3);
+        b.inc();
+        assert_eq!(a.get(), 4);
+        assert_eq!(b.get(), 4);
+    }
+
+    #[test]
+    fn gauge_distinguishes_unset_from_zero() {
+        let reg = Registry::new();
+        let g = reg.gauge("g");
+        assert_eq!(g.get(), None);
+        g.set(0.0);
+        assert_eq!(g.get(), Some(0.0));
+        g.set(-2.5);
+        assert_eq!(g.get(), Some(-2.5));
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn kind_mismatch_panics() {
+        let reg = Registry::new();
+        let _c = reg.counter("m");
+        let _g = reg.gauge("m");
+    }
+
+    #[test]
+    fn histogram_quantiles_bracket_samples() {
+        let h = Histogram::default();
+        for i in 1..=100 {
+            h.record(i as f64); // 1..=100 ms
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.sum_ms() - 5050.0).abs() < 1e-9);
+        let p50 = h.quantile(0.5).unwrap();
+        let p99 = h.quantile(0.99).unwrap();
+        // Bucket upper bounds: within 2x of the true quantile, ordered.
+        assert!(p50 >= 50.0 && p50 <= 131.0, "p50 {p50}");
+        assert!(p99 >= 99.0 && p99 <= 262.0, "p99 {p99}");
+        assert!(p50 <= p99);
+        assert_eq!(h.quantile(0.0).unwrap(), h.quantile(1e-9).unwrap());
+    }
+
+    #[test]
+    fn empty_histogram_has_no_quantiles() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile(0.5), None);
+        assert_eq!(h.to_json().get("p99_ms"), &Json::Null);
+    }
+}

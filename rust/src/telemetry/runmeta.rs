@@ -1,0 +1,59 @@
+//! Run-provenance headers for bench artifacts.
+//!
+//! Every `results/bench/*.jsonl` append and `BENCH_*.json` summary stamps
+//! a [`runmeta`] header — git revision, bench name, free-form config
+//! string, wall-clock timestamp — so the per-PR perf trajectory stays
+//! attributable at re-anchor time: a jsonl row's provenance is the
+//! nearest `{"kind":"runmeta",...}` line above it. Consumers filtering
+//! result rows should skip objects whose `kind` is `"runmeta"`.
+
+use std::process::Command;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::json::Json;
+
+/// Best-effort short git revision of the working tree; `"unknown"` when
+/// git or the repository is unavailable (e.g. a source-tarball build).
+pub fn git_rev() -> String {
+    Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|out| out.status.success())
+        .and_then(|out| String::from_utf8(out.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Provenance header for bench run `bench` under `config` (a free-form
+/// `key=value ...` string describing the run's parameters).
+pub fn runmeta(bench: &str, config: &str) -> Json {
+    let unix_ms = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as f64)
+        .unwrap_or(0.0);
+    Json::obj(vec![
+        ("kind", Json::Str("runmeta".to_string())),
+        ("bench", Json::Str(bench.to_string())),
+        ("config", Json::Str(config.to_string())),
+        ("git_rev", Json::Str(git_rev())),
+        ("unix_ms", Json::Num(unix_ms)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runmeta_has_the_pinned_header_shape() {
+        let meta = runmeta("cluster_serve", "shards=4 requests=48");
+        assert_eq!(meta.get("kind").as_str(), Some("runmeta"));
+        assert_eq!(meta.get("bench").as_str(), Some("cluster_serve"));
+        assert_eq!(meta.get("config").as_str(), Some("shards=4 requests=48"));
+        let rev = meta.get("git_rev").as_str().unwrap();
+        assert!(!rev.is_empty());
+        assert!(meta.get("unix_ms").as_f64().is_some());
+    }
+}

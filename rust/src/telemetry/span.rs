@@ -1,0 +1,241 @@
+//! Ring-buffer tracing spans: scoped guards with a ~zero-cost disabled
+//! path.
+//!
+//! A span is opened with the [`crate::span!`] macro (or
+//! [`SpanRecorder::start`]) and closed by dropping the returned guard; the
+//! recorder keeps the newest `capacity` records in a fixed ring (overflow
+//! drops the oldest). Names and tag keys are `&'static str` and the guard
+//! lives on the stack, so a **disabled** recorder's `start` is one relaxed
+//! atomic load — no allocation, no `Instant::now` (pinned by the counting
+//! allocator test in `rust/tests/telemetry.rs`). An **enabled** span costs
+//! two `Instant` reads plus one short mutex push at drop — fine at
+//! per-pass / per-step granularity (admission, prefill, decode batches,
+//! train forward/backward), not intended inside per-element kernels.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::json::Json;
+
+/// One completed span.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRecord {
+    /// Monotone completion index (global across the recorder) — the
+    /// overflow tests key on it: after overflow the ring holds the
+    /// records with the largest `seq` values.
+    pub seq: u64,
+    pub name: &'static str,
+    /// Optional tag, e.g. `("shard", 2)`; `("", 0)` when untagged.
+    pub tag_key: &'static str,
+    pub tag: u64,
+    /// Start offset from recorder creation, µs.
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+#[derive(Debug)]
+struct SpanInner {
+    enabled: AtomicBool,
+    /// Completed-span count (monotone; ring length is capped separately).
+    seq: AtomicU64,
+    epoch: Instant,
+    capacity: usize,
+    ring: Mutex<VecDeque<SpanRecord>>,
+}
+
+/// Shared ring of recent spans; cloning shares the ring (`Arc`).
+#[derive(Clone, Debug)]
+pub struct SpanRecorder(Arc<SpanInner>);
+
+impl SpanRecorder {
+    pub const DEFAULT_CAPACITY: usize = 1024;
+
+    /// Enabled recorder retaining the newest `capacity` spans.
+    pub fn new(capacity: usize) -> SpanRecorder {
+        assert!(capacity > 0, "span ring needs capacity >= 1");
+        SpanRecorder(Arc::new(SpanInner {
+            enabled: AtomicBool::new(true),
+            seq: AtomicU64::new(0),
+            epoch: Instant::now(),
+            capacity,
+            ring: Mutex::new(VecDeque::with_capacity(capacity)),
+        }))
+    }
+
+    /// Recorder whose `start` is a no-op (see module docs).
+    pub fn disabled() -> SpanRecorder {
+        let rec = SpanRecorder::new(SpanRecorder::DEFAULT_CAPACITY);
+        rec.set_enabled(false);
+        rec
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.0.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.0.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Open a span; it records itself when the guard drops. Prefer the
+    /// [`crate::span!`] macro at call sites.
+    #[must_use = "bind the guard (`let _span = ...`) — dropping it closes the span"]
+    pub fn start(&self, name: &'static str, tag_key: &'static str, tag: u64) -> SpanGuard<'_> {
+        if !self.is_enabled() {
+            return SpanGuard { open: None };
+        }
+        SpanGuard { open: Some((self, name, tag_key, tag, Instant::now())) }
+    }
+
+    fn push(&self, name: &'static str, tag_key: &'static str, tag: u64, started: Instant) {
+        let dur_us = started.elapsed().as_micros() as u64;
+        let start_us = started.duration_since(self.0.epoch).as_micros() as u64;
+        let seq = self.0.seq.fetch_add(1, Ordering::Relaxed);
+        let record = SpanRecord { seq, name, tag_key, tag, start_us, dur_us };
+        let mut ring = self.0.ring.lock().unwrap();
+        if ring.len() == self.0.capacity {
+            ring.pop_front();
+        }
+        ring.push_back(record);
+    }
+
+    /// Spans completed over the recorder's lifetime (≥ ring length).
+    pub fn recorded(&self) -> u64 {
+        self.0.seq.load(Ordering::Relaxed)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.0.capacity
+    }
+
+    /// Copy of the retained ring, oldest first.
+    pub fn records(&self) -> Vec<SpanRecord> {
+        self.0.ring.lock().unwrap().iter().copied().collect()
+    }
+
+    /// Snapshot summary: lifetime counts plus per-name aggregates of the
+    /// **retained** ring (`{count, total_ms, max_ms}` per span name).
+    pub fn to_json(&self) -> Json {
+        let mut by_name: BTreeMap<String, (u64, f64, f64)> = BTreeMap::new();
+        for r in self.0.ring.lock().unwrap().iter() {
+            let e = by_name.entry(r.name.to_string()).or_insert((0, 0.0, 0.0));
+            e.0 += 1;
+            e.1 += r.dur_us as f64 / 1000.0;
+            e.2 = e.2.max(r.dur_us as f64 / 1000.0);
+        }
+        let by_name = Json::Obj(
+            by_name
+                .into_iter()
+                .map(|(name, (count, total_ms, max_ms))| {
+                    let v = Json::obj(vec![
+                        ("count", Json::Num(count as f64)),
+                        ("total_ms", Json::Num(total_ms)),
+                        ("max_ms", Json::Num(max_ms)),
+                    ]);
+                    (name, v)
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("recorded", Json::Num(self.recorded() as f64)),
+            ("capacity", Json::Num(self.0.capacity as f64)),
+            ("retained", Json::Num(self.0.ring.lock().unwrap().len() as f64)),
+            ("by_name", by_name),
+        ])
+    }
+}
+
+impl Default for SpanRecorder {
+    fn default() -> SpanRecorder {
+        SpanRecorder::new(SpanRecorder::DEFAULT_CAPACITY)
+    }
+}
+
+/// Scope guard returned by [`SpanRecorder::start`]; `None` inside means
+/// the recorder was disabled and drop does nothing.
+pub struct SpanGuard<'a> {
+    #[allow(clippy::type_complexity)]
+    open: Option<(&'a SpanRecorder, &'static str, &'static str, u64, Instant)>,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if let Some((rec, name, tag_key, tag, started)) = self.open.take() {
+            rec.push(name, tag_key, tag, started);
+        }
+    }
+}
+
+/// Scoped tracing span over a [`SpanRecorder`]:
+///
+/// ```
+/// use attn_qat::{span, telemetry::SpanRecorder};
+///
+/// let rec = SpanRecorder::new(64);
+/// {
+///     let _span = span!(rec, "prefill", shard = 2);
+///     // ... work ...
+/// } // recorded here
+/// assert_eq!(rec.records()[0].name, "prefill");
+/// ```
+#[macro_export]
+macro_rules! span {
+    ($rec:expr, $name:expr) => {
+        $rec.start($name, "", 0)
+    };
+    ($rec:expr, $name:expr, $key:ident = $val:expr) => {
+        $rec.start($name, stringify!($key), $val as u64)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overflow_keeps_newest() {
+        let rec = SpanRecorder::new(4);
+        for i in 0..10u64 {
+            let _span = crate::span!(rec, "step", i = i);
+        }
+        assert_eq!(rec.recorded(), 10);
+        let records = rec.records();
+        assert_eq!(records.len(), 4);
+        let seqs: Vec<u64> = records.iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, vec![6, 7, 8, 9], "ring must retain the newest spans");
+        assert_eq!(records[0].tag_key, "i");
+        assert_eq!(records[0].tag, 6);
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let rec = SpanRecorder::disabled();
+        {
+            let _span = crate::span!(rec, "ignored");
+        }
+        assert_eq!(rec.recorded(), 0);
+        assert!(rec.records().is_empty());
+        rec.set_enabled(true);
+        {
+            let _span = crate::span!(rec, "seen");
+        }
+        assert_eq!(rec.recorded(), 1);
+    }
+
+    #[test]
+    fn json_summary_aggregates_by_name() {
+        let rec = SpanRecorder::new(16);
+        for shard in 0..3u64 {
+            let _span = crate::span!(rec, "decode", shard = shard);
+        }
+        {
+            let _span = crate::span!(rec, "drain");
+        }
+        let doc = rec.to_json();
+        assert_eq!(doc.get("recorded").as_f64(), Some(4.0));
+        assert_eq!(doc.get("by_name").get("decode").get("count").as_f64(), Some(3.0));
+        assert_eq!(doc.get("by_name").get("drain").get("count").as_f64(), Some(1.0));
+    }
+}

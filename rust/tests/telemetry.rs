@@ -1,0 +1,245 @@
+//! Integration pins for the telemetry subsystem (ISSUE PR 7).
+//!
+//! Five contracts, each of which downstream tooling depends on:
+//!
+//! 1. **Golden schema** — `Telemetry::snapshot()` (the doc behind
+//!    `repro serve cluster --json` and `DecodeCluster::introspect`)
+//!    keeps its versioned top-level shape and the documented metric /
+//!    config / span paths.
+//! 2. **Registry exactness** — counters and histograms shared across
+//!    threads lose nothing under contention.
+//! 3. **Span ring** — overflow evicts oldest-first; the newest records
+//!    always survive.
+//! 4. **Disabled fast path** — a dark `Telemetry` handle performs zero
+//!    heap allocations per span guard / metric publish.
+//! 5. **Facade parity** — the registry agrees field-for-field with the
+//!    typed `ClusterStats` facade after a real 4-shard drain.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use attn_qat::attention::AttnConfig;
+use attn_qat::experiments::cluster::{demo_trace, serve_trace_observed};
+use attn_qat::json::Json;
+use attn_qat::serve::{FaultPlan, SupervisorConfig};
+use attn_qat::telemetry::Telemetry;
+
+// ---------------------------------------------------------------------
+// Counting allocator: per-thread allocation counter so the disabled
+// fast-path test is immune to allocations on concurrently running test
+// threads. `Cell<u64>` has no destructor, so the const-init
+// thread-local never allocates (or runs TLS dtors) from inside `alloc`.
+// ---------------------------------------------------------------------
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn thread_allocs() -> u64 {
+    ALLOCS.with(|c| c.get())
+}
+
+// ---------------------------------------------------------------------
+// Helpers: walk a snapshot by dotted path.
+// ---------------------------------------------------------------------
+
+fn at<'a>(doc: &'a Json, path: &str) -> &'a Json {
+    path.split('.').fold(doc, |d, k| d.get(k))
+}
+
+fn num(doc: &Json, path: &str) -> f64 {
+    at(doc, path).as_f64().unwrap_or_else(|| panic!("no number at {path:?} in {doc}"))
+}
+
+#[test]
+fn snapshot_schema_is_stable() -> anyhow::Result<()> {
+    let trace = demo_trace(12, 6, 7);
+    let (_wall, stats, done, doc) = serve_trace_observed(
+        2,
+        AttnConfig::fp4(),
+        4,
+        7,
+        &trace,
+        FaultPlan::none(),
+        SupervisorConfig::default(),
+        Telemetry::new(),
+    )?;
+    assert_eq!(done.len(), trace.len());
+
+    // Top-level shape is the versioned contract. Adding a key means
+    // bumping SCHEMA_VERSION and updating this pin.
+    let keys: Vec<&str> =
+        doc.as_obj().expect("snapshot is an object").keys().map(|s| s.as_str()).collect();
+    assert_eq!(keys, ["config", "enabled", "metrics", "schema_version", "spans"]);
+    assert_eq!(num(&doc, "schema_version"), 1.0);
+    assert!(matches!(at(&doc, "enabled"), Json::Bool(true)));
+
+    // Config section reflects the live ClusterConfig, attn variant included.
+    assert_eq!(num(&doc, "config.cluster.shards"), 2.0);
+    assert_eq!(num(&doc, "config.cluster.shard.slots"), 4.0);
+    assert_eq!(at(&doc, "config.cluster.shard.attn.variant").as_str(), Some("fp4"));
+    assert!(num(&doc, "config.cluster.supervisor.max_restarts") >= 1.0);
+
+    // Metrics nest by dotted name; per-shard totals reconcile with the
+    // typed facade and histogram leaves expand to summary objects.
+    let tokens: f64 =
+        (0..2).map(|i| num(&doc, &format!("metrics.serve.shard{i}.tokens"))).sum();
+    assert_eq!(tokens as usize, stats.total_tokens());
+    assert_eq!(num(&doc, "metrics.serve.cluster.submitted") as usize, trace.len());
+    assert_eq!(num(&doc, "metrics.serve.supervisor.restarts"), 0.0);
+    assert!(num(&doc, "metrics.serve.shard0.token_ms.count") >= 1.0);
+    assert!(num(&doc, "metrics.serve.shard0.kv_bytes_peak") > 0.0);
+    let hit_rate = num(&doc, "metrics.serve.shard0.qcache_hit_rate");
+    assert!((0.0..=1.0).contains(&hit_rate));
+
+    // Span section: ring bookkeeping plus per-name aggregates covering
+    // the serve pipeline (admit/route/prefill/decode/drain).
+    assert!(num(&doc, "spans.recorded") > 0.0);
+    assert!(num(&doc, "spans.capacity") > 0.0);
+    for name in ["admit", "route", "prefill", "decode", "drain"] {
+        assert!(
+            num(&doc, &format!("spans.by_name.{name}.count")) >= 1.0,
+            "span {name:?} missing from snapshot"
+        );
+    }
+    Ok(())
+}
+
+#[test]
+fn registry_totals_are_exact_under_contention() {
+    let tele = Telemetry::new();
+    let reg = tele.registry();
+    const THREADS: u64 = 8;
+    const PER: u64 = 10_000;
+    std::thread::scope(|s| {
+        for _ in 0..THREADS {
+            // Handles for one name share a single atomic cell, so each
+            // thread cloning its own handle must still sum exactly.
+            let ctr = reg.counter("test.contended");
+            let hist = reg.histogram("test.latency");
+            s.spawn(move || {
+                for i in 0..PER {
+                    ctr.inc();
+                    hist.record((i % 7) as f64 * 0.25);
+                }
+            });
+        }
+    });
+    assert_eq!(reg.counter("test.contended").get(), THREADS * PER);
+    assert_eq!(reg.histogram("test.latency").count(), THREADS * PER);
+
+    // Gauge handles alias the same cell too: a write through one handle
+    // is visible through another.
+    let g1 = reg.gauge("test.level");
+    let g2 = reg.gauge("test.level");
+    g1.set(2.5);
+    assert_eq!(g2.get(), Some(2.5));
+}
+
+#[test]
+fn span_ring_overflow_keeps_newest() {
+    let tele = Telemetry::with_span_capacity(4);
+    for i in 0..10u64 {
+        let _g = attn_qat::span!(tele.spans(), "tick", idx = i);
+    }
+    let rec = tele.spans();
+    assert_eq!(rec.recorded(), 10, "lifetime count survives eviction");
+    let records = rec.records();
+    assert_eq!(records.len(), 4, "ring retains exactly its capacity");
+    let seqs: Vec<u64> = records.iter().map(|r| r.seq).collect();
+    assert_eq!(seqs, vec![6, 7, 8, 9], "oldest spans evicted first");
+    assert!(records.iter().all(|r| r.name == "tick"));
+}
+
+#[test]
+fn disabled_telemetry_allocates_nothing() {
+    let tele = Telemetry::disabled();
+    assert!(!tele.is_enabled());
+    let rec = tele.spans();
+    let ctr = tele.registry().counter("dark.counter");
+    let gauge = tele.registry().gauge("dark.gauge");
+    // One warm pass so any lazy stdlib state is paid before counting.
+    {
+        let _g = attn_qat::span!(rec, "warm");
+        ctr.inc();
+        gauge.set(1.0);
+    }
+    let before = thread_allocs();
+    for i in 0..1_000u64 {
+        let _g = attn_qat::span!(rec, "decode", shard = i);
+        ctr.inc();
+        gauge.set(i as f64);
+    }
+    let after = thread_allocs();
+    assert_eq!(after - before, 0, "disabled spans / metric publishes must not allocate");
+    assert_eq!(rec.recorded(), 0, "disabled guards record nothing");
+}
+
+#[test]
+fn registry_agrees_with_cluster_stats_after_four_shard_drain() -> anyhow::Result<()> {
+    let trace = demo_trace(16, 8, 7);
+    let telemetry = Telemetry::new();
+    let (_wall, stats, done, _doc) = serve_trace_observed(
+        4,
+        AttnConfig::fp4(),
+        4,
+        7,
+        &trace,
+        FaultPlan::none(),
+        SupervisorConfig::default(),
+        telemetry.clone(),
+    )?;
+    assert_eq!(done.len(), trace.len());
+    assert_eq!(stats.shards.len(), 4);
+
+    let reg = telemetry.registry();
+    for s in &stats.shards {
+        let name = |m: &str| format!("serve.shard{}.{m}", s.shard);
+        assert_eq!(reg.counter(&name("requests")).get(), s.requests as u64);
+        assert_eq!(reg.counter(&name("rejected")).get(), s.rejected as u64);
+        assert_eq!(reg.counter(&name("steps")).get(), s.steps as u64);
+        assert_eq!(reg.counter(&name("tokens")).get(), s.tokens as u64);
+        // Gauges are republished from the exact drain-time ShardStats
+        // values, so equality here is bitwise, not approximate.
+        assert_eq!(reg.gauge(&name("tokens_per_s")).get(), Some(s.tokens_per_s));
+        assert_eq!(reg.gauge(&name("p50_token_ms")).get(), Some(s.p50_token_ms));
+        assert_eq!(reg.gauge(&name("p99_token_ms")).get(), Some(s.p99_token_ms));
+        assert_eq!(reg.gauge(&name("ewma_token_ms")).get(), s.ewma_token_ms);
+        assert_eq!(reg.gauge(&name("qcache_hits")).get(), Some(s.qcache_hits as f64));
+        assert_eq!(reg.gauge(&name("qcache_misses")).get(), Some(s.qcache_misses as f64));
+        assert_eq!(reg.gauge(&name("kv_bytes_peak")).get(), Some(s.kv_bytes_peak as f64));
+        assert_eq!(
+            reg.gauge(&name("kv_bytes_f32_equiv_peak")).get(),
+            Some(s.kv_bytes_f32_equiv_peak as f64)
+        );
+    }
+    assert_eq!(reg.counter("serve.cluster.submitted").get(), trace.len() as u64);
+    assert_eq!(reg.counter("serve.cluster.shed_deadline").get(), stats.shed_deadline as u64);
+    assert_eq!(reg.counter("serve.cluster.shed_capacity").get(), stats.shed_capacity as u64);
+    assert_eq!(reg.counter("serve.supervisor.restarts").get(), stats.restarts as u64);
+    assert_eq!(
+        reg.counter("serve.supervisor.replayed_requests").get(),
+        stats.replayed_requests as u64
+    );
+    assert_eq!(
+        reg.counter("serve.supervisor.recomputed_passes").get(),
+        stats.recomputed_passes as u64
+    );
+    Ok(())
+}
