@@ -13,15 +13,20 @@
 //! A faults scenario then serves the same trace through one injected
 //! mid-decode shard panic (supervised respawn + journal replay) and
 //! prices the recovery: tokens/s with 0 vs 1 panic, completions checked
-//! bitwise against the clean run. The headline numbers — scaling, tail
-//! latency, and fault-recovery overhead — are written to
-//! `BENCH_cluster.json` at the repo root, the per-PR perf trajectory.
+//! bitwise against the clean run. A shared-prefix scenario serves 256
+//! requests behind one 64-token system prompt with prefix sharing off vs
+//! on and prices the sharing tier: fresh KV bytes per admitted sequence
+//! and mean admission latency, completions again checked bitwise. The
+//! headline numbers — scaling, tail latency, fault-recovery overhead,
+//! and the prefix-sharing saving — are written to `BENCH_cluster.json`
+//! at the repo root, the per-PR perf trajectory.
 
 use std::io::Write;
 
 use attn_qat::attention::AttnConfig;
 use attn_qat::experiments::cluster::{
-    demo_trace, serve_trace, serve_trace_faulty, serve_trace_observed,
+    demo_trace, serve_trace, serve_trace_faulty, serve_trace_observed, serve_trace_prefix,
+    shared_prefix_trace,
 };
 use attn_qat::json::Json;
 use attn_qat::serve::{FaultPlan, Request, SupervisorConfig};
@@ -180,6 +185,60 @@ fn main() -> anyhow::Result<()> {
         tps_tele_on, tps_tele_off,
     );
 
+    // Shared-prefix scenario: 256 requests behind one 64-token system
+    // prompt (4 sealed pages) with unique 16-token suffixes, served with
+    // prefix sharing off vs on (4 shards, fp4). The headline is fresh KV
+    // bytes per admitted sequence and mean admission latency; sharing is
+    // only admissible if the completions stay bitwise identical.
+    let ptrace = shared_prefix_trace(256, 64, 16, 8, 7);
+    let run_prefix = |share: bool| {
+        serve_trace_prefix(
+            4,
+            AttnConfig::fp4(),
+            4,
+            7,
+            &ptrace,
+            share,
+            None,
+            FaultPlan::none(),
+            sup,
+        )
+    };
+    let (_, prefix_off_stats, prefix_off_done) = run_prefix(false)?;
+    let (_, prefix_on_stats, prefix_on_done) = run_prefix(true)?;
+    assert!(
+        prefix_off_done.len() == prefix_on_done.len()
+            && prefix_off_done
+                .iter()
+                .zip(&prefix_on_done)
+                .all(|(a, b)| a.id == b.id && a.text == b.text),
+        "prefix sharing must be bitwise invisible"
+    );
+    let prefix_kv_off = prefix_off_stats.kv_admit_bytes_per_seq().unwrap_or(0.0);
+    let prefix_kv_on = prefix_on_stats.kv_admit_bytes_per_seq().unwrap_or(f64::MAX);
+    let prefix_admit_off = prefix_off_stats.admit_ms_mean().unwrap_or(0.0);
+    let prefix_admit_on = prefix_on_stats.admit_ms_mean().unwrap_or(f64::MAX);
+    let prefix_kv_saving = prefix_kv_off / prefix_kv_on.max(1e-9);
+    let (prefix_hits, prefix_pages, prefix_bytes, prefix_cows) =
+        prefix_on_stats.prefix_totals();
+    println!(
+        "cluster_serve_fp4_4shards prefix: {:.0} B/seq off vs {:.0} B/seq on \
+         ({prefix_kv_saving:.2}x KV saving), admit {prefix_admit_off:.3} ms off vs \
+         {prefix_admit_on:.3} ms on, {prefix_hits} hit(s), {prefix_pages} page(s) shared, \
+         {prefix_bytes} B saved, {prefix_cows} COW split(s)",
+        prefix_kv_off, prefix_kv_on,
+    );
+    assert!(
+        prefix_kv_saving >= 2.0,
+        "prefix sharing must at least halve fresh KV bytes/seq \
+         ({prefix_kv_off:.0} off vs {prefix_kv_on:.0} on, {prefix_kv_saving:.2}x)"
+    );
+    assert!(
+        prefix_admit_on < prefix_admit_off,
+        "O(suffix) admission must beat O(prompt) \
+         ({prefix_admit_on:.3} ms on vs {prefix_admit_off:.3} ms off)"
+    );
+
     let meta = runmeta(
         "cluster_serve",
         &format!("requests={} max_new=24 seed=7 lanes=4 shards=1/2/4/8", trace.len()),
@@ -204,7 +263,24 @@ fn main() -> anyhow::Result<()> {
             ("max_overhead_x", Json::Num(1.03)),
         ])
     )?;
-    println!("-> results/bench/cluster_serve.jsonl ({} rows)", rows.len() + 1);
+    writeln!(
+        f,
+        "{}",
+        Json::obj(vec![
+            ("name", Json::Str("cluster_serve_fp4_4shards_prefix_share".to_string())),
+            ("requests", Json::Num(ptrace.len() as f64)),
+            ("kv_admit_bytes_per_seq_off", Json::Num(prefix_kv_off)),
+            ("kv_admit_bytes_per_seq_on", Json::Num(prefix_kv_on)),
+            ("kv_saving_x", Json::Num(prefix_kv_saving)),
+            ("admit_ms_off", Json::Num(prefix_admit_off)),
+            ("admit_ms_on", Json::Num(prefix_admit_on)),
+            ("prefix_hits", Json::Num(prefix_hits as f64)),
+            ("prefix_pages_shared", Json::Num(prefix_pages as f64)),
+            ("prefix_bytes_saved", Json::Num(prefix_bytes as f64)),
+            ("prefix_cow_splits", Json::Num(prefix_cows as f64)),
+        ])
+    )?;
+    println!("-> results/bench/cluster_serve.jsonl ({} rows)", rows.len() + 2);
     assert!(
         tps_tele_on >= 0.97 * tps_tele_off,
         "telemetry overhead guard tripped: {tps_tele_on:.0} tok/s enabled vs \
@@ -234,6 +310,13 @@ fn main() -> anyhow::Result<()> {
         ("fault_restarts", Json::Num(fault_stats.restarts as f64)),
         ("fault_replayed_requests", Json::Num(fault_stats.replayed_requests as f64)),
         ("fault_recomputed_passes", Json::Num(fault_stats.recomputed_passes as f64)),
+        ("prefix_kv_admit_bytes_per_seq_off", Json::Num(prefix_kv_off)),
+        ("prefix_kv_admit_bytes_per_seq_on", Json::Num(prefix_kv_on)),
+        ("prefix_kv_saving_x", Json::Num(prefix_kv_saving)),
+        ("prefix_admit_ms_off", Json::Num(prefix_admit_off)),
+        ("prefix_admit_ms_on", Json::Num(prefix_admit_on)),
+        ("prefix_pages_shared", Json::Num(prefix_pages as f64)),
+        ("prefix_bytes_saved", Json::Num(prefix_bytes as f64)),
     ]);
     std::fs::write(HEADLINE_PATH, format!("{headline}\n"))?;
     println!("-> {HEADLINE_PATH}");

@@ -15,6 +15,7 @@ use crate::attention::AttnConfig;
 use crate::config::Config;
 use crate::data::corpus::Corpus;
 use crate::json::Json;
+use crate::kvcache::SpillConfig;
 use crate::serve::{
     ClusterConfig, Completion, DecodeCluster, FaultPlan, Request, ShardConfig, SimLm, SimLmConfig,
     SupervisorConfig,
@@ -111,7 +112,13 @@ pub fn serve_trace_observed(
     let cfg = ClusterConfig {
         shards,
         queue_depth: trace.len().max(1),
-        shard: ShardConfig { slots: lanes, attn, seq_max: 512, sample_seed: seed },
+        shard: ShardConfig {
+            slots: lanes,
+            attn,
+            seq_max: 512,
+            sample_seed: seed,
+            ..ShardConfig::default()
+        },
         supervisor,
     };
     let lm = SimLmConfig { seed, ..SimLmConfig::default() };
@@ -127,6 +134,79 @@ pub fn serve_trace_observed(
     // Snapshot after drain: shard workers republish their authoritative
     // final stats into the registry as part of the drain handshake.
     Ok((t0.elapsed().as_secs_f64(), stats, done, telemetry.snapshot()))
+}
+
+/// A shared-prefix serving trace: every request starts with the same
+/// `prefix_tokens`-byte "system prompt" cut from the synthetic corpus,
+/// followed by a unique per-request suffix. The workload the prefix
+/// sharing tier exists for; shared by `rust/tests/prefix_cache.rs` and
+/// `benches/cluster_serve.rs`.
+pub fn shared_prefix_trace(
+    n_req: usize,
+    prefix_tokens: usize,
+    suffix_tokens: usize,
+    max_new: usize,
+    seed: u64,
+) -> Vec<Request> {
+    let mut corpus = Corpus::new(seed ^ 0x9ef1);
+    let system = corpus.stream(prefix_tokens);
+    (0..n_req)
+        .map(|i| {
+            let mut prompt = system.clone();
+            prompt.extend_from_slice(&corpus.stream(suffix_tokens.max(1)));
+            Request {
+                id: i as u64 + 1,
+                prompt,
+                max_new_tokens: max_new,
+                temperature: 0.0,
+                deadline_ms: None,
+            }
+        })
+        .collect()
+}
+
+/// [`serve_trace_faulty`] with explicit prefix-sharing / disk-spill
+/// knobs on the shard config — the on/off comparison harness for the
+/// shared-prefix bench and `rust/tests/prefix_cache.rs`. Returns
+/// `(wall_s, stats, completions)`; completions are id-sorted so on/off
+/// runs compare bitwise directly.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_trace_prefix(
+    shards: usize,
+    attn: AttnConfig,
+    lanes: usize,
+    seed: u64,
+    trace: &[Request],
+    prefix_share: bool,
+    kv_spill: Option<SpillConfig>,
+    faults: FaultPlan,
+    supervisor: SupervisorConfig,
+) -> Result<(f64, crate::serve::ClusterStats, Vec<Completion>)> {
+    let cfg = ClusterConfig {
+        shards,
+        queue_depth: trace.len().max(1),
+        shard: ShardConfig {
+            slots: lanes,
+            attn,
+            seq_max: 512,
+            sample_seed: seed,
+            prefix_share,
+            kv_spill,
+            ..ShardConfig::default()
+        },
+        supervisor,
+    };
+    let lm = SimLmConfig { seed, ..SimLmConfig::default() };
+    let mut cluster = DecodeCluster::spawn_observed(cfg, Telemetry::new(), move |shard| {
+        faults.wrap(shard, Box::new(SimLm::new(lm)))
+    });
+    let t0 = std::time::Instant::now();
+    for r in trace {
+        cluster.submit(r.clone())?;
+    }
+    let (done, stats) = cluster.drain()?;
+    anyhow::ensure!(done.len() == trace.len(), "lost completions");
+    Ok((t0.elapsed().as_secs_f64(), stats, done))
 }
 
 /// `repro exp cluster` — shard-scaling table.

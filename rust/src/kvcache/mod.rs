@@ -1,19 +1,41 @@
-//! Paged NVFP4 KV cache (the paper's §5 future-work item, implemented).
+//! Paged NVFP4 KV cache with a shared sealed-page pool (the paper's §5
+//! future-work item, grown into the serving tier's memory manager).
 //!
-//! vLLM-style paged layout with **4-bit quantized storage**:
+//! Layout: a page holds [`PAGE_SIZE`] = 16 tokens for one (layer, seq,
+//! head) — deliberately equal to the NVFP4 block size so that
+//! - **K** rows quantize along the head dimension (one row = one token,
+//!   d/16 blocks), and
+//! - **V** quantizes along the token axis (16-token blocks == the page),
+//! exactly matching the contraction-axis layout the FP4 attention engine
+//! needs — a full page converts to packed form with zero re-blocking.
 //!
-//! * a page holds [`PAGE_SIZE`] = 16 tokens for one (layer, sequence, head)
-//!   — deliberately equal to the NVFP4 block size so that
-//!   - **K** rows quantize along the head dimension (one row = one token,
-//!     d/16 blocks), and
-//!   - **V** quantizes along the token axis (16-token blocks == the page),
-//!   exactly matching the contraction-axis layout the FP4 attention engine
-//!   needs — a full page converts to packed form with zero re-blocking.
-//! * a page is kept in f32 while it fills and is **sealed** (packed to
-//!   4-bit) when the 16th token lands; decode reads mix sealed + hot pages.
+//! ## Page lifecycle: hot → sealed → pooled → shared
 //!
-//! Memory: sealed pages cost 4.5 bits/element vs 32 for f32 — the ~7×
-//! KV-memory reduction the paper projects for low-precision decoding.
+//! * A page is kept in f32 while it fills (**hot**) and is **sealed**
+//!   (packed to 4-bit) when the 16th token lands. Sealed pages cost 4.5
+//!   bits/element vs 32 for f32 — the ~7× KV-memory reduction the paper
+//!   projects for low-precision decoding.
+//! * Sealed pages are **immutable** and live in a refcounted,
+//!   content-addressed [`pool::PagePool`]; the page list stores only
+//!   [`pool::PageRef`] handles. Quantization is deterministic, so
+//!   byte-identical token prefixes produce byte-identical sealed pages,
+//!   and the pool deduplicates them on insert with **zero numeric
+//!   effect** — the attend walk reads the exact same packed bytes either
+//!   way.
+//! * **Copy-on-write** is attach/detach of refs, never a byte copy: a
+//!   sequence admitted against a shared prompt prefix attaches the
+//!   matching sealed run ([`PagedKvCache::attach_prefix_at`]), and its
+//!   first divergent token simply opens a private hot page after the
+//!   shared run. Dropping the sequence releases its refs; a page is
+//!   freed when the last holder lets go.
+//! * Cold sealed pages can **spill to disk** behind the pool seam
+//!   ([`PagedKvCache::spill_to_budget`], LRU by last touch) and reload
+//!   transparently on the next attend.
+//!
+//! [`PagedKvCache::memory_stats`] counts a shared page's bytes **once**
+//! no matter how many sequences hold it; [`PagedKvCache::memory_json`]
+//! additionally breaks occupancy into hot/sealed/shared/spilled page
+//! counts for dashboards.
 //!
 //! Reads: [`PagedKvCache::attend_decode`] (fused single-query decode) and
 //! [`PagedKvCache::attend_prefill`] (batched multi-query causal prefill)
@@ -25,10 +47,12 @@
 //! index the slot table directly — zero map lookups on the per-token serve
 //! path (the old `BTreeMap<u64, …>` survives only as an id → slot directory
 //! for admission/teardown and the u64-keyed convenience wrappers). Freed
-//! slots go on a free list and their page pools are reused by later
+//! slots go on a free list and their page lists are reused by later
 //! sequences, so a serving worker's slot table stays as small as its peak
 //! concurrency no matter how many sequences churn through it; generation
 //! counters make a stale handle a hard error instead of silent cross-talk.
+
+pub mod pool;
 
 use std::collections::BTreeMap;
 
@@ -40,6 +64,8 @@ use crate::formats::lut;
 use crate::formats::tensor4::PackedNvfp4;
 use crate::json::Json;
 
+pub use pool::{PagePool, PageRef, PoolStats, SealedPage, SpillConfig};
+
 /// Tokens per page == NVFP4 block size.
 pub const PAGE_SIZE: usize = 16;
 
@@ -47,9 +73,10 @@ pub const PAGE_SIZE: usize = 16;
 enum Page {
     /// Filling: f32 staging, `len` tokens of K and V ((len × d) each).
     Hot { k: Vec<f32>, v: Vec<f32>, len: usize },
-    /// Sealed: K packed (16 × d, blocks along d); V packed transposed
-    /// (d × 16, blocks along the token axis).
-    Sealed { k: PackedNvfp4, vt: PackedNvfp4 },
+    /// Sealed: a refcounted handle into the shared page pool (K packed
+    /// 16 × d, blocks along d; V packed transposed d × 16, blocks along
+    /// the token axis).
+    Sealed(PageRef),
 }
 
 /// Per-(layer, head) list of pages for one sequence.
@@ -83,8 +110,30 @@ struct SlotEntry {
     gen: u32,
     live: bool,
     /// Layer-major `[layer * heads + head]` page lists. The outer Vecs are
-    /// retained across sequence reuse (the slot's page pool).
+    /// retained across sequence reuse (the slot's page list arena).
     heads: Vec<HeadCache>,
+}
+
+/// Resolve a slot handle against the table (free function so callers can
+/// hold the entry borrow while mutating the disjoint `pool` field).
+fn slot_entry(slots: &[SlotEntry], slot: SeqSlot) -> Result<&SlotEntry> {
+    let e = slots
+        .get(slot.idx as usize)
+        .ok_or_else(|| anyhow!("slot {} out of range", slot.idx))?;
+    if !e.live || e.gen != slot.gen {
+        bail!("stale slot handle {} (sequence dropped)", slot.idx);
+    }
+    Ok(e)
+}
+
+fn slot_entry_mut(slots: &mut [SlotEntry], slot: SeqSlot) -> Result<&mut SlotEntry> {
+    let e = slots
+        .get_mut(slot.idx as usize)
+        .ok_or_else(|| anyhow!("slot {} out of range", slot.idx))?;
+    if !e.live || e.gen != slot.gen {
+        bail!("stale slot handle {} (sequence dropped)", slot.idx);
+    }
+    Ok(e)
 }
 
 /// Reusable workspace for [`PagedKvCache::attend_decode`].
@@ -133,7 +182,8 @@ impl Default for DecodeScratch {
     }
 }
 
-/// Paged FP4 KV cache over `layers × heads`, multi-sequence.
+/// Paged FP4 KV cache over `layers × heads`, multi-sequence, backed by a
+/// shared sealed-page pool (see module docs for the lifecycle).
 pub struct PagedKvCache {
     layers: usize,
     heads: usize,
@@ -144,6 +194,8 @@ pub struct PagedKvCache {
     /// seq_id → slot index. Admission/teardown and the u64-keyed wrappers
     /// only — never consulted by the `*_at` hot path.
     ids: BTreeMap<u64, u32>,
+    /// Refcounted owner of every sealed page.
+    pool: PagePool,
 }
 
 impl PagedKvCache {
@@ -156,6 +208,7 @@ impl PagedKvCache {
             slots: Vec::new(),
             free: Vec::new(),
             ids: BTreeMap::new(),
+            pool: PagePool::new(),
         }
     }
 
@@ -172,6 +225,32 @@ impl PagedKvCache {
     /// Transformer layers this cache spans.
     pub fn layers(&self) -> usize {
         self.layers
+    }
+
+    /// The sealed-page pool (occupancy queries, per-page byte lookups).
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
+    }
+
+    /// Mutable pool access (prefix-index ref management).
+    pub fn pool_mut(&mut self) -> &mut PagePool {
+        &mut self.pool
+    }
+
+    /// Toggle content-addressed dedup of sealed pages (on by default).
+    pub fn set_dedup(&mut self, on: bool) {
+        self.pool.set_dedup(on);
+    }
+
+    /// Configure disk spill for cold sealed pages (see [`SpillConfig`]).
+    pub fn set_spill(&mut self, cfg: Option<SpillConfig>) {
+        self.pool.set_spill(cfg);
+    }
+
+    /// Spill least-recently-touched sealed pages until the resident byte
+    /// budget is met; returns pages written. No-op without a spill config.
+    pub fn spill_to_budget(&mut self) -> Result<usize> {
+        self.pool.spill_to_budget()
     }
 
     /// Admit `seq`, returning its slot handle. Re-admitting a live id
@@ -212,38 +291,22 @@ impl PagedKvCache {
         Ok(SeqSlot { idx, gen: self.slots[idx as usize].gen })
     }
 
-    fn entry(&self, slot: SeqSlot) -> Result<&SlotEntry> {
-        let e = self
-            .slots
-            .get(slot.idx as usize)
-            .ok_or_else(|| anyhow!("slot {} out of range", slot.idx))?;
-        if !e.live || e.gen != slot.gen {
-            bail!("stale slot handle {} (sequence dropped)", slot.idx);
-        }
-        Ok(e)
-    }
-
-    fn entry_mut(&mut self, slot: SeqSlot) -> Result<&mut SlotEntry> {
-        let e = self
-            .slots
-            .get_mut(slot.idx as usize)
-            .ok_or_else(|| anyhow!("slot {} out of range", slot.idx))?;
-        if !e.live || e.gen != slot.gen {
-            bail!("stale slot handle {} (sequence dropped)", slot.idx);
-        }
-        Ok(e)
-    }
-
-    /// Free a sequence by slot handle: page memory is released immediately
-    /// (so [`PagedKvCache::memory_stats`] drops with it), the slot joins
-    /// the free list, and the handle's generation is retired.
+    /// Free a sequence by slot handle: hot pages are dropped and every
+    /// sealed ref is released back to the pool immediately (so
+    /// [`PagedKvCache::memory_stats`] drops with it — a page survives only
+    /// while some other holder still refs it), the slot joins the free
+    /// list, and the handle's generation is retired.
     pub fn drop_slot(&mut self, slot: SeqSlot) -> Result<()> {
-        let e = self.entry_mut(slot)?;
+        let e = slot_entry_mut(&mut self.slots, slot)?;
         let id = e.id;
         e.live = false;
         e.gen = e.gen.wrapping_add(1);
         for hc in e.heads.iter_mut() {
-            hc.pages.clear();
+            for page in hc.pages.drain(..) {
+                if let Page::Sealed(r) = page {
+                    self.pool.release(r);
+                }
+            }
             hc.len = 0;
         }
         self.ids.remove(&id);
@@ -251,11 +314,12 @@ impl PagedKvCache {
         Ok(())
     }
 
-    /// Free a sequence by id (no-op for unknown ids, as before).
-    pub fn drop_seq(&mut self, seq: u64) {
-        if let Ok(slot) = self.slot(seq) {
-            let _ = self.drop_slot(slot);
-        }
+    /// Free a sequence by id. An unknown id is a hard error, matching
+    /// [`PagedKvCache::drop_slot`] — a caller double-dropping (or dropping
+    /// a sequence it never admitted) is a leak bug that must not hide.
+    pub fn drop_seq(&mut self, seq: u64) -> Result<()> {
+        let slot = self.slot(seq)?;
+        self.drop_slot(slot)
     }
 
     /// Number of live sequences.
@@ -275,15 +339,55 @@ impl PagedKvCache {
 
     /// Cached token count of a live slot.
     pub fn seq_len_at(&self, slot: SeqSlot) -> Result<usize> {
-        Ok(self.entry(slot)?.heads[0].len)
+        Ok(slot_entry(&self.slots, slot)?.heads[0].len)
     }
 
-    fn head_cache(&mut self, slot: SeqSlot, layer: usize, head: usize) -> Result<&mut HeadCache> {
-        let idx = layer * self.heads + head;
-        self.entry_mut(slot)?
-            .heads
-            .get_mut(idx)
-            .ok_or_else(|| anyhow!("bad layer/head {layer}/{head}"))
+    /// Attach a run of already-sealed prefix pages to an **empty** slot
+    /// (copy-on-write admission). `runs[p]` holds page `p`'s refs in
+    /// layer-major `[layer * heads + head]` order; the cache takes one
+    /// ref per attached page and the sequence's length advances by
+    /// [`PAGE_SIZE`] per run entry. The next appended token opens a
+    /// private hot page after the shared run — no bytes are copied.
+    pub fn attach_prefix_at(&mut self, slot: SeqSlot, runs: &[Vec<PageRef>]) -> Result<()> {
+        let n = self.layers * self.heads;
+        let e = slot_entry_mut(&mut self.slots, slot)?;
+        if e.heads.iter().any(|hc| hc.len != 0) {
+            bail!("attach_prefix_at requires an empty sequence");
+        }
+        for run in runs {
+            if run.len() != n {
+                bail!("prefix run must cover {n} (layer, head) pages, got {}", run.len());
+            }
+            for (hidx, &r) in run.iter().enumerate() {
+                self.pool.retain(r);
+                let hc = &mut e.heads[hidx];
+                hc.pages.push(Page::Sealed(r));
+                hc.len += PAGE_SIZE;
+            }
+        }
+        Ok(())
+    }
+
+    /// Collect the first `n_pages` sealed pages of a slot as layer-major
+    /// runs (the shape [`PagedKvCache::attach_prefix_at`] consumes, and
+    /// what a prefix index registers). Errors if any of those pages is
+    /// still hot.
+    pub fn sealed_prefix_refs_at(&self, slot: SeqSlot, n_pages: usize) -> Result<Vec<Vec<PageRef>>> {
+        let e = slot_entry(&self.slots, slot)?;
+        let n = self.layers * self.heads;
+        let mut runs = Vec::with_capacity(n_pages);
+        for p in 0..n_pages {
+            let mut run = Vec::with_capacity(n);
+            for (hidx, hc) in e.heads.iter().enumerate() {
+                match hc.pages.get(p) {
+                    Some(Page::Sealed(r)) => run.push(*r),
+                    Some(Page::Hot { .. }) => bail!("page {p} of head {hidx} is not sealed yet"),
+                    None => bail!("slot has no page {p} for head {hidx}"),
+                }
+            }
+            runs.push(run);
+        }
+        Ok(runs)
     }
 
     /// Append one token's K and V vectors (`d` floats each).
@@ -312,7 +416,11 @@ impl PagedKvCache {
         if k.len() != d || v.len() != d {
             bail!("k/v must be head_dim={d} long");
         }
-        let hc = self.head_cache(slot, layer, head)?;
+        let idx = layer * self.heads + head;
+        let hc = slot_entry_mut(&mut self.slots, slot)?
+            .heads
+            .get_mut(idx)
+            .ok_or_else(|| anyhow!("bad layer/head {layer}/{head}"))?;
         let needs_new = match hc.pages.last() {
             Some(Page::Hot { len, .. }) => *len >= PAGE_SIZE,
             _ => true,
@@ -324,6 +432,7 @@ impl PagedKvCache {
                 len: 0,
             });
         }
+        let mut sealed = None;
         if let Some(Page::Hot { k: pk, v: pv, len }) = hc.pages.last_mut() {
             pk.extend_from_slice(k);
             pv.extend_from_slice(v);
@@ -338,8 +447,15 @@ impl PagedKvCache {
                     }
                 }
                 let vq = PackedNvfp4::quantize(&vt, d, PAGE_SIZE)?;
-                *hc.pages.last_mut().unwrap() = Page::Sealed { k: kq, vt: vq };
+                sealed = Some(SealedPage { k: kq, vt: vq });
             }
+        }
+        if let Some(page) = sealed {
+            // The pool owns the sealed bytes; with dedup on, a
+            // byte-identical page already sealed by another sequence is
+            // shared instead of stored twice.
+            let r = self.pool.insert(page);
+            *hc.pages.last_mut().unwrap() = Page::Sealed(r);
         }
         hc.len += 1;
         Ok(())
@@ -347,8 +463,8 @@ impl PagedKvCache {
 
     /// Gather the full K and V (each `len × d`, f32) for attention.
     ///
-    /// Sealed pages dequantize from 4-bit storage (the FP4 read path);
-    /// the hot tail copies straight through.
+    /// Sealed pages dequantize from 4-bit pooled storage (the FP4 read
+    /// path); the hot tail copies straight through.
     pub fn gather(&self, seq: u64, layer: usize, head: usize) -> Result<(Vec<f32>, Vec<f32>)> {
         self.gather_at(self.slot(seq)?, layer, head)
     }
@@ -362,8 +478,7 @@ impl PagedKvCache {
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         let d = self.head_dim;
         let idx = layer * self.heads + head;
-        let hc = self
-            .entry(slot)?
+        let hc = slot_entry(&self.slots, slot)?
             .heads
             .get(idx)
             .ok_or_else(|| anyhow!("bad layer/head"))?;
@@ -375,9 +490,10 @@ impl PagedKvCache {
                     k.extend_from_slice(pk);
                     v.extend_from_slice(pv);
                 }
-                Page::Sealed { k: kq, vt } => {
-                    k.extend(kq.dequantize());
-                    let vtd = vt.dequantize(); // (d × 16)
+                Page::Sealed(r) => {
+                    let page = self.pool.page(*r)?;
+                    k.extend(page.k.dequantize());
+                    let vtd = page.vt.dequantize(); // (d × 16)
                     let base = v.len();
                     v.resize(base + PAGE_SIZE * d, 0.0);
                     for c in 0..d {
@@ -401,7 +517,9 @@ impl PagedKvCache {
     /// `d × 8` code bytes are touched) — while the hot (still-filling)
     /// tail falls back to plain f32. The query is quantized once per call
     /// for the packed dots; P̃ is quantized per page, matching the
-    /// engine-side Alg. 1 semantics.
+    /// engine-side Alg. 1 semantics. Shared (pooled) pages walk the exact
+    /// same packed bytes a private copy would, so sharing never changes a
+    /// decode result.
     ///
     /// Replaces the `gather` + `attend_f32` decode pair: no O(seq_len·d)
     /// dequant + copy per token, and — with a reused [`DecodeScratch`] —
@@ -437,15 +555,14 @@ impl PagedKvCache {
             bail!("q/out must be head_dim={d} long");
         }
         let idx = layer * self.heads + head;
-        let hc = self
-            .entry(slot)?
+        let hc = slot_entry(&self.slots, slot)?
             .heads
             .get(idx)
             .ok_or_else(|| anyhow!("bad layer/head {layer}/{head}"))?;
         if hc.len == 0 {
             bail!("slot {} has no cached tokens", slot.idx);
         }
-        Ok(attend_query_walk(hc, d, q, hc.len, out, scratch))
+        attend_query_walk(hc, &self.pool, d, q, hc.len, out, scratch)
     }
 
     /// Batched multi-query prefill attention over the paged FP4 cache —
@@ -461,6 +578,10 @@ impl PagedKvCache {
     /// decode amortise across the whole prompt. The final partial page of
     /// a query's causal window masks by zeroing P̃ beyond the limit before
     /// quantization, matching the engine-side padding semantics.
+    ///
+    /// Under prefix sharing the suffix queries attend attached shared
+    /// pages exactly as if the slot had appended them itself — the walk
+    /// only sees packed bytes behind `PageRef`s.
     ///
     /// Writes outputs into `out` (`nq × head_dim`) and per-row logsumexps
     /// into `lse` (`nq`). For a query whose window covers the whole cache
@@ -498,8 +619,7 @@ impl PagedKvCache {
             bail!("q/out must be nq={nq} x head_dim={d}, lse nq={nq} long");
         }
         let idx = layer * self.heads + head;
-        let hc = self
-            .entry(slot)?
+        let hc = slot_entry(&self.slots, slot)?
             .heads
             .get(idx)
             .ok_or_else(|| anyhow!("bad layer/head {layer}/{head}"))?;
@@ -513,53 +633,68 @@ impl PagedKvCache {
             let limit = len - nq + i + 1;
             lse[i] = attend_query_walk(
                 hc,
+                &self.pool,
                 d,
                 &q[i * d..(i + 1) * d],
                 limit,
                 &mut out[i * d..(i + 1) * d],
                 scratch,
-            );
+            )?;
         }
         Ok(())
     }
 
     /// (bytes used, bytes an f32 cache would use) across all **live**
-    /// sequences — freed slots release their pages in
+    /// sequences — freed slots release their refs in
     /// [`PagedKvCache::drop_slot`], so a drained cache reports (0, 0)
-    /// no matter how many sequences churned through it.
+    /// no matter how many sequences churned through it. Sealed bytes come
+    /// from the pool, so a page shared by N sequences is counted **once**;
+    /// the f32-equivalent side counts every sequence's logical tokens (the
+    /// memory an unshared f32 cache would need), which is exactly the
+    /// sharing + quantization multiplier.
     pub fn memory_stats(&self) -> (usize, usize) {
         let d = self.head_dim;
-        let mut used = 0usize;
+        let mut used = self.pool.total_bytes();
         let mut f32_equiv = 0usize;
         for heads in self.slots.iter().filter(|s| s.live).map(|s| &s.heads) {
             for hc in heads {
                 f32_equiv += hc.len * d * 4 * 2; // K and V
                 for page in &hc.pages {
-                    used += match page {
-                        Page::Hot { k, v, .. } => (k.len() + v.len()) * 4,
-                        Page::Sealed { k, vt } => k.memory_bytes() + vt.memory_bytes(),
-                    };
+                    if let Page::Hot { k, v, .. } = page {
+                        used += (k.len() + v.len()) * 4;
+                    }
                 }
             }
         }
         (used, f32_equiv)
     }
 
-    /// Number of live sequences currently holding a slot.
-    pub fn live_seqs(&self) -> usize {
-        self.slots.iter().filter(|s| s.live).count()
-    }
-
     /// Occupancy as one JSON object for the telemetry snapshot: live
-    /// sequence count, packed bytes in use, and the f32-equivalent bytes
-    /// the same tokens would occupy (their ratio is the paper's ~7×
-    /// KV-memory reduction).
+    /// sequence count, packed bytes in use (shared pages once), the
+    /// f32-equivalent bytes the same tokens would occupy (their ratio is
+    /// the paper's ~7× KV-memory reduction, amplified by sharing), and
+    /// per-kind page counts so dashboards can graph pool composition.
     pub fn memory_json(&self) -> Json {
         let (used, f32_equiv) = self.memory_stats();
+        let mut hot = 0usize;
+        for heads in self.slots.iter().filter(|s| s.live).map(|s| &s.heads) {
+            for hc in heads {
+                hot += hc.pages.iter().filter(|p| matches!(p, Page::Hot { .. })).count();
+            }
+        }
         Json::obj(vec![
             ("live_seqs", Json::Num(self.live_seqs() as f64)),
             ("kv_bytes", Json::Num(used as f64)),
             ("kv_bytes_f32_equiv", Json::Num(f32_equiv as f64)),
+            (
+                "pages",
+                Json::obj(vec![
+                    ("hot", Json::Num(hot as f64)),
+                    ("sealed", Json::Num(self.pool.live_pages() as f64)),
+                    ("shared", Json::Num(self.pool.shared_pages() as f64)),
+                    ("spilled", Json::Num(self.pool.spilled_pages() as f64)),
+                ]),
+            ),
         ])
     }
 }
@@ -567,22 +702,25 @@ impl PagedKvCache {
 /// Shared per-query online-softmax page walk behind
 /// [`PagedKvCache::attend_decode`] and [`PagedKvCache::attend_prefill`]:
 /// attends keys `0..limit` of one (seq, layer, head) page list — sealed
-/// pages consumed in the packed domain (query quantized once through the
-/// scratch's N-way memo, P̃ quantized per page), the hot tail in f32 —
-/// writing the output row into `out` and returning the logsumexp.
+/// pages resolved through the pool and consumed in the packed domain
+/// (query quantized once through the scratch's N-way memo, P̃ quantized
+/// per page), the hot tail in f32 — writing the output row into `out`
+/// and returning the logsumexp.
 ///
 /// A `limit` ending inside a sealed page masks causally by zeroing P̃
 /// beyond the window before quantizing the block, matching the
 /// engine-side padding semantics; with `limit == hc.len` every page is
-/// full and the walk is exactly the single-query decode.
+/// full and the walk is exactly the single-query decode. The only
+/// fallible step is the pool lookup (stale ref / unreadable spill file).
 fn attend_query_walk(
     hc: &HeadCache,
+    pool: &PagePool,
     d: usize,
     q: &[f32],
     limit: usize,
     out: &mut [f32],
     scratch: &mut DecodeScratch,
-) -> f32 {
+) -> Result<f32> {
     let lut = lut::pair_dot();
     let scale = 1.0 / (d as f32).sqrt();
     // Quantize the query once (blocks along d, the QKᵀ contraction) —
@@ -600,7 +738,9 @@ fn attend_query_walk(
             break;
         }
         match page {
-            Page::Sealed { k, vt } => {
+            Page::Sealed(r) => {
+                let sealed = pool.page(*r)?;
+                let (k, vt) = (&sealed.k, &sealed.vt);
                 let n_in = PAGE_SIZE.min(limit - pos);
                 let mut page_m = f32::NEG_INFINITY;
                 for t in 0..n_in {
@@ -678,7 +818,7 @@ fn attend_query_walk(
     for (oc, a) in out.iter_mut().zip(&scratch.acc) {
         *oc = a * inv;
     }
-    m + l.ln()
+    Ok(m + l.ln())
 }
 
 #[cfg(test)]
@@ -772,12 +912,16 @@ mod tests {
         let mut c = PagedKvCache::new(1, 1, 16);
         assert!(c.append(9, 0, 0, &[0.0; 16], &[0.0; 16]).is_err());
         assert!(c.gather(9, 0, 0).is_err());
+        assert!(c.drop_seq(42).is_err(), "unknown drop_seq must be a hard error");
         let mut scratch = DecodeScratch::new();
         let mut out = vec![0.0; 16];
         assert!(c.attend_decode(9, 0, 0, &[0.0; 16], &mut out, &mut scratch).is_err());
         // Known seq but no tokens yet: also an error, not NaN output.
         c.add_seq(1);
         assert!(c.attend_decode(1, 0, 0, &[0.0; 16], &mut out, &mut scratch).is_err());
+        // Double drop: first succeeds, second errors.
+        assert!(c.drop_seq(1).is_ok());
+        assert!(c.drop_seq(1).is_err());
     }
 
     #[test]
@@ -1000,7 +1144,7 @@ mod tests {
         let mut live: Vec<u64> = Vec::new();
         for i in 0..2000u64 {
             if live.len() == live_cap {
-                c.drop_seq(live.remove(0));
+                c.drop_seq(live.remove(0)).unwrap();
             }
             let slot = c.add_seq(i);
             // Cross a page boundary so sealed pages churn too.
@@ -1017,11 +1161,129 @@ mod tests {
         // Only the live set is accounted.
         assert!(used > 0 && equiv == live.len() * (PAGE_SIZE + 3) * d * 4 * 2);
         for id in live.drain(..) {
-            c.drop_seq(id);
+            c.drop_seq(id).unwrap();
         }
         assert_eq!(c.memory_stats(), (0, 0));
         assert_eq!(c.live_seqs(), 0);
         assert!(c.slot_capacity() <= live_cap);
+        // The pool drained with the sequences: no live pages left behind.
+        assert_eq!(c.pool().live_pages(), 0);
+    }
+
+    #[test]
+    fn dedup_shares_identical_sealed_pages() {
+        // Two sequences appending byte-identical tokens seal byte-identical
+        // pages; with dedup on (the default) the pool stores one copy and
+        // memory_stats counts it once.
+        let d = 16;
+        let mut c = PagedKvCache::new(1, 1, d);
+        let mut rng = Rng::new(40);
+        let toks: Vec<(Vec<f32>, Vec<f32>)> = (0..PAGE_SIZE)
+            .map(|_| (rng.normal_vec(d, 0.0, 1.0), rng.normal_vec(d, 0.0, 1.0)))
+            .collect();
+        for seq in [1u64, 2] {
+            let slot = c.add_seq(seq);
+            for (k, v) in &toks {
+                c.append_at(slot, 0, 0, k, v).unwrap();
+            }
+        }
+        assert_eq!(c.pool().live_pages(), 1, "identical pages must dedup");
+        assert_eq!(c.pool().shared_pages(), 1);
+        assert_eq!(c.pool().stats().dedup_hits, 1);
+        let (used_shared, equiv) = c.memory_stats();
+        assert_eq!(equiv, 2 * PAGE_SIZE * d * 4 * 2);
+        // Unshared baseline: dedup off stores both copies.
+        let mut u = PagedKvCache::new(1, 1, d);
+        u.set_dedup(false);
+        for seq in [1u64, 2] {
+            let slot = u.add_seq(seq);
+            for (k, v) in &toks {
+                u.append_at(slot, 0, 0, k, v).unwrap();
+            }
+        }
+        assert_eq!(u.pool().live_pages(), 2);
+        assert_eq!(u.pool().shared_pages(), 0);
+        let (used_unshared, _) = u.memory_stats();
+        assert_eq!(used_unshared, 2 * used_shared, "shared bytes counted once");
+        // Dropping one holder keeps the page; dropping both frees it.
+        c.drop_seq(1).unwrap();
+        assert_eq!(c.pool().live_pages(), 1);
+        assert_eq!(c.pool().shared_pages(), 0);
+        c.drop_seq(2).unwrap();
+        assert_eq!(c.pool().live_pages(), 0);
+    }
+
+    #[test]
+    fn attach_prefix_matches_appended_sequence_bitwise() {
+        // Seq A appends 37 tokens. Seq B attaches A's two sealed prefix
+        // pages (32 tokens) and appends the same tail — gather and attend
+        // must be bitwise identical: the walk reads the same packed bytes.
+        let d = 32;
+        let mut c = PagedKvCache::new(2, 2, d);
+        let a = c.add_seq(1);
+        let mut rng = Rng::new(41);
+        let toks: Vec<Vec<(Vec<f32>, Vec<f32>)>> = (0..37)
+            .map(|_| {
+                (0..4)
+                    .map(|_| (rng.normal_vec(d, 0.0, 1.0), rng.normal_vec(d, 0.0, 1.0)))
+                    .collect()
+            })
+            .collect();
+        for tok in &toks {
+            for l in 0..2 {
+                for h in 0..2 {
+                    let (k, v) = &tok[l * 2 + h];
+                    c.append_at(a, l, h, k, v).unwrap();
+                }
+            }
+        }
+        let runs = c.sealed_prefix_refs_at(a, 2).unwrap();
+        assert_eq!(runs.len(), 2);
+        assert!(runs.iter().all(|r| r.len() == 4));
+        let b = c.add_seq(2);
+        c.attach_prefix_at(b, &runs).unwrap();
+        assert_eq!(c.seq_len_at(b).unwrap(), 32);
+        for tok in &toks[32..] {
+            for l in 0..2 {
+                for h in 0..2 {
+                    let (k, v) = &tok[l * 2 + h];
+                    c.append_at(b, l, h, k, v).unwrap();
+                }
+            }
+        }
+        assert_eq!(c.pool().shared_pages(), 2 * 4, "prefix pages shared across A and B");
+        let q = rng.normal_vec(d, 0.0, 1.0);
+        let (mut oa, mut ob) = (vec![0.0; d], vec![0.0; d]);
+        let mut s1 = DecodeScratch::new();
+        let mut s2 = DecodeScratch::new();
+        let la = c.attend_decode_at(a, 1, 1, &q, &mut oa, &mut s1).unwrap();
+        let lb = c.attend_decode_at(b, 1, 1, &q, &mut ob, &mut s2).unwrap();
+        assert_eq!(oa, ob);
+        assert_eq!(la, lb);
+        let (k1, v1) = c.gather_at(a, 0, 1).unwrap();
+        let (k2, v2) = c.gather_at(b, 0, 1).unwrap();
+        assert_eq!(k1, k2);
+        assert_eq!(v1, v2);
+        // Attaching to a non-empty slot is rejected.
+        assert!(c.attach_prefix_at(b, &runs).is_err());
+        // Dropping A leaves B's attached pages fully readable.
+        c.drop_slot(a).unwrap();
+        assert!(c.gather_at(b, 0, 1).is_ok());
+        c.drop_slot(b).unwrap();
+        assert_eq!(c.pool().live_pages(), 0);
+    }
+
+    #[test]
+    fn memory_json_reports_page_kinds() {
+        let d = 16;
+        let mut c = PagedKvCache::new(1, 1, d);
+        fill(&mut c, 1, PAGE_SIZE + 3, d, 43);
+        let doc = c.memory_json();
+        assert_eq!(doc.get("live_seqs").as_f64(), Some(1.0));
+        assert_eq!(doc.get("pages").get("hot").as_f64(), Some(1.0));
+        assert_eq!(doc.get("pages").get("sealed").as_f64(), Some(1.0));
+        assert_eq!(doc.get("pages").get("shared").as_f64(), Some(0.0));
+        assert_eq!(doc.get("pages").get("spilled").as_f64(), Some(0.0));
     }
 
     #[test]

@@ -1,0 +1,492 @@
+//! Refcounted, content-addressed pool of **sealed** NVFP4 pages.
+//!
+//! A sealed page (16 tokens of packed K + packed Vᵀ for one (layer,
+//! head)) is immutable: quantization is deterministic, so byte-identical
+//! token prefixes under the same weights produce byte-identical sealed
+//! pages. That makes sealed pages natural shared objects — the pool owns
+//! them behind small [`PageRef`] handles, deduplicates inserts by
+//! content hash, and counts every page's bytes **once** no matter how
+//! many sequences (or prefix-index nodes) hold a ref.
+//!
+//! Lifecycle:
+//!
+//! * [`PagePool::insert`] — a cache seals a page; with dedup on, a
+//!   byte-identical live page is re-used (`refs += 1`) instead of
+//!   allocated. Only genuinely fresh pages grow `fresh_bytes`.
+//! * [`PagePool::retain`] / [`PagePool::release`] — attach/detach of
+//!   refs is the whole copy-on-write story: sealed pages never mutate,
+//!   so a sequence diverging from a shared prefix just stops at the
+//!   shared run and appends private hot pages after it. A page whose
+//!   refcount reaches zero is freed (and its spill file deleted).
+//! * [`PagePool::page`] — the read path. Takes `&self` (attends fan out
+//!   across threads), bumps the LRU touch clock, and transparently
+//!   reloads a spilled page from disk.
+//! * [`PagePool::spill_to_budget`] — writes least-recently-touched
+//!   resident pages to the configured spill directory until the
+//!   resident byte total fits the budget (ROADMAP item (d): cold sealed
+//!   pages leave RAM, long contexts keep decoding).
+//!
+//! Concurrency: mutation (`insert`/`retain`/`release`/spill) is `&mut`
+//! and stays on the single worker thread that owns the cache; reads are
+//! `&self` behind a per-entry `Mutex` (held only to clone the `Arc` or
+//! swap a reloaded page in, never across an attention walk), so the
+//! pool is `Sync` for the multi-threaded decode fan-out.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::formats::tensor4::PackedNvfp4;
+
+/// One immutable sealed page: K packed (PAGE_SIZE × d, blocks along d)
+/// and V packed transposed (d × PAGE_SIZE, blocks along the token axis).
+pub struct SealedPage {
+    pub k: PackedNvfp4,
+    pub vt: PackedNvfp4,
+}
+
+impl SealedPage {
+    /// Packed bytes this page occupies (codes + scales of both halves).
+    pub fn packed_bytes(&self) -> usize {
+        self.k.memory_bytes() + self.vt.memory_bytes()
+    }
+
+    /// FNV-1a over dims, codes, and scales of both halves — the pool's
+    /// content address. Collisions are disambiguated by a byte compare.
+    fn content_hash(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        for half in [&self.k, &self.vt] {
+            eat(&(half.rows as u32).to_le_bytes());
+            eat(&(half.cols as u32).to_le_bytes());
+            eat(&half.codes);
+            eat(&half.scales);
+        }
+        h
+    }
+
+    fn content_eq(&self, other: &SealedPage) -> bool {
+        self.k.rows == other.k.rows
+            && self.k.cols == other.k.cols
+            && self.vt.rows == other.vt.rows
+            && self.vt.cols == other.vt.cols
+            && self.k.codes == other.k.codes
+            && self.k.scales == other.k.scales
+            && self.vt.codes == other.vt.codes
+            && self.vt.scales == other.vt.scales
+    }
+}
+
+/// Shared handle to a pooled sealed page: a plain index, `Copy`, valid
+/// while at least one ref is held. All byte accounting lives in the
+/// pool, so cloning a `PageRef` is free and never copies page bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PageRef(u32);
+
+impl PageRef {
+    /// Raw pool index (diagnostics; the pool may reuse it after free).
+    pub fn index(&self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Where a live page's bytes currently are.
+enum PageState {
+    Resident(Arc<SealedPage>),
+    Spilled(PathBuf),
+    /// Entry is on the free list (refs == 0).
+    Free,
+}
+
+struct PoolEntry {
+    refs: u32,
+    hash: u64,
+    /// Packed bytes (identical resident or spilled).
+    bytes: usize,
+    state: Mutex<PageState>,
+    /// LRU stamp from the pool's logical touch clock (not wall time, so
+    /// spill order is deterministic for a deterministic access order).
+    last_touch: AtomicU64,
+}
+
+/// Disk-spill policy for cold sealed pages (`serve cluster
+/// --kv-spill-dir`). The pool creates a unique subdirectory under `dir`
+/// per pool instance, so respawned shard incarnations and concurrent
+/// tests never collide on file names.
+#[derive(Clone, Debug)]
+pub struct SpillConfig {
+    pub dir: PathBuf,
+    /// Resident packed-byte budget; [`PagePool::spill_to_budget`] spills
+    /// LRU pages until resident bytes fit under it.
+    pub budget_bytes: usize,
+}
+
+/// Monotonic pool counters (never decremented; occupancy queries live on
+/// the pool itself).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Unique pages created (dedup misses).
+    pub unique_pages: u64,
+    /// Inserts satisfied by an existing byte-identical page.
+    pub dedup_hits: u64,
+    /// Packed bytes of unique pages created — the "KV bytes actually
+    /// allocated" series the shared-prefix bench reports per sequence.
+    pub fresh_bytes: u64,
+    /// Pages written to the spill directory (re-spills count again).
+    pub spilled_total: u64,
+    /// Spilled pages transparently reloaded on an attend.
+    pub reloaded: u64,
+}
+
+/// The pool (one per [`crate::kvcache::PagedKvCache`]). See module docs.
+pub struct PagePool {
+    entries: Vec<PoolEntry>,
+    free: Vec<u32>,
+    /// content hash → entry indices (live entries only).
+    by_hash: BTreeMap<u64, Vec<u32>>,
+    clock: AtomicU64,
+    /// Content-addressed dedup on insert. Off reproduces pre-pool
+    /// allocation behavior exactly (every seal is a fresh page).
+    dedup: bool,
+    spill: Option<SpillConfig>,
+    unique_pages: u64,
+    dedup_hits: u64,
+    fresh_bytes: u64,
+    spilled_total: u64,
+    reloaded: AtomicU64,
+}
+
+/// Distinguishes spill subdirectories across pool instances in one
+/// process (respawned shard incarnations share the CLI-level dir).
+static POOL_DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+impl PagePool {
+    pub fn new() -> PagePool {
+        PagePool {
+            entries: Vec::new(),
+            free: Vec::new(),
+            by_hash: BTreeMap::new(),
+            clock: AtomicU64::new(0),
+            dedup: true,
+            spill: None,
+            unique_pages: 0,
+            dedup_hits: 0,
+            fresh_bytes: 0,
+            spilled_total: 0,
+            reloaded: AtomicU64::new(0),
+        }
+    }
+
+    /// Enable/disable content-addressed dedup (on by default). The
+    /// unshared serving baseline turns it off so its memory accounting
+    /// matches a pool-less cache bitwise.
+    pub fn set_dedup(&mut self, on: bool) {
+        self.dedup = on;
+    }
+
+    /// Configure (or clear) disk spill. A unique per-pool subdirectory
+    /// is created under `cfg.dir`; it is cleaned up on drop.
+    pub fn set_spill(&mut self, cfg: Option<SpillConfig>) {
+        self.spill = cfg.map(|c| {
+            let n = POOL_DIR_SEQ.fetch_add(1, Ordering::SeqCst);
+            let dir = c.dir.join(format!("pool{n:04}"));
+            let _ = std::fs::create_dir_all(&dir);
+            SpillConfig { dir, budget_bytes: c.budget_bytes }
+        });
+    }
+
+    pub fn spill_config(&self) -> Option<&SpillConfig> {
+        self.spill.as_ref()
+    }
+
+    fn touch(&self, e: &PoolEntry) {
+        let t = self.clock.fetch_add(1, Ordering::Relaxed) + 1;
+        e.last_touch.store(t, Ordering::Relaxed);
+    }
+
+    /// Insert a freshly sealed page, returning a handle carrying one ref.
+    /// With dedup on, a byte-identical live page absorbs the insert
+    /// (`refs += 1`, nothing allocated).
+    pub fn insert(&mut self, page: SealedPage) -> PageRef {
+        let hash = page.content_hash();
+        if self.dedup {
+            if let Some(bucket) = self.by_hash.get(&hash).cloned() {
+                for idx in bucket {
+                    if self.entries[idx as usize].refs == 0 {
+                        continue;
+                    }
+                    let Ok(existing) = self.page(PageRef(idx)) else { continue };
+                    if existing.content_eq(&page) {
+                        self.entries[idx as usize].refs += 1;
+                        self.dedup_hits += 1;
+                        return PageRef(idx);
+                    }
+                }
+            }
+        }
+        let bytes = page.packed_bytes();
+        let state = Mutex::new(PageState::Resident(Arc::new(page)));
+        let idx = match self.free.pop() {
+            Some(idx) => {
+                let e = &mut self.entries[idx as usize];
+                e.refs = 1;
+                e.hash = hash;
+                e.bytes = bytes;
+                e.state = state;
+                idx
+            }
+            None => {
+                let idx = self.entries.len() as u32;
+                self.entries.push(PoolEntry {
+                    refs: 1,
+                    hash,
+                    bytes,
+                    state,
+                    last_touch: AtomicU64::new(0),
+                });
+                idx
+            }
+        };
+        self.touch(&self.entries[idx as usize]);
+        self.by_hash.entry(hash).or_default().push(idx);
+        self.unique_pages += 1;
+        self.fresh_bytes += bytes as u64;
+        PageRef(idx)
+    }
+
+    fn live_entry(&self, r: PageRef) -> Result<&PoolEntry> {
+        let e = self
+            .entries
+            .get(r.0 as usize)
+            .ok_or_else(|| anyhow!("page ref {} out of range", r.0))?;
+        if e.refs == 0 {
+            bail!("dead page ref {} (refcount dropped to zero)", r.0);
+        }
+        Ok(e)
+    }
+
+    /// Take one more ref on a live page (COW attach).
+    pub fn retain(&mut self, r: PageRef) {
+        let e = &mut self.entries[r.0 as usize];
+        assert!(e.refs > 0, "retain of dead page ref {}", r.0);
+        e.refs += 1;
+    }
+
+    /// Drop one ref; the last release frees the entry (and deletes its
+    /// spill file, if any).
+    pub fn release(&mut self, r: PageRef) {
+        let e = &mut self.entries[r.0 as usize];
+        assert!(e.refs > 0, "release of dead page ref {}", r.0);
+        e.refs -= 1;
+        if e.refs > 0 {
+            return;
+        }
+        let hash = e.hash;
+        e.bytes = 0;
+        if let Ok(mut st) = e.state.lock() {
+            if let PageState::Spilled(path) = &*st {
+                let _ = std::fs::remove_file(path);
+            }
+            *st = PageState::Free;
+        }
+        if let Some(bucket) = self.by_hash.get_mut(&hash) {
+            bucket.retain(|&i| i != r.0);
+            if bucket.is_empty() {
+                self.by_hash.remove(&hash);
+            }
+        }
+        self.free.push(r.0);
+    }
+
+    /// Current refcount of a live page (0 for a freed entry).
+    pub fn refs(&self, r: PageRef) -> u32 {
+        self.entries.get(r.0 as usize).map(|e| e.refs).unwrap_or(0)
+    }
+
+    /// Packed bytes of a live page.
+    pub fn page_bytes(&self, r: PageRef) -> usize {
+        self.entries.get(r.0 as usize).map(|e| e.bytes).unwrap_or(0)
+    }
+
+    /// The read path: touch the LRU clock and hand out the page,
+    /// transparently reloading it from disk if it was spilled. `&self` —
+    /// safe from the multi-threaded decode fan-out.
+    pub fn page(&self, r: PageRef) -> Result<Arc<SealedPage>> {
+        let e = self.live_entry(r)?;
+        self.touch(e);
+        let mut st = e.state.lock().map_err(|_| anyhow!("page {} lock poisoned", r.0))?;
+        match &*st {
+            PageState::Resident(p) => Ok(p.clone()),
+            PageState::Spilled(path) => {
+                let page = Arc::new(read_page(path)?);
+                self.reloaded.fetch_add(1, Ordering::Relaxed);
+                let _ = std::fs::remove_file(path);
+                *st = PageState::Resident(page.clone());
+                Ok(page)
+            }
+            PageState::Free => bail!("page ref {} points at a freed entry", r.0),
+        }
+    }
+
+    /// Spill least-recently-touched resident pages until resident bytes
+    /// fit the configured budget. No-op without a spill config. Returns
+    /// the number of pages written.
+    pub fn spill_to_budget(&mut self) -> Result<usize> {
+        let Some(cfg) = self.spill.clone() else { return Ok(0) };
+        let mut resident: Vec<(u64, u32, usize)> = Vec::new();
+        let mut resident_bytes = 0usize;
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.refs == 0 {
+                continue;
+            }
+            let st = e.state.lock().map_err(|_| anyhow!("page {i} lock poisoned"))?;
+            if matches!(&*st, PageState::Resident(_)) {
+                resident.push((e.last_touch.load(Ordering::Relaxed), i as u32, e.bytes));
+                resident_bytes += e.bytes;
+            }
+        }
+        if resident_bytes <= cfg.budget_bytes {
+            return Ok(0);
+        }
+        resident.sort_unstable();
+        let mut spilled = 0usize;
+        for (_, idx, bytes) in resident {
+            if resident_bytes <= cfg.budget_bytes {
+                break;
+            }
+            let e = &self.entries[idx as usize];
+            let mut st = e.state.lock().map_err(|_| anyhow!("page {idx} lock poisoned"))?;
+            let PageState::Resident(page) = &*st else { continue };
+            let path = cfg.dir.join(format!("p{idx}.bin"));
+            write_page(&path, page)
+                .with_context(|| format!("spilling page {idx} to {}", path.display()))?;
+            *st = PageState::Spilled(path);
+            drop(st);
+            resident_bytes -= bytes;
+            spilled += 1;
+            self.spilled_total += 1;
+        }
+        Ok(spilled)
+    }
+
+    /// Live pages (refs > 0).
+    pub fn live_pages(&self) -> usize {
+        self.entries.iter().filter(|e| e.refs > 0).count()
+    }
+
+    /// Live pages held by more than one ref.
+    pub fn shared_pages(&self) -> usize {
+        self.entries.iter().filter(|e| e.refs > 1).count()
+    }
+
+    /// Live pages currently on disk.
+    pub fn spilled_pages(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| e.refs > 0)
+            .filter(|e| matches!(e.state.lock().as_deref(), Ok(PageState::Spilled(_))))
+            .count()
+    }
+
+    /// Packed bytes of live pages resident in RAM.
+    pub fn resident_bytes(&self) -> usize {
+        self.entries
+            .iter()
+            .filter(|e| e.refs > 0)
+            .filter(|e| matches!(e.state.lock().as_deref(), Ok(PageState::Resident(_))))
+            .map(|e| e.bytes)
+            .sum()
+    }
+
+    /// Packed bytes of all live pages (resident + spilled), each unique
+    /// page counted once regardless of refcount.
+    pub fn total_bytes(&self) -> usize {
+        self.entries.iter().filter(|e| e.refs > 0).map(|e| e.bytes).sum()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            unique_pages: self.unique_pages,
+            dedup_hits: self.dedup_hits,
+            fresh_bytes: self.fresh_bytes,
+            spilled_total: self.spilled_total,
+            reloaded: self.reloaded.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for PagePool {
+    fn default() -> PagePool {
+        PagePool::new()
+    }
+}
+
+impl Drop for PagePool {
+    /// Best-effort cleanup of the pool's private spill subdirectory
+    /// (files of pages still spilled at teardown, then the dir itself).
+    fn drop(&mut self) {
+        if let Some(cfg) = &self.spill {
+            for e in &self.entries {
+                if let Ok(st) = e.state.lock() {
+                    if let PageState::Spilled(path) = &*st {
+                        let _ = std::fs::remove_file(path);
+                    }
+                }
+            }
+            let _ = std::fs::remove_dir(&cfg.dir);
+        }
+    }
+}
+
+/// Spill file format: 8 little-endian u32s
+/// `[k.rows, k.cols, k.codes.len, k.scales.len, vt.rows, vt.cols,
+/// vt.codes.len, vt.scales.len]` followed by the four byte arrays.
+fn write_page(path: &std::path::Path, page: &SealedPage) -> Result<()> {
+    let k = &page.k;
+    let vt = &page.vt;
+    let mut buf = Vec::with_capacity(32 + page.packed_bytes());
+    for n in [
+        k.rows, k.cols, k.codes.len(), k.scales.len(),
+        vt.rows, vt.cols, vt.codes.len(), vt.scales.len(),
+    ] {
+        buf.extend_from_slice(&(n as u32).to_le_bytes());
+    }
+    buf.extend_from_slice(&k.codes);
+    buf.extend_from_slice(&k.scales);
+    buf.extend_from_slice(&vt.codes);
+    buf.extend_from_slice(&vt.scales);
+    std::fs::write(path, buf)?;
+    Ok(())
+}
+
+fn read_page(path: &std::path::Path) -> Result<SealedPage> {
+    let buf = std::fs::read(path).with_context(|| format!("reloading {}", path.display()))?;
+    if buf.len() < 32 {
+        bail!("spill file {} truncated ({} bytes)", path.display(), buf.len());
+    }
+    let mut dims = [0usize; 8];
+    for (i, d) in dims.iter_mut().enumerate() {
+        *d = u32::from_le_bytes(buf[i * 4..i * 4 + 4].try_into().unwrap()) as usize;
+    }
+    let [kr, kc, kcl, ksl, vr, vc, vcl, vsl] = dims;
+    if buf.len() != 32 + kcl + ksl + vcl + vsl {
+        bail!("spill file {} has inconsistent lengths", path.display());
+    }
+    let mut off = 32usize;
+    let mut take = |n: usize| {
+        let s = buf[off..off + n].to_vec();
+        off += n;
+        s
+    };
+    let k = PackedNvfp4 { rows: kr, cols: kc, codes: take(kcl), scales: take(ksl) };
+    let vt = PackedNvfp4 { rows: vr, cols: vc, codes: take(vcl), scales: take(vsl) };
+    Ok(SealedPage { k, vt })
+}

@@ -249,7 +249,13 @@ fn cmd_train_native(cli: &Cli) -> Result<()> {
     let cluster_cfg = ClusterConfig {
         shards,
         queue_depth: 16,
-        shard: ShardConfig { slots: 2, attn: serve_attn, seq_max: 512, sample_seed: seed },
+        shard: ShardConfig {
+            slots: 2,
+            attn: serve_attn,
+            seq_max: 512,
+            sample_seed: seed,
+            ..ShardConfig::default()
+        },
         ..ClusterConfig::default()
     };
     let served_factory = served.clone();
@@ -361,7 +367,8 @@ fn cmd_serve(rt: &Runtime, cli: &Cli) -> Result<()> {
 /// `repro serve cluster [--shards N] [--requests R] [--max-new M]
 /// [--queue-depth Q] [--lanes L] [--variant fp4|f32] [--seed S]
 /// [--deadline-ms D] [--faults SPEC] [--stall-timeout-ms T]
-/// [--max-restarts K] [--json] [--stats-every-ms T]`
+/// [--max-restarts K] [--prefix-share] [--kv-spill-dir DIR]
+/// [--kv-spill-budget-kb N] [--json] [--stats-every-ms T]`
 ///
 /// Native sharded decode: routes a deterministic request trace (prompts
 /// drawn from the synthetic corpus) across N supervised shard workers,
@@ -376,6 +383,13 @@ fn cmd_serve(rt: &Runtime, cli: &Cli) -> Result<()> {
 /// (comma-separated `panic:S:P`, `stall:S:P:MS`, `every:S:K`) that the
 /// supervisor must survive without losing a single request.
 ///
+/// `--prefix-share` turns on shared-prefix admission: each shard dedups
+/// sealed KV pages through its refcounted page pool and skips prefill
+/// for prompt prefixes already resident (bitwise identical outputs).
+/// `--kv-spill-dir DIR` additionally spills cold sealed pages to disk
+/// under a `--kv-spill-budget-kb` resident budget (default 256 KiB),
+/// reloading transparently on next attend.
+///
 /// `--json` (the whole of `repro serve stats`) replaces the human
 /// summary with one schema-versioned [`attn_qat::telemetry`] snapshot on
 /// stdout — live config, per-shard gauges, supervisor counters, span
@@ -389,9 +403,10 @@ fn cmd_serve_cluster(cli: &Cli, force_json: bool) -> Result<()> {
     use attn_qat::telemetry::Telemetry;
 
     // `--flag value` pairs after the `cluster` subcommand override config
-    // (`--json` stands alone: it takes no value).
+    // (`--json` and `--prefix-share` stand alone: they take no value).
     let mut flags = std::collections::BTreeMap::new();
     let mut json_flag = false;
+    let mut prefix_share_flag = false;
     let rest = &cli.args[1..];
     let mut i = 0;
     while i < rest.len() {
@@ -400,6 +415,11 @@ fn cmd_serve_cluster(cli: &Cli, force_json: bool) -> Result<()> {
             .ok_or_else(|| anyhow!("expected --flag, got '{}'", rest[i]))?;
         if key == "json" {
             json_flag = true;
+            i += 1;
+            continue;
+        }
+        if key == "prefix-share" {
+            prefix_share_flag = true;
             i += 1;
             continue;
         }
@@ -442,7 +462,16 @@ fn cmd_serve_cluster(cli: &Cli, force_json: bool) -> Result<()> {
     let max_restarts = get_usize("max-restarts", "serve.max_restarts", 4)?;
     let stats_every_ms = get_usize("stats-every-ms", "serve.stats_every_ms", 0)?;
     let want_json = force_json || json_flag || cli.cfg.bool_or("serve.json", false);
-    const KNOWN: [&str; 13] = [
+    let prefix_share = prefix_share_flag || cli.cfg.bool_or("serve.prefix_share", false);
+    let kv_spill_budget_kb = get_usize("kv-spill-budget-kb", "serve.kv_spill_budget_kb", 256)?;
+    let kv_spill = match flags.get("kv-spill-dir") {
+        Some(dir) => Some(attn_qat::kvcache::SpillConfig {
+            dir: PathBuf::from(dir),
+            budget_bytes: kv_spill_budget_kb * 1024,
+        }),
+        None => None,
+    };
+    const KNOWN: [&str; 16] = [
         "shards",
         "requests",
         "max-new",
@@ -454,6 +483,9 @@ fn cmd_serve_cluster(cli: &Cli, force_json: bool) -> Result<()> {
         "faults",
         "stall-timeout-ms",
         "max-restarts",
+        "prefix-share",
+        "kv-spill-dir",
+        "kv-spill-budget-kb",
         "json",
         "stats-every-ms",
     ];
@@ -473,7 +505,15 @@ fn cmd_serve_cluster(cli: &Cli, force_json: bool) -> Result<()> {
     let cluster_cfg = ClusterConfig {
         shards,
         queue_depth,
-        shard: ShardConfig { slots: lanes, attn, seq_max: 512, sample_seed: seed },
+        shard: ShardConfig {
+            slots: lanes,
+            attn,
+            seq_max: 512,
+            sample_seed: seed,
+            prefix_share,
+            kv_spill,
+            ..ShardConfig::default()
+        },
         supervisor: SupervisorConfig {
             stall_timeout_ms,
             max_restarts,
@@ -567,6 +607,14 @@ fn cmd_serve_cluster(cli: &Cli, force_json: bool) -> Result<()> {
             stats.p99_token_ms(),
             stats.kv_bytes_peak(),
         );
+        if prefix_share {
+            let (hits, pages, bytes, splits) = stats.prefix_totals();
+            println!(
+                "prefix sharing: {hits} hit(s), {pages} page ref(s) attached, {bytes} B \
+                 saved, {splits} COW split(s), {} page(s) spilled",
+                stats.spilled_pages(),
+            );
+        }
         if stats.restarts > 0 || faults.trips() > 0 {
             println!(
                 "supervision: {} fault(s) tripped, {} restart(s), {} request(s) replayed, \
@@ -616,12 +664,18 @@ COMMANDS:
                   [--queue-depth Q] [--lanes L] [--variant fp4|f32]
                   [--deadline-ms D] [--faults SPEC]
                   [--stall-timeout-ms T] [--max-restarts K]
+                  [--prefix-share] [--kv-spill-dir DIR]
+                  [--kv-spill-budget-kb N]
                   [--json] [--stats-every-ms T]
                                  native sharded decode cluster with shard
                                  supervision, deadline-aware shedding, and
                                  seeded fault injection (--faults takes
                                  comma-separated panic:S:P, stall:S:P:MS,
                                  every:S:K); no PJRT runtime or artifacts;
+                                 --prefix-share dedups sealed KV pages and
+                                 skips prefill for shared prompt prefixes;
+                                 --kv-spill-dir spills cold sealed pages to
+                                 disk under a resident-byte budget;
                                  --json emits one telemetry snapshot doc,
                                  --stats-every-ms streams snapshot lines to
                                  results/serve_cluster_stats.jsonl

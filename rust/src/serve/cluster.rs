@@ -50,7 +50,7 @@ use super::supervisor::{SendOutcome, Supervisor, SupervisorConfig};
 use super::{Completion, Request};
 
 /// Cluster-level knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ClusterConfig {
     /// Shard worker count.
     pub shards: usize,
@@ -86,6 +86,22 @@ impl ClusterConfig {
                     ("slots", Json::Num(self.shard.slots as f64)),
                     ("seq_max", Json::Num(self.shard.seq_max as f64)),
                     ("sample_seed", Json::Num(self.shard.sample_seed as f64)),
+                    ("prefix_share", Json::Bool(self.shard.prefix_share)),
+                    ("prefix_cap", Json::Num(self.shard.prefix_cap as f64)),
+                    (
+                        "kv_spill_dir",
+                        match &self.shard.kv_spill {
+                            Some(s) => Json::Str(s.dir.display().to_string()),
+                            None => Json::Null,
+                        },
+                    ),
+                    (
+                        "kv_spill_budget_bytes",
+                        match &self.shard.kv_spill {
+                            Some(s) => Json::Num(s.budget_bytes as f64),
+                            None => Json::Null,
+                        },
+                    ),
                     ("attn", self.shard.attn.to_json()),
                 ]),
             ),
@@ -186,6 +202,49 @@ impl ClusterStats {
     pub fn kv_bytes_peak(&self) -> usize {
         self.shards.iter().map(|s| s.kv_bytes_peak).sum()
     }
+
+    /// Prefix-sharing totals summed over shards:
+    /// `(lookup_hits, pages_shared, bytes_saved, cow_splits)`.
+    pub fn prefix_totals(&self) -> (u64, u64, u64, u64) {
+        self.shards.iter().fold((0, 0, 0, 0), |(h, p, b, c), s| {
+            (
+                h + s.prefix_hits,
+                p + s.prefix_pages_shared,
+                b + s.prefix_bytes_saved,
+                c + s.prefix_cow_splits,
+            )
+        })
+    }
+
+    /// Sealed pages spilled to disk, summed over shards.
+    pub fn spilled_pages(&self) -> u64 {
+        self.shards.iter().map(|s| s.spilled_pages).sum()
+    }
+
+    /// Request-weighted mean admission wall time (ms) across shards;
+    /// `None` when no requests were admitted anywhere.
+    pub fn admit_ms_mean(&self) -> Option<f64> {
+        let reqs: usize = self.shards.iter().map(|s| s.requests).sum();
+        if reqs == 0 {
+            return None;
+        }
+        let sum: f64 =
+            self.shards.iter().map(|s| s.admit_ms_mean * s.requests as f64).sum();
+        Some(sum / reqs as f64)
+    }
+
+    /// Request-weighted mean freshly-allocated KV bytes per admitted
+    /// sequence — the headline prefix-sharing memory metric. `None`
+    /// when no requests were admitted.
+    pub fn kv_admit_bytes_per_seq(&self) -> Option<f64> {
+        let reqs: usize = self.shards.iter().map(|s| s.requests).sum();
+        if reqs == 0 {
+            return None;
+        }
+        let sum: f64 =
+            self.shards.iter().map(|s| s.kv_admit_bytes_per_seq * s.requests as f64).sum();
+        Some(sum / reqs as f64)
+    }
 }
 
 /// SplitMix64 step (shared with [`crate::rng`]) — the request-id router
@@ -259,7 +318,7 @@ impl DecodeCluster {
         let sup = Supervisor::new(
             cfg.shards,
             cfg.queue_depth,
-            cfg.shard,
+            cfg.shard.clone(),
             cfg.supervisor,
             telemetry.clone(),
             Box::new(model_factory),

@@ -46,6 +46,24 @@
 //!   trait, and the compiled-artifact transformer fills the role for
 //!   [`DecodeServer`] below.
 //!
+//! ## Shared-prefix admission
+//!
+//! With [`ShardConfig::prefix_share`] on, each shard keeps a
+//! [`prefix::PrefixIndex`] — a radix trie over prompt bytes at sealed-page
+//! (16-token) granularity — in front of its cache's refcounted
+//! [`crate::kvcache::PagePool`]. Admission looks up the longest
+//! already-sealed prefix run, attaches those immutable pages by reference
+//! (copy-on-write: divergence just starts a private hot page; no bytes are
+//! ever copied), and prefills **only the suffix**, so admission cost drops
+//! from O(prompt) to O(suffix) and common system prompts are stored once
+//! per shard. Sealed pages are deterministic functions of the token prefix
+//! and weights, so sharing is bitwise invisible to decode outputs; the
+//! pool is per-shard and routing stays hash-on-id, so placement invariance
+//! and replay determinism extend unchanged (pinned by
+//! `rust/tests/prefix_cache.rs`). Cold sealed pages can additionally spill
+//! to disk under a resident-byte budget (`--kv-spill-dir`) and reload
+//! transparently on next attend.
+//!
 //! ## Failure model
 //!
 //! Survivable faults, all recovered without losing a single accepted
@@ -150,11 +168,13 @@
 
 pub mod cluster;
 pub mod model;
+pub mod prefix;
 pub mod shard;
 pub mod supervisor;
 
 pub use cluster::{Admission, ClusterConfig, ClusterStats, DecodeCluster};
 pub use model::{SimLm, SimLmConfig, TokenModel};
+pub use prefix::{PrefixIndex, PrefixMatch, PrefixStats};
 pub use shard::{ShardConfig, ShardStats, ShardWorker};
 pub use supervisor::{FaultKind, FaultPlan, FaultSpec, SupervisorConfig};
 
@@ -486,7 +506,7 @@ impl<'rt> DecodeServer<'rt> {
         }
         for &s in finished.iter().rev() {
             let a = self.active.swap_remove(s);
-            self.cache.drop_seq(a.req.id);
+            self.cache.drop_seq(a.req.id)?;
             self.done.push(Completion {
                 id: a.req.id,
                 prompt_tokens: a.req.prompt.len(),

@@ -1,0 +1,395 @@
+//! Prefix index: prompt bytes → already-sealed KV page runs.
+//!
+//! A radix trie keyed on token bytes at [`PAGE_SIZE`]-token (16-token)
+//! granularity — one trie edge per full prompt chunk, so the index only
+//! ever talks about whole sealed pages. Each node stores the layer-major
+//! run of [`PageRef`]s for the chunk that ends at it (the same shape
+//! `PagedKvCache::attach_prefix_at` consumes) and holds one pool ref per
+//! page so an indexed prefix survives the sequences that built it.
+//!
+//! Correctness: K/V at page `p` is a pure function of tokens
+//! `0 .. 16·(p+1)` and the model weights (quantization is
+//! deterministic), so keying on the *full chunk path* is exact — a hit
+//! can be attached without re-running prefill attention over those
+//! tokens, and the decode result is bitwise identical to the unshared
+//! path.
+//!
+//! Copy-on-write is the trie's no-op: a prompt that diverges from every
+//! registered prefix simply stops matching — the worker attaches the
+//! matched run and prefills only the suffix, whose first token opens a
+//! private hot page. Divergence is observable as
+//! [`PrefixMatch::cow_split`] (the walk stopped at a node that has other
+//! continuations).
+//!
+//! The index is capacity-bounded: past `cap_nodes` registered chunks it
+//! evicts the least-recently-touched **leaf** (deepest-first, so shared
+//! trunks survive their cold tails) and releases that run's pool refs —
+//! unpopular suffixes age out instead of pinning pages forever.
+
+use std::collections::BTreeMap;
+
+use crate::kvcache::{PagePool, PageRef, PAGE_SIZE};
+
+/// One trie node == one registered 16-token chunk.
+struct Node {
+    children: BTreeMap<[u8; PAGE_SIZE], Node>,
+    /// Layer-major `[layer * heads + head]` sealed refs for this chunk.
+    /// Always non-empty for a registered node (set on first register).
+    pages: Vec<PageRef>,
+    last_touch: u64,
+}
+
+impl Node {
+    fn new() -> Node {
+        Node { children: BTreeMap::new(), pages: Vec::new(), last_touch: 0 }
+    }
+}
+
+/// Result of a prefix lookup: the longest matching sealed run (possibly
+/// empty) and whether the prompt diverged from registered continuations
+/// at the match point (a copy-on-write split).
+#[derive(Default)]
+pub struct PrefixMatch {
+    /// `pages[p]` is page `p`'s layer-major ref run.
+    pub pages: Vec<Vec<PageRef>>,
+    pub cow_split: bool,
+}
+
+/// Monotonic index counters plus current occupancy.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefixStats {
+    pub lookups: u64,
+    /// Lookups that matched at least one page.
+    pub hits: u64,
+    pub pages_matched: u64,
+    /// Lookups that diverged from a registered continuation.
+    pub cow_splits: u64,
+    /// Chunks registered (nodes created).
+    pub registered: u64,
+    /// Chunks evicted by the capacity bound.
+    pub evicted: u64,
+    /// Registered chunks currently held.
+    pub nodes: usize,
+}
+
+/// The index. One per shard worker — sequences routed to a shard by
+/// hash-on-id share through their shard's pool only, so cluster
+/// placement invariance is untouched.
+pub struct PrefixIndex {
+    root: Node,
+    cap_nodes: usize,
+    /// Logical LRU clock (one tick per lookup/register).
+    clock: u64,
+    nodes: usize,
+    lookups: u64,
+    hits: u64,
+    pages_matched: u64,
+    cow_splits: u64,
+    registered: u64,
+    evicted: u64,
+}
+
+impl PrefixIndex {
+    /// `cap_nodes` bounds registered chunks (== pinned page runs).
+    pub fn with_capacity(cap_nodes: usize) -> PrefixIndex {
+        PrefixIndex {
+            root: Node::new(),
+            cap_nodes: cap_nodes.max(1),
+            clock: 0,
+            nodes: 0,
+            lookups: 0,
+            hits: 0,
+            pages_matched: 0,
+            cow_splits: 0,
+            registered: 0,
+            evicted: 0,
+        }
+    }
+
+    /// Longest registered prefix of `prompt`, capped at `max_pages`
+    /// (admission caps at `(prompt_len − 1) / PAGE_SIZE` so the logits
+    /// row always stays in the prefilled suffix).
+    pub fn lookup(&mut self, prompt: &[u8], max_pages: usize) -> PrefixMatch {
+        self.clock += 1;
+        self.lookups += 1;
+        let now = self.clock;
+        let mut node = &mut self.root;
+        let mut run: Vec<Vec<PageRef>> = Vec::new();
+        let mut capped = false;
+        for chunk in prompt.chunks_exact(PAGE_SIZE) {
+            if run.len() == max_pages {
+                capped = true;
+                break;
+            }
+            let key: [u8; PAGE_SIZE] = chunk.try_into().unwrap();
+            match node.children.get_mut(&key) {
+                Some(child) => {
+                    child.last_touch = now;
+                    run.push(child.pages.clone());
+                    node = child;
+                }
+                None => break,
+            }
+        }
+        // Divergence: the walk stopped early while the stop node has
+        // registered continuations — the first unmatched token is a COW
+        // split (offset classes: first token == empty run at a non-empty
+        // root; page boundary == stop exactly between chunks; mid-page ==
+        // the divergent chunk itself never matches a key).
+        let cow_split = !capped && !node.children.is_empty();
+        if !run.is_empty() {
+            self.hits += 1;
+            self.pages_matched += run.len() as u64;
+        }
+        if cow_split {
+            self.cow_splits += 1;
+        }
+        PrefixMatch { pages: run, cow_split }
+    }
+
+    /// Register `runs[p]` as the sealed run for prompt chunk `p`, taking
+    /// one pool ref per newly indexed page. Chunks already registered
+    /// (the common shared trunk) are only touched. Evicts LRU leaves
+    /// past capacity.
+    pub fn register(&mut self, prompt: &[u8], runs: &[Vec<PageRef>], pool: &mut PagePool) {
+        self.clock += 1;
+        let now = self.clock;
+        let mut new_nodes = 0usize;
+        let mut node = &mut self.root;
+        for (p, chunk) in prompt.chunks_exact(PAGE_SIZE).enumerate().take(runs.len()) {
+            let key: [u8; PAGE_SIZE] = chunk.try_into().unwrap();
+            let child = node.children.entry(key).or_insert_with(|| {
+                new_nodes += 1;
+                Node::new()
+            });
+            child.last_touch = now;
+            if child.pages.is_empty() {
+                for &r in &runs[p] {
+                    pool.retain(r);
+                }
+                child.pages = runs[p].clone();
+            }
+            node = child;
+        }
+        self.nodes += new_nodes;
+        self.registered += new_nodes as u64;
+        while self.nodes > self.cap_nodes {
+            if !self.evict_lru_leaf(pool) {
+                break;
+            }
+        }
+    }
+
+    /// Drop every indexed run, releasing all pool refs (drain/teardown).
+    pub fn release_all(&mut self, pool: &mut PagePool) {
+        release_node(&mut self.root, pool);
+        self.nodes = 0;
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        PrefixStats {
+            lookups: self.lookups,
+            hits: self.hits,
+            pages_matched: self.pages_matched,
+            cow_splits: self.cow_splits,
+            registered: self.registered,
+            evicted: self.evicted,
+            nodes: self.nodes,
+        }
+    }
+
+    fn evict_lru_leaf(&mut self, pool: &mut PagePool) -> bool {
+        let Some(target) = min_leaf_touch(&self.root) else { return false };
+        let removed = remove_leaf(&mut self.root, target, pool);
+        if removed {
+            self.nodes -= 1;
+            self.evicted += 1;
+        }
+        removed
+    }
+}
+
+/// Minimum last-touch over all leaves below `node` (None if childless).
+fn min_leaf_touch(node: &Node) -> Option<u64> {
+    node.children
+        .values()
+        .filter_map(|c| if c.children.is_empty() { Some(c.last_touch) } else { min_leaf_touch(c) })
+        .min()
+}
+
+/// Remove the (unique) leaf with `target` touch, releasing its refs.
+fn remove_leaf(node: &mut Node, target: u64, pool: &mut PagePool) -> bool {
+    let mut leaf_key = None;
+    for (key, c) in node.children.iter_mut() {
+        if c.children.is_empty() {
+            if c.last_touch == target {
+                leaf_key = Some(*key);
+                break;
+            }
+        } else if remove_leaf(c, target, pool) {
+            return true;
+        }
+    }
+    if let Some(key) = leaf_key {
+        let leaf = node.children.remove(&key).unwrap();
+        for r in leaf.pages {
+            pool.release(r);
+        }
+        return true;
+    }
+    false
+}
+
+fn release_node(node: &mut Node, pool: &mut PagePool) {
+    for (_, mut c) in std::mem::take(&mut node.children) {
+        for r in c.pages.drain(..) {
+            pool.release(r);
+        }
+        release_node(&mut c, pool);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::tensor4::PackedNvfp4;
+    use crate::kvcache::SealedPage;
+
+    /// A distinct, well-formed fake sealed page per tag.
+    fn fake_page(tag: u8) -> SealedPage {
+        let d = 16;
+        SealedPage {
+            k: PackedNvfp4 {
+                rows: PAGE_SIZE,
+                cols: d,
+                codes: vec![tag; PAGE_SIZE * d / 2],
+                scales: vec![0x30; PAGE_SIZE * d / 16],
+            },
+            vt: PackedNvfp4 {
+                rows: d,
+                cols: PAGE_SIZE,
+                codes: vec![tag.wrapping_add(1); d * PAGE_SIZE / 2],
+                scales: vec![0x30; d * PAGE_SIZE / 16],
+            },
+        }
+    }
+
+    fn chunk(tag: u8) -> Vec<u8> {
+        vec![tag; PAGE_SIZE]
+    }
+
+    /// Register a prompt of `tags.len()` chunks, one fresh page per chunk.
+    fn register_prompt(
+        idx: &mut PrefixIndex,
+        pool: &mut PagePool,
+        tags: &[u8],
+        page_tag0: u8,
+    ) -> Vec<PageRef> {
+        let prompt: Vec<u8> = tags.iter().flat_map(|&t| chunk(t)).collect();
+        let refs: Vec<PageRef> = (0..tags.len())
+            .map(|p| pool.insert(fake_page(page_tag0 + p as u8)))
+            .collect();
+        let runs: Vec<Vec<PageRef>> = refs.iter().map(|&r| vec![r]).collect();
+        idx.register(&prompt, &runs, pool);
+        // The sequence that sealed these pages drops them; the index ref
+        // keeps them alive.
+        for &r in &refs {
+            pool.release(r);
+        }
+        refs
+    }
+
+    #[test]
+    fn lookup_matches_longest_prefix_and_flags_divergence_classes() {
+        let mut pool = PagePool::new();
+        let mut idx = PrefixIndex::with_capacity(64);
+        let refs = register_prompt(&mut idx, &mut pool, &[1, 2, 3], 10);
+        assert_eq!(idx.stats().nodes, 3);
+        assert_eq!(pool.live_pages(), 3, "index holds the registered pages");
+
+        // Full match, capped below the registered depth (logits-row cap).
+        let prompt: Vec<u8> = [chunk(1), chunk(2), chunk(3)].concat();
+        let m = idx.lookup(&prompt, 2);
+        assert_eq!(m.pages.len(), 2);
+        assert_eq!(m.pages[0], vec![refs[0]]);
+        assert_eq!(m.pages[1], vec![refs[1]]);
+        assert!(!m.cow_split, "capped walk is not a divergence");
+
+        // Page-boundary divergence: chunks 1,2 match, chunk 9 does not.
+        let prompt: Vec<u8> = [chunk(1), chunk(2), chunk(9)].concat();
+        let m = idx.lookup(&prompt, 3);
+        assert_eq!(m.pages.len(), 2);
+        assert!(m.cow_split, "registered continuation exists past the match");
+
+        // Mid-page divergence: second chunk differs in its 8th byte.
+        let mut mid = chunk(2);
+        mid[8] = 0xff;
+        let prompt: Vec<u8> = [chunk(1), mid, chunk(3)].concat();
+        let m = idx.lookup(&prompt, 3);
+        assert_eq!(m.pages.len(), 1);
+        assert!(m.cow_split);
+
+        // First-token divergence: nothing matches, root has children.
+        let prompt: Vec<u8> = [chunk(8), chunk(2)].concat();
+        let m = idx.lookup(&prompt, 2);
+        assert!(m.pages.is_empty());
+        assert!(m.cow_split);
+
+        // Short prompt (< one page): no chunks, no divergence walk...
+        let m = idx.lookup(&chunk(1)[..8], 0);
+        assert!(m.pages.is_empty());
+
+        let s = idx.stats();
+        assert_eq!(s.lookups, 5);
+        assert_eq!(s.hits, 3);
+        assert_eq!(s.pages_matched, 5);
+        assert!(s.cow_splits >= 3);
+    }
+
+    #[test]
+    fn register_shared_trunk_takes_one_ref_per_unique_chunk() {
+        let mut pool = PagePool::new();
+        let mut idx = PrefixIndex::with_capacity(64);
+        register_prompt(&mut idx, &mut pool, &[1, 2], 10);
+        let before = pool.live_pages();
+        // Same trunk again (e.g. the second request of a template): no new
+        // nodes, no new refs.
+        let prompt: Vec<u8> = [chunk(1), chunk(2)].concat();
+        let m = idx.lookup(&prompt, 2);
+        idx.register(&prompt, &m.pages, &mut pool);
+        assert_eq!(idx.stats().nodes, 2);
+        assert_eq!(pool.live_pages(), before);
+        // Diverging tail adds only the new chunk.
+        register_prompt(&mut idx, &mut pool, &[1, 7], 20);
+        assert_eq!(idx.stats().nodes, 3, "trunk chunk 1 is shared");
+    }
+
+    #[test]
+    fn capacity_evicts_lru_leaf_and_releases_refs() {
+        let mut pool = PagePool::new();
+        let mut idx = PrefixIndex::with_capacity(3);
+        register_prompt(&mut idx, &mut pool, &[1, 2], 10); // nodes 1-2
+        register_prompt(&mut idx, &mut pool, &[3], 20); // node 3
+        assert_eq!(idx.stats().nodes, 3);
+        assert_eq!(pool.live_pages(), 3);
+        // Touch the [1,2] branch so [3] becomes the LRU leaf.
+        let prompt: Vec<u8> = [chunk(1), chunk(2)].concat();
+        idx.lookup(&prompt, 2);
+        // A new chunk pushes past capacity: [3] is evicted, its page freed.
+        register_prompt(&mut idx, &mut pool, &[4], 30);
+        let s = idx.stats();
+        assert_eq!(s.nodes, 3);
+        assert_eq!(s.evicted, 1);
+        assert_eq!(pool.live_pages(), 3);
+        let m = idx.lookup(&chunk(3), 1);
+        assert!(m.pages.is_empty(), "evicted chunk no longer matches");
+        // The shared trunk survived: deepest-first eviction only takes
+        // leaves, and the [1,2] branch was recently touched.
+        let m = idx.lookup(&prompt, 2);
+        assert_eq!(m.pages.len(), 2);
+        // Teardown drains every ref the index holds.
+        idx.release_all(&mut pool);
+        assert_eq!(idx.stats().nodes, 0);
+        assert_eq!(pool.live_pages(), 0);
+    }
+}

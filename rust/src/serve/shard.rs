@@ -20,21 +20,33 @@
 //! Temperature sampling draws from a per-request stream seeded by the
 //! request id, so completions are bitwise reproducible under any shard
 //! count (pinned by `rust/tests/cluster_serve.rs`).
+//!
+//! Shared-prefix admission ([`ShardConfig::prefix_share`]): the worker
+//! keeps a per-shard [`PrefixIndex`] mapping prompt prefixes to sealed
+//! page runs. A matching prompt attaches the shared run (refcounted, no
+//! byte copy) and prefills only its suffix — admission cost O(suffix)
+//! instead of O(prompt), KV bytes per sequence collapse for
+//! common-system-prompt traffic, and because sealed pages are immutable
+//! and quantization is deterministic the decode output stays **bitwise
+//! identical** to the unshared path (pinned by
+//! `rust/tests/prefix_cache.rs`). Cold sealed pages can additionally
+//! spill to disk ([`ShardConfig::kv_spill`]) and reload transparently.
 
 use std::collections::VecDeque;
 
 use anyhow::Result;
 
 use crate::attention::{AttnConfig, AttnEngine};
-use crate::kvcache::{PagedKvCache, SeqSlot};
+use crate::kvcache::{PagedKvCache, SeqSlot, SpillConfig, PAGE_SIZE};
 use crate::rng::Rng;
 use crate::telemetry::{Counter, Gauge, Histogram, Telemetry};
 
 use super::model::{TokenModel, VOCAB};
+use super::prefix::{PrefixIndex, PrefixMatch};
 use super::{argmax, Completion, Request, sample_temp};
 
 /// Per-shard serving knobs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ShardConfig {
     /// Concurrent batch lanes (sequences decoding per step).
     pub slots: usize,
@@ -47,11 +59,31 @@ pub struct ShardConfig {
     /// Seed of the per-request sampling streams (request id is mixed in,
     /// so placement never shifts a sequence's draws).
     pub sample_seed: u64,
+    /// Shared-prefix admission: content-dedup sealed pages and attach
+    /// prompts to already-sealed prefix runs via the per-shard
+    /// [`PrefixIndex`] (admission cost drops from O(prompt) to
+    /// O(suffix); decode outputs are bitwise unchanged). Off by default:
+    /// sharing changes which prefill rows run, which shifts qcache
+    /// patterns the determinism pins compare.
+    pub prefix_share: bool,
+    /// Prefix-index capacity (registered 16-token chunks).
+    pub prefix_cap: usize,
+    /// Spill cold sealed pages to disk under this config (`serve cluster
+    /// --kv-spill-dir`); `None` keeps everything resident.
+    pub kv_spill: Option<SpillConfig>,
 }
 
 impl Default for ShardConfig {
     fn default() -> ShardConfig {
-        ShardConfig { slots: 4, attn: AttnConfig::fp4(), seq_max: 512, sample_seed: 0x5e7e }
+        ShardConfig {
+            slots: 4,
+            attn: AttnConfig::fp4(),
+            seq_max: 512,
+            sample_seed: 0x5e7e,
+            prefix_share: false,
+            prefix_cap: 512,
+            kv_spill: None,
+        }
     }
 }
 
@@ -88,6 +120,25 @@ pub struct ShardStats {
     pub qcache_misses: u64,
     pub kv_bytes_peak: usize,
     pub kv_bytes_f32_equiv_peak: usize,
+    /// Admissions that attached at least one shared sealed prefix page.
+    pub prefix_hits: u64,
+    /// (layer, head) pages attached from the prefix index instead of
+    /// re-prefilled.
+    pub prefix_pages_shared: u64,
+    /// Packed bytes those attached pages would have re-allocated.
+    pub prefix_bytes_saved: u64,
+    /// Admissions that diverged from a registered prefix (copy-on-write
+    /// split: shared run attached, private hot page opened).
+    pub prefix_cow_splits: u64,
+    /// Sealed pages written to the spill directory (lifetime total).
+    pub spilled_pages: u64,
+    /// Spilled pages transparently reloaded by an attend.
+    pub reloaded_pages: u64,
+    /// Mean admission wall time (prompt prefill + first token), ms.
+    pub admit_ms_mean: f64,
+    /// Mean fresh KV bytes allocated per admitted sequence (pool fresh
+    /// bytes + f32 hot tail) — the shared-prefix bench headline.
+    pub kv_admit_bytes_per_seq: f64,
 }
 
 struct ActiveSeq {
@@ -142,6 +193,22 @@ struct ShardProbes {
     kv_bytes: Gauge,
     kv_bytes_peak: Gauge,
     kv_bytes_f32_equiv_peak: Gauge,
+    admit_ms_mean: Gauge,
+    kv_admit_bytes_per_seq: Gauge,
+    /// Per-shard pool occupancy gauges (`serve.shard{i}.pool.*`).
+    pool_pages: Gauge,
+    pool_shared_pages: Gauge,
+    pool_spilled_pages: Gauge,
+    pool_resident_bytes: Gauge,
+    /// Cluster-global `serve.prefix.*` counters: handles for one name
+    /// alias a single atomic cell, so every shard's worker increments the
+    /// same totals. Event-driven (inc/add at admission), never republished
+    /// from drain-time stats — a republish would clobber across shards.
+    prefix_lookup_hits: Counter,
+    prefix_pages_shared: Counter,
+    prefix_bytes_saved: Counter,
+    prefix_cow_splits: Counter,
+    prefix_spilled_pages: Counter,
 }
 
 impl ShardProbes {
@@ -167,6 +234,8 @@ impl ShardProbes {
         }
         self.kv_bytes_peak.set(s.kv_bytes_peak as f64);
         self.kv_bytes_f32_equiv_peak.set(s.kv_bytes_f32_equiv_peak as f64);
+        self.admit_ms_mean.set(s.admit_ms_mean);
+        self.kv_admit_bytes_per_seq.set(s.kv_admit_bytes_per_seq);
     }
 }
 
@@ -176,6 +245,10 @@ pub struct ShardWorker {
     cfg: ShardConfig,
     model: Box<dyn TokenModel>,
     cache: PagedKvCache,
+    /// Prompt-prefix → sealed-page-run index; `Some` iff
+    /// `cfg.prefix_share` (the per-shard sharing scope: routing is
+    /// hash-on-id, so placement invariance is untouched).
+    prefix: Option<PrefixIndex>,
     /// One engine per batch lane (lane i serves `active[i]`).
     engines: Vec<AttnEngine>,
     queue: VecDeque<Request>,
@@ -192,6 +265,12 @@ pub struct ShardWorker {
     token_ms: Vec<f64>,
     kv_peak: usize,
     kv_f32_peak: usize,
+    prefix_hits: u64,
+    prefix_pages_shared: u64,
+    prefix_bytes_saved: u64,
+    prefix_cow_splits: u64,
+    admit_ms_sum: f64,
+    alloc_bytes_sum: u64,
     /// `None` until [`ShardWorker::attach_telemetry`] — a detached worker
     /// publishes nothing and behaves bitwise as before.
     probes: Option<ShardProbes>,
@@ -200,12 +279,19 @@ pub struct ShardWorker {
 impl ShardWorker {
     pub fn new(model: Box<dyn TokenModel>, cfg: ShardConfig) -> ShardWorker {
         assert!(cfg.slots > 0, "shard needs at least one lane");
-        let cache = PagedKvCache::new(model.layers(), model.heads(), model.head_dim());
+        let mut cache = PagedKvCache::new(model.layers(), model.heads(), model.head_dim());
+        // Content dedup rides the sharing switch so the sharing-off
+        // baseline allocates exactly what a pool-less cache would — the
+        // on/off comparison in benches measures sharing, nothing else.
+        cache.set_dedup(cfg.prefix_share);
+        cache.set_spill(cfg.kv_spill.clone());
+        let prefix = cfg.prefix_share.then(|| PrefixIndex::with_capacity(cfg.prefix_cap));
         let engines = (0..cfg.slots).map(|_| AttnEngine::new(cfg.attn)).collect();
         ShardWorker {
             cfg,
             model,
             cache,
+            prefix,
             engines,
             queue: VecDeque::new(),
             active: Vec::new(),
@@ -220,6 +306,12 @@ impl ShardWorker {
             token_ms: Vec::new(),
             kv_peak: 0,
             kv_f32_peak: 0,
+            prefix_hits: 0,
+            prefix_pages_shared: 0,
+            prefix_bytes_saved: 0,
+            prefix_cow_splits: 0,
+            admit_ms_sum: 0.0,
+            alloc_bytes_sum: 0,
             probes: None,
         }
     }
@@ -251,6 +343,17 @@ impl ShardWorker {
             kv_bytes: reg.gauge(&name("kv_bytes")),
             kv_bytes_peak: reg.gauge(&name("kv_bytes_peak")),
             kv_bytes_f32_equiv_peak: reg.gauge(&name("kv_bytes_f32_equiv_peak")),
+            admit_ms_mean: reg.gauge(&name("admit_ms_mean")),
+            kv_admit_bytes_per_seq: reg.gauge(&name("kv_admit_bytes_per_seq")),
+            pool_pages: reg.gauge(&name("pool.pages")),
+            pool_shared_pages: reg.gauge(&name("pool.shared_pages")),
+            pool_spilled_pages: reg.gauge(&name("pool.spilled_pages")),
+            pool_resident_bytes: reg.gauge(&name("pool.resident_bytes")),
+            prefix_lookup_hits: reg.counter("serve.prefix.lookup_hits"),
+            prefix_pages_shared: reg.counter("serve.prefix.pages_shared"),
+            prefix_bytes_saved: reg.counter("serve.prefix.bytes_saved"),
+            prefix_cow_splits: reg.counter("serve.prefix.cow_splits"),
+            prefix_spilled_pages: reg.counter("serve.prefix.spilled_pages"),
         });
     }
 
@@ -367,6 +470,11 @@ impl ShardWorker {
         self.kv_f32_peak = self.kv_f32_peak.max(equiv);
         if let Some(p) = &self.probes {
             p.kv_bytes.set(used as f64);
+            let pool = self.cache.pool();
+            p.pool_pages.set(pool.live_pages() as f64);
+            p.pool_shared_pages.set(pool.shared_pages() as f64);
+            p.pool_spilled_pages.set(pool.spilled_pages() as f64);
+            p.pool_resident_bytes.set(pool.resident_bytes() as f64);
         }
     }
 
@@ -410,7 +518,45 @@ impl ShardWorker {
         self.requests += 1;
         let slot = self.cache.add_seq(req.id);
         let lane = self.active.len();
-        let nq = tokens.len();
+        let prompt_len = tokens.len();
+        let fresh0 = self.cache.pool().stats().fresh_bytes;
+        // Shared-prefix attach: the longest registered sealed run, capped
+        // one page short of the full prompt so the logits row always lives
+        // in the prefilled suffix. Attaching is pure ref-taking — the
+        // suffix prefill then attends those pages byte-for-byte as if this
+        // sequence had sealed them itself, so decode stays bitwise equal
+        // to the unshared path while admission drops to O(suffix).
+        let matched = match &mut self.prefix {
+            Some(idx) => idx.lookup(&tokens, (prompt_len - 1) / PAGE_SIZE),
+            None => PrefixMatch::default(),
+        };
+        if !matched.pages.is_empty() {
+            let mut bytes = 0u64;
+            for run in &matched.pages {
+                for &r in run {
+                    bytes += self.cache.pool().page_bytes(r) as u64;
+                }
+            }
+            self.cache.attach_prefix_at(slot, &matched.pages)?;
+            let shared =
+                (matched.pages.len() * self.model.layers() * self.model.heads()) as u64;
+            self.prefix_hits += 1;
+            self.prefix_pages_shared += shared;
+            self.prefix_bytes_saved += bytes;
+            if let Some(p) = &self.probes {
+                p.prefix_lookup_hits.inc();
+                p.prefix_pages_shared.add(shared);
+                p.prefix_bytes_saved.add(bytes);
+            }
+        }
+        if matched.cow_split {
+            self.prefix_cow_splits += 1;
+            if let Some(p) = &self.probes {
+                p.prefix_cow_splits.inc();
+            }
+        }
+        let skip = matched.pages.len() * PAGE_SIZE;
+        let nq = prompt_len - skip;
         {
             let _span = self
                 .probes
@@ -422,8 +568,8 @@ impl ShardWorker {
                 &mut self.engines[lane],
                 &mut self.bufs,
                 slot,
-                &tokens,
-                0,
+                &tokens[skip..],
+                skip,
             )?;
         }
         let d = self.model.d_model();
@@ -435,17 +581,48 @@ impl ShardWorker {
         } else {
             sample_temp(&self.bufs.logits, req.temperature, &mut rng)
         } as u8;
+        // Register the prompt's sealed pages before the sampled token
+        // joins `tokens` — the index keys on prompt bytes only, so the
+        // next request with this prefix attaches instead of prefilling.
+        if let Some(idx) = &mut self.prefix {
+            let n_pages = prompt_len / PAGE_SIZE;
+            if n_pages > 0 {
+                let runs = self.cache.sealed_prefix_refs_at(slot, n_pages)?;
+                idx.register(&tokens[..n_pages * PAGE_SIZE], &runs, self.cache.pool_mut());
+            }
+        }
         tokens.push(next);
-        let per_tok_ms = started.elapsed().as_secs_f64() * 1e3 / nq as f64;
+        // Admission accounting: wall time to first token, and fresh KV
+        // bytes this sequence actually allocated (newly sealed pool pages
+        // plus the f32 hot tail) — attached shared pages cost nothing.
+        let hot_tail = ((prompt_len % PAGE_SIZE)
+            * self.model.head_dim()
+            * 4
+            * 2
+            * self.model.layers()
+            * self.model.heads()) as u64;
+        self.alloc_bytes_sum += (self.cache.pool().stats().fresh_bytes - fresh0) + hot_tail;
+        let admit_ms = started.elapsed().as_secs_f64() * 1e3;
+        self.admit_ms_sum += admit_ms;
+        let per_tok_ms = admit_ms / nq as f64;
         for _ in 0..nq {
             self.token_ms.push(per_tok_ms);
             if let Some(p) = &self.probes {
                 p.token_ms.record(per_tok_ms);
             }
         }
-        let a = ActiveSeq { req, slot, tokens, prompt_tokens: nq, generated: 1, rng, started };
+        let a =
+            ActiveSeq { req, slot, tokens, prompt_tokens: prompt_len, generated: 1, rng, started };
         self.active.push(a);
         self.sample_kv_peaks();
+        // Admission is where resident pool bytes grow; spill cold pages
+        // down to the budget here (no-op without a spill config).
+        let spilled = self.cache.spill_to_budget()?;
+        if spilled > 0 {
+            if let Some(p) = &self.probes {
+                p.prefix_spilled_pages.add(spilled as u64);
+            }
+        }
         let a = &self.active[lane];
         if a.generated >= a.req.max_new_tokens
             || next == b'$'
@@ -512,6 +689,7 @@ impl ShardWorker {
             None => Some(ms),
             Some(prev) => Some((1.0 - alpha) * prev + alpha * ms),
         });
+        let pool = self.cache.pool().stats();
         let stats = ShardStats {
             shard,
             requests: self.requests,
@@ -528,6 +706,22 @@ impl ShardWorker {
             qcache_misses: misses,
             kv_bytes_peak: self.kv_peak,
             kv_bytes_f32_equiv_peak: self.kv_f32_peak,
+            prefix_hits: self.prefix_hits,
+            prefix_pages_shared: self.prefix_pages_shared,
+            prefix_bytes_saved: self.prefix_bytes_saved,
+            prefix_cow_splits: self.prefix_cow_splits,
+            spilled_pages: pool.spilled_total,
+            reloaded_pages: pool.reloaded,
+            admit_ms_mean: if self.requests > 0 {
+                self.admit_ms_sum / self.requests as f64
+            } else {
+                0.0
+            },
+            kv_admit_bytes_per_seq: if self.requests > 0 {
+                self.alloc_bytes_sum as f64 / self.requests as f64
+            } else {
+                0.0
+            },
         };
         if let Some(p) = &self.probes {
             p.publish_final(&stats);
@@ -702,6 +896,52 @@ mod tests {
         assert_eq!((rej.new_tokens, rej.text.as_slice()), (0, b"x".as_slice()));
         assert!(done.iter().find(|c| c.id == 3).unwrap().new_tokens >= 1);
         assert_eq!(w.stats(0).rejected, 1);
+    }
+
+    #[test]
+    fn prefix_share_is_bitwise_identical_and_skips_prefill_work() {
+        // Common 64-byte system prompt (4 sealed pages) + unique tails:
+        // sharing must change admission cost and KV allocation, never a
+        // single output byte.
+        let mut sys = b"C shared system prompt: answer briefly and politely".to_vec();
+        sys.resize(64, b'.');
+        let trace: Vec<Request> = (0..6)
+            .map(|i| {
+                let mut prompt = sys.clone();
+                prompt.extend(format!(" q{i}#").into_bytes());
+                req(i + 1, &prompt, 5)
+            })
+            .collect();
+        let mut on = worker(ShardConfig { prefix_share: true, ..ShardConfig::default() });
+        let mut off = worker(ShardConfig::default());
+        for r in &trace {
+            on.submit(r.clone());
+            off.submit(r.clone());
+        }
+        let mut da = on.run().unwrap();
+        let mut db = off.run().unwrap();
+        da.sort_by_key(|c| c.id);
+        db.sort_by_key(|c| c.id);
+        assert_eq!(da.len(), db.len());
+        for (x, y) in da.iter().zip(&db) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.text, y.text, "sharing must be bitwise invisible");
+            assert_eq!(x.new_tokens, y.new_tokens);
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+        }
+        let s_on = on.stats(0);
+        let s_off = off.stats(0);
+        assert!(s_on.prefix_hits >= 5, "later requests must hit the index");
+        assert!(s_on.prefix_pages_shared > 0);
+        assert!(s_on.prefix_bytes_saved > 0);
+        assert_eq!(s_off.prefix_hits, 0);
+        assert!(
+            s_on.tokens < s_off.tokens,
+            "shared admission must skip prefill rows ({} vs {})",
+            s_on.tokens,
+            s_off.tokens
+        );
+        assert!(s_on.kv_admit_bytes_per_seq < s_off.kv_admit_bytes_per_seq / 2.0);
     }
 
     #[test]

@@ -430,7 +430,7 @@ impl Supervisor {
         let shards = (0..n_shards)
             .map(|id| {
                 let (tx, join, telemetry) =
-                    spawn_shard(id, factory(id), shard_cfg, queue_depth, obs.clone());
+                    spawn_shard(id, factory(id), shard_cfg.clone(), queue_depth, obs.clone());
                 Slot {
                     tx,
                     join: Some(join),
@@ -556,7 +556,7 @@ impl Supervisor {
             );
             let model = (self.factory)(shard);
             let (tx, join, telemetry) =
-                spawn_shard(shard, model, self.shard_cfg, self.queue_depth, self.obs.clone());
+                spawn_shard(shard, model, self.shard_cfg.clone(), self.queue_depth, self.obs.clone());
             // Replacing tx abandons the old incarnation: if it was merely
             // stalled (unkillable), it exits on its own once it observes
             // the disconnected channel, and its late results are dropped

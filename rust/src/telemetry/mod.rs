@@ -30,6 +30,15 @@
 //! | `serve.shard{i}.qcache_hit_rate` | gauge | `ShardWorker` (hits / lookups) |
 //! | `serve.shard{i}.kv_bytes` | gauge | `ShardWorker` (live KV occupancy) |
 //! | `serve.shard{i}.kv_bytes_peak` / `.kv_bytes_f32_equiv_peak` | gauge | `ShardWorker::stats` |
+//! | `serve.shard{i}.admit_ms_mean` | gauge | `ShardWorker::stats` (mean admission wall ms) |
+//! | `serve.shard{i}.kv_admit_bytes_per_seq` | gauge | `ShardWorker::stats` (fresh KV bytes per admitted seq) |
+//! | `serve.shard{i}.pool.pages` / `.pool.shared_pages` | gauge | `ShardWorker` (live / multiply-referenced sealed pages) |
+//! | `serve.shard{i}.pool.spilled_pages` / `.pool.resident_bytes` | gauge | `ShardWorker` (disk-spill occupancy) |
+//! | `serve.prefix.lookup_hits` | counter | `ShardWorker::admit` (prompts that attached ≥1 sealed page) |
+//! | `serve.prefix.pages_shared` | counter | `ShardWorker::admit` (per-head page refs attached, not recomputed) |
+//! | `serve.prefix.bytes_saved` | counter | `ShardWorker::admit` (packed bytes served by refcount instead of fresh quantization) |
+//! | `serve.prefix.cow_splits` | counter | `ShardWorker::admit` (admissions diverging mid-trie: copy-on-write attach) |
+//! | `serve.prefix.spilled_pages` | counter | `ShardWorker::step` (cold sealed pages written to `--kv-spill-dir`) |
 //! | `serve.cluster.submitted` | counter | `DecodeCluster::submit` |
 //! | `serve.cluster.shed_deadline` / `.shed_capacity` | counter | `DecodeCluster` admission |
 //! | `serve.cluster.submit_retries` | counter | `DecodeCluster` backpressure loop |

@@ -24,7 +24,7 @@ fn lm_cfg() -> SimLmConfig {
 }
 
 fn shard_cfg(attn: AttnConfig) -> ShardConfig {
-    ShardConfig { slots: 3, attn, seq_max: 256, sample_seed: SAMPLE_SEED }
+    ShardConfig { slots: 3, attn, seq_max: 256, sample_seed: SAMPLE_SEED, ..ShardConfig::default() }
 }
 
 /// Fixed-seed trace: deterministic prompts, mixed budgets, a few
@@ -169,6 +169,7 @@ fn qcache_stats_aggregate_per_shard_without_cross_thrash() {
                 attn: AttnConfig::fp4(),
                 seq_max: 128,
                 sample_seed: SAMPLE_SEED,
+                ..ShardConfig::default()
             },
             ..Default::default()
         };

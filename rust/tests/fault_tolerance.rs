@@ -104,7 +104,13 @@ fn deadline_shedding_rejects_only_infeasible_requests() {
     let cfg = ClusterConfig {
         shards: 1,
         queue_depth: 16,
-        shard: ShardConfig { slots: 2, attn: AttnConfig::fp4(), seq_max: 128, sample_seed: SEED },
+        shard: ShardConfig {
+            slots: 2,
+            attn: AttnConfig::fp4(),
+            seq_max: 128,
+            sample_seed: SEED,
+            ..ShardConfig::default()
+        },
         ..ClusterConfig::default()
     };
     let lm = SimLmConfig::default();
@@ -144,7 +150,13 @@ fn repeated_panics_exhaust_the_restart_budget_and_surface_an_error() {
     let cfg = ClusterConfig {
         shards: 1,
         queue_depth: 4,
-        shard: ShardConfig { slots: 2, attn: AttnConfig::fp4(), seq_max: 128, sample_seed: SEED },
+        shard: ShardConfig {
+            slots: 2,
+            attn: AttnConfig::fp4(),
+            seq_max: 128,
+            sample_seed: SEED,
+            ..ShardConfig::default()
+        },
         supervisor: sup,
     };
     let lm = SimLmConfig::default();

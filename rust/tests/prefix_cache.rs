@@ -1,0 +1,281 @@
+//! Shared-prefix KV page pool integration tests.
+//!
+//! The load-bearing contract: prefix sharing is a **memory/latency
+//! optimization with zero numeric surface**. Sealed NVFP4 pages are
+//! immutable and quantization is deterministic, so a prompt that attaches
+//! an already-sealed prefix run (refcounted, no byte copy) must decode
+//! bitwise identically to one that prefilled every row itself — across
+//! shard counts, copy-on-write divergence at any offset, disk spill, and
+//! supervised crash-replay. On top of that: refcounts must drain to zero
+//! (no leaked pool pages after churn), and the accounting the bench
+//! headlines (fresh KV bytes per admitted sequence) must actually drop.
+
+use std::collections::VecDeque;
+
+use attn_qat::attention::AttnConfig;
+use attn_qat::experiments::cluster::{serve_trace_prefix, shared_prefix_trace};
+use attn_qat::kvcache::{PagedKvCache, SpillConfig, PAGE_SIZE};
+use attn_qat::serve::{
+    Completion, FaultPlan, PrefixIndex, Request, ShardConfig, ShardWorker, SimLm, SimLmConfig,
+    SupervisorConfig,
+};
+
+fn assert_same(label: &str, a: &[Completion], b: &[Completion]) {
+    assert_eq!(a.len(), b.len(), "{label}: completion counts");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id, "{label}: ids");
+        assert_eq!(x.text, y.text, "{label}: req {} tokens", x.id);
+        assert_eq!(x.new_tokens, y.new_tokens, "{label}: req {}", x.id);
+    }
+}
+
+#[test]
+fn shared_prefix_cluster_is_bitwise_and_halves_kv_admission() {
+    // 24 requests behind one 64-byte system prompt (4 sealed pages each),
+    // unique 4-byte suffixes: the workload the sharing tier exists for.
+    // (Suffixes stay short so the f32 hot tail — identical on and off —
+    // does not drown the sealed-page saving the assertion measures.)
+    let trace = shared_prefix_trace(24, 64, 4, 6, 11);
+    let run = |shards: usize, share: bool| {
+        serve_trace_prefix(
+            shards,
+            AttnConfig::fp4(),
+            3,
+            11,
+            &trace,
+            share,
+            None,
+            FaultPlan::none(),
+            SupervisorConfig::default(),
+        )
+        .expect("serve")
+    };
+    let (_, s_off, off) = run(2, false);
+    let (_, s_on, on) = run(2, true);
+    let (_, _, on_one) = run(1, true);
+
+    // Sharing must be bitwise invisible, and stay placement-invariant.
+    assert_same("sharing on vs off", &on, &off);
+    assert_same("sharing cluster(1) vs cluster(2)", &on_one, &on);
+
+    let (hits, pages, bytes, _) = s_on.prefix_totals();
+    assert!(hits >= 2, "repeat prompts must hit the index ({hits})");
+    assert!(pages > 0 && bytes > 0, "hits must attach real pages");
+    assert_eq!(s_off.prefix_totals().0, 0, "sharing off must never match");
+
+    // The headline: fresh KV bytes per admitted sequence collapse — only
+    // the first request per shard seals the system prompt, everyone else
+    // attaches it by refcount.
+    let kv_on = s_on.kv_admit_bytes_per_seq().expect("served requests");
+    let kv_off = s_off.kv_admit_bytes_per_seq().expect("served requests");
+    assert!(
+        kv_on < kv_off / 2.0,
+        "sharing must at least halve fresh KV bytes/seq ({kv_on:.0} vs {kv_off:.0})"
+    );
+}
+
+#[test]
+fn cow_divergence_at_every_offset_class_is_bitwise() {
+    // A registered 80-byte prompt, then variants diverging at every
+    // offset class: inside page 0 (no shared pages), exactly at the first
+    // page boundary, mid-trie, in the last matchable page, and past the
+    // match cap. Each must attach the longest shared run, open its own
+    // private pages from the divergence point, and decode bitwise equal
+    // to the unshared run.
+    let base: Vec<u8> = (0..80u8).map(|j| b'a' + (j % 17)).collect();
+    let mut prompts = vec![base.clone()];
+    for &off in &[3usize, 16, 40, 63, 79] {
+        let mut p = base.clone();
+        p[off] = b'Z';
+        prompts.push(p);
+    }
+    let reqs: Vec<Request> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Request {
+            id: i as u64 + 1,
+            prompt: p.clone(),
+            max_new_tokens: 4,
+            temperature: 0.0,
+            deadline_ms: None,
+        })
+        .collect();
+    let run = |share: bool| {
+        let cfg = ShardConfig { prefix_share: share, ..ShardConfig::default() };
+        let mut w = ShardWorker::new(Box::new(SimLm::new(SimLmConfig::default())), cfg);
+        for r in &reqs {
+            w.submit(r.clone());
+        }
+        let mut done = w.run().expect("worker run");
+        done.sort_by_key(|c| c.id);
+        (w.stats(0), done)
+    };
+    let (s_on, on) = run(true);
+    let (s_off, off) = run(false);
+    assert_same("cow on vs off", &on, &off);
+    // Variants diverging at 16/40/63/79 all share at least one page; the
+    // ones diverging inside the sealed region (3/16/40/63) are COW splits.
+    assert!(s_on.prefix_hits >= 3, "boundary/mid-trie variants must hit ({})", s_on.prefix_hits);
+    assert!(s_on.prefix_cow_splits >= 3, "divergence must split ({})", s_on.prefix_cow_splits);
+    assert_eq!(s_off.prefix_cow_splits, 0);
+    assert!(
+        s_on.tokens < s_off.tokens,
+        "attached prefixes must skip prefill rows ({} vs {})",
+        s_on.tokens,
+        s_off.tokens
+    );
+}
+
+#[test]
+fn refcount_churn_drains_the_pool_to_zero() {
+    // 2000 sequences cycled through 8 live slots across 4 prompt
+    // families, attach + register + drop each round: after the last drop
+    // the index holds the only references, and releasing it leaves the
+    // pool empty — no leaked or double-freed pages anywhere in the cycle.
+    const LAYERS: usize = 2;
+    const HEADS: usize = 2;
+    const HD: usize = 8;
+    const PREFIX_PAGES: usize = 3;
+    let row = |tag: usize, t: usize, layer: usize, head: usize, which: usize| -> Vec<f32> {
+        (0..HD)
+            .map(|j| ((tag * 31 + t * 7 + layer * 13 + head * 3 + which * 5 + j) % 23) as f32
+                * 0.05
+                - 0.5)
+            .collect()
+    };
+    let mut cache = PagedKvCache::new(LAYERS, HEADS, HD);
+    cache.set_dedup(true);
+    let mut idx = PrefixIndex::with_capacity(256);
+    let mut live: VecDeque<u64> = VecDeque::new();
+    for i in 0..2000u64 {
+        if live.len() == 8 {
+            cache.drop_seq(live.pop_front().unwrap()).unwrap();
+        }
+        let fam = (i % 4) as usize;
+        let prompt = vec![b'a' + fam as u8; PREFIX_PAGES * PAGE_SIZE];
+        let slot = cache.add_seq(i + 1);
+        let m = idx.lookup(&prompt, PREFIX_PAGES);
+        if !m.pages.is_empty() {
+            cache.attach_prefix_at(slot, &m.pages).unwrap();
+        }
+        // Fill whatever the attach did not cover, then a private hot tail
+        // (salted per sequence so it never seals or dedups).
+        for t in m.pages.len() * PAGE_SIZE..PREFIX_PAGES * PAGE_SIZE {
+            for layer in 0..LAYERS {
+                for head in 0..HEADS {
+                    let k = row(fam, t, layer, head, 0);
+                    let v = row(fam, t, layer, head, 1);
+                    cache.append_at(slot, layer, head, &k, &v).unwrap();
+                }
+            }
+        }
+        for t in 0..5 {
+            for layer in 0..LAYERS {
+                for head in 0..HEADS {
+                    let k = row(i as usize + 9000, t, layer, head, 0);
+                    let v = row(i as usize + 9000, t, layer, head, 1);
+                    cache.append_at(slot, layer, head, &k, &v).unwrap();
+                }
+            }
+        }
+        let runs = cache.sealed_prefix_refs_at(slot, PREFIX_PAGES).unwrap();
+        idx.register(&prompt, &runs, cache.pool_mut());
+        live.push_back(i + 1);
+    }
+    for id in live {
+        cache.drop_seq(id).unwrap();
+    }
+    let held = cache.pool().live_pages();
+    assert!(held > 0, "the index must still hold the registered runs");
+    assert!(
+        held <= 4 * PREFIX_PAGES * LAYERS * HEADS,
+        "at most one pooled page per (family, page, layer, head), got {held}"
+    );
+    assert!(cache.pool().stats().dedup_hits > 0, "family reruns must dedup");
+    idx.release_all(cache.pool_mut());
+    assert_eq!(cache.pool().live_pages(), 0, "released pool must drain to zero");
+}
+
+#[test]
+fn mid_decode_panic_replay_reconstructs_sharing_bitwise() {
+    // Supervised crash-replay with sharing on: the respawned shard
+    // recomputes its journal from scratch, rebuilding its prefix index
+    // and page pool along the way — completions must stay bitwise equal
+    // to the clean shared run.
+    let trace = shared_prefix_trace(20, 64, 8, 8, 13);
+    let sup = SupervisorConfig::default();
+    let run = |plan: FaultPlan| {
+        serve_trace_prefix(4, AttnConfig::fp4(), 3, 13, &trace, true, None, plan, sup)
+            .expect("serve")
+    };
+    let (_, clean_stats, clean) = run(FaultPlan::none());
+    assert_eq!(clean_stats.restarts, 0, "clean run must not restart");
+    let busiest =
+        clean_stats.shards.iter().max_by_key(|s| s.tokens).expect("shards").shard;
+    let (_, stats, faulty) = run(FaultPlan::panic_at(busiest, 6));
+    assert!(stats.restarts >= 1, "the killed shard must be respawned");
+    assert_eq!(faulty.len(), trace.len(), "zero lost requests");
+    assert_same("replayed sharing vs clean", &clean, &faulty);
+    let (hits, pages, _, _) = stats.prefix_totals();
+    assert!(hits >= 1 && pages > 0, "replay must reconstruct sharing ({hits} hits)");
+}
+
+#[test]
+fn disk_spill_round_trips_bitwise_and_cleans_up() {
+    // A spill budget far below the working set forces cold sealed pages
+    // to disk at every admission; attends reload them transparently, so
+    // completions stay bitwise equal — and the pool removes every spill
+    // file when it drops.
+    let trace = shared_prefix_trace(12, 64, 8, 6, 17);
+    let dir = std::env::temp_dir().join("attn_qat_prefix_spill_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let run = |spill: Option<SpillConfig>| {
+        serve_trace_prefix(
+            1,
+            AttnConfig::fp4(),
+            2,
+            17,
+            &trace,
+            true,
+            spill,
+            FaultPlan::none(),
+            SupervisorConfig::default(),
+        )
+        .expect("serve")
+    };
+    let (_, _, resident) = run(None);
+    let (_, stats, spilled) =
+        run(Some(SpillConfig { dir: dir.clone(), budget_bytes: 2048 }));
+    assert_same("spill vs resident", &resident, &spilled);
+    assert!(stats.spilled_pages() > 0, "a 2 KiB budget must force spills");
+    let reloaded: u64 = stats.shards.iter().map(|s| s.reloaded_pages).sum();
+    assert!(reloaded > 0, "decode must transparently reload spilled pages");
+    let leftovers = std::fs::read_dir(&dir).unwrap().count();
+    assert_eq!(leftovers, 0, "pool drop must remove its spill directory");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn drop_seq_of_unknown_id_is_a_hard_error() {
+    let mut cache = PagedKvCache::new(1, 1, 8);
+    assert!(cache.drop_seq(42).is_err(), "unknown id must error, not no-op");
+    let _ = cache.add_seq(7);
+    cache.drop_seq(7).expect("live id drops cleanly");
+    assert!(cache.drop_seq(7).is_err(), "double drop must error");
+}
+
+#[test]
+fn memory_json_counts_page_kinds() {
+    let mut cache = PagedKvCache::new(1, 1, 8);
+    cache.set_dedup(true);
+    let slot = cache.add_seq(1);
+    for t in 0..PAGE_SIZE + 3 {
+        let k: Vec<f32> = (0..8).map(|j| (t * 8 + j) as f32 * 0.01 - 0.4).collect();
+        cache.append_at(slot, 0, 0, &k, &k).unwrap();
+    }
+    let doc = cache.memory_json();
+    assert_eq!(doc.get("pages").get("sealed").as_f64(), Some(1.0));
+    assert_eq!(doc.get("pages").get("hot").as_f64(), Some(1.0));
+    assert_eq!(doc.get("pages").get("shared").as_f64(), Some(0.0));
+    assert_eq!(doc.get("pages").get("spilled").as_f64(), Some(0.0));
+}

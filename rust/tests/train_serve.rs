@@ -73,6 +73,7 @@ fn finetuned_model_serves_bitwise_across_shardings_and_direct_eval() {
                 attn: serve_attn,
                 seq_max: 128,
                 sample_seed: SEED,
+                ..ShardConfig::default()
             },
             ..ClusterConfig::default()
         };
@@ -160,7 +161,13 @@ fn f32_serving_config_also_round_trips() {
     let cfg = ClusterConfig {
         shards: 2,
         queue_depth: 4,
-        shard: ShardConfig { slots: 2, attn: serve_attn, seq_max: 128, sample_seed: SEED },
+        shard: ShardConfig {
+            slots: 2,
+            attn: serve_attn,
+            seq_max: 128,
+            sample_seed: SEED,
+            ..ShardConfig::default()
+        },
         ..ClusterConfig::default()
     };
     let model = served.clone();
