@@ -167,6 +167,7 @@ fn main() -> anyhow::Result<()> {
                     max_new_tokens: 2,
                     temperature: 0.0,
                     deadline_ms: None,
+                    trace: Default::default(),
                 });
                 s.run()?;
             }
@@ -180,6 +181,7 @@ fn main() -> anyhow::Result<()> {
                         max_new_tokens: 16,
                         temperature: 0.0,
                         deadline_ms: None,
+                        trace: Default::default(),
                     });
                 }
                 s.run().unwrap();

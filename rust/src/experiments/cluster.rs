@@ -37,6 +37,7 @@ pub fn demo_trace(n_req: usize, max_new: usize, seed: u64) -> Vec<Request> {
             max_new_tokens: max_new,
             temperature: 0.0,
             deadline_ms: None,
+            trace: Default::default(),
         })
         .collect()
 }
@@ -160,6 +161,7 @@ pub fn shared_prefix_trace(
                 max_new_tokens: max_new,
                 temperature: 0.0,
                 deadline_ms: None,
+                trace: Default::default(),
             }
         })
         .collect()
@@ -267,12 +269,20 @@ pub fn cluster_scaling(cfg: &Config) -> Result<()> {
 /// each checked for zero lost requests and *bitwise identical*
 /// completions against the clean run (the supervisor's deterministic-
 /// replay contract). Writes `results/fault_tolerance.{md,json}`.
+///
+/// `-s faults.trace_out=FILE` additionally exports the causal span trees
+/// of all three scenarios as one Chrome trace-event JSON file — the
+/// faulted scenarios include the supervisor's `replay` spans (tagged with
+/// the shard incarnation), so recovery cost is visible per request on the
+/// Perfetto timeline.
 pub fn fault_tolerance(cfg: &Config) -> Result<()> {
     let n_req = cfg.usize_or("faults.requests", 24);
     let max_new = cfg.usize_or("faults.max_new_tokens", 16);
     let seed = cfg.u64_or("seed", 42);
     let shards = 4usize;
     let trace = demo_trace(n_req, max_new, seed);
+    let trace_out = cfg.str_or("faults.trace_out", "");
+    let mut trace_records = Vec::new();
 
     let sup = SupervisorConfig { stall_timeout_ms: 150.0, ..SupervisorConfig::default() };
     let scenarios: [(&str, FaultPlan); 3] = [
@@ -286,6 +296,13 @@ pub fn fault_tolerance(cfg: &Config) -> Result<()> {
     let mut rows = Vec::new();
     let mut snapshots = Vec::new();
     for (name, plan) in scenarios {
+        // A trace export wants the whole scenario retained, not the
+        // default ring's newest slice.
+        let telemetry = if trace_out.is_empty() {
+            Telemetry::new()
+        } else {
+            Telemetry::with_span_capacity(8192)
+        };
         let (wall_s, stats, done, snapshot) = serve_trace_observed(
             shards,
             AttnConfig::fp4(),
@@ -294,8 +311,11 @@ pub fn fault_tolerance(cfg: &Config) -> Result<()> {
             &trace,
             plan,
             sup,
-            Telemetry::new(),
+            telemetry.clone(),
         )?;
+        if !trace_out.is_empty() {
+            trace_records.extend(telemetry.spans().records());
+        }
         let texts: Vec<(u64, Vec<u8>)> = done.iter().map(|c| (c.id, c.text.clone())).collect();
         let bitwise = match &baseline {
             None => {
@@ -338,6 +358,16 @@ pub fn fault_tolerance(cfg: &Config) -> Result<()> {
         std::fs::write(&path, doc.to_string())?;
         println!("{doc}");
         println!("-> results/fault_tolerance_snapshot.json");
+    }
+    if !trace_out.is_empty() {
+        let doc = crate::telemetry::chrome_trace(&trace_records);
+        if let Some(dir) = std::path::Path::new(&trace_out).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(&trace_out, format!("{doc}\n"))?;
+        println!("chrome trace ({} span(s), all scenarios) -> {trace_out}", trace_records.len());
     }
     common::write_table(
         "fault_tolerance",

@@ -79,6 +79,15 @@ fn main() -> Result<()> {
         // telemetry snapshot on stdout, nothing else.
         return cmd_serve_cluster(&cli, true);
     }
+    if cli.command == "serve" && cli.args.first().map(String::as_str) == Some("profile") {
+        // Self-profiler over the demo cluster: span self-time table plus
+        // optional collapsed flamegraph stacks. Native, no PJRT.
+        return cmd_serve_profile(&cli);
+    }
+    if cli.command == "bench" {
+        // Bench-artifact aggregation; touches only results/bench/*.jsonl.
+        return cmd_bench(&cli);
+    }
     if cli.command == "train" && cli.args.first().map(String::as_str) == Some("native") {
         // Native QatModel finetune + train→serve round trip: no PJRT.
         return cmd_train_native(&cli);
@@ -337,6 +346,7 @@ fn cmd_serve(rt: &Runtime, cli: &Cli) -> Result<()> {
             max_new_tokens: max_new,
             temperature: 0.0,
             deadline_ms: None,
+            trace: Default::default(),
         });
     }
     let done = server.run()?;
@@ -368,7 +378,8 @@ fn cmd_serve(rt: &Runtime, cli: &Cli) -> Result<()> {
 /// [--queue-depth Q] [--lanes L] [--variant fp4|f32] [--seed S]
 /// [--deadline-ms D] [--faults SPEC] [--stall-timeout-ms T]
 /// [--max-restarts K] [--prefix-share] [--kv-spill-dir DIR]
-/// [--kv-spill-budget-kb N] [--json] [--stats-every-ms T]`
+/// [--kv-spill-budget-kb N] [--json] [--stats-every-ms T]
+/// [--trace-out FILE]`
 ///
 /// Native sharded decode: routes a deterministic request trace (prompts
 /// drawn from the synthetic corpus) across N supervised shard workers,
@@ -395,6 +406,12 @@ fn cmd_serve(rt: &Runtime, cli: &Cli) -> Result<()> {
 /// stdout — live config, per-shard gauges, supervisor counters, span
 /// stats. `--stats-every-ms T` additionally appends a snapshot line to
 /// `results/serve_cluster_stats.jsonl` every T ms while the run drains.
+///
+/// `--trace-out FILE` exports the run's causal span tree as Chrome
+/// trace-event JSON (Perfetto / `chrome://tracing` loadable): one track
+/// per request trace, every prefill/decode span's parent chain resolving
+/// to its request root. The span ring is enlarged (8192) so a demo-sized
+/// run exports untruncated.
 fn cmd_serve_cluster(cli: &Cli, force_json: bool) -> Result<()> {
     use attn_qat::serve::{
         Admission, ClusterConfig, DecodeCluster, FaultPlan, ShardConfig, SimLm, SimLmConfig,
@@ -471,7 +488,7 @@ fn cmd_serve_cluster(cli: &Cli, force_json: bool) -> Result<()> {
         }),
         None => None,
     };
-    const KNOWN: [&str; 16] = [
+    const KNOWN: [&str; 17] = [
         "shards",
         "requests",
         "max-new",
@@ -488,6 +505,7 @@ fn cmd_serve_cluster(cli: &Cli, force_json: bool) -> Result<()> {
         "kv-spill-budget-kb",
         "json",
         "stats-every-ms",
+        "trace-out",
     ];
     if let Some(unknown) = flags.keys().find(|k| !KNOWN.contains(&k.as_str())) {
         bail!("unknown flag --{unknown} (expected one of: --{})", KNOWN.join(", --"));
@@ -522,7 +540,14 @@ fn cmd_serve_cluster(cli: &Cli, force_json: bool) -> Result<()> {
     };
     let lm_cfg = SimLmConfig { seed, ..SimLmConfig::default() };
     let plan = faults.clone();
-    let telemetry = Telemetry::new();
+    let trace_out = flags.get("trace-out").cloned();
+    // Exporting a trace wants the whole run retained, not the default
+    // ring's newest slice.
+    let telemetry = if trace_out.is_some() {
+        Telemetry::with_span_capacity(8192)
+    } else {
+        Telemetry::new()
+    };
     let mut cluster = DecodeCluster::spawn_observed(cluster_cfg, telemetry.clone(), move |shard| {
         plan.wrap(shard, Box::new(SimLm::new(lm_cfg)))
     });
@@ -636,6 +661,19 @@ fn cmd_serve_cluster(cli: &Cli, force_json: bool) -> Result<()> {
             );
         }
     }
+    if let Some(path) = &trace_out {
+        let records = telemetry.spans().records();
+        let doc = attn_qat::telemetry::chrome_trace(&records);
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, format!("{doc}\n"))?;
+        if !want_json {
+            println!("chrome trace ({} span(s)) -> {path}", records.len());
+        }
+    }
     if done.len() + shed != n_req {
         bail!(
             "lost completions: submitted {n_req}, shed {shed}, drained {}",
@@ -643,6 +681,90 @@ fn cmd_serve_cluster(cli: &Cli, force_json: bool) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `repro serve profile [--shards N] [--requests R] [--max-new M]
+/// [--fold-out FILE]`
+///
+/// Self-profiler: drives the demo cluster workload under a large span
+/// ring, folds the causal span tree into an inclusive/exclusive self-time
+/// table (exclusive = a span's duration minus its direct children) and
+/// prints it sorted by self time. `--fold-out FILE` additionally writes
+/// collapsed-stack lines (`root;child;leaf N`, weights in µs) — pipe to
+/// inferno or any FlameGraph-compatible renderer.
+fn cmd_serve_profile(cli: &Cli) -> Result<()> {
+    use attn_qat::serve::{ClusterConfig, DecodeCluster, SimLm, SimLmConfig};
+    use attn_qat::telemetry::{self, Telemetry};
+
+    let mut flags = std::collections::BTreeMap::new();
+    let rest = &cli.args[1..];
+    let mut i = 0;
+    while i < rest.len() {
+        let key = rest[i]
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("expected --flag, got '{}'", rest[i]))?;
+        let val = rest.get(i + 1).ok_or_else(|| anyhow!("--{key} needs a value"))?;
+        flags.insert(key.to_string(), val.clone());
+        i += 2;
+    }
+    const KNOWN: [&str; 4] = ["shards", "requests", "max-new", "fold-out"];
+    if let Some(unknown) = flags.keys().find(|k| !KNOWN.contains(&k.as_str())) {
+        bail!("unknown flag --{unknown} (expected one of: --{})", KNOWN.join(", --"));
+    }
+    let get_usize = |name: &str, default: usize| -> Result<usize> {
+        match flags.get(name) {
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} wants an integer, got '{v}'")),
+            None => Ok(default),
+        }
+    };
+    let shards = get_usize("shards", 2)?;
+    let n_req = get_usize("requests", 12)?;
+    let max_new = get_usize("max-new", 12)?;
+    let seed = cli.cfg.u64_or("seed", 42);
+
+    let telemetry = Telemetry::with_span_capacity(16384);
+    let cluster_cfg = ClusterConfig { shards, queue_depth: 32, ..ClusterConfig::default() };
+    let lm_cfg = SimLmConfig { seed, ..SimLmConfig::default() };
+    let mut cluster = DecodeCluster::spawn_observed(cluster_cfg, telemetry.clone(), move |_| {
+        Box::new(SimLm::new(lm_cfg))
+    });
+    for r in attn_qat::experiments::cluster::demo_trace(n_req, max_new, seed) {
+        cluster.submit(r)?;
+    }
+    let (done, _stats) = cluster.drain()?;
+    let records = telemetry.spans().records();
+    let rows = telemetry::self_time(&records);
+    println!(
+        "serve profile: {} request(s) over {shards} shard(s), {} span(s) recorded\n",
+        done.len(),
+        records.len()
+    );
+    print!("{}", telemetry::profile_table(&rows));
+    if let Some(path) = flags.get("fold-out") {
+        let lines = telemetry::flamegraph_lines(&records);
+        std::fs::write(path, lines.join("\n") + "\n")?;
+        println!("\ncollapsed stacks ({} line(s)) -> {path}", lines.len());
+    }
+    Ok(())
+}
+
+/// `repro bench summary` — fold every `results/bench/*.jsonl` (runmeta
+/// provenance headers plus result rows) into the repo-root
+/// `BENCH_summary.json` trajectory document. A missing or empty bench
+/// directory degrades to an empty summary, not an error.
+fn cmd_bench(cli: &Cli) -> Result<()> {
+    match cli.args.first().map(String::as_str) {
+        Some("summary") => {
+            let doc =
+                attn_qat::telemetry::summarize_bench_dir(std::path::Path::new("results/bench"));
+            let out = "BENCH_summary.json";
+            std::fs::write(out, format!("{doc}\n"))?;
+            let n = doc.get("benches").as_obj().map_or(0, |b| b.len());
+            println!("bench summary ({n} bench file(s)) -> {out}");
+            Ok(())
+        }
+        _ => bail!("usage: repro bench summary"),
+    }
 }
 
 const HELP: &str = "repro — Attn-QAT reproduction launcher
@@ -666,7 +788,7 @@ COMMANDS:
                   [--stall-timeout-ms T] [--max-restarts K]
                   [--prefix-share] [--kv-spill-dir DIR]
                   [--kv-spill-budget-kb N]
-                  [--json] [--stats-every-ms T]
+                  [--json] [--stats-every-ms T] [--trace-out FILE]
                                  native sharded decode cluster with shard
                                  supervision, deadline-aware shedding, and
                                  seeded fault injection (--faults takes
@@ -678,11 +800,22 @@ COMMANDS:
                                  disk under a resident-byte budget;
                                  --json emits one telemetry snapshot doc,
                                  --stats-every-ms streams snapshot lines to
-                                 results/serve_cluster_stats.jsonl
+                                 results/serve_cluster_stats.jsonl;
+                                 --trace-out exports the causal request
+                                 trace as Chrome trace-event JSON
+                                 (Perfetto / chrome://tracing loadable)
     serve stats [flags]          serve cluster with --json forced on: the
                                  schema-versioned telemetry snapshot (live
                                  config, per-shard gauges, supervisor
                                  counters, spans) is the entire output
+    serve profile [--shards N] [--requests R] [--max-new M]
+                  [--fold-out FILE]
+                                 self-profile the demo cluster: span
+                                 inclusive/exclusive self-time table on
+                                 stdout; --fold-out writes collapsed
+                                 flamegraph stacks (inferno-compatible)
+    bench summary                fold results/bench/*.jsonl (runmeta
+                                 headers + rows) into BENCH_summary.json
     exp <id>                     regenerate a paper table/figure:
                                  table1 table2 table3 table4 fig1..fig5
                                  cluster faults all

@@ -26,6 +26,15 @@
 //! rollback is recorded in the step's [`StepMetrics::rollback`] flag —
 //! the history keeps the spike (divergence stays observable data) while
 //! the parameters survive it.
+//!
+//! **Tracing:** when the session runs under an enabled [`Telemetry`]
+//! domain, each step opens a `train.step` span and the inner `train.clip`
+//! / `train.optim` guards nest under it automatically via the
+//! thread-local current-span context (see [`crate::telemetry::trace`]) —
+//! no [`crate::telemetry::TraceContext`] plumbing is needed on this
+//! single-threaded path, and the resulting tree shows up in
+//! `serve profile`-style self-time tables and flamegraph exports like
+//! any serving trace.
 
 use crate::coordinator::{LrSchedule, StepMetrics};
 use crate::json::Json;

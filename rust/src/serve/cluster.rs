@@ -37,12 +37,13 @@
 //! sharding buys wall-clock only. Pinned by `rust/tests/cluster_serve.rs`
 //! and (under injected faults) `rust/tests/fault_tolerance.rs`.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 use anyhow::Result;
 
 use crate::json::Json;
-use crate::telemetry::{Counter, Telemetry};
+use crate::telemetry::{Counter, Histogram, Telemetry};
 
 use super::model::TokenModel;
 use super::shard::{ShardConfig, ShardStats};
@@ -255,12 +256,26 @@ fn mix_id(id: u64) -> u64 {
     crate::rng::splitmix64(&mut state)
 }
 
-/// Pre-registered `serve.cluster.*` counters (admission outcomes).
+/// Pre-registered `serve.cluster.*` counters (admission outcomes) and
+/// `serve.slo.*` shed-accuracy accounting (resolved at drain).
 struct ClusterProbes {
     submitted: Counter,
     shed_deadline: Counter,
     shed_capacity: Counter,
     submit_retries: Counter,
+    /// Deadline-carrying completions that met their deadline.
+    slo_met: Counter,
+    /// Admitted as feasible, yet missed the deadline — the EWMA
+    /// prediction was wrong in the optimistic direction.
+    slo_false_admit: Counter,
+    /// Shed as infeasible although, at the shard's *final* EWMA, the
+    /// request's own cost alone would have fit — wrong in the
+    /// pessimistic direction (backlog or a cold-hot estimator).
+    slo_false_shed: Counter,
+    /// deadline − wall for met deadlines, ms.
+    slo_slack_ms: Histogram,
+    /// wall − deadline for missed deadlines, ms.
+    slo_overrun_ms: Histogram,
 }
 
 /// The sharded decode cluster (see module docs).
@@ -273,6 +288,12 @@ pub struct DecodeCluster {
     shed_deadline: usize,
     shed_capacity: usize,
     submit_retries: usize,
+    /// `(id, deadline_ms)` of accepted deadline-carrying requests —
+    /// matched against completions at drain for slack / false-admit.
+    slo_admitted: Vec<(u64, f64)>,
+    /// `(shard, deadline_ms, own_passes)` of deadline sheds — re-judged
+    /// against the shard's final EWMA at drain for false-shed.
+    slo_shed: Vec<(usize, f64, usize)>,
 }
 
 impl DecodeCluster {
@@ -314,6 +335,11 @@ impl DecodeCluster {
             shed_deadline: reg.counter("serve.cluster.shed_deadline"),
             shed_capacity: reg.counter("serve.cluster.shed_capacity"),
             submit_retries: reg.counter("serve.cluster.submit_retries"),
+            slo_met: reg.counter("serve.slo.deadlines_met"),
+            slo_false_admit: reg.counter("serve.slo.false_admit"),
+            slo_false_shed: reg.counter("serve.slo.false_shed"),
+            slo_slack_ms: reg.histogram("serve.slo.slack_ms"),
+            slo_overrun_ms: reg.histogram("serve.slo.overrun_ms"),
         };
         let sup = Supervisor::new(
             cfg.shards,
@@ -332,6 +358,8 @@ impl DecodeCluster {
             shed_deadline: 0,
             shed_capacity: 0,
             submit_retries: 0,
+            slo_admitted: Vec::new(),
+            slo_shed: Vec::new(),
         }
     }
 
@@ -385,20 +413,34 @@ impl DecodeCluster {
     pub fn submit(&mut self, req: Request) -> Result<Admission> {
         let shard = self.route(req.id);
         let spans = self.telemetry.spans().clone();
+        // Root of this request's trace: everything downstream — route,
+        // queue wait, admit/prefill, sampled decode, finish, even a
+        // post-fault replay — parents back to this span, across threads,
+        // via the context copied into `Request::trace`.
+        let root = spans.start_root("request", "req", req.id);
+        let mut req = req;
+        req.trace = root.context();
+        let own_passes = req.prompt.len().max(1) + req.max_new_tokens;
         let _span = crate::span!(spans, "route", shard = shard);
         self.sup.check(shard)?;
         if self.infeasible(shard, &req) {
             self.shed_deadline += 1;
             self.probes.shed_deadline.inc();
+            if let Some(dl) = req.deadline_ms {
+                self.slo_shed.push((shard, dl, own_passes));
+            }
             return Ok(Admission::ShedDeadline);
         }
         let mut attempts = 0usize;
-        let mut req = req;
         loop {
+            let (id, deadline) = (req.id, req.deadline_ms);
             match self.sup.try_send(shard, req) {
                 SendOutcome::Sent => {
                     self.submitted += 1;
                     self.probes.submitted.inc();
+                    if let Some(dl) = deadline {
+                        self.slo_admitted.push((id, dl));
+                    }
                     return Ok(Admission::Accepted);
                 }
                 SendOutcome::Full(r) | SendOutcome::Gone(r) => {
@@ -422,6 +464,9 @@ impl DecodeCluster {
                     if self.infeasible(shard, &req) {
                         self.shed_deadline += 1;
                         self.probes.shed_deadline.inc();
+                        if let Some(dl) = req.deadline_ms {
+                            self.slo_shed.push((shard, dl, own_passes));
+                        }
                         return Ok(Admission::ShedDeadline);
                     }
                 }
@@ -475,6 +520,34 @@ impl DecodeCluster {
         shards.sort_by_key(|s| s.shard);
         let mut completions = report.completions;
         completions.sort_by_key(|c| c.id);
+        // SLO accounting: close the loop on the EWMA feasibility
+        // prediction made at admission. Admitted deadline-carriers are
+        // judged by realized wall time (slack histogram + false-admit);
+        // deadline sheds are re-judged with hindsight — if the shard's
+        // *final* EWMA says the request's own cost alone fit the
+        // deadline, the shed was backlog- or cold-estimator-driven and
+        // counts as a false shed.
+        let deadline_of: BTreeMap<u64, f64> = self.slo_admitted.iter().copied().collect();
+        for c in &completions {
+            if let Some(&dl) = deadline_of.get(&c.id) {
+                let slack = dl - c.wall_ms;
+                if slack >= 0.0 {
+                    self.probes.slo_met.inc();
+                    self.probes.slo_slack_ms.record(slack);
+                } else {
+                    self.probes.slo_false_admit.inc();
+                    self.probes.slo_overrun_ms.record(-slack);
+                }
+            }
+        }
+        for &(shard, dl, own_passes) in &self.slo_shed {
+            let hindsight = shards.iter().find(|s| s.shard == shard).and_then(|s| s.ewma_token_ms);
+            if let Some(ewma) = hindsight {
+                if ewma * own_passes as f64 <= dl {
+                    self.probes.slo_false_shed.inc();
+                }
+            }
+        }
         Ok((
             completions,
             ClusterStats {

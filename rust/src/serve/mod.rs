@@ -135,6 +135,41 @@
 //! telemetry on or off (guarded within 3% tokens/s by
 //! `benches/cluster_serve.rs`).
 //!
+//! ## Tracing & profiling
+//!
+//! On top of the metric probes, the cluster emits a **causal trace**: at
+//! submit the router opens a per-request root span and stamps its
+//! [`TraceContext`] onto [`Request::trace`]; the context rides the
+//! bounded channel into the shard worker, where queue-wait, admission
+//! (prefix attach / copy-on-write split included), suffix prefill,
+//! sampled per-token decode, and finish spans all re-anchor under that
+//! root — so one request's lifecycle reconstructs as a tree *across
+//! threads*. Supervisor replays re-anchor the same way and tag their
+//! spans with the shard incarnation, making recovery cost attributable
+//! per request. The full span-name schema lives in the
+//! [`crate::telemetry`] module docs.
+//!
+//! Two consumers ship with the CLI:
+//!
+//! * `repro serve cluster --trace-out FILE` (also `exp faults` via the
+//!   `faults.trace_out` config key) exports the span ring as Chrome
+//!   trace-event JSON ([`crate::telemetry::chrome_trace`]) — load the
+//!   file in Perfetto / `chrome://tracing` to scrub the timeline, one
+//!   track per request.
+//! * `repro serve profile` runs the demo cluster under a large span ring
+//!   and folds the tree into an inclusive/exclusive self-time table
+//!   ([`crate::telemetry::self_time`]) plus collapsed-stack flamegraph
+//!   lines ([`crate::telemetry::flamegraph_lines`], `--fold-out FILE`,
+//!   one `root;child;leaf N` line per stack — pipe to inferno or any
+//!   FlameGraph-compatible renderer).
+//!
+//! Deadline shedding closes its loop through the same trace: drain
+//! classifies every admitted deadline as met (slack into
+//! `serve.slo.slack_ms`) or missed (`serve.slo.false_admit`,
+//! `serve.slo.overrun_ms`) and re-judges every shed against the shard's
+//! final latency EWMA (`serve.slo.false_shed`) — so the admission
+//! controller's feasibility prediction is itself measured.
+//!
 //! ## Train→serve
 //!
 //! Since the `model` subsystem landed, the cluster serves **trained**
@@ -178,6 +213,8 @@ pub use prefix::{PrefixIndex, PrefixMatch, PrefixStats};
 pub use shard::{ShardConfig, ShardStats, ShardWorker};
 pub use supervisor::{FaultKind, FaultPlan, FaultSpec, SupervisorConfig};
 
+pub use crate::telemetry::TraceContext;
+
 use std::collections::VecDeque;
 
 use anyhow::{anyhow, bail, Result};
@@ -202,6 +239,14 @@ pub struct Request {
     /// docs' shed-vs-backpressure contract); `None` never sheds. The
     /// single-threaded [`DecodeServer`] demo ignores it.
     pub deadline_ms: Option<f64>,
+    /// Causal-trace anchor, assigned by [`cluster::DecodeCluster::submit`]
+    /// when it opens the per-request root span. Rides the channel into the
+    /// shard worker so queue/admit/prefill/decode spans on the worker
+    /// thread re-anchor under the submitter's root, and survives in the
+    /// supervisor journal so replayed work stays attributed to the
+    /// original request. Default ([`TraceContext::NONE`]) means untraced;
+    /// builders never need to set it.
+    pub trace: crate::telemetry::TraceContext,
 }
 
 impl Request {

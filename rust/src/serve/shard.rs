@@ -39,7 +39,7 @@ use anyhow::Result;
 use crate::attention::{AttnConfig, AttnEngine};
 use crate::kvcache::{PagedKvCache, SeqSlot, SpillConfig, PAGE_SIZE};
 use crate::rng::Rng;
-use crate::telemetry::{Counter, Gauge, Histogram, Telemetry};
+use crate::telemetry::{Counter, Gauge, Histogram, Telemetry, TraceContext};
 
 use super::model::{TokenModel, VOCAB};
 use super::prefix::{PrefixIndex, PrefixMatch};
@@ -262,7 +262,13 @@ pub struct ShardWorker {
     tokens: usize,
     busy_ns: f64,
     queue_peak: usize,
-    token_ms: Vec<f64>,
+    /// Bounded per-token latency sketch (log2 buckets) — O(1) memory for
+    /// any run length, quantiles within one bucket width of exact
+    /// (replaces the old unbounded per-token `Vec<f64>`).
+    token_hist: Histogram,
+    /// Per-token latency EWMA, folded incrementally in arrival order (α
+    /// shared with the supervisor's live estimator, so the two agree).
+    token_ewma: Option<f64>,
     kv_peak: usize,
     kv_f32_peak: usize,
     prefix_hits: u64,
@@ -303,7 +309,8 @@ impl ShardWorker {
             tokens: 0,
             busy_ns: 0.0,
             queue_peak: 0,
-            token_ms: Vec::new(),
+            token_hist: Histogram::default(),
+            token_ewma: None,
             kv_peak: 0,
             kv_f32_peak: 0,
             prefix_hits: 0,
@@ -391,8 +398,10 @@ impl ShardWorker {
         let spans = self.probes.as_ref().map(|p| (p.telemetry.spans().clone(), p.shard));
 
         // Admission: prompt prefill + first sampled token per request.
+        // The batch-level span is untraced (`step.admit`); the per-request
+        // `admit` span inside [`ShardWorker::admit`] carries the trace.
         if !self.queue.is_empty() {
-            let _span = spans.as_ref().map(|(s, sh)| crate::span!(s, "admit", shard = *sh));
+            let _span = spans.as_ref().map(|(s, sh)| crate::span!(s, "step.admit", shard = *sh));
             while self.active.len() < self.cfg.slots {
                 let Some(req) = self.queue.pop_front() else { break };
                 processed += self.admit(req)?;
@@ -401,22 +410,38 @@ impl ShardWorker {
 
         // Decode: one token per active lane.
         if !self.active.is_empty() {
-            let _span = spans.as_ref().map(|(s, sh)| crate::span!(s, "decode", shard = *sh));
+            let _span = spans.as_ref().map(|(s, sh)| crate::span!(s, "step.decode", shard = *sh));
             let dec0 = std::time::Instant::now();
             let mut finished = Vec::new();
             for lane in 0..self.active.len() {
                 let a = &self.active[lane];
                 let (slot, pos) = (a.slot, a.tokens.len() - 1);
                 let tok = *a.tokens.last().expect("active seq has tokens");
-                forward_rows(
-                    self.model.as_ref(),
-                    &mut self.cache,
-                    &mut self.engines[lane],
-                    &mut self.bufs,
-                    slot,
-                    &[tok],
-                    pos,
-                )?;
+                // Sampled per-token trace spans: the first decode pass of
+                // a sequence plus every 4th after — enough to reconstruct
+                // per-request decode timing in the exported trace without
+                // paying one span per token. Anchored on the request root
+                // (not the batch span), so the parent chain of every
+                // decode span resolves to its request.
+                let sampled = a.generated == 1 || a.generated % 4 == 0;
+                let (rid, rtrace) = (a.req.id, a.req.trace);
+                {
+                    let _tok_span = match (&spans, sampled) {
+                        (Some((s, _)), true) => {
+                            Some(s.start_child("decode.token", "req", rid, rtrace))
+                        }
+                        _ => None,
+                    };
+                    forward_rows(
+                        self.model.as_ref(),
+                        &mut self.cache,
+                        &mut self.engines[lane],
+                        &mut self.bufs,
+                        slot,
+                        &[tok],
+                        pos,
+                    )?;
+                }
                 processed += 1;
                 let d = self.model.d_model();
                 self.bufs.logits.resize(VOCAB, 0.0);
@@ -437,12 +462,8 @@ impl ShardWorker {
                 }
             }
             let per_tok_ms = dec0.elapsed().as_secs_f64() * 1e3 / self.active.len() as f64;
-            for _ in 0..self.active.len() {
-                self.token_ms.push(per_tok_ms);
-                if let Some(p) = &self.probes {
-                    p.token_ms.record(per_tok_ms);
-                }
-            }
+            let lanes = self.active.len();
+            self.record_token_ms(per_tok_ms, lanes);
             for &lane in finished.iter().rev() {
                 self.finish(lane)?;
             }
@@ -458,6 +479,24 @@ impl ShardWorker {
             p.tokens.set(self.tokens as u64);
         }
         Ok(processed)
+    }
+
+    /// Fold `n` passes at `ms` each into the bounded latency accounting:
+    /// the local sketch (quantiles), the incremental EWMA (same arrival
+    /// order as the old per-token vector fold), and the published
+    /// `serve.shard{i}.token_ms` histogram.
+    fn record_token_ms(&mut self, ms: f64, n: usize) {
+        let alpha = crate::serve::supervisor::EWMA_ALPHA;
+        for _ in 0..n {
+            self.token_hist.record(ms);
+            self.token_ewma = Some(match self.token_ewma {
+                None => ms,
+                Some(prev) => (1.0 - alpha) * prev + alpha * ms,
+            });
+            if let Some(p) = &self.probes {
+                p.token_ms.record(ms);
+            }
+        }
     }
 
     /// Record KV memory peaks. Cache bytes only grow between admissions
@@ -515,6 +554,29 @@ impl ShardWorker {
             req.prompt.clone()
         };
         let started = std::time::Instant::now();
+        let spans = self.probes.as_ref().map(|p| (p.telemetry.spans().clone(), p.shard));
+        // Queue wait: root-span open at submit → this admission, measured
+        // against the context that rode the channel (no second clock
+        // exchange needed; covers routing + channel residency).
+        if let Some((s, _)) = &spans {
+            if req.trace.is_some() {
+                let now = s.now_us();
+                s.record_at(
+                    "queue",
+                    "",
+                    0,
+                    req.trace,
+                    req.trace.start_us,
+                    now.saturating_sub(req.trace.start_us),
+                );
+            }
+        }
+        // Per-request admission span: the prefix attach / COW markers and
+        // the suffix prefill below all nest under it — and through it,
+        // under the request root that crossed the channel.
+        let admit_span =
+            spans.as_ref().map(|(s, sh)| s.start_child("admit", "shard", *sh as u64, req.trace));
+        let admit_ctx = admit_span.as_ref().map_or(TraceContext::NONE, |g| g.context());
         self.requests += 1;
         let slot = self.cache.add_seq(req.id);
         let lane = self.active.len();
@@ -548,20 +610,25 @@ impl ShardWorker {
                 p.prefix_pages_shared.add(shared);
                 p.prefix_bytes_saved.add(bytes);
             }
+            if let Some((s, _)) = &spans {
+                s.record_at("prefix.attach", "pages", shared, admit_ctx, s.now_us(), 0);
+            }
         }
         if matched.cow_split {
             self.prefix_cow_splits += 1;
             if let Some(p) = &self.probes {
                 p.prefix_cow_splits.inc();
             }
+            if let Some((s, _)) = &spans {
+                s.record_at("prefix.cow", "", 0, admit_ctx, s.now_us(), 0);
+            }
         }
         let skip = matched.pages.len() * PAGE_SIZE;
         let nq = prompt_len - skip;
         {
-            let _span = self
-                .probes
-                .as_ref()
-                .map(|p| crate::span!(p.telemetry.spans(), "prefill", shard = p.shard));
+            // Plain `start`: nests under the open per-request admit span
+            // on this thread, so prefill's parent chain reaches the root.
+            let _span = spans.as_ref().map(|(s, sh)| crate::span!(s, "prefill", shard = *sh));
             forward_rows(
                 self.model.as_ref(),
                 &mut self.cache,
@@ -604,13 +671,7 @@ impl ShardWorker {
         self.alloc_bytes_sum += (self.cache.pool().stats().fresh_bytes - fresh0) + hot_tail;
         let admit_ms = started.elapsed().as_secs_f64() * 1e3;
         self.admit_ms_sum += admit_ms;
-        let per_tok_ms = admit_ms / nq as f64;
-        for _ in 0..nq {
-            self.token_ms.push(per_tok_ms);
-            if let Some(p) = &self.probes {
-                p.token_ms.record(per_tok_ms);
-            }
-        }
+        self.record_token_ms(admit_ms / nq as f64, nq);
         let a =
             ActiveSeq { req, slot, tokens, prompt_tokens: prompt_len, generated: 1, rng, started };
         self.active.push(a);
@@ -638,6 +699,11 @@ impl ShardWorker {
         self.sample_kv_peaks();
         let a = self.active.swap_remove(lane);
         self.cache.drop_slot(a.slot)?;
+        // Zero-duration marker closing the request's trace on this shard.
+        if let Some(p) = &self.probes {
+            let s = p.telemetry.spans();
+            s.record_at("finish", "tokens", a.generated as u64, a.req.trace, s.now_us(), 0);
+        }
         self.done.push(Completion {
             id: a.req.id,
             prompt_tokens: a.prompt_tokens,
@@ -671,24 +737,14 @@ impl ShardWorker {
         })
     }
 
-    /// Snapshot the shard's statistics (percentiles computed here).
+    /// Snapshot the shard's statistics (percentiles estimated from the
+    /// bounded log2-bucket sketch — within one bucket width of the exact
+    /// sorted-sample quantiles the old unbounded vector produced).
     pub fn stats(&self, shard: usize) -> ShardStats {
-        let mut sorted = self.token_ms.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| {
-            if sorted.is_empty() {
-                0.0
-            } else {
-                sorted[((sorted.len() - 1) as f64 * p).round() as usize]
-            }
-        };
+        let pct = |p: f64| self.token_hist.quantile(p).unwrap_or(0.0);
         let (hits, misses) = self.qcache_totals();
         let busy_s = self.busy_ns * 1e-9;
-        let alpha = crate::serve::supervisor::EWMA_ALPHA;
-        let ewma = self.token_ms.iter().fold(None, |acc, &ms| match acc {
-            None => Some(ms),
-            Some(prev) => Some((1.0 - alpha) * prev + alpha * ms),
-        });
+        let ewma = self.token_ewma;
         let pool = self.cache.pool().stats();
         let stats = ShardStats {
             shard,
@@ -818,6 +874,7 @@ mod tests {
             max_new_tokens: max_new,
             temperature: 0.0,
             deadline_ms: None,
+            trace: Default::default(),
         }
     }
 
@@ -853,6 +910,7 @@ mod tests {
                 max_new_tokens: 5,
                 temperature: if i % 2 == 0 { 0.0 } else { 0.8 },
                 deadline_ms: None,
+                trace: Default::default(),
             })
             .collect();
         let mut a = worker(ShardConfig::default());
@@ -942,6 +1000,46 @@ mod tests {
             s_off.tokens
         );
         assert!(s_on.kv_admit_bytes_per_seq < s_off.kv_admit_bytes_per_seq / 2.0);
+    }
+
+    #[test]
+    fn bucketed_token_quantiles_stay_within_one_bucket_of_exact() {
+        // Parity pin for the bounded sketch that replaced the unbounded
+        // per-token Vec<f64>: p50/p99 within one log2 bucket ([0.75,
+        // 1.5]×) of the exact sorted-sample quantiles at small n, and the
+        // EWMA bitwise-matching the old vector fold (same arrival order).
+        let mut w = worker(ShardConfig::default());
+        let samples = [0.3, 0.5, 0.9, 1.7, 2.2, 3.8, 7.5, 12.0, 31.0];
+        for &ms in &samples {
+            w.record_token_ms(ms, 1);
+        }
+        let s = w.stats(0);
+        let exact = |q: f64| {
+            let mut v = samples.to_vec();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[((v.len() - 1) as f64 * q).round() as usize]
+        };
+        assert!(
+            s.p50_token_ms >= 0.74 * exact(0.5) && s.p50_token_ms <= 1.51 * exact(0.5),
+            "p50 {} vs exact {}",
+            s.p50_token_ms,
+            exact(0.5)
+        );
+        assert!(
+            s.p99_token_ms >= 0.74 * exact(0.99) && s.p99_token_ms <= 1.51 * exact(0.99),
+            "p99 {} vs exact {}",
+            s.p99_token_ms,
+            exact(0.99)
+        );
+        let alpha = crate::serve::supervisor::EWMA_ALPHA;
+        let want = samples
+            .iter()
+            .fold(None, |acc, &ms| match acc {
+                None => Some(ms),
+                Some(prev) => Some((1.0 - alpha) * prev + alpha * ms),
+            })
+            .unwrap();
+        assert!((s.ewma_token_ms.unwrap() - want).abs() < 1e-12);
     }
 
     #[test]

@@ -581,7 +581,14 @@ impl Supervisor {
     /// worker. Returns `Some(reason)` if the worker died or stalled
     /// mid-replay.
     fn replay(&mut self, shard: usize, journal: Vec<Request>) -> Option<String> {
+        let spans = self.obs.spans().clone();
+        let incarnation = self.shards[shard].restarts as u64;
         for req in journal {
+            // Re-anchor the recovery under the original request's root
+            // span (the journal preserves `Request::trace`), tagged with
+            // the incarnation recomputing it — recovery cost stays
+            // attributable per request in the exported trace.
+            spans.record_at("replay", "incarnation", incarnation, req.trace, spans.now_us(), 0);
             let mut pending = req;
             loop {
                 match self.shards[shard].tx.try_send(ShardMsg::Req(pending)) {

@@ -42,6 +42,12 @@
 //! | `serve.cluster.submitted` | counter | `DecodeCluster::submit` |
 //! | `serve.cluster.shed_deadline` / `.shed_capacity` | counter | `DecodeCluster` admission |
 //! | `serve.cluster.submit_retries` | counter | `DecodeCluster` backpressure loop |
+//! | `serve.slo.slack_ms` | histogram | `DecodeCluster::drain` (deadline − wall, deadline met) |
+//! | `serve.slo.overrun_ms` | histogram | `DecodeCluster::drain` (wall − deadline, deadline missed) |
+//! | `serve.slo.deadlines_met` | counter | `DecodeCluster::drain` |
+//! | `serve.slo.false_admit` | counter | `DecodeCluster::drain` (admitted as feasible, missed its deadline) |
+//! | `serve.slo.false_shed` | counter | `DecodeCluster::drain` (shed as infeasible, hindsight EWMA says its own cost fit) |
+//! | `telemetry.spans_dropped` | counter | `Telemetry::snapshot` (span-ring evictions — nonzero ⇒ truncated trace) |
 //! | `serve.supervisor.restarts` | counter | `Supervisor::respawn_and_replay` |
 //! | `serve.supervisor.replayed_requests` | counter | `Supervisor::respawn_and_replay` |
 //! | `serve.supervisor.recomputed_passes` | counter | `Supervisor::respawn_and_replay` |
@@ -53,10 +59,24 @@
 //! | `train.layer{l}.q_sat_frac` / `.k_sat_frac` / `.v_sat_frac` | gauge | `LmTrainTask` probe ([`probes::e2m1_health`]) |
 //! | `train.layer{l}.scale_range` | gauge | `LmTrainTask` probe (per-block scale spread) |
 //!
-//! Span names (ring-buffered, see [`SpanRecorder`]): serve-side
-//! `admit`, `route`, `prefill`, `decode`, `drain` (tagged `shard`);
-//! train-side `train.step`, `train.forward`, `train.backward`,
-//! `train.clip`, `train.optim`.
+//! # Trace schema
+//!
+//! Every span carries a causal triple (`trace_id`, `span_id`,
+//! `parent_id` — see [`trace::TraceContext`]), so the ring reconstructs
+//! as a forest. Span names (ring-buffered, see [`SpanRecorder`]):
+//!
+//! * **Per request** (one trace per submitted request, rooted on the
+//!   submit thread and continued inside the shard worker): `request`
+//!   (root, tagged `req` = id) → `route`, `queue` (channel + backlog
+//!   wait), `admit` (tagged `shard`; children `prefix.attach`,
+//!   `prefix.cow`, `prefill`), sampled `decode.token` (first decode pass
+//!   of a sequence, then every 4th), `finish`, and — after a fault —
+//!   `replay` (tagged `incarnation` = the shard's restart count).
+//! * **Per shard step** (untraced batch spans, `trace_id` 0):
+//!   `step.admit`, `step.decode` (tagged `shard`).
+//! * **Serve-side, cluster scope:** `drain`; **train-side:** `train.step`
+//!   → `train.forward`, `train.backward`, `train.clip`, `train.optim`
+//!   (nested implicitly — same thread-local tree).
 //!
 //! # Schema
 //!
@@ -80,10 +100,12 @@ pub mod probes;
 pub mod registry;
 pub mod runmeta;
 pub mod span;
+pub mod trace;
 
 pub use registry::{Counter, Gauge, Histogram, Metric, Registry};
-pub use runmeta::{git_rev, runmeta};
+pub use runmeta::{git_rev, runmeta, summarize_bench_dir};
 pub use span::{SpanGuard, SpanRecord, SpanRecorder};
+pub use trace::{chrome_trace, flamegraph_lines, profile_table, self_time, ProfileRow, TraceContext};
 
 /// Version stamped into every snapshot document. Bump on any
 /// non-additive schema change.
@@ -157,6 +179,10 @@ impl Telemetry {
     /// Reflect everything into one schema-versioned JSON document (see
     /// module docs for the shape).
     pub fn snapshot(&self) -> Json {
+        // Surface span-ring evictions as a registry counter so a
+        // truncated trace is visible in the same document that carries
+        // the span summary.
+        self.registry.counter("telemetry.spans_dropped").set(self.spans.dropped());
         let mut metrics = BTreeMap::new();
         self.registry.visit(&mut |name, metric| {
             insert_path(&mut metrics, name, metric.to_json());

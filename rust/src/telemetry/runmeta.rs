@@ -5,8 +5,13 @@
 //! string, wall-clock timestamp — so the per-PR perf trajectory stays
 //! attributable at re-anchor time: a jsonl row's provenance is the
 //! nearest `{"kind":"runmeta",...}` line above it. Consumers filtering
-//! result rows should skip objects whose `kind` is `"runmeta"`.
+//! result rows should skip objects whose `kind` is `"runmeta"` —
+//! [`summarize_bench_dir`] (the `repro bench summary` subcommand) is the
+//! canonical such consumer, folding every `results/bench/*.jsonl` into
+//! one repo-root trajectory document.
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::process::Command;
 use std::time::{SystemTime, UNIX_EPOCH};
 
@@ -42,9 +47,99 @@ pub fn runmeta(bench: &str, config: &str) -> Json {
     ])
 }
 
+/// Aggregate every `*.jsonl` under `dir` (typically `results/bench/`)
+/// into one trajectory summary: per bench file, how many runs (runmeta
+/// headers) and result rows it holds, the provenance of the newest run,
+/// the best `tok_per_s` seen, and the last result row verbatim. A
+/// missing or empty directory degrades to an empty summary — the
+/// trajectory can start accumulating before the first full bench run.
+pub fn summarize_bench_dir(dir: &Path) -> Json {
+    let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("jsonl"))
+                .collect()
+        })
+        .unwrap_or_default();
+    files.sort();
+    let mut benches: BTreeMap<String, Json> = BTreeMap::new();
+    for path in files {
+        let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("bench").to_string();
+        let text = std::fs::read_to_string(&path).unwrap_or_default();
+        let mut runs = 0u64;
+        let mut last_meta = Json::Null;
+        let mut rows = 0u64;
+        let mut last_row = Json::Null;
+        let mut max_tok_per_s: Option<f64> = None;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            // Unparsable lines (partial writes, hand edits) are skipped,
+            // not fatal — the trajectory survives a corrupt row.
+            let Ok(v) = Json::parse(line) else { continue };
+            if v.get("kind").as_str() == Some("runmeta") {
+                runs += 1;
+                last_meta = v;
+            } else {
+                rows += 1;
+                if let Some(t) = v.get("tok_per_s").as_f64() {
+                    max_tok_per_s = Some(max_tok_per_s.map_or(t, |m| m.max(t)));
+                }
+                last_row = v;
+            }
+        }
+        benches.insert(
+            stem,
+            Json::obj(vec![
+                ("runs", Json::Num(runs as f64)),
+                ("rows", Json::Num(rows as f64)),
+                ("last_git_rev", last_meta.get("git_rev").clone()),
+                ("last_unix_ms", last_meta.get("unix_ms").clone()),
+                ("max_tok_per_s", max_tok_per_s.map_or(Json::Null, Json::Num)),
+                ("last_row", last_row),
+            ]),
+        );
+    }
+    Json::obj(vec![
+        ("kind", Json::Str("bench_summary".to_string())),
+        ("git_rev", Json::Str(git_rev())),
+        ("benches", Json::Obj(benches)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bench_summary_aggregates_jsonl_rows() {
+        let dir = std::env::temp_dir().join(format!("attnqat_benchsum_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("cluster_serve.jsonl"),
+            concat!(
+                "{\"kind\":\"runmeta\",\"bench\":\"cluster_serve\",\"config\":\"\",",
+                "\"git_rev\":\"abc1234\",\"unix_ms\":5}\n",
+                "{\"name\":\"fp4_4shard\",\"tok_per_s\":123.5}\n",
+                "not json\n",
+                "{\"name\":\"fp4_8shard\",\"tok_per_s\":150.25}\n",
+            ),
+        )
+        .unwrap();
+        let doc = summarize_bench_dir(&dir);
+        let b = doc.get("benches").get("cluster_serve");
+        assert_eq!(b.get("runs").as_f64(), Some(1.0));
+        assert_eq!(b.get("rows").as_f64(), Some(2.0));
+        assert_eq!(b.get("last_git_rev").as_str(), Some("abc1234"));
+        assert_eq!(b.get("max_tok_per_s").as_f64(), Some(150.25));
+        assert_eq!(b.get("last_row").get("name").as_str(), Some("fp4_8shard"));
+        std::fs::remove_dir_all(&dir).ok();
+        // A missing directory degrades to an empty summary, not an error.
+        let empty = summarize_bench_dir(&dir);
+        assert!(empty.get("benches").as_obj().unwrap().is_empty());
+    }
 
     #[test]
     fn runmeta_has_the_pinned_header_shape() {

@@ -1,16 +1,27 @@
 //! Ring-buffer tracing spans: scoped guards with a ~zero-cost disabled
-//! path.
+//! path, annotated with causal `trace_id`/`span_id`/`parent_id` ids.
 //!
 //! A span is opened with the [`crate::span!`] macro (or
 //! [`SpanRecorder::start`]) and closed by dropping the returned guard; the
 //! recorder keeps the newest `capacity` records in a fixed ring (overflow
-//! drops the oldest). Names and tag keys are `&'static str` and the guard
-//! lives on the stack, so a **disabled** recorder's `start` is one relaxed
-//! atomic load — no allocation, no `Instant::now` (pinned by the counting
-//! allocator test in `rust/tests/telemetry.rs`). An **enabled** span costs
-//! two `Instant` reads plus one short mutex push at drop — fine at
-//! per-pass / per-step granularity (admission, prefill, decode batches,
-//! train forward/backward), not intended inside per-element kernels.
+//! drops the oldest and bumps [`SpanRecorder::dropped`], so a truncated
+//! trace never reads as a complete one). Names and tag keys are
+//! `&'static str` and the guard lives on the stack, so a **disabled**
+//! recorder's `start` is one relaxed atomic load — no allocation, no
+//! `Instant::now` (pinned by the counting allocator test in
+//! `rust/tests/telemetry.rs`). An **enabled** span costs two `Instant`
+//! reads, two relaxed id allocations, a thread-local swap, and one short
+//! mutex push at drop — fine at per-pass / per-step granularity
+//! (admission, prefill, decode batches, train forward/backward), not
+//! intended inside per-element kernels.
+//!
+//! Parenting (see [`super::trace`] for the full model): a plain `start`
+//! nests under the innermost open span on the same thread; `start_root`
+//! opens a new trace (a request root); `start_child` re-anchors under an
+//! explicit cross-thread [`TraceContext`]; `record_at` pushes a
+//! self-measured interval (e.g. queue wait) directly. Guards must drop in
+//! LIFO order for the implicit nesting to stay truthful — they are stack
+//! scoped everywhere in this crate.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -18,6 +29,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::json::Json;
+use crate::telemetry::trace::{self, TraceContext};
 
 /// One completed span.
 #[derive(Clone, Copy, Debug)]
@@ -30,6 +42,12 @@ pub struct SpanRecord {
     /// Optional tag, e.g. `("shard", 2)`; `("", 0)` when untagged.
     pub tag_key: &'static str,
     pub tag: u64,
+    /// Trace this span belongs to; 0 = outside any request trace.
+    pub trace_id: u64,
+    /// Process-globally unique id of this span (never 0 once recorded).
+    pub span_id: u64,
+    /// `span_id` of the parent span; 0 = root.
+    pub parent_id: u64,
     /// Start offset from recorder creation, µs.
     pub start_us: u64,
     pub dur_us: u64,
@@ -40,6 +58,8 @@ struct SpanInner {
     enabled: AtomicBool,
     /// Completed-span count (monotone; ring length is capped separately).
     seq: AtomicU64,
+    /// Spans evicted from the ring (lifetime).
+    dropped: AtomicU64,
     epoch: Instant,
     capacity: usize,
     ring: Mutex<VecDeque<SpanRecord>>,
@@ -58,6 +78,7 @@ impl SpanRecorder {
         SpanRecorder(Arc::new(SpanInner {
             enabled: AtomicBool::new(true),
             seq: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
             epoch: Instant::now(),
             capacity,
             ring: Mutex::new(VecDeque::with_capacity(capacity)),
@@ -79,24 +100,120 @@ impl SpanRecorder {
         self.0.enabled.load(Ordering::Relaxed)
     }
 
-    /// Open a span; it records itself when the guard drops. Prefer the
-    /// [`crate::span!`] macro at call sites.
+    /// µs since recorder creation — the clock `SpanRecord::start_us` and
+    /// [`TraceContext::start_us`] are expressed in.
+    pub fn now_us(&self) -> u64 {
+        self.0.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Open a span nested under the innermost open span on this thread
+    /// (a root when none is open); it records itself when the guard
+    /// drops. Prefer the [`crate::span!`] macro at call sites.
     #[must_use = "bind the guard (`let _span = ...`) — dropping it closes the span"]
     pub fn start(&self, name: &'static str, tag_key: &'static str, tag: u64) -> SpanGuard<'_> {
         if !self.is_enabled() {
             return SpanGuard { open: None };
         }
-        SpanGuard { open: Some((self, name, tag_key, tag, Instant::now())) }
+        self.open(name, tag_key, tag, trace::current(), false)
     }
 
-    fn push(&self, name: &'static str, tag_key: &'static str, tag: u64, started: Instant) {
-        let dur_us = started.elapsed().as_micros() as u64;
+    /// Open the root span of a **new trace** (e.g. one request's
+    /// lifecycle); downstream threads parent to it via
+    /// [`SpanGuard::context`].
+    #[must_use = "bind the guard (`let _span = ...`) — dropping it closes the span"]
+    pub fn start_root(&self, name: &'static str, tag_key: &'static str, tag: u64) -> SpanGuard<'_> {
+        if !self.is_enabled() {
+            return SpanGuard { open: None };
+        }
+        self.open(name, tag_key, tag, TraceContext::NONE, true)
+    }
+
+    /// Open a span under an explicit (typically cross-thread) parent
+    /// context instead of this thread's innermost span.
+    #[must_use = "bind the guard (`let _span = ...`) — dropping it closes the span"]
+    pub fn start_child(
+        &self,
+        name: &'static str,
+        tag_key: &'static str,
+        tag: u64,
+        parent: TraceContext,
+    ) -> SpanGuard<'_> {
+        if !self.is_enabled() {
+            return SpanGuard { open: None };
+        }
+        self.open(name, tag_key, tag, parent, false)
+    }
+
+    fn open(
+        &self,
+        name: &'static str,
+        tag_key: &'static str,
+        tag: u64,
+        parent: TraceContext,
+        root: bool,
+    ) -> SpanGuard<'_> {
+        let started = Instant::now();
         let start_us = started.duration_since(self.0.epoch).as_micros() as u64;
-        let seq = self.0.seq.fetch_add(1, Ordering::Relaxed);
-        let record = SpanRecord { seq, name, tag_key, tag, start_us, dur_us };
+        let (trace_id, parent_id) =
+            if root { (trace::next_trace_id(), 0) } else { (parent.trace_id, parent.span_id) };
+        let span_id = trace::next_span_id();
+        let prev = trace::current();
+        trace::set_current(TraceContext { trace_id, span_id, start_us });
+        SpanGuard {
+            open: Some(OpenSpan {
+                rec: self,
+                name,
+                tag_key,
+                tag,
+                trace_id,
+                span_id,
+                parent_id,
+                start_us,
+                started,
+                prev,
+            }),
+        }
+    }
+
+    /// Record a completed span directly from a self-measured interval
+    /// (`start_us`/`dur_us` on the [`SpanRecorder::now_us`] clock) under
+    /// an explicit parent — e.g. queue wait measured at admission against
+    /// the root context that rode the request across the channel. Does
+    /// not touch the thread's current context. Returns the new span id (0
+    /// when disabled).
+    pub fn record_at(
+        &self,
+        name: &'static str,
+        tag_key: &'static str,
+        tag: u64,
+        parent: TraceContext,
+        start_us: u64,
+        dur_us: u64,
+    ) -> u64 {
+        if !self.is_enabled() {
+            return 0;
+        }
+        let span_id = trace::next_span_id();
+        self.push(SpanRecord {
+            seq: 0,
+            name,
+            tag_key,
+            tag,
+            trace_id: parent.trace_id,
+            span_id,
+            parent_id: parent.span_id,
+            start_us,
+            dur_us,
+        });
+        span_id
+    }
+
+    fn push(&self, mut record: SpanRecord) {
+        record.seq = self.0.seq.fetch_add(1, Ordering::Relaxed);
         let mut ring = self.0.ring.lock().unwrap();
         if ring.len() == self.0.capacity {
             ring.pop_front();
+            self.0.dropped.fetch_add(1, Ordering::Relaxed);
         }
         ring.push_back(record);
     }
@@ -104,6 +221,12 @@ impl SpanRecorder {
     /// Spans completed over the recorder's lifetime (≥ ring length).
     pub fn recorded(&self) -> u64 {
         self.0.seq.load(Ordering::Relaxed)
+    }
+
+    /// Spans evicted from the ring over the recorder's lifetime; nonzero
+    /// means [`SpanRecorder::records`] is a truncated view.
+    pub fn dropped(&self) -> u64 {
+        self.0.dropped.load(Ordering::Relaxed)
     }
 
     pub fn capacity(&self) -> usize {
@@ -140,6 +263,7 @@ impl SpanRecorder {
         );
         Json::obj(vec![
             ("recorded", Json::Num(self.recorded() as f64)),
+            ("dropped", Json::Num(self.dropped() as f64)),
             ("capacity", Json::Num(self.0.capacity as f64)),
             ("retained", Json::Num(self.0.ring.lock().unwrap().len() as f64)),
             ("by_name", by_name),
@@ -153,17 +277,55 @@ impl Default for SpanRecorder {
     }
 }
 
+struct OpenSpan<'a> {
+    rec: &'a SpanRecorder,
+    name: &'static str,
+    tag_key: &'static str,
+    tag: u64,
+    trace_id: u64,
+    span_id: u64,
+    parent_id: u64,
+    start_us: u64,
+    started: Instant,
+    /// Thread-current context to restore at drop (LIFO nesting).
+    prev: TraceContext,
+}
+
 /// Scope guard returned by [`SpanRecorder::start`]; `None` inside means
 /// the recorder was disabled and drop does nothing.
 pub struct SpanGuard<'a> {
-    #[allow(clippy::type_complexity)]
-    open: Option<(&'a SpanRecorder, &'static str, &'static str, u64, Instant)>,
+    open: Option<OpenSpan<'a>>,
+}
+
+impl SpanGuard<'_> {
+    /// Context children should parent to — copy it into a message
+    /// (`serve::Request`) to continue the trace on another thread.
+    /// [`TraceContext::NONE`] when the recorder was disabled.
+    pub fn context(&self) -> TraceContext {
+        self.open.as_ref().map_or(TraceContext::NONE, |o| TraceContext {
+            trace_id: o.trace_id,
+            span_id: o.span_id,
+            start_us: o.start_us,
+        })
+    }
 }
 
 impl Drop for SpanGuard<'_> {
     fn drop(&mut self) {
-        if let Some((rec, name, tag_key, tag, started)) = self.open.take() {
-            rec.push(name, tag_key, tag, started);
+        if let Some(o) = self.open.take() {
+            trace::set_current(o.prev);
+            let dur_us = o.started.elapsed().as_micros() as u64;
+            o.rec.push(SpanRecord {
+                seq: 0,
+                name: o.name,
+                tag_key: o.tag_key,
+                tag: o.tag,
+                trace_id: o.trace_id,
+                span_id: o.span_id,
+                parent_id: o.parent_id,
+                start_us: o.start_us,
+                dur_us,
+            });
         }
     }
 }
@@ -201,6 +363,7 @@ mod tests {
             let _span = crate::span!(rec, "step", i = i);
         }
         assert_eq!(rec.recorded(), 10);
+        assert_eq!(rec.dropped(), 6, "evictions must be counted, not silent");
         let records = rec.records();
         assert_eq!(records.len(), 4);
         let seqs: Vec<u64> = records.iter().map(|r| r.seq).collect();
@@ -235,7 +398,51 @@ mod tests {
         }
         let doc = rec.to_json();
         assert_eq!(doc.get("recorded").as_f64(), Some(4.0));
+        assert_eq!(doc.get("dropped").as_f64(), Some(0.0));
         assert_eq!(doc.get("by_name").get("decode").get("count").as_f64(), Some(3.0));
         assert_eq!(doc.get("by_name").get("drain").get("count").as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn implicit_nesting_links_parent_ids() {
+        let rec = SpanRecorder::new(16);
+        {
+            let root = rec.start_root("request", "req", 7);
+            let ctx = root.context();
+            assert!(ctx.is_some());
+            {
+                let _inner = crate::span!(rec, "prefill");
+            }
+            let _tok = rec.start_child("decode.token", "shard", 0, ctx);
+        }
+        let records = rec.records();
+        assert_eq!(records.len(), 3);
+        let root = records.iter().find(|r| r.name == "request").unwrap();
+        assert_eq!(root.parent_id, 0);
+        assert!(root.trace_id != 0 && root.span_id != 0);
+        for r in records.iter().filter(|r| r.name != "request") {
+            assert_eq!(r.parent_id, root.span_id, "{} must parent to the root", r.name);
+            assert_eq!(r.trace_id, root.trace_id);
+        }
+        // All guards dropped: nothing is current on this thread anymore.
+        assert_eq!(trace::current(), TraceContext::NONE);
+    }
+
+    #[test]
+    fn record_at_anchors_under_explicit_parent() {
+        let rec = SpanRecorder::new(16);
+        let ctx = {
+            let root = rec.start_root("request", "req", 1);
+            root.context()
+        };
+        let id = rec.record_at("queue", "shard", 3, ctx, ctx.start_us, 42);
+        assert!(id != 0);
+        let q = rec.records().into_iter().find(|r| r.name == "queue").unwrap();
+        assert_eq!(q.parent_id, ctx.span_id);
+        assert_eq!(q.trace_id, ctx.trace_id);
+        assert_eq!(q.dur_us, 42);
+        // Disabled recorder: record_at is a no-op returning 0.
+        rec.set_enabled(false);
+        assert_eq!(rec.record_at("queue", "", 0, ctx, 0, 1), 0);
     }
 }

@@ -1,0 +1,314 @@
+//! Causal trace plumbing over the span ring: cross-thread
+//! [`TraceContext`], Chrome trace-event export, and a span-tree
+//! self-profiler.
+//!
+//! PR 7's spans were a flat ring of parentless records; this module gives
+//! every span a `trace_id`/`span_id`/`parent_id` triple so one request's
+//! lifecycle — submit → route → queue wait → admit (incl. prefix attach
+//! and COW split) → prefill → sampled per-token decode → finish, plus
+//! supervisor replays tagged with the shard incarnation — reconstructs as
+//! a tree across threads.
+//!
+//! Two parenting mechanisms compose:
+//!
+//! * **Implicit (same thread):** every open span installs itself as the
+//!   thread's *current* context; a plain [`super::SpanRecorder::start`]
+//!   (or the [`crate::span!`] macro) parents to whatever is current, so
+//!   nested guards form a tree with zero call-site changes
+//!   (`train.step` → `train.forward` → ...). Guards must drop in LIFO
+//!   order (they are stack scoped everywhere in this crate).
+//! * **Explicit (cross thread):** a [`TraceContext`] is `Copy` and rides
+//!   a message — `serve::Request` carries the root context created at
+//!   submit through the cluster channel into the shard worker, where
+//!   [`super::SpanRecorder::start_child`] / `record_at` re-anchor spans
+//!   under the request's root.
+//!
+//! Span ids are allocated from a process-global atomic (never 0 for a
+//! recorded span); `trace_id` 0 marks spans outside any request trace
+//! (e.g. per-step batch spans). On top of the annotated ring this module
+//! offers [`chrome_trace`] (Perfetto-loadable trace-event JSON, one `tid`
+//! row per trace), [`self_time`] (inclusive/exclusive per-name
+//! aggregation), and [`flamegraph_lines`] (inferno-compatible collapsed
+//! stacks).
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::json::Json;
+use crate::telemetry::span::SpanRecord;
+
+/// Position in a trace tree: the id of the trace plus the span a child
+/// should parent to. `Copy` by design — it crosses threads inside
+/// `serve::Request` and the supervisor's replay journal. The default
+/// (all-zero) context means "untraced"; spans parented to it become
+/// roots.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceContext {
+    /// Trace (request) id; 0 = not part of a request trace.
+    pub trace_id: u64,
+    /// Span id children should use as `parent_id`; 0 = no parent.
+    pub span_id: u64,
+    /// Start of the context's span, µs since the recorder epoch — lets a
+    /// downstream thread measure "time since the root opened" (queue
+    /// wait) without a second clock exchange.
+    pub start_us: u64,
+}
+
+impl TraceContext {
+    pub const NONE: TraceContext = TraceContext { trace_id: 0, span_id: 0, start_us: 0 };
+
+    /// True when this context points at a real open/recorded span.
+    pub fn is_some(&self) -> bool {
+        self.span_id != 0
+    }
+}
+
+static NEXT_TRACE_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+
+pub(crate) fn next_trace_id() -> u64 {
+    NEXT_TRACE_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+pub(crate) fn next_span_id() -> u64 {
+    NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+thread_local! {
+    static CURRENT: Cell<TraceContext> = Cell::new(TraceContext::NONE);
+}
+
+/// The innermost open span on this thread (what a plain `start` parents
+/// to); [`TraceContext::NONE`] outside any span.
+pub fn current() -> TraceContext {
+    CURRENT.with(|c| c.get())
+}
+
+pub(crate) fn set_current(ctx: TraceContext) {
+    CURRENT.with(|c| c.set(ctx));
+}
+
+/// Render spans as Chrome trace-event JSON (the `chrome://tracing` /
+/// Perfetto "JSON Array Format"): one `ph:"X"` complete event per span,
+/// `ts`/`dur` in µs on the recorder's epoch clock, `tid` = `trace_id` so
+/// each request trace gets its own row, and the causal triple under
+/// `args` so tooling (and `rust/tests/trace.rs`) can round-trip the tree.
+pub fn chrome_trace(records: &[SpanRecord]) -> Json {
+    let events: Vec<Json> = records
+        .iter()
+        .map(|r| {
+            let mut args = vec![
+                ("seq", Json::Num(r.seq as f64)),
+                ("trace_id", Json::Num(r.trace_id as f64)),
+                ("span_id", Json::Num(r.span_id as f64)),
+                ("parent_id", Json::Num(r.parent_id as f64)),
+            ];
+            if !r.tag_key.is_empty() {
+                args.push((r.tag_key, Json::Num(r.tag as f64)));
+            }
+            Json::obj(vec![
+                ("name", Json::Str(r.name.to_string())),
+                ("cat", Json::Str(if r.trace_id != 0 { "request" } else { "span" }.to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(r.start_us as f64)),
+                ("dur", Json::Num(r.dur_us as f64)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(r.trace_id as f64)),
+                ("args", Json::obj(args)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+        ("traceEvents", Json::Arr(events)),
+    ])
+}
+
+/// One row of the self-profiler: per span name, how often it ran, its
+/// inclusive wall time, and its exclusive self time (inclusive minus the
+/// summed durations of direct children — clamped at zero, since
+/// cross-thread children like queue wait can overlap their parent).
+#[derive(Clone, Debug)]
+pub struct ProfileRow {
+    pub name: &'static str,
+    pub count: u64,
+    /// Inclusive µs: sum of span durations.
+    pub total_us: u64,
+    /// Exclusive µs: inclusive minus direct children.
+    pub self_us: u64,
+}
+
+/// Sum of direct-child durations keyed by parent span id.
+fn child_us(records: &[SpanRecord]) -> BTreeMap<u64, u64> {
+    let mut by_parent: BTreeMap<u64, u64> = BTreeMap::new();
+    for r in records {
+        if r.parent_id != 0 {
+            *by_parent.entry(r.parent_id).or_insert(0) += r.dur_us;
+        }
+    }
+    by_parent
+}
+
+/// Fold spans into an inclusive/exclusive self-time table, one row per
+/// span name, sorted by exclusive time (descending).
+pub fn self_time(records: &[SpanRecord]) -> Vec<ProfileRow> {
+    let kids = child_us(records);
+    let mut rows: BTreeMap<&'static str, ProfileRow> = BTreeMap::new();
+    for r in records {
+        let self_us = r.dur_us.saturating_sub(kids.get(&r.span_id).copied().unwrap_or(0));
+        let e = rows
+            .entry(r.name)
+            .or_insert(ProfileRow { name: r.name, count: 0, total_us: 0, self_us: 0 });
+        e.count += 1;
+        e.total_us += r.dur_us;
+        e.self_us += self_us;
+    }
+    let mut rows: Vec<ProfileRow> = rows.into_values().collect();
+    rows.sort_by(|a, b| b.self_us.cmp(&a.self_us).then(a.name.cmp(b.name)));
+    rows
+}
+
+/// Collapse spans into inferno-compatible flamegraph lines:
+/// `root;child;leaf <self_us>`, aggregated over equal stacks. Spans whose
+/// parent was evicted from the ring fold as roots of their own stacks.
+pub fn flamegraph_lines(records: &[SpanRecord]) -> Vec<String> {
+    let by_id: BTreeMap<u64, &SpanRecord> = records.iter().map(|r| (r.span_id, r)).collect();
+    let kids = child_us(records);
+    let mut agg: BTreeMap<String, u64> = BTreeMap::new();
+    for r in records {
+        let mut path = vec![r.name];
+        let mut parent = r.parent_id;
+        // Depth cap guards against id collisions corrupting the walk.
+        for _ in 0..64 {
+            match by_id.get(&parent) {
+                Some(p) => {
+                    path.push(p.name);
+                    parent = p.parent_id;
+                }
+                None => break,
+            }
+            if parent == 0 {
+                break;
+            }
+        }
+        path.reverse();
+        let self_us = r.dur_us.saturating_sub(kids.get(&r.span_id).copied().unwrap_or(0));
+        *agg.entry(path.join(";")).or_insert(0) += self_us;
+    }
+    agg.into_iter().map(|(stack, us)| format!("{stack} {us}")).collect()
+}
+
+/// Render [`self_time`] rows as an aligned text table (`serve profile`).
+pub fn profile_table(rows: &[ProfileRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<24} {:>8} {:>12} {:>12} {:>12}\n",
+        "span", "count", "incl_ms", "excl_ms", "excl_avg_ms"
+    ));
+    for r in rows {
+        let incl = r.total_us as f64 / 1000.0;
+        let excl = r.self_us as f64 / 1000.0;
+        out.push_str(&format!(
+            "{:<24} {:>8} {:>12.3} {:>12.3} {:>12.4}\n",
+            r.name,
+            r.count,
+            incl,
+            excl,
+            excl / r.count.max(1) as f64
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(
+        name: &'static str,
+        trace_id: u64,
+        span_id: u64,
+        parent_id: u64,
+        start_us: u64,
+        dur_us: u64,
+    ) -> SpanRecord {
+        SpanRecord {
+            seq: span_id,
+            name,
+            tag_key: "",
+            tag: 0,
+            trace_id,
+            span_id,
+            parent_id,
+            start_us,
+            dur_us,
+        }
+    }
+
+    /// request(100µs) -> { prefill(60µs) -> quant(20µs), decode(30µs) }
+    fn tree() -> Vec<SpanRecord> {
+        vec![
+            rec("request", 1, 10, 0, 0, 100),
+            rec("prefill", 1, 11, 10, 5, 60),
+            rec("quant", 1, 12, 11, 10, 20),
+            rec("decode", 1, 13, 10, 70, 30),
+        ]
+    }
+
+    #[test]
+    fn self_time_subtracts_direct_children() {
+        let rows = self_time(&tree());
+        let get = |n: &str| rows.iter().find(|r| r.name == n).unwrap().clone();
+        assert_eq!(get("request").total_us, 100);
+        assert_eq!(get("request").self_us, 100 - 60 - 30);
+        assert_eq!(get("prefill").self_us, 60 - 20);
+        assert_eq!(get("quant").self_us, 20);
+        assert_eq!(get("decode").self_us, 30);
+        // Sorted by exclusive time, descending.
+        assert!(rows.windows(2).all(|w| w[0].self_us >= w[1].self_us));
+    }
+
+    #[test]
+    fn flamegraph_lines_collapse_stacks() {
+        let lines = flamegraph_lines(&tree());
+        assert!(lines.contains(&"request 10".to_string()));
+        assert!(lines.contains(&"request;prefill 40".to_string()));
+        assert!(lines.contains(&"request;prefill;quant 20".to_string()));
+        assert!(lines.contains(&"request;decode 30".to_string()));
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_the_tree() {
+        let doc = chrome_trace(&tree());
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let events = parsed.get("traceEvents").as_arr().unwrap();
+        assert_eq!(events.len(), 4);
+        for ev in events {
+            assert_eq!(ev.get("ph").as_str(), Some("X"));
+            assert!(ev.get("ts").as_f64().is_some());
+            assert!(ev.get("dur").as_f64().is_some());
+        }
+        // Parent chain of the deepest span resolves to the request root.
+        let quant = events.iter().find(|e| e.get("name").as_str() == Some("quant")).unwrap();
+        let mut parent = quant.get("args").get("parent_id").as_f64().unwrap();
+        let mut hops = 0;
+        while parent != 0.0 {
+            let p = events
+                .iter()
+                .find(|e| e.get("args").get("span_id").as_f64() == Some(parent))
+                .expect("parent present");
+            parent = p.get("args").get("parent_id").as_f64().unwrap();
+            hops += 1;
+        }
+        assert_eq!(hops, 2, "quant -> prefill -> request");
+    }
+
+    #[test]
+    fn profile_table_lists_every_name() {
+        let table = profile_table(&self_time(&tree()));
+        for name in ["request", "prefill", "quant", "decode"] {
+            assert!(table.contains(name), "{table}");
+        }
+    }
+}

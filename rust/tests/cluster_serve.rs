@@ -38,6 +38,7 @@ fn fixed_trace() -> Vec<Request> {
             max_new_tokens: 4 + (i as usize % 5),
             temperature: if i % 4 == 3 { 0.7 } else { 0.0 },
             deadline_ms: None,
+            trace: Default::default(),
         })
         .collect()
 }
@@ -124,6 +125,7 @@ fn fp4_and_f32_clusters_diverge_on_long_contexts() {
             max_new_tokens: 12,
             temperature: 0.0,
             deadline_ms: None,
+            trace: Default::default(),
         })
         .collect();
     let fp4 = run_single(AttnConfig::fp4(), &trace);
@@ -158,6 +160,7 @@ fn qcache_stats_aggregate_per_shard_without_cross_thrash() {
             max_new_tokens: 3 + (i as usize % 3),
             temperature: 0.0,
             deadline_ms: None,
+            trace: Default::default(),
         })
         .collect();
     let run = |shards: usize| {
@@ -203,6 +206,7 @@ fn bounded_queues_backpressure_without_losing_requests() {
             max_new_tokens: 3,
             temperature: 0.0,
             deadline_ms: None,
+            trace: Default::default(),
         })
         .collect();
     let cfg = ClusterConfig {

@@ -100,6 +100,7 @@ fn deadline_shedding_rejects_only_infeasible_requests() {
         max_new_tokens: 6,
         temperature: 0.0,
         deadline_ms,
+        trace: Default::default(),
     };
     let cfg = ClusterConfig {
         shards: 1,
@@ -169,6 +170,7 @@ fn repeated_panics_exhaust_the_restart_budget_and_surface_an_error() {
         max_new_tokens: 4,
         temperature: 0.0,
         deadline_ms: None,
+        trace: Default::default(),
     };
     // Depending on timing the budget can exhaust during submit (the
     // retry loop re-checks the shard) or during drain — either way the

@@ -247,6 +247,7 @@ fn serve_decodes_with_fp4_kv() {
             max_new_tokens: 5,
             temperature: 0.0,
             deadline_ms: None,
+            trace: Default::default(),
         });
     }
     let done = server.run().unwrap();
@@ -289,6 +290,7 @@ fn serve_fused_decode_matches_baseline_completions() {
                 max_new_tokens: 8,
                 temperature: 0.0,
                 deadline_ms: None,
+                trace: Default::default(),
             });
         }
         let mut done: Vec<(u64, Vec<u8>)> = server

@@ -98,6 +98,7 @@ fn cow_divergence_at_every_offset_class_is_bitwise() {
             max_new_tokens: 4,
             temperature: 0.0,
             deadline_ms: None,
+            trace: Default::default(),
         })
         .collect();
     let run = |share: bool| {

@@ -109,10 +109,24 @@ fn snapshot_schema_is_stable() -> anyhow::Result<()> {
     assert!((0.0..=1.0).contains(&hit_rate));
 
     // Span section: ring bookkeeping plus per-name aggregates covering
-    // the serve pipeline (admit/route/prefill/decode/drain).
+    // the serve pipeline. Since the causal-tracing PR the batch-level
+    // spans are `step.*`; the per-request lifecycle contributes
+    // request/route/queue/admit/prefill/decode.token/finish.
     assert!(num(&doc, "spans.recorded") > 0.0);
     assert!(num(&doc, "spans.capacity") > 0.0);
-    for name in ["admit", "route", "prefill", "decode", "drain"] {
+    assert_eq!(num(&doc, "spans.dropped"), 0.0, "this trace fits the default ring");
+    for name in [
+        "request",
+        "route",
+        "queue",
+        "admit",
+        "prefill",
+        "decode.token",
+        "finish",
+        "step.admit",
+        "step.decode",
+        "drain",
+    ] {
         assert!(
             num(&doc, &format!("spans.by_name.{name}.count")) >= 1.0,
             "span {name:?} missing from snapshot"
@@ -165,6 +179,11 @@ fn span_ring_overflow_keeps_newest() {
     let seqs: Vec<u64> = records.iter().map(|r| r.seq).collect();
     assert_eq!(seqs, vec![6, 7, 8, 9], "oldest spans evicted first");
     assert!(records.iter().all(|r| r.name == "tick"));
+    assert_eq!(rec.dropped(), 6, "eviction count tracks the overflow");
+    // The drop count is republished as a counter on every snapshot.
+    let doc = tele.snapshot();
+    assert_eq!(num(&doc, "metrics.telemetry.spans_dropped"), 6.0);
+    assert_eq!(num(&doc, "spans.dropped"), 6.0);
 }
 
 #[test]

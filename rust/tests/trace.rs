@@ -1,0 +1,228 @@
+//! Causal-tracing integration tests (PR 9): the span ring's
+//! `trace_id`/`span_id`/`parent_id` triples must reconstruct each
+//! request's lifecycle as a tree **across threads**, survive faults, and
+//! export losslessly.
+//!
+//! Four contracts:
+//!
+//! 1. **Rooted lifecycles** — every per-request span a shard worker
+//!    records (queue wait, admit, prefill, sampled `decode.token`,
+//!    finish) resolves its parent chain back to the `request` root that
+//!    `DecodeCluster::submit` opened on the client thread.
+//! 2. **Replay provenance** — after an injected mid-decode panic, the
+//!    respawned shard's `replay` spans re-anchor under the original
+//!    request roots and carry the shard incarnation as their tag.
+//! 3. **Lossless export** — [`chrome_trace`] emits valid JSON that
+//!    round-trips through the crate's own parser with the causal triple
+//!    intact (the `--trace-out` file format).
+//! 4. **SLO accounting** — deadline-carrying requests settle into the
+//!    `serve.slo.*` counters/histograms at drain and surface in
+//!    [`Telemetry::snapshot`].
+
+use std::collections::BTreeMap;
+
+use attn_qat::attention::AttnConfig;
+use attn_qat::experiments::cluster::{demo_trace, serve_trace_observed};
+use attn_qat::json::Json;
+use attn_qat::serve::{
+    Admission, ClusterConfig, ClusterStats, DecodeCluster, FaultPlan, Request, ShardConfig, SimLm,
+    SimLmConfig, SupervisorConfig,
+};
+use attn_qat::telemetry::{chrome_trace, SpanRecord, Telemetry};
+
+const SEED: u64 = 0x7ace;
+
+/// Serve `trace` on a supervised cluster, returning the drain stats and
+/// the full annotated span ring (capacity far above what the run emits,
+/// so nothing is evicted and every parent chain stays resolvable).
+fn traced_run(
+    shards: usize,
+    plan: FaultPlan,
+    trace: &[Request],
+) -> (ClusterStats, Vec<SpanRecord>) {
+    let telemetry = Telemetry::with_span_capacity(8192);
+    let (_wall, stats, done, _doc) = serve_trace_observed(
+        shards,
+        AttnConfig::fp4(),
+        3,
+        SEED,
+        trace,
+        plan,
+        SupervisorConfig::default(),
+        telemetry.clone(),
+    )
+    .expect("serve");
+    assert_eq!(done.len(), trace.len(), "zero lost requests");
+    (stats, telemetry.spans().records())
+}
+
+fn by_id(records: &[SpanRecord]) -> BTreeMap<u64, &SpanRecord> {
+    records.iter().map(|r| (r.span_id, r)).collect()
+}
+
+/// Walk `span`'s parent chain to its root record (panics on a broken
+/// link — an evicted or never-recorded parent).
+fn root_of<'a>(ids: &BTreeMap<u64, &'a SpanRecord>, span: &'a SpanRecord) -> &'a SpanRecord {
+    let mut cur = span;
+    for _ in 0..64 {
+        if cur.parent_id == 0 {
+            return cur;
+        }
+        cur = ids
+            .get(&cur.parent_id)
+            .copied()
+            .unwrap_or_else(|| panic!("span {:?} has unresolvable parent {}", span, cur.parent_id));
+    }
+    panic!("parent chain of {span:?} exceeds 64 hops");
+}
+
+#[test]
+fn request_lifecycle_spans_resolve_to_their_request_root() {
+    let trace = demo_trace(12, 8, SEED);
+    let (stats, records) = traced_run(3, FaultPlan::none(), &trace);
+    assert_eq!(stats.restarts, 0);
+    let ids = by_id(&records);
+
+    // Exactly one root per submitted request, tagged with its id.
+    let roots: Vec<&SpanRecord> = records.iter().filter(|r| r.name == "request").collect();
+    assert_eq!(roots.len(), trace.len());
+    let mut root_tags: Vec<u64> = roots.iter().map(|r| r.tag).collect();
+    root_tags.sort_unstable();
+    let mut want: Vec<u64> = trace.iter().map(|r| r.id).collect();
+    want.sort_unstable();
+    assert_eq!(root_tags, want, "each root carries its request id");
+    assert!(roots.iter().all(|r| r.tag_key == "req" && r.trace_id != 0 && r.parent_id == 0));
+
+    // Every per-request span walks back to a `request` root of the same
+    // trace — including the ones recorded on shard worker threads.
+    for name in ["route", "queue", "admit", "prefill", "decode.token", "finish"] {
+        let spans: Vec<&SpanRecord> = records.iter().filter(|r| r.name == name).collect();
+        assert!(!spans.is_empty(), "no {name:?} spans recorded");
+        for s in spans {
+            assert_ne!(s.trace_id, 0, "{name} span outside any trace");
+            let root = root_of(&ids, s);
+            assert_eq!(root.name, "request", "{name} chain ends at {:?}", root.name);
+            assert_eq!(root.trace_id, s.trace_id, "{name} crossed traces");
+        }
+    }
+    // Per-step batch spans stay *outside* the request traces.
+    for r in records.iter().filter(|r| r.name.starts_with("step.")) {
+        assert_eq!(r.trace_id, 0, "batch span {:?} leaked into a trace", r.name);
+    }
+    // Span ids never collide (they are process-globally allocated).
+    assert_eq!(ids.len(), records.len());
+}
+
+#[test]
+fn replayed_requests_reanchor_with_incarnation_tags() {
+    let trace = demo_trace(20, 12, SEED ^ 1);
+    let (clean_stats, _) = traced_run(4, FaultPlan::none(), &trace);
+    let busiest = clean_stats.shards.iter().max_by_key(|s| s.tokens).expect("shards").shard;
+
+    let (stats, records) = traced_run(4, FaultPlan::panic_at(busiest, 6), &trace);
+    assert!(stats.restarts >= 1, "the killed shard must be respawned");
+    assert!(stats.replayed_requests >= 1);
+
+    let ids = by_id(&records);
+    let replays: Vec<&SpanRecord> = records.iter().filter(|r| r.name == "replay").collect();
+    // One span per journal entry fed to a fresh incarnation; an
+    // interrupted replay can record fewer than the replayed count, never
+    // more.
+    assert!(!replays.is_empty(), "replay must leave spans");
+    assert!(replays.len() <= stats.replayed_requests);
+    for r in replays {
+        assert_eq!(r.tag_key, "incarnation");
+        assert!(r.tag >= 1, "replay runs under a respawned (incarnation >= 1) shard");
+        // The replay re-anchors under the *original* submit-side root.
+        let root = root_of(&ids, r);
+        assert_eq!(root.name, "request");
+        assert_eq!(root.trace_id, r.trace_id);
+    }
+}
+
+#[test]
+fn chrome_trace_export_round_trips_the_causal_triple() {
+    let trace = demo_trace(8, 6, SEED ^ 2);
+    let (_stats, records) = traced_run(2, FaultPlan::none(), &trace);
+
+    // Serialize exactly as `serve cluster --trace-out` does, then
+    // re-parse with the crate's own JSON parser.
+    let doc = chrome_trace(&records);
+    let parsed = Json::parse(&doc.to_string()).expect("exported trace must parse");
+    assert_eq!(parsed.get("displayTimeUnit").as_str(), Some("ms"));
+    let events = parsed.get("traceEvents").as_arr().expect("traceEvents array");
+    assert_eq!(events.len(), records.len(), "lossless: one event per span");
+
+    let arg = |ev: &Json, k: &str| ev.get("args").get(k).as_f64().unwrap();
+    let find_span = |id: f64| events.iter().find(|e| arg(e, "span_id") == id);
+    let mut decode_events = 0usize;
+    for ev in events {
+        assert_eq!(ev.get("ph").as_str(), Some("X"));
+        assert!(ev.get("ts").as_f64().is_some() && ev.get("dur").as_f64().is_some());
+        if ev.get("name").as_str() != Some("decode.token") {
+            continue;
+        }
+        decode_events += 1;
+        // Resolve the parent chain purely inside the exported document.
+        let mut parent = arg(ev, "parent_id");
+        let mut cur = ev;
+        let mut hops = 0;
+        while parent != 0.0 {
+            cur = find_span(parent).expect("parent event present in export");
+            parent = arg(cur, "parent_id");
+            hops += 1;
+            assert!(hops <= 64, "unbounded parent chain");
+        }
+        assert_eq!(cur.get("name").as_str(), Some("request"));
+        assert_eq!(arg(cur, "trace_id"), arg(ev, "trace_id"));
+    }
+    assert!(decode_events >= trace.len(), "first token of every request is sampled");
+}
+
+#[test]
+fn slo_accounting_surfaces_in_the_snapshot() {
+    let telemetry = Telemetry::new();
+    let cfg = ClusterConfig {
+        shards: 1,
+        queue_depth: 16,
+        shard: ShardConfig {
+            slots: 2,
+            attn: AttnConfig::fp4(),
+            seq_max: 128,
+            sample_seed: SEED,
+            ..ShardConfig::default()
+        },
+        ..ClusterConfig::default()
+    };
+    let lm = SimLmConfig::default();
+    let mut cluster =
+        DecodeCluster::spawn_observed(cfg, telemetry.clone(), move |_| Box::new(SimLm::new(lm)));
+    for id in 1..=5u64 {
+        let req = Request {
+            id,
+            prompt: b"slo check#".to_vec(),
+            max_new_tokens: 4,
+            temperature: 0.0,
+            deadline_ms: Some(1e9), // generous: must settle as met
+            trace: Default::default(),
+        };
+        assert_eq!(cluster.submit(req).unwrap(), Admission::Accepted);
+    }
+    let (done, stats) = cluster.drain().expect("drain");
+    assert_eq!(done.len(), 5);
+    assert_eq!(stats.shed_deadline, 0);
+
+    let doc = telemetry.snapshot();
+    let num = |path: &str| {
+        path.split('.')
+            .fold(&doc, |d, k| d.get(k))
+            .as_f64()
+            .unwrap_or_else(|| panic!("no number at {path:?} in {doc}"))
+    };
+    assert_eq!(num("metrics.serve.slo.deadlines_met"), 5.0);
+    assert_eq!(num("metrics.serve.slo.slack_ms.count"), 5.0);
+    assert!(num("metrics.serve.slo.slack_ms.p50_ms") > 0.0, "1e9 ms deadlines leave real slack");
+    assert_eq!(num("metrics.serve.slo.false_admit"), 0.0);
+    assert_eq!(num("metrics.serve.slo.false_shed"), 0.0);
+    assert_eq!(num("metrics.serve.slo.overrun_ms.count"), 0.0);
+}

@@ -50,6 +50,7 @@ fn trace() -> Vec<Request> {
             max_new_tokens: 5 + (i as usize % 3),
             temperature: 0.0, // greedy: comparable to greedy_decode
             deadline_ms: None,
+            trace: Default::default(),
         })
         .collect()
 }
@@ -157,6 +158,7 @@ fn f32_serving_config_also_round_trips() {
         max_new_tokens: 5,
         temperature: 0.0,
         deadline_ms: None,
+        trace: Default::default(),
     };
     let cfg = ClusterConfig {
         shards: 2,
