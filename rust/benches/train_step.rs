@@ -2,8 +2,13 @@
 //!
 //! Measures whole optimizer steps (corpus batch → training forward →
 //! per-layer QAT backward → Adam+clip update) in tokens/s across layer
-//! counts, fp4 (Attn-QAT) vs the f32 baseline attention config. Appends
-//! JSONL history to `results/bench/train_step.jsonl`.
+//! counts, fp4 (Attn-QAT) vs the f32 baseline attention config, plus the
+//! full-stack low-precision scenarios: microbatched steps (grad
+//! accumulation amortizes the optimizer update), STE-quantized projection
+//! GEMMs, and `LowPAdam` E4M3 moment state. Appends JSONL history to
+//! `results/bench/train_step.jsonl` and writes the headline numbers
+//! (single vs batched tokens/s, optimizer bytes/param) to
+//! `BENCH_train.json` at the repo root.
 //!
 //! ```bash
 //! cargo bench --bench train_step
@@ -11,42 +16,103 @@
 //! ```
 
 use attn_qat::attention::AttnConfig;
-use attn_qat::bench::{bench_units, Reporter};
-use attn_qat::model::{LmTrainTask, QatModel, QatModelConfig, TrainConfig, TrainSession};
+use attn_qat::bench::{bench_units, BenchResult, Reporter};
+use attn_qat::json::Json;
+use attn_qat::model::{
+    LmTrainTask, ProjQuant, QatModel, QatModelConfig, TrainConfig, TrainSession, TrainableModel,
+};
+
+const HEADLINE_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_train.json");
+
+fn model_cfg(layers: usize, attn: AttnConfig) -> QatModelConfig {
+    QatModelConfig { layers, heads: 2, head_dim: 16, ff: 64, max_pos: 512, seed: 7, attn }
+}
+
+/// Bench one session configuration; `tokens_per_step` covers the whole
+/// microbatch so tokens/s stays comparable across microbatch sizes.
+fn bench_session(
+    name: &str,
+    mut session: TrainSession<LmTrainTask>,
+    tokens_per_step: usize,
+    iters: usize,
+) -> (BenchResult, TrainSession<LmTrainTask>) {
+    let r = bench_units(name, 1, iters, tokens_per_step as f64, "tok", || {
+        let m = session.step();
+        std::hint::black_box(m.loss);
+    });
+    (r, session)
+}
 
 fn main() -> anyhow::Result<()> {
     let mut rep = Reporter::new("train_step");
     let quick = std::env::var("BENCH_QUICK").is_ok();
     let layer_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
     let seq = 48usize;
+    let iters = if quick { 3 } else { 5 };
 
     for &layers in layer_counts {
         for (name, attn) in [("fp4", AttnConfig::attn_qat()), ("f32", AttnConfig::f32())] {
-            let cfg = QatModelConfig {
-                layers,
-                heads: 2,
-                head_dim: 16,
-                ff: 64,
-                max_pos: 512,
-                seed: 7,
-                attn,
-            };
-            let task = LmTrainTask::new(QatModel::new(cfg), seq, 11);
-            let mut session = TrainSession::new(task, TrainConfig::adam(5e-3));
-            let iters = if quick { 3 } else { 5 };
-            rep.push(bench_units(
+            let task = LmTrainTask::new(QatModel::new(model_cfg(layers, attn)), seq, 11);
+            let session = TrainSession::new(task, TrainConfig::adam(5e-3));
+            let (r, _) = bench_session(
                 &format!("train_step_l{layers}_{name}_seq{seq}"),
-                1,
+                session,
+                seq,
                 iters,
-                seq as f64,
-                "tok",
-                || {
-                    let m = session.step();
-                    std::hint::black_box(m.loss);
-                },
-            ));
+            );
+            rep.push(r);
         }
     }
+
+    // Microbatching: short sequences make the per-step optimizer update a
+    // visible fraction of the step, which grad accumulation amortizes.
+    let mb_seq = 8usize;
+    let attn = AttnConfig::attn_qat();
+    let mut mb_tput = [0.0f64; 2];
+    for (i, micro) in [1usize, 8].into_iter().enumerate() {
+        let task = LmTrainTask::new(QatModel::new(model_cfg(2, attn)), mb_seq, 11);
+        let session = TrainSession::new(task, TrainConfig::adam(5e-3).with_microbatch(micro));
+        let (r, _) = bench_session(
+            &format!("train_step_l2_fp4_seq{mb_seq}_mb{micro}"),
+            session,
+            mb_seq * micro,
+            iters,
+        );
+        mb_tput[i] = r.throughput();
+        rep.push(r);
+    }
+
+    // Full-stack low precision: STE projection quant + E4M3 moments.
+    let mut opt_bytes = [0.0f64; 2]; // [adam, lowp_adam] bytes per param
+    for (i, (name, lowp)) in [("adam", false), ("lowp", true)].into_iter().enumerate() {
+        let mut model = QatModel::new(model_cfg(2, attn));
+        if lowp {
+            model.set_proj_quant(ProjQuant::ste());
+        }
+        let task = LmTrainTask::new(model, seq, 11);
+        let tc = if lowp { TrainConfig::lowp_adam(5e-3, 0xbe7) } else { TrainConfig::adam(5e-3) };
+        let session = TrainSession::new(task, tc);
+        let name = format!("train_step_l2_fullstack_{name}_seq{seq}");
+        let (r, mut s) = bench_session(&name, session, seq, iters);
+        let mut n_params = 0usize;
+        s.model.visit_params(&mut |w, _| n_params += w.len());
+        opt_bytes[i] = s.optimizer_state_bytes() as f64 / n_params.max(1) as f64;
+        rep.push(r);
+    }
+
+    // Headline summary for the repo root: batched-step speedup and the
+    // optimizer-state footprint, the two numbers the issue tracks.
+    let headline = Json::obj(vec![
+        ("bench", Json::Str("train_step".into())),
+        ("single_tok_per_s", Json::Num(mb_tput[0])),
+        ("batched_mb8_tok_per_s", Json::Num(mb_tput[1])),
+        ("batched_speedup", Json::Num(mb_tput[1] / mb_tput[0].max(1e-12))),
+        ("adam_state_bytes_per_param", Json::Num(opt_bytes[0])),
+        ("lowp_adam_state_bytes_per_param", Json::Num(opt_bytes[1])),
+    ]);
+    std::fs::write(HEADLINE_PATH, format!("{headline}\n"))?;
+    println!("-> {HEADLINE_PATH}");
+
     rep.save()?;
     Ok(())
 }

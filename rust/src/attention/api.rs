@@ -136,7 +136,7 @@ pub struct AttnConfig {
 
 impl AttnConfig {
     /// Every name [`AttnConfig::parse`] accepts, in display order.
-    pub const VARIANT_NAMES: [&'static str; 9] = [
+    pub const VARIANT_NAMES: [&'static str; 10] = [
         "f32",
         "bf16",
         "fp4",
@@ -145,6 +145,7 @@ impl AttnConfig {
         "attn_qat",
         "qat_no_o_prime",
         "qat_no_fq_p",
+        "qat_smoothk",
         "sage3",
     ];
 
@@ -173,6 +174,16 @@ impl AttnConfig {
         AttnConfig { bwd: BwdSwitches::MATCHED, ..AttnConfig::fp4() }
     }
 
+    /// The paper's smooth-K QAT ablation: the matched Attn-QAT backward
+    /// with SageAttention3 Eq. 4 smoothing on the training forward. The
+    /// backward recomputes through the smoothed operands, so the matched
+    /// property holds (pinned by the model-level parity test in
+    /// `model::qat_model`). Training-only: the paged serving path rejects
+    /// smoothing, so serve exported weights with [`AttnConfig::fp4`].
+    pub fn qat_smoothk() -> AttnConfig {
+        AttnConfig::attn_qat().with_smooth(true)
+    }
+
     /// SageAttention3 emulation: smoothing + two-level P.
     pub fn sage3() -> AttnConfig {
         AttnConfig {
@@ -194,6 +205,7 @@ impl AttnConfig {
     /// | `qat`, `attn_qat` | NVFP4 | matched (both fixes) |
     /// | `qat_no_o_prime` | NVFP4 | matched − Fix B |
     /// | `qat_no_fq_p` | NVFP4 | matched − Fix A's P quantization |
+    /// | `qat_smoothk` | NVFP4 + K/Q smoothing | matched (recomputes through the smoothed operands) |
     /// | `sage3` | NVFP4 + smoothing + two-level P | stock (no native smooth backward yet) |
     ///
     /// Every name returns its preset verbatim, so parsing a name and
@@ -209,6 +221,7 @@ impl AttnConfig {
                 .with_bwd(BwdSwitches { high_prec_o: false, ..BwdSwitches::MATCHED })),
             "qat_no_fq_p" => Ok(AttnConfig::attn_qat()
                 .with_bwd(BwdSwitches { fq_p: false, ..BwdSwitches::MATCHED })),
+            "qat_smoothk" => Ok(AttnConfig::qat_smoothk()),
             "sage3" => Ok(AttnConfig::sage3()),
             _ => Err(ParseVariantError { got: s.to_string() }),
         }

@@ -16,6 +16,15 @@
 //!   payload length and an FNV-1a 64 checksum; [`load`] verifies both
 //!   before parsing and returns a descriptive error instead of garbage
 //!   tensors.
+//!
+//! **Version 3** ([`save_train`] / [`load_train`]) appends an optimizer
+//! section *after* the tensor records, inside the same checksummed
+//! payload: Adam/LowPAdam step count, the per-tensor f32 state slots,
+//! and raw byte slots (LowPAdam's E4M3 moment bytes, verbatim — so a
+//! resumed finetune replays bitwise). Because the v2 parser reads exactly
+//! `count` tensor records and ignores trailing payload, [`load`] opens a
+//! v3 file as tensors-only; v2 files load through [`load_train`] with
+//! `None` optimizer state. Nothing about v2 changed.
 
 use std::fs::File;
 use std::io::Write;
@@ -23,11 +32,15 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::model::optim::OptimizerState;
 use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 8] = b"AQATCKPT";
 const FOOTER_MAGIC: &[u8; 8] = b"AQATCKSM";
 const VERSION: u32 = 2;
+/// Version written by [`save_train`]: v2 tensor records followed by an
+/// optimizer-state section, all inside the checksummed payload.
+const TRAIN_VERSION: u32 = 3;
 /// Trailer: payload_len u64 | fnv1a64 u64 | footer magic.
 const FOOTER_LEN: usize = 8 + 8 + 8;
 const HEADER_LEN: usize = 8 + 4;
@@ -50,12 +63,12 @@ fn fnv1a64(bytes: &[u8]) -> u64 {
 /// `path` (at worst a stale `.tmp` sibling, which the next save
 /// overwrites).
 pub fn save(path: &Path, named: &[(String, &Tensor)]) -> Result<()> {
-    if let Some(parent) = path.parent() {
-        std::fs::create_dir_all(parent)?;
-    }
+    write_file(path, VERSION, tensor_payload(named))
+}
 
-    // Serialize the payload in memory so the checksum covers exactly the
-    // bytes that hit disk.
+/// Serialize the v2 tensor-record payload in memory, so the checksum
+/// covers exactly the bytes that hit disk.
+fn tensor_payload(named: &[(String, &Tensor)]) -> Vec<u8> {
     let mut payload = Vec::new();
     payload.extend_from_slice(&(named.len() as u32).to_le_bytes());
     for (name, t) in named {
@@ -70,12 +83,19 @@ pub fn save(path: &Path, named: &[(String, &Tensor)]) -> Result<()> {
             payload.extend_from_slice(&x.to_le_bytes());
         }
     }
+    payload
+}
 
+/// Atomic tmp-write-sync-rename of `header | payload | trailer`.
+fn write_file(path: &Path, version: u32, payload: Vec<u8>) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
     let tmp = path.with_extension("tmp");
     {
         let mut f = File::create(&tmp).with_context(|| format!("{tmp:?}"))?;
         f.write_all(MAGIC)?;
-        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&version.to_le_bytes())?;
         f.write_all(&payload)?;
         f.write_all(&(payload.len() as u64).to_le_bytes())?;
         f.write_all(&fnv1a64(&payload).to_le_bytes())?;
@@ -84,6 +104,45 @@ pub fn save(path: &Path, named: &[(String, &Tensor)]) -> Result<()> {
     }
     std::fs::rename(&tmp, path).with_context(|| format!("rename {tmp:?} -> {path:?}"))?;
     Ok(())
+}
+
+/// Save a **training** checkpoint (version 3): the v2 tensor records plus
+/// the optimizer's full mutable state, so a finetune resumed from the
+/// file replays the exact byte-for-byte trajectory it would have taken
+/// uninterrupted. `opt: None` writes an empty optimizer section (the
+/// tensors still load everywhere, including plain [`load`]).
+pub fn save_train(
+    path: &Path,
+    named: &[(String, &Tensor)],
+    opt: Option<&OptimizerState>,
+) -> Result<()> {
+    let mut payload = tensor_payload(named);
+    match opt {
+        None => payload.push(0u8),
+        Some(st) => {
+            payload.push(1u8);
+            payload.extend_from_slice(&st.step.to_le_bytes());
+            payload.extend_from_slice(&(st.slots.len() as u32).to_le_bytes());
+            for slot in &st.slots {
+                payload.extend_from_slice(&(slot.len() as u32).to_le_bytes());
+                for buf in slot {
+                    payload.extend_from_slice(&(buf.len() as u32).to_le_bytes());
+                    for &x in buf {
+                        payload.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+            payload.extend_from_slice(&(st.byte_slots.len() as u32).to_le_bytes());
+            for slot in &st.byte_slots {
+                payload.extend_from_slice(&(slot.len() as u32).to_le_bytes());
+                for buf in slot {
+                    payload.extend_from_slice(&(buf.len() as u32).to_le_bytes());
+                    payload.extend_from_slice(buf);
+                }
+            }
+        }
+    }
+    write_file(path, TRAIN_VERSION, payload)
 }
 
 /// A bounds-checked cursor over the in-memory payload: every read is
@@ -120,17 +179,20 @@ impl<'a> Cursor<'a> {
     }
 }
 
-/// Read all tensors back, in file order. Fails with a descriptive error
-/// (rather than returning corrupt tensors) if the file is truncated,
-/// bit-flipped, or not a checkpoint at all.
-pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>> {
+/// Verify magic, version, footer length, and checksum; return the
+/// version and the checksummed payload bytes. Shared by [`load`] and
+/// [`load_train`] so both reject the same corruptions identically.
+fn read_verified(path: &Path) -> Result<(u32, Vec<u8>)> {
     let bytes = std::fs::read(path).with_context(|| format!("{path:?}"))?;
     if bytes.len() < HEADER_LEN || &bytes[..8] != MAGIC {
         bail!("not a checkpoint file: {path:?}");
     }
     let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version} (expected {VERSION}): {path:?}");
+    if version != VERSION && version != TRAIN_VERSION {
+        bail!(
+            "unsupported checkpoint version {version} (expected {VERSION} or {TRAIN_VERSION}): \
+             {path:?}"
+        );
     }
     if bytes.len() < HEADER_LEN + FOOTER_LEN {
         bail!("truncated checkpoint (no integrity footer): {path:?}");
@@ -155,8 +217,12 @@ pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>> {
              {actual_sum:#018x}) — file is corrupt: {path:?}"
         );
     }
+    Ok((version, payload.to_vec()))
+}
 
-    let mut c = Cursor { buf: payload, pos: 0 };
+/// Parse the tensor-record section at the cursor (exactly `count`
+/// records; trailing payload — a v3 optimizer section — is left unread).
+fn parse_tensors(c: &mut Cursor) -> Result<Vec<(String, Tensor)>> {
     let count = c.u32()? as usize;
     let mut out = Vec::with_capacity(count.min(4096));
     for _ in 0..count {
@@ -173,6 +239,62 @@ pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>> {
         out.push((name, Tensor::new(shape, data)?));
     }
     Ok(out)
+}
+
+/// Read all tensors back, in file order. Fails with a descriptive error
+/// (rather than returning corrupt tensors) if the file is truncated,
+/// bit-flipped, or not a checkpoint at all. Accepts both v2 and v3 files
+/// (a v3 optimizer section is simply skipped).
+pub fn load(path: &Path) -> Result<Vec<(String, Tensor)>> {
+    let (_version, payload) = read_verified(path)?;
+    let mut c = Cursor { buf: &payload, pos: 0 };
+    parse_tensors(&mut c)
+}
+
+/// Read a training checkpoint: tensors plus the optimizer state, when
+/// the file carries one. A v2 file (or a v3 file saved with `opt: None`)
+/// returns `None` state — callers fall back to fresh moments, exactly
+/// the behaviour before v3 existed.
+pub fn load_train(path: &Path) -> Result<(Vec<(String, Tensor)>, Option<OptimizerState>)> {
+    let (version, payload) = read_verified(path)?;
+    let mut c = Cursor { buf: &payload, pos: 0 };
+    let tensors = parse_tensors(&mut c)?;
+    if version != TRAIN_VERSION {
+        return Ok((tensors, None));
+    }
+    let present = c.take(1)?[0];
+    if present == 0 {
+        return Ok((tensors, None));
+    }
+    let step = i32::from_le_bytes(c.take(4)?.try_into().unwrap());
+    let n_slots = c.u32()? as usize;
+    let mut slots = Vec::with_capacity(n_slots.min(64));
+    for _ in 0..n_slots {
+        let n_tensors = c.u32()? as usize;
+        let mut slot = Vec::with_capacity(n_tensors.min(4096));
+        for _ in 0..n_tensors {
+            let len = c.u32()? as usize;
+            let raw = c.take(len.checked_mul(4).context("state buffer length overflows")?)?;
+            slot.push(
+                raw.chunks_exact(4)
+                    .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                    .collect::<Vec<f32>>(),
+            );
+        }
+        slots.push(slot);
+    }
+    let n_byte_slots = c.u32()? as usize;
+    let mut byte_slots = Vec::with_capacity(n_byte_slots.min(64));
+    for _ in 0..n_byte_slots {
+        let n_tensors = c.u32()? as usize;
+        let mut slot = Vec::with_capacity(n_tensors.min(4096));
+        for _ in 0..n_tensors {
+            let len = c.u32()? as usize;
+            slot.push(c.take(len)?.to_vec());
+        }
+        byte_slots.push(slot);
+    }
+    Ok((tensors, Some(OptimizerState { step, slots, byte_slots })))
 }
 
 #[cfg(test)]
@@ -258,6 +380,76 @@ mod tests {
             let err = load(&path).unwrap_err().to_string();
             assert!(err.contains("checksum mismatch"), "pos {pos}: {err}");
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn train_roundtrip_preserves_optimizer_state_bytes() {
+        let dir = std::env::temp_dir().join("attn_qat_ckpt_test_train");
+        let path = dir.join("t.ckpt");
+        let (t1, t2) = sample();
+        let st = OptimizerState {
+            step: 7,
+            slots: vec![vec![vec![1.5, -2.25], vec![]], vec![vec![0.03125]]],
+            byte_slots: vec![vec![vec![0x00, 0x7E, 0x80, 0xFE], vec![]]],
+        };
+        save_train(&path, &[("w".into(), &t1), ("b".into(), &t2)], Some(&st)).unwrap();
+        let (tensors, opt) = load_train(&path).unwrap();
+        assert_eq!(tensors.len(), 2);
+        assert_eq!(tensors[0].1, t1);
+        let opt = opt.expect("optimizer state present");
+        assert_eq!(opt.step, st.step);
+        assert_eq!(opt.slots, st.slots);
+        // The raw moment bytes must come back verbatim — bitwise resume
+        // depends on it.
+        assert_eq!(opt.byte_slots, st.byte_slots);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v3_file_loads_as_plain_tensors_and_v2_loads_as_train() {
+        let dir = std::env::temp_dir().join("attn_qat_ckpt_test_compat");
+        let (t1, _) = sample();
+        // v3 → plain `load` sees the tensors, ignores the opt section.
+        let p3 = dir.join("v3.ckpt");
+        let st = OptimizerState { step: 2, slots: vec![vec![vec![1.0]]], byte_slots: vec![] };
+        save_train(&p3, &[("w".into(), &t1)], Some(&st)).unwrap();
+        let back = load(&p3).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].1, t1);
+        // v3 with no state → Some tensors, None state.
+        let p3n = dir.join("v3none.ckpt");
+        save_train(&p3n, &[("w".into(), &t1)], None).unwrap();
+        assert!(load_train(&p3n).unwrap().1.is_none());
+        // v2 → `load_train` sees tensors, None state.
+        let p2 = dir.join("v2.ckpt");
+        save(&p2, &[("w".into(), &t1)]).unwrap();
+        let (tensors, opt) = load_train(&p2).unwrap();
+        assert_eq!(tensors[0].1, t1);
+        assert!(opt.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn train_checkpoint_detects_bit_flips_in_opt_section() {
+        let dir = std::env::temp_dir().join("attn_qat_ckpt_test_train_flip");
+        let path = dir.join("t.ckpt");
+        let (t1, _) = sample();
+        let st = OptimizerState {
+            step: 1,
+            slots: vec![vec![vec![4.0]]],
+            byte_slots: vec![vec![vec![0x3Au8; 8]]],
+        };
+        save_train(&path, &[("w".into(), &t1)], Some(&st)).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        // Flip a byte near the end of the payload (inside the opt
+        // section): the shared checksum must catch it.
+        let mut bytes = clean.clone();
+        let pos = bytes.len() - FOOTER_LEN - 3;
+        bytes[pos] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_train(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,0 +1,248 @@
+//! `exp fullstack` — the Fig-3-style **per-component ablation grid** for
+//! full-stack FP4 training (`results/fullstack_ablation.{md,json}`).
+//!
+//! The paper quantizes attention and keeps the rest of the training
+//! stack f32; the grid here turns the remaining components low-precision
+//! one at a time and together, in the spirit of the Fig-3 backward
+//! switches:
+//!
+//! | arm | attention | projections | optimizer |
+//! |-----|-----------|-------------|-----------|
+//! | `f32` | f32 | f32 | Adam |
+//! | `attn_only` | attn_qat | f32 | Adam |
+//! | `attn_proj_ste` | attn_qat | NVFP4 STE | Adam |
+//! | `attn_proj_had` | attn_qat | NVFP4 STE + Hadamard | Adam |
+//! | `attn_optim` | attn_qat | f32 | LowPAdam (E4M3 moments) |
+//! | `fullstack` | attn_qat | NVFP4 STE | LowPAdam |
+//! | `fullstack_had` | attn_qat | NVFP4 STE + Hadamard + act | LowPAdam |
+//! | `naive_proj` | attn_qat | hard requant (no STE) | Adam |
+//!
+//! The expected shape of the result mirrors the paper's: the *careful*
+//! low-precision arms (STE scratch weights, unbiased stochastically
+//! rounded moments) track the attn-only baseline within tolerance, while
+//! the naive arm — hard in-place requantization every step, the obvious
+//! "just quantize it" move — stalls, because the NVFP4 lattice step
+//! (≈ scale/2) dwarfs an Adam-scale update and RNE erases it. The
+//! divergence watchdog stays armed on every arm, so an arm can also fail
+//! by burning its rollback budget — both failure modes land in the
+//! table. Asserted as a smoke test by `rust/tests/fullstack_fp4.rs`.
+
+use anyhow::Result;
+
+use crate::attention::AttnConfig;
+use crate::config::Config;
+use crate::model::{
+    LmTrainTask, ProjQuant, QatModel, QatModelConfig, TrainConfig, TrainSession, TrainableModel,
+    WatchdogConfig,
+};
+use crate::telemetry::Telemetry;
+
+use super::common::{f4, write_table};
+
+/// One grid arm's configuration.
+struct Arm {
+    name: &'static str,
+    attn: AttnConfig,
+    attn_label: &'static str,
+    proj: ProjQuant,
+    lowp_optim: bool,
+}
+
+/// Everything the table (and the smoke test) reads off one arm.
+pub struct ArmOutcome {
+    pub name: String,
+    pub first_loss: f32,
+    pub final_loss: f32,
+    pub max_grad_norm: f32,
+    pub rollbacks: usize,
+    pub diverged: bool,
+    /// Optimizer moment-state bytes per parameter (8 for Adam, ~2 for
+    /// LowPAdam).
+    pub opt_bytes_per_param: f32,
+    /// `train.lowp.m_sat_frac` after the last step (NaN for f32 Adam).
+    pub m_sat_frac: f32,
+    /// `train.lowp.sr_bias` after the last step (NaN for f32 Adam).
+    pub sr_bias: f32,
+}
+
+fn grid() -> Vec<Arm> {
+    let aq = AttnConfig::attn_qat();
+    vec![
+        Arm {
+            name: "f32",
+            attn: AttnConfig::f32(),
+            attn_label: "f32",
+            proj: ProjQuant::off(),
+            lowp_optim: false,
+        },
+        Arm {
+            name: "attn_only",
+            attn: aq,
+            attn_label: "attn_qat",
+            proj: ProjQuant::off(),
+            lowp_optim: false,
+        },
+        Arm {
+            name: "attn_proj_ste",
+            attn: aq,
+            attn_label: "attn_qat",
+            proj: ProjQuant::ste(),
+            lowp_optim: false,
+        },
+        Arm {
+            name: "attn_proj_had",
+            attn: aq,
+            attn_label: "attn_qat",
+            proj: ProjQuant::ste().with_hadamard(true),
+            lowp_optim: false,
+        },
+        Arm {
+            name: "attn_optim",
+            attn: aq,
+            attn_label: "attn_qat",
+            proj: ProjQuant::off(),
+            lowp_optim: true,
+        },
+        Arm {
+            name: "fullstack",
+            attn: aq,
+            attn_label: "attn_qat",
+            proj: ProjQuant::ste(),
+            lowp_optim: true,
+        },
+        Arm {
+            name: "fullstack_had",
+            attn: aq,
+            attn_label: "attn_qat",
+            proj: ProjQuant::ste().with_hadamard(true).with_activations(true),
+            lowp_optim: true,
+        },
+        Arm {
+            name: "naive_proj",
+            attn: aq,
+            attn_label: "attn_qat",
+            proj: ProjQuant::naive().with_embeddings(true),
+            lowp_optim: false,
+        },
+    ]
+}
+
+fn run_arm(arm: &Arm, cfg: &Config) -> ArmOutcome {
+    let steps = cfg.usize_or("fullstack.steps", 60);
+    let seq = cfg.usize_or("fullstack.seq", 32);
+    let lr = cfg.f32_or("fullstack.lr", 5e-3);
+    let seed = cfg.u64_or("seed", 42);
+
+    let mut model = QatModel::new(QatModelConfig {
+        ff: 32,
+        max_pos: 64,
+        seed,
+        attn: arm.attn,
+        ..QatModelConfig::default()
+    });
+    model.set_proj_quant(arm.proj);
+    let mut task = LmTrainTask::new(model, seq, seed ^ 0xf00d);
+    let telemetry = Telemetry::new();
+    task.attach_telemetry(&telemetry, 4);
+
+    let train_cfg = if arm.lowp_optim {
+        TrainConfig::lowp_adam(lr, seed ^ 0x10f)
+    } else {
+        TrainConfig::adam(lr)
+    }
+    .with_watchdog(WatchdogConfig::default());
+    let mut session = TrainSession::new(task, train_cfg);
+    session.attach_telemetry(&telemetry);
+    session.run(steps, 0, |_| {});
+
+    let mut n_params = 0usize;
+    session.model.visit_params(&mut |w, _| n_params += w.len());
+    let reg = telemetry.registry();
+    let gauge = |name: &str| reg.gauge(name).get().map_or(f32::NAN, |v| v as f32);
+    ArmOutcome {
+        name: arm.name.to_string(),
+        first_loss: session.history.first().map_or(f32::NAN, |m| m.loss),
+        final_loss: session.tail_loss(10),
+        max_grad_norm: session.max_grad_norm(),
+        rollbacks: session.rollbacks(),
+        diverged: session.diverged(),
+        opt_bytes_per_param: session.optimizer_state_bytes() as f32 / n_params.max(1) as f32,
+        m_sat_frac: gauge("train.lowp.m_sat_frac"),
+        sr_bias: gauge("train.lowp.sr_bias"),
+    }
+}
+
+/// Run the whole grid (native, no PJRT) and return the outcomes in grid
+/// order — the library entry the smoke test calls.
+pub fn run_grid(cfg: &Config) -> Vec<(ArmOutcome, String, String, String)> {
+    grid()
+        .iter()
+        .map(|arm| {
+            println!(
+                "[fullstack] arm {:<14} (attn {}, proj {})...",
+                arm.name,
+                arm.attn_label,
+                arm.proj.label()
+            );
+            let out = run_arm(arm, cfg);
+            let optim = if arm.lowp_optim { "lowp_adam" } else { "adam" };
+            (out, arm.attn_label.to_string(), arm.proj.label(), optim.to_string())
+        })
+        .collect()
+}
+
+/// `exp fullstack`: run the grid and write
+/// `results/fullstack_ablation.{md,json}`.
+pub fn fullstack_ablation(cfg: &Config) -> Result<()> {
+    let outcomes = run_grid(cfg);
+    let rows: Vec<Vec<String>> = outcomes
+        .iter()
+        .map(|(o, attn, proj, optim)| {
+            let status = if o.diverged {
+                "diverged".to_string()
+            } else if o.rollbacks > 0 {
+                format!("{} rollbacks", o.rollbacks)
+            } else {
+                "ok".to_string()
+            };
+            vec![
+                o.name.clone(),
+                attn.clone(),
+                proj.clone(),
+                optim.clone(),
+                f4(o.first_loss),
+                f4(o.final_loss),
+                f4(o.max_grad_norm),
+                format!("{:.1}", o.opt_bytes_per_param),
+                if o.m_sat_frac.is_nan() { "-".into() } else { format!("{:.4}", o.m_sat_frac) },
+                if o.sr_bias.is_nan() { "-".into() } else { format!("{:+.5}", o.sr_bias) },
+                status,
+            ]
+        })
+        .collect();
+    write_table(
+        "fullstack_ablation",
+        "Full-stack FP4 per-component ablation (final = mean of last 10 losses)",
+        &[
+            "config", "attn", "proj", "optimizer", "first", "final", "max gnorm", "opt B/param",
+            "m_sat", "sr_bias", "status",
+        ],
+        &rows,
+    )?;
+
+    let find = |name: &str| outcomes.iter().find(|(o, ..)| o.name == name).map(|(o, ..)| o);
+    if let (Some(attn), Some(full), Some(naive)) =
+        (find("attn_only"), find("fullstack"), find("naive_proj"))
+    {
+        println!(
+            "[fullstack] attn_only {:.4} vs fullstack {:.4} (gap {:+.4}); naive_proj {:.4} \
+             ({} rollbacks)",
+            attn.final_loss,
+            full.final_loss,
+            full.final_loss - attn.final_loss,
+            naive.final_loss,
+            naive.rollbacks,
+        );
+    }
+    Ok(())
+}

@@ -9,6 +9,7 @@ pub mod cluster;
 pub mod common;
 pub mod consistency;
 pub mod diffusion;
+pub mod fullstack;
 pub mod kernels;
 pub mod llm;
 
@@ -37,17 +38,21 @@ pub fn run(rt: &Runtime, id: &str, cfg: &Config) -> Result<()> {
         "cluster" => cluster::cluster_scaling(cfg),
         // Fault-injected serving: zero lost requests + bitwise replay.
         "faults" => cluster::fault_tolerance(cfg),
+        // Full-stack FP4 training ablation grid; native models only.
+        "fullstack" => fullstack::fullstack_ablation(cfg),
         "all" => {
             for id in [
                 "table2", "table1", "table4", "table3", "fig1", "fig2", "fig3", "fig4", "fig5",
-                "cluster", "faults",
+                "cluster", "faults", "fullstack",
             ] {
                 println!("\n===== {id} =====");
                 run(rt, id, cfg)?;
             }
             Ok(())
         }
-        other => bail!("unknown experiment '{other}' (table1-4, fig1-5, cluster, faults, all)"),
+        other => bail!(
+            "unknown experiment '{other}' (table1-4, fig1-5, cluster, faults, fullstack, all)"
+        ),
     }
 }
 
@@ -64,16 +69,20 @@ pub fn run_native(id: &str, cfg: &Config) -> Result<()> {
         }
         "cluster" => cluster::cluster_scaling(cfg),
         "faults" => cluster::fault_tolerance(cfg),
+        "fullstack" => fullstack::fullstack_ablation(cfg),
         "all" => {
-            println!("(native mode: only fig3, cluster, and faults run without artifacts)");
+            println!(
+                "(native mode: only fig3, cluster, faults, and fullstack run without artifacts)"
+            );
             run_native("fig3", cfg)?;
             run_native("cluster", cfg)?;
-            run_native("faults", cfg)
+            run_native("faults", cfg)?;
+            run_native("fullstack", cfg)
         }
         other => bail!(
             "experiment '{other}' needs compiled HLO artifacts and a real PJRT backend \
-             (the stub xla crate is active); only 'fig3', 'cluster', and 'faults' have \
-             native paths"
+             (the stub xla crate is active); only 'fig3', 'cluster', 'faults', and \
+             'fullstack' have native paths"
         ),
     }
 }

@@ -75,6 +75,54 @@ pub fn encode(x: f32) -> u8 {
     }
 }
 
+/// Encode an f32 to an E4M3 byte with **stochastic rounding**.
+///
+/// `u` is a uniform sample in `[0, 1)` supplied by the caller (so runs
+/// stay deterministic under the crate's seeded [`crate::rng::Rng`]). The
+/// magnitude is bracketed between the two adjacent lattice codes and
+/// rounded up with probability equal to the fractional position between
+/// them, making the rounding **unbiased**: `E[decode(encode_stochastic(x,
+/// U))] = x` for `|x| < MAX`. Values at or beyond `MAX` (and non-finite
+/// inputs) saturate deterministically to `±MAX`; exactly-representable
+/// values round-trip bitwise for every `u`.
+#[inline]
+pub fn encode_stochastic(x: f32, u: f32) -> u8 {
+    let mag = x.abs();
+    let sign = if x.is_sign_negative() { 0x80u8 } else { 0 };
+    if !mag.is_finite() || mag >= MAX {
+        return sign | 0x7E;
+    }
+    // Binary-search the largest code whose value is <= mag (codes are
+    // monotone over 0x00..=0x7E).
+    let (mut lo, mut hi) = (0u8, 0x7Eu8);
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        if decode_mag(mid) <= mag {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    let lo_val = decode_mag(lo);
+    let code = if lo_val == mag {
+        lo
+    } else {
+        let hi_val = decode_mag(lo + 1);
+        let p = (mag - lo_val) / (hi_val - lo_val);
+        if u < p {
+            lo + 1
+        } else {
+            lo
+        }
+    };
+    // Zero is unsigned on this lattice (matches `encode`).
+    if code == 0 {
+        0
+    } else {
+        sign | code
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +170,44 @@ mod tests {
             assert!(v > prev, "code {code}");
             prev = v;
         }
+    }
+
+    #[test]
+    fn stochastic_roundtrips_exact_values_for_any_u() {
+        for code in 0u8..=0x7E {
+            let v = decode_mag(code);
+            for u in [0.0, 0.3, 0.999] {
+                assert_eq!(decode(encode_stochastic(v, u)), v, "code {code} u {u}");
+                let neg = decode(encode_stochastic(-v, u));
+                if v == 0.0 {
+                    assert_eq!(neg, 0.0);
+                } else {
+                    assert_eq!(neg, -v);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stochastic_saturates_deterministically() {
+        for x in [MAX, MAX * 1.5, 1e9, f32::INFINITY] {
+            for u in [0.0, 0.5, 0.999] {
+                assert_eq!(decode(encode_stochastic(x, u)), MAX);
+                assert_eq!(decode(encode_stochastic(-x, u)), -MAX);
+            }
+        }
+        assert_eq!(decode(encode_stochastic(f32::NAN, 0.5)), MAX);
+    }
+
+    #[test]
+    fn stochastic_brackets_to_adjacent_codes() {
+        // A value strictly between two lattice points must land on one of
+        // the two, low with probability 1-p, high with probability p.
+        let lo = decode_mag(0x38); // 1.0
+        let hi = decode_mag(0x39); // 1.125
+        let x = 0.25 * lo + 0.75 * hi;
+        assert_eq!(decode(encode_stochastic(x, 0.999)), lo); // u >= p=0.75
+        assert_eq!(decode(encode_stochastic(x, 0.1)), hi); // u < p
     }
 
     #[test]

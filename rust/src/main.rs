@@ -198,12 +198,14 @@ fn cmd_train(rt: &Runtime, cli: &Cli) -> Result<()> {
 /// model.
 ///
 /// Config keys (override with `-s key=value`): `train.steps`, `train.lr`,
-/// `train.seq`, `train.variant`, `train.grad_clip`, `model.layers`,
-/// `model.heads`, `model.head_dim`, `model.ff`, `serve.shards`, `seed`.
+/// `train.seq`, `train.variant`, `train.grad_clip`, `train.microbatch`,
+/// `train.optimizer` (`adam` | `lowp_adam`), `train.proj` (`off` | `ste` |
+/// `naive`), `train.hadamard`, `model.layers`, `model.heads`,
+/// `model.head_dim`, `model.ff`, `serve.shards`, `seed`.
 fn cmd_train_native(cli: &Cli) -> Result<()> {
     use attn_qat::attention::AttnConfig;
-    use attn_qat::model::{greedy_decode, LmTrainTask, QatModel, QatModelConfig, TrainConfig,
-        TrainSession};
+    use attn_qat::model::{greedy_decode, LmTrainTask, ProjQuant, QatModel, QatModelConfig,
+        TrainConfig, TrainSession};
     use attn_qat::serve::{ClusterConfig, DecodeCluster, ShardConfig};
 
     let cfg = &cli.cfg;
@@ -212,8 +214,19 @@ fn cmd_train_native(cli: &Cli) -> Result<()> {
     let seq = cfg.usize_or("train.seq", 48);
     let clip = cfg.f32_or("train.grad_clip", 1.0);
     let variant = cfg.str_or("train.variant", "attn_qat");
+    let micro = cfg.usize_or("train.microbatch", 1);
+    let optimizer = cfg.str_or("train.optimizer", "adam");
+    let proj_mode = cfg.str_or("train.proj", "off");
+    let hadamard = cfg.bool_or("train.hadamard", false);
     let seed = cfg.u64_or("seed", 42);
     let attn = AttnConfig::parse(&variant).map_err(|e| anyhow!("{e}"))?;
+    let proj = match proj_mode.as_str() {
+        "off" => ProjQuant::off(),
+        "ste" => ProjQuant::ste(),
+        "naive" => ProjQuant::naive(),
+        other => bail!("unknown train.proj '{other}' (off, ste, naive)"),
+    }
+    .with_hadamard(hadamard);
     let model_cfg = QatModelConfig {
         layers: cfg.usize_or("model.layers", 2),
         heads: cfg.usize_or("model.heads", 2),
@@ -225,11 +238,23 @@ fn cmd_train_native(cli: &Cli) -> Result<()> {
     };
     println!(
         "train native: {} layer(s) x {} head(s) x d{}, seq {seq}, {steps} steps, \
-         lr {lr:.1e}, clip {clip}, attn={variant}, seed={seed}",
-        model_cfg.layers, model_cfg.heads, model_cfg.head_dim
+         lr {lr:.1e}, clip {clip}, attn={variant}, proj={}, optim={optimizer}, \
+         micro={micro}, seed={seed}",
+        model_cfg.layers,
+        model_cfg.heads,
+        model_cfg.head_dim,
+        proj.label()
     );
-    let task = LmTrainTask::new(QatModel::new(model_cfg), seq, seed ^ 0x77a1);
-    let train_cfg = TrainConfig::adam(lr).with_grad_clip(Some(clip));
+    let mut qat_model = QatModel::new(model_cfg);
+    qat_model.set_proj_quant(proj);
+    let task = LmTrainTask::new(qat_model, seq, seed ^ 0x77a1);
+    let train_cfg = match optimizer.as_str() {
+        "adam" => TrainConfig::adam(lr),
+        "lowp_adam" => TrainConfig::lowp_adam(lr, seed ^ 0x5eed),
+        other => bail!("unknown train.optimizer '{other}' (adam, lowp_adam)"),
+    }
+    .with_grad_clip(Some(clip))
+    .with_microbatch(micro);
     let mut session = TrainSession::new(task, train_cfg);
     session.run(steps, (steps / 8).max(1), |m| {
         println!(
@@ -238,10 +263,11 @@ fn cmd_train_native(cli: &Cli) -> Result<()> {
         )
     });
     println!(
-        "trained: tail-10 loss {:.4}, max gnorm {:.3}, diverged={}",
+        "trained: tail-10 loss {:.4}, max gnorm {:.3}, diverged={}, opt state {} B",
         session.tail_loss(10),
         session.max_grad_norm(),
-        session.diverged()
+        session.diverged(),
+        session.optimizer_state_bytes()
     );
 
     // Export → import → serve: the round trip.
@@ -818,5 +844,5 @@ COMMANDS:
                                  headers + rows) into BENCH_summary.json
     exp <id>                     regenerate a paper table/figure:
                                  table1 table2 table3 table4 fig1..fig5
-                                 cluster faults all
+                                 cluster faults fullstack all
 ";

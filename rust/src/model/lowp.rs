@@ -1,0 +1,790 @@
+//! Low-precision **full-stack FP4 training**: quantized projection GEMMs
+//! and FP8 optimizer state under the existing session machinery.
+//!
+//! The paper quantizes attention; this module quantizes the rest of the
+//! stack, following *Full-Stack FP4* / *FP4 All the Way* (PAPERS.md):
+//!
+//! - **[`ProjQuant`]** — per-model policy for fake-quantizing the
+//!   projection GEMMs (`Wq/Wk/Wv/Wo/W_in/W_out`, optionally embeddings
+//!   and the rms-normed activations feeding them) onto the NVFP4
+//!   lattice. [`ProjQuantMode::Ste`] quantizes a *scratch copy* of the
+//!   weights each forward and backpropagates with the straight-through
+//!   estimator (the exact recipe `qat::ste` applies to attention
+//!   inputs): `dW` lands on the f32 master weights, `dx` flows through
+//!   the same quantized weights the forward used — matched recompute, no
+//!   drift. [`ProjQuantMode::Naive`] instead hard-requantizes the master
+//!   weights in place every step — the deliberately wrong baseline whose
+//!   update-erasure stall the `exp fullstack` ablation demonstrates
+//!   (lattice step ≈ scale/2 ≫ an Adam-scale update, so RNE erases it).
+//! - **[`wht16`]** — an orthonormal 16-point Walsh–Hadamard transform
+//!   matching the NVFP4 block size (*Training Transformers with 4-bit
+//!   Integers*' outlier weapon): rotate each block, quantize in the
+//!   rotated domain where outliers are spread across the block, rotate
+//!   back. Enabled per-policy with [`ProjQuant::with_hadamard`].
+//! - **[`LowPAdam`]** — Adam whose first/second moments live in **E4M3
+//!   bytes** (2 bytes/param total) behind a per-tensor power-of-two
+//!   scale, written back with *stochastic rounding*
+//!   ([`crate::formats::e4m3::encode_stochastic`]) so quantization noise
+//!   is unbiased and tiny moment updates survive in expectation. The
+//!   rounding stream is keyed on `(seed, step, tensor)` through the
+//!   crate [`Rng`], so runs are deterministic, watchdog rollbacks replay
+//!   bitwise, and checkpointed state resumes bitwise.
+//!
+//! The module publishes per-step health through [`LowPStats`] (moment
+//! saturation fraction, empirical stochastic-rounding bias), surfaced as
+//! `train.lowp.*` gauges by [`super::TrainSession`].
+
+use crate::formats::block::{nvfp4_block_scale, nvfp4_fake_quant_row, NVFP4_BLOCK};
+use crate::formats::e4m3;
+use crate::rng::Rng;
+
+use super::modules::{rms_norm, rms_norm_bwd_rows, vec_mat_acc, Linear, Mlp, MlpActs};
+use super::optim::{Optimizer, OptimizerState};
+
+/// How projection weights are quantized during training.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProjQuantMode {
+    /// Projections stay f32 (the pre-existing behaviour).
+    Off,
+    /// Fake-quantize a scratch copy of each projection weight every
+    /// forward; backward uses the straight-through estimator (`dW` onto
+    /// the f32 master, `dx` through the quantized copy).
+    Ste,
+    /// Hard-requantize the master weights in place at the start of every
+    /// training step — no STE, no master copy. The naive baseline that
+    /// stalls (updates smaller than a lattice step are erased).
+    Naive,
+}
+
+/// Per-model projection-quantization policy. Composes with the per-layer
+/// [`crate::attention::AttnConfig`]: attention quantization and
+/// projection quantization are selected independently, which is what the
+/// `exp fullstack` ablation grid sweeps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProjQuant {
+    pub mode: ProjQuantMode,
+    /// Rotate each 16-block with [`wht16`] before quantizing (and back
+    /// after) — spreads outliers so the block scale is not dominated by
+    /// a single large weight.
+    pub hadamard: bool,
+    /// Also fake-quantize the rms-normed activation rows entering each
+    /// projection (STE through the quantizer; cached operands are the
+    /// quantized rows, so backward is automatically matched).
+    pub activations: bool,
+    /// Also quantize the embedding output rows (Ste) or the embedding
+    /// tables in place (Naive).
+    pub embeddings: bool,
+}
+
+impl ProjQuant {
+    /// Projections stay f32.
+    pub fn off() -> ProjQuant {
+        ProjQuant {
+            mode: ProjQuantMode::Off,
+            hadamard: false,
+            activations: false,
+            embeddings: false,
+        }
+    }
+
+    /// STE fake-quantized projection weights (the stable recipe).
+    pub fn ste() -> ProjQuant {
+        ProjQuant { mode: ProjQuantMode::Ste, ..ProjQuant::off() }
+    }
+
+    /// Hard in-place requantization every step (the unstable baseline).
+    pub fn naive() -> ProjQuant {
+        ProjQuant { mode: ProjQuantMode::Naive, ..ProjQuant::off() }
+    }
+
+    pub fn with_hadamard(mut self, on: bool) -> ProjQuant {
+        self.hadamard = on;
+        self
+    }
+
+    pub fn with_activations(mut self, on: bool) -> ProjQuant {
+        self.activations = on;
+        self
+    }
+
+    pub fn with_embeddings(mut self, on: bool) -> ProjQuant {
+        self.embeddings = on;
+        self
+    }
+
+    /// True when any quantization is active.
+    pub fn enabled(&self) -> bool {
+        self.mode != ProjQuantMode::Off
+    }
+
+    /// Short label for tables / telemetry (`off`, `ste`, `ste+had`, …).
+    pub fn label(&self) -> String {
+        let base = match self.mode {
+            ProjQuantMode::Off => return "off".to_string(),
+            ProjQuantMode::Ste => "ste",
+            ProjQuantMode::Naive => "naive",
+        };
+        let mut s = base.to_string();
+        if self.hadamard {
+            s.push_str("+had");
+        }
+        if self.activations {
+            s.push_str("+act");
+        }
+        if self.embeddings {
+            s.push_str("+emb");
+        }
+        s
+    }
+}
+
+impl Default for ProjQuant {
+    fn default() -> ProjQuant {
+        ProjQuant::off()
+    }
+}
+
+/// In-place orthonormal 16-point Walsh–Hadamard transform (scaled by
+/// 1/√16, so it is its own inverse and preserves the block's L2 norm).
+pub fn wht16(block: &mut [f32]) {
+    debug_assert_eq!(block.len(), NVFP4_BLOCK);
+    let mut h = 1;
+    while h < NVFP4_BLOCK {
+        let mut i = 0;
+        while i < NVFP4_BLOCK {
+            for j in i..i + h {
+                let (a, b) = (block[j], block[j + h]);
+                block[j] = a + b;
+                block[j + h] = a - b;
+            }
+            i += h * 2;
+        }
+        h *= 2;
+    }
+    for x in block.iter_mut() {
+        *x *= 0.25;
+    }
+}
+
+/// Fake-quantize one row (length a multiple of 16) onto the NVFP4
+/// lattice, optionally rotating each 16-block with [`wht16`] first and
+/// back after (quantize-in-rotated-domain).
+pub fn fake_quant_row(row: &mut [f32], hadamard: bool) {
+    debug_assert_eq!(row.len() % NVFP4_BLOCK, 0);
+    if !hadamard {
+        nvfp4_fake_quant_row(row);
+        return;
+    }
+    for b in row.chunks_mut(NVFP4_BLOCK) {
+        wht16(b);
+    }
+    nvfp4_fake_quant_row(row);
+    for b in row.chunks_mut(NVFP4_BLOCK) {
+        wht16(b);
+    }
+}
+
+/// Fake-quantize a `(rows × cols)` weight matrix row-blocked along
+/// `cols` (the layout `QatModel::save_quantized` exports), returning a
+/// fresh quantized copy.
+pub fn fake_quant_matrix(w: &[f32], cols: usize, hadamard: bool) -> Vec<f32> {
+    let mut out = w.to_vec();
+    for row in out.chunks_mut(cols) {
+        fake_quant_row(row, hadamard);
+    }
+    out
+}
+
+/// Fake-quantize a matrix **in place** (the [`ProjQuantMode::Naive`]
+/// hard-requant step).
+pub fn fake_quant_matrix_inplace(w: &mut [f32], cols: usize, hadamard: bool) {
+    for row in w.chunks_mut(cols) {
+        fake_quant_row(row, hadamard);
+    }
+}
+
+/// Ratio of the largest to the smallest nonzero NVFP4 block scale over a
+/// weight tensor — the `train.lowp.proj_scale_range` health probe (a
+/// large ratio means some blocks quantize much more coarsely).
+pub fn proj_scale_range(w: &[f32]) -> f32 {
+    let mut min_s = f32::INFINITY;
+    let mut max_s = 0.0f32;
+    for b in w.chunks(NVFP4_BLOCK) {
+        let s = nvfp4_block_scale(b);
+        if s > 0.0 {
+            min_s = min_s.min(s);
+            max_s = max_s.max(s);
+        }
+    }
+    if max_s <= 0.0 || !min_s.is_finite() {
+        1.0
+    } else {
+        max_s / min_s
+    }
+}
+
+/// One block's fake-quantized projection weights — the scratch copies a
+/// [`ProjQuantMode::Ste`] forward multiplies by. Cached in the model's
+/// activation bundle so the backward multiplies by *exactly* the weights
+/// the forward used (matched recompute, the paper's principle 1 applied
+/// to projections).
+pub(crate) struct QuantWeights {
+    pub wq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub win: Vec<f32>,
+    pub wout: Vec<f32>,
+}
+
+impl QuantWeights {
+    pub(crate) fn quantize(
+        wq: &Linear,
+        wk: &Linear,
+        wv: &Linear,
+        wo: &Linear,
+        mlp: &Mlp,
+        hadamard: bool,
+    ) -> QuantWeights {
+        QuantWeights {
+            wq: fake_quant_matrix(&wq.w, wq.out_dim, hadamard),
+            wk: fake_quant_matrix(&wk.w, wk.out_dim, hadamard),
+            wv: fake_quant_matrix(&wv.w, wv.out_dim, hadamard),
+            wo: fake_quant_matrix(&wo.w, wo.out_dim, hadamard),
+            win: fake_quant_matrix(&mlp.win.w, mlp.win.out_dim, hadamard),
+            wout: fake_quant_matrix(&mlp.wout.w, mlp.wout.out_dim, hadamard),
+        }
+    }
+}
+
+/// `out = x·W` over `n` rows with an explicit weight slice (the
+/// quantized-scratch variant of [`Linear::forward`]; same per-row
+/// kernel, so `w = master` reproduces it bitwise).
+pub(crate) fn linear_forward_w(
+    w: &[f32],
+    x: &[f32],
+    n: usize,
+    in_dim: usize,
+    out_dim: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), n * in_dim);
+    debug_assert_eq!(out.len(), n * out_dim);
+    out.fill(0.0);
+    linear_forward_acc_w(w, x, n, in_dim, out_dim, out);
+}
+
+/// `out += x·W` with an explicit weight slice.
+pub(crate) fn linear_forward_acc_w(
+    w: &[f32],
+    x: &[f32],
+    n: usize,
+    in_dim: usize,
+    out_dim: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(w.len(), in_dim * out_dim);
+    for (xr, or) in x.chunks(in_dim).zip(out.chunks_mut(out_dim)) {
+        vec_mat_acc(xr, w, out_dim, or);
+    }
+}
+
+/// [`Linear::backward`] with the forward's weights supplied explicitly:
+/// accumulates `g += xᵀ·dy` (STE — the gradient lands on the f32 master
+/// weights' accumulator) and `dx += dy·Wᵀ` through `w_used`, the
+/// quantized copy the forward multiplied by.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn linear_backward_w(
+    w_used: &[f32],
+    g: &mut [f32],
+    x: &[f32],
+    dy: &[f32],
+    n: usize,
+    in_dim: usize,
+    out_dim: usize,
+    mut dx: Option<&mut [f32]>,
+) {
+    debug_assert_eq!(x.len(), n * in_dim);
+    debug_assert_eq!(dy.len(), n * out_dim);
+    debug_assert_eq!(w_used.len(), in_dim * out_dim);
+    debug_assert_eq!(g.len(), in_dim * out_dim);
+    for r in 0..n {
+        let xr = &x[r * in_dim..(r + 1) * in_dim];
+        let dyr = &dy[r * out_dim..(r + 1) * out_dim];
+        for (m, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let grow = &mut g[m * out_dim..(m + 1) * out_dim];
+            for (gg, &dv) in grow.iter_mut().zip(dyr) {
+                *gg += xv * dv;
+            }
+        }
+        if let Some(dx) = dx.as_deref_mut() {
+            debug_assert_eq!(dx.len(), n * in_dim);
+            let dxr = &mut dx[r * in_dim..(r + 1) * in_dim];
+            for (m, o) in dxr.iter_mut().enumerate() {
+                let wrow = &w_used[m * out_dim..(m + 1) * out_dim];
+                let mut acc = 0.0f32;
+                for (&wv, &dv) in wrow.iter().zip(dyr) {
+                    acc += wv * dv;
+                }
+                *o += acc;
+            }
+        }
+    }
+}
+
+/// [`Mlp::forward_train`] with quantized scratch weights and (optionally)
+/// quantized rms-normed activations. The returned [`MlpActs`] caches the
+/// *quantized* `xn` rows, so [`mlp_backward_w`] consumes exactly the
+/// operands the forward multiplied.
+pub(crate) fn mlp_forward_train_w(
+    mlp: &Mlp,
+    win: &[f32],
+    wout: &[f32],
+    quant_acts: bool,
+    hadamard: bool,
+    h: &mut [f32],
+    n: usize,
+) -> MlpActs {
+    let d = mlp.win.in_dim;
+    let ff = mlp.win.out_dim;
+    debug_assert_eq!(h.len(), n * d);
+    let mut xn = vec![0.0f32; n * d];
+    let mut f = vec![0.0f32; n * ff];
+    for ((hr, xr), fr) in h.chunks_mut(d).zip(xn.chunks_mut(d)).zip(f.chunks_mut(ff)) {
+        rms_norm(hr, xr);
+        if quant_acts {
+            fake_quant_row(xr, hadamard);
+        }
+        vec_mat_acc(xr, win, ff, fr);
+        for x in fr.iter_mut() {
+            *x = x.tanh();
+        }
+        vec_mat_acc(fr, wout, d, hr);
+    }
+    MlpActs { xn, f }
+}
+
+/// [`Mlp::backward`] through the quantized scratch weights: `dW` onto
+/// the master accumulators (STE), `dx` through the forward's quantized
+/// copies; the rms chain uses the raw `h_in` (STE is identity through
+/// the activation quantizer).
+pub(crate) fn mlp_backward_w(
+    mlp: &mut Mlp,
+    win_q: &[f32],
+    wout_q: &[f32],
+    h_in: &[f32],
+    acts: &MlpActs,
+    dh: &mut [f32],
+    n: usize,
+) {
+    let d = mlp.win.in_dim;
+    let ff = mlp.win.out_dim;
+    debug_assert_eq!(h_in.len(), n * d);
+    debug_assert_eq!(dh.len(), n * d);
+    let mut df = vec![0.0f32; n * ff];
+    linear_backward_w(wout_q, &mut mlp.wout.g, &acts.f, dh, n, ff, d, Some(&mut df));
+    for (dfv, &fv) in df.iter_mut().zip(&acts.f) {
+        *dfv *= 1.0 - fv * fv;
+    }
+    let mut dxn = vec![0.0f32; n * d];
+    linear_backward_w(win_q, &mut mlp.win.g, &acts.xn, &df, n, d, ff, Some(&mut dxn));
+    rms_norm_bwd_rows(h_in, &dxn, d, dh);
+}
+
+/// Per-step health of a [`LowPAdam`] writeback, surfaced as
+/// `train.lowp.*` gauges.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LowPStats {
+    /// Fraction of first-moment elements that saturated at ±E4M3 MAX.
+    pub m_sat_frac: f32,
+    /// Fraction of second-moment elements that saturated.
+    pub v_sat_frac: f32,
+    /// Empirical stochastic-rounding bias: Σ(decoded − exact) over both
+    /// moments, normalized by Σ|exact| — should hover near 0 (the SR
+    /// unbiasedness guarantee, measured on live data).
+    pub sr_bias: f32,
+}
+
+/// One tensor's E4M3 moment buffer: one byte per element under a single
+/// power-of-two scale chosen per step so `amax/scale ∈ (MAX/2, MAX]`
+/// (maximal precision without saturation; power-of-two so scaling is
+/// exact in binary floating point).
+#[derive(Clone, Debug)]
+struct MomentBuf {
+    bytes: Vec<u8>,
+    scale: f32,
+}
+
+impl MomentBuf {
+    fn empty() -> MomentBuf {
+        MomentBuf { bytes: Vec::new(), scale: 1.0 }
+    }
+}
+
+/// Smallest power of two `s` with `amax/s ≤ MAX` (1.0 for zero input).
+fn pow2_scale(amax: f32) -> f32 {
+    if amax <= 0.0 || !amax.is_finite() {
+        return 1.0;
+    }
+    let mut s = (amax / e4m3::MAX).log2().ceil().exp2();
+    if !(s.is_finite() && s > 0.0) {
+        return 1.0;
+    }
+    // Guard one ulp of log2 error: never let the max element saturate
+    // merely from the scale computation.
+    if amax / s > e4m3::MAX {
+        s *= 2.0;
+    }
+    s
+}
+
+/// Adam with E4M3 first/second moments (2 bytes/param of moment state)
+/// and stochastic-rounding writeback. The update math runs in f32 on
+/// freshly-decoded moments, so a step is ordinary Adam plus bounded,
+/// unbiased storage noise. Deterministic: the rounding stream is
+/// `Rng::new(seed ⊕ h(step) ⊕ h(tensor))`, independent of call history,
+/// so watchdog rollback + replay and checkpoint resume are bitwise.
+pub struct LowPAdam {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Seed for the stochastic-rounding stream.
+    pub seed: u64,
+    t: i32,
+    m: Vec<MomentBuf>,
+    v: Vec<MomentBuf>,
+    // Per-step stat accumulators (reset in begin_step).
+    m_sat: usize,
+    v_sat: usize,
+    count: usize,
+    bias_sum: f64,
+    bias_ref: f64,
+}
+
+impl LowPAdam {
+    pub fn new(beta1: f32, beta2: f32, eps: f32, seed: u64) -> LowPAdam {
+        LowPAdam {
+            beta1,
+            beta2,
+            eps,
+            seed,
+            t: 0,
+            m: Vec::new(),
+            v: Vec::new(),
+            m_sat: 0,
+            v_sat: 0,
+            count: 0,
+            bias_sum: 0.0,
+            bias_ref: 0.0,
+        }
+    }
+
+    /// Standard Adam defaults + a rounding seed.
+    pub fn with_seed(seed: u64) -> LowPAdam {
+        LowPAdam::new(0.9, 0.999, 1e-8, seed)
+    }
+
+    /// Rescale + stochastically round `vals` into `buf`; `draws[i]` is
+    /// element `i`'s uniform sample. Returns the saturation count.
+    fn writeback(
+        buf: &mut MomentBuf,
+        vals: &[f32],
+        draws: &[f32],
+        bias_sum: &mut f64,
+        bias_ref: &mut f64,
+    ) -> usize {
+        let amax = vals.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        buf.scale = pow2_scale(amax);
+        let inv = 1.0 / buf.scale;
+        let mut sat = 0usize;
+        for ((b, &x), &u) in buf.bytes.iter_mut().zip(vals).zip(draws) {
+            let scaled = x * inv;
+            if scaled.abs() >= e4m3::MAX {
+                sat += 1;
+            }
+            *b = e4m3::encode_stochastic(scaled, u);
+            let dec = buf.scale * e4m3::decode(*b);
+            *bias_sum += (dec - x) as f64;
+            *bias_ref += x.abs() as f64;
+        }
+        sat
+    }
+}
+
+impl Optimizer for LowPAdam {
+    fn begin_step(&mut self) {
+        self.t += 1;
+        self.m_sat = 0;
+        self.v_sat = 0;
+        self.count = 0;
+        self.bias_sum = 0.0;
+        self.bias_ref = 0.0;
+    }
+
+    fn update(&mut self, idx: usize, w: &mut [f32], g: &[f32], lr: f32) {
+        while self.m.len() <= idx {
+            self.m.push(MomentBuf::empty());
+            self.v.push(MomentBuf::empty());
+        }
+        if self.m[idx].bytes.len() != g.len() {
+            self.m[idx] = MomentBuf::empty();
+            self.m[idx].bytes.resize(g.len(), 0);
+            self.v[idx] = MomentBuf::empty();
+            self.v[idx].bytes.resize(g.len(), 0);
+        }
+        let t = self.t.max(1);
+        let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+        let bc1 = 1.0 - b1.powi(t);
+        let bc2 = 1.0 - b2.powi(t);
+        // Stateless rounding stream per (seed, step, tensor): replay after
+        // a rollback or a checkpoint resume regenerates identical bits.
+        let mut rng = Rng::new(
+            self.seed
+                ^ (t as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (idx as u64).wrapping_mul(0xBF58476D1CE4E5B9),
+        );
+        let (mb, vb) = (&mut self.m[idx], &mut self.v[idx]);
+        let (sm, sv) = (mb.scale, vb.scale);
+        let mut nm = vec![0.0f32; g.len()];
+        let mut nv = vec![0.0f32; g.len()];
+        for (i, ((wv, &gx), (mbyte, vbyte))) in w
+            .iter_mut()
+            .zip(g)
+            .zip(mb.bytes.iter().zip(vb.bytes.iter()))
+            .enumerate()
+        {
+            let m0 = sm * e4m3::decode(*mbyte);
+            let v0 = sv * e4m3::decode(*vbyte);
+            let m1 = b1 * m0 + (1.0 - b1) * gx;
+            let v1 = b2 * v0 + (1.0 - b2) * gx * gx;
+            let mh = m1 / bc1;
+            let vh = v1 / bc2;
+            *wv -= lr * mh / (vh.sqrt() + eps);
+            nm[i] = m1;
+            nv[i] = v1;
+        }
+        // Draw order is a stable part of the format: per element, one
+        // uniform for m, then one for v.
+        let mut mdraws = vec![0.0f32; g.len()];
+        let mut vdraws = vec![0.0f32; g.len()];
+        for (mu, vu) in mdraws.iter_mut().zip(vdraws.iter_mut()) {
+            *mu = rng.uniform();
+            *vu = rng.uniform();
+        }
+        self.m_sat += LowPAdam::writeback(mb, &nm, &mdraws, &mut self.bias_sum, &mut self.bias_ref);
+        self.v_sat += LowPAdam::writeback(vb, &nv, &vdraws, &mut self.bias_sum, &mut self.bias_ref);
+        self.count += g.len();
+    }
+
+    fn snapshot(&self) -> OptimizerState {
+        OptimizerState {
+            step: self.t,
+            slots: vec![
+                self.m.iter().map(|b| vec![b.scale]).collect(),
+                self.v.iter().map(|b| vec![b.scale]).collect(),
+            ],
+            byte_slots: vec![
+                self.m.iter().map(|b| b.bytes.clone()).collect(),
+                self.v.iter().map(|b| b.bytes.clone()).collect(),
+            ],
+        }
+    }
+
+    fn restore(&mut self, state: &OptimizerState) {
+        self.t = state.step;
+        let scales = |slot: usize, i: usize| -> f32 {
+            state
+                .slots
+                .get(slot)
+                .and_then(|s| s.get(i))
+                .and_then(|v| v.first().copied())
+                .unwrap_or(1.0)
+        };
+        let rebuild = |slot: usize| -> Vec<MomentBuf> {
+            state
+                .byte_slots
+                .get(slot)
+                .map(|bufs| {
+                    bufs.iter()
+                        .enumerate()
+                        .map(|(i, b)| MomentBuf { bytes: b.clone(), scale: scales(slot, i) })
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        self.m = rebuild(0);
+        self.v = rebuild(1);
+    }
+
+    fn state_bytes(&self) -> usize {
+        // One byte per element per moment, plus a 4-byte scale per tensor
+        // per moment.
+        self.m.iter().chain(self.v.iter()).map(|b| b.bytes.len() + 4).sum()
+    }
+
+    fn lowp_stats(&self) -> Option<LowPStats> {
+        if self.count == 0 {
+            return None;
+        }
+        let n = self.count as f32;
+        Some(LowPStats {
+            m_sat_frac: self.m_sat as f32 / n,
+            v_sat_frac: self.v_sat as f32 / n,
+            sr_bias: (self.bias_sum / (self.bias_ref + 1e-12)) as f32,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::optim::Adam;
+
+    #[test]
+    fn wht16_is_self_inverse_and_orthonormal() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let x = rng.normal_vec(16, 0.0, 1.0);
+            let mut y = x.clone();
+            wht16(&mut y);
+            let n_x: f32 = x.iter().map(|v| v * v).sum();
+            let n_y: f32 = y.iter().map(|v| v * v).sum();
+            assert!((n_x - n_y).abs() < 1e-4 * n_x.max(1.0), "norm {n_x} vs {n_y}");
+            wht16(&mut y);
+            for (a, b) in x.iter().zip(&y) {
+                assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn hadamard_spreads_outliers() {
+        let mut x = [0.01f32; 16];
+        x[5] = 8.0;
+        let mut y = x;
+        wht16(&mut y);
+        let amax_x = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let amax_y = y.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        assert!(amax_y < amax_x / 3.0, "{amax_y} vs {amax_x}");
+    }
+
+    #[test]
+    fn fake_quant_matrix_bounds_error_and_actually_quantizes() {
+        let mut rng = Rng::new(9);
+        let w = rng.normal_vec(256, 0.0, 0.2);
+        let l2: f32 = w.iter().map(|v| v * v).sum::<f32>().sqrt();
+        for had in [false, true] {
+            let q = fake_quant_matrix(&w, 32, had);
+            assert_ne!(q, w, "had={had}: quantization must move weights");
+            assert!(q.iter().all(|v| v.is_finite()));
+            let err: f32 =
+                w.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+            assert!(err / l2 < 0.5, "had={had}: relative L2 error {}", err / l2);
+        }
+    }
+
+    #[test]
+    fn quantized_helpers_match_modules_with_master_weights() {
+        // With w_used = master weights, the _w helpers must reproduce
+        // Linear/Mlp bitwise (they are the same kernels).
+        let mut rng = Rng::new(21);
+        let (n, d, ff) = (3, 16, 32);
+        let mut lin = Linear::new(rng.normal_vec(d * ff, 0.0, 0.3), d, ff);
+        let x = rng.normal_vec(n * d, 0.0, 1.0);
+        let mut want = vec![0.0f32; n * ff];
+        lin.forward(&x, n, &mut want);
+        let mut got = vec![0.0f32; n * ff];
+        linear_forward_w(&lin.w, &x, n, d, ff, &mut got);
+        assert_eq!(got, want);
+        let dy = rng.normal_vec(n * ff, 0.0, 1.0);
+        let mut dx_want = vec![0.0f32; n * d];
+        lin.backward(&x, &dy, n, Some(&mut dx_want));
+        let g_want = lin.g.clone();
+        let w_copy = lin.w.clone();
+        let mut g_got = vec![0.0f32; d * ff];
+        let mut dx_got = vec![0.0f32; n * d];
+        linear_backward_w(&w_copy, &mut g_got, &x, &dy, n, d, ff, Some(&mut dx_got));
+        assert_eq!(dx_got, dx_want);
+        assert_eq!(g_got, g_want);
+    }
+
+    #[test]
+    fn pow2_scale_keeps_amax_in_top_binade() {
+        for amax in [0.001f32, 0.7, 3.0, 447.9, 448.0, 1000.0, 1e-30] {
+            let s = pow2_scale(amax);
+            assert!(amax / s <= e4m3::MAX, "amax {amax} scale {s}");
+            assert!(amax / s > e4m3::MAX / 2.0 * 0.999, "amax {amax} scale {s}");
+        }
+        assert_eq!(pow2_scale(0.0), 1.0);
+    }
+
+    #[test]
+    fn lowp_adam_first_step_is_signed_lr() {
+        let mut opt = LowPAdam::with_seed(7);
+        opt.begin_step();
+        let mut w = vec![0.0f32, 0.0];
+        opt.update(0, &mut w, &[3.0, -0.001], 0.01);
+        assert!((w[0] + 0.01).abs() < 1e-5, "{}", w[0]);
+        assert!((w[1] - 0.01).abs() < 1e-4, "{}", w[1]);
+        let stats = opt.lowp_stats().unwrap();
+        assert!(stats.m_sat_frac <= 0.51, "pow2 scale keeps moments unsaturated");
+    }
+
+    #[test]
+    fn lowp_adam_snapshot_restore_replays_bitwise() {
+        let mut opt = LowPAdam::with_seed(3);
+        let mut w = vec![0.1f32; 8];
+        opt.begin_step();
+        opt.update(0, &mut w, &[0.5; 8], 0.01);
+        let snap = opt.snapshot();
+        let w_snap = w.clone();
+        opt.begin_step();
+        opt.update(0, &mut w, &[-0.25; 8], 0.01);
+        let diverged = w.clone();
+        opt.restore(&snap);
+        let mut w2 = w_snap;
+        opt.begin_step();
+        opt.update(0, &mut w2, &[-0.25; 8], 0.01);
+        assert_eq!(w2, diverged, "rollback + replay must be bitwise");
+    }
+
+    #[test]
+    fn lowp_adam_tracks_f32_adam_on_quadratic() {
+        // min ‖w − tgt‖²: both optimizers should land near tgt, within a
+        // tolerance dominated by the E4M3 moment noise.
+        let mut rng = Rng::new(5);
+        let tgt = rng.normal_vec(64, 0.0, 0.5);
+        let run = |lowp: bool| -> f32 {
+            let mut w = vec![0.0f32; 64];
+            let mut adam = Adam::new();
+            let mut lp = LowPAdam::with_seed(11);
+            for _ in 0..40 {
+                let g: Vec<f32> = w.iter().zip(&tgt).map(|(&a, &b)| 2.0 * (a - b)).collect();
+                if lowp {
+                    lp.begin_step();
+                    lp.update(0, &mut w, &g, 0.05);
+                } else {
+                    adam.begin_step();
+                    adam.update(0, &mut w, &g, 0.05);
+                }
+            }
+            w.iter().zip(&tgt).map(|(&a, &b)| (a - b) * (a - b)).sum()
+        };
+        let (f32_loss, lowp_loss) = (run(false), run(true));
+        assert!(lowp_loss < 0.5, "lowp must converge: {lowp_loss}");
+        assert!((lowp_loss - f32_loss).abs() < 0.5, "{lowp_loss} vs {f32_loss}");
+    }
+
+    #[test]
+    fn lowp_state_is_two_bytes_per_param_plus_scales() {
+        let mut opt = LowPAdam::with_seed(1);
+        let mut w = vec![0.0f32; 100];
+        let g = [0.1f32; 100];
+        opt.begin_step();
+        opt.update(0, &mut w, &g, 0.01);
+        assert_eq!(opt.state_bytes(), 2 * 100 + 2 * 4);
+    }
+}

@@ -1,47 +1,77 @@
-//! Native model stack: one layered API for training **and** serving.
+//! Native model stack: one layered API for training **and** serving,
+//! with an explicit **precision map** over every tensor a training step
+//! touches.
 //!
 //! Before this module the repo had two disjoint model worlds: the `qat`
 //! trainer drove a bespoke single-attention toy, while `serve` ran a
 //! forward-only `SimLm` it could not train. `model` unifies them the way
-//! `attention::AttnEngine` unified the attention kernels:
+//! `attention::AttnEngine` unified the attention kernels — and then
+//! pushes the paper's 4-bit story past attention, across the whole step:
+//!
+//! | tensor class            | precision                   | where            |
+//! |-------------------------|-----------------------------|------------------|
+//! | attention Q/K/V/P̃      | NVFP4 fake-quant, per layer | [`crate::attention::AttnConfig`] |
+//! | projection weights      | NVFP4 fake-quant (STE) or naive requant | [`ProjQuant`] in [`lowp`] |
+//! | projection activations  | optional NVFP4 fake-quant   | [`ProjQuant::activations`] |
+//! | optimizer moments (m,v) | E4M3 + stochastic rounding  | [`LowPAdam`] in [`lowp`] |
+//! | master weights, grads   | f32 always                  | everywhere       |
+//! | lm head                 | f32 always                  | [`QatModel`]     |
+//!
+//! The layers:
 //!
 //! * [`modules`] — composable trainable pieces ([`Linear`], [`Embedding`],
 //!   [`Mlp`], rms-norm kernels) exposing `forward` / `forward_train` /
 //!   `backward` with parameter+gradient views ([`Module::visit_params`]).
+//! * [`lowp`] — the low-precision training toolbox: [`ProjQuant`]
+//!   (straight-through fake-quantized projection GEMMs, with an optional
+//!   16-point Hadamard rotation for outlier-heavy weights), [`LowPAdam`]
+//!   (Adam whose moment state lives in E4M3 bytes — 2 bytes/param instead
+//!   of 8 — written back with seeded stochastic rounding so runs replay
+//!   bitwise), and the `train.lowp.*` health stats behind both.
 //! * [`QatModel`] — a pre-norm byte transformer (embedding → N× {attention
 //!   via [`crate::attention::AttnEngine`] with a **per-layer**
 //!   [`crate::attention::AttnConfig`], MLP, norm} → logits). Training
 //!   attention runs `forward_train` + `qat::flash_backward_cfg`, so the
 //!   Fig-3 `BwdSwitches` ablations (and smooth-K / two-level P̃) apply per
-//!   layer; the same weights implement [`crate::serve::TokenModel`], so a
-//!   finetuned model serves directly from the sharded
-//!   [`crate::serve::DecodeCluster`] — the repo's first train→serve round
-//!   trip ([`QatModel::save_quantized`] / [`QatModel::load`] move the
-//!   quantized weights between the two).
+//!   layer; [`QatModel::set_proj_quant`] extends the quantization to the
+//!   projection GEMMs. The same weights implement
+//!   [`crate::serve::TokenModel`], so a finetuned model serves directly
+//!   from the sharded [`crate::serve::DecodeCluster`] — the repo's
+//!   train→serve round trip ([`QatModel::save_quantized`] /
+//!   [`QatModel::load`] move the quantized weights between the two).
 //! * [`TrainSession`] — the config-driven training loop ([`TrainConfig`]:
-//!   [`Optimizer`] choice — SGD+momentum or Adam — global grad-clip, lr
-//!   schedule, `StepMetrics` history). [`AttnRegressor`] is the old
-//!   Fig-3 toy task as a [`TrainableModel`]; `qat::NativeTrainer` remains
-//!   as a deprecated shim over [`AttnRegressor::session`].
+//!   [`Optimizer`] choice — SGD+momentum, Adam, or [`LowPAdam`] — global
+//!   grad-clip, lr schedule, microbatch grad accumulation, `StepMetrics`
+//!   history, v3 train checkpoints via `TrainSession::save_checkpoint`).
+//!   [`AttnRegressor`] is the old Fig-3 toy task as a [`TrainableModel`];
+//!   `qat::NativeTrainer` remains as a deprecated shim over
+//!   [`AttnRegressor::session`].
 //!
 //! ```no_run
-//! use attn_qat::model::{LmTrainTask, QatModel, QatModelConfig, TrainConfig, TrainSession};
+//! use attn_qat::model::{LmTrainTask, ProjQuant, QatModel, QatModelConfig};
+//! use attn_qat::model::{TrainConfig, TrainSession};
 //!
-//! // Finetune with Adam + grad-clip (the paper's recipe) ...
-//! let task = LmTrainTask::new(QatModel::new(QatModelConfig::default()), 48, 42);
-//! let mut session = TrainSession::new(task, TrainConfig::adam(5e-3));
+//! // Full-stack FP4 finetune: quantized projections (STE), E4M3 Adam
+//! // moments, 4-sequence microbatches.
+//! let mut model = QatModel::new(QatModelConfig::default());
+//! model.set_proj_quant(ProjQuant::ste());
+//! let task = LmTrainTask::new(model, 48, 42);
+//! let cfg = TrainConfig::lowp_adam(5e-3, 0xA77).with_microbatch(4);
+//! let mut session = TrainSession::new(task, cfg);
 //! session.run(100, 10, |m| println!("step {} loss {:.4}", m.step, m.loss));
 //! // ... then serve the same weights from the cluster.
 //! let model = session.model.into_model();
 //! # let _ = model;
 //! ```
 
+pub mod lowp;
 pub mod modules;
 pub mod optim;
 pub mod qat_model;
 pub mod regressor;
 pub mod session;
 
+pub use lowp::{LowPAdam, LowPStats, ProjQuant, ProjQuantMode};
 pub use modules::{cross_entropy, Embedding, Linear, Mlp, Module};
 pub use optim::{Adam, Optimizer, OptimizerState, Sgd};
 pub use qat_model::{LmTrainTask, ModelActs, QatModel, QatModelConfig};

@@ -7,14 +7,20 @@
 //! visit order is stable per model type, so state lines up across steps.
 //! Buffers are sized lazily on first use.
 
+use super::lowp::LowPStats;
+
 /// A snapshot of an optimizer's full mutable state, for the training
-/// watchdog's rollback: `step` is Adam's bias-correction counter (0 for
-/// SGD) and `slots` the per-kind state buffers (SGD: `[vel]`; Adam:
-/// `[m, v]`), each indexed per tensor.
+/// watchdog's rollback and the v3 checkpoint's optimizer section:
+/// `step` is Adam's bias-correction counter (0 for SGD), `slots` the
+/// per-kind f32 state buffers (SGD: `[vel]`; Adam: `[m, v]`; LowPAdam:
+/// per-tensor moment *scales*), each indexed per tensor, and
+/// `byte_slots` raw byte-buffer state (LowPAdam's E4M3 moment bytes,
+/// verbatim — empty for f32 optimizers).
 #[derive(Clone, Debug, Default)]
 pub struct OptimizerState {
     pub step: i32,
     pub slots: Vec<Vec<Vec<f32>>>,
+    pub byte_slots: Vec<Vec<Vec<u8>>>,
 }
 
 /// One optimizer step over a model's parameter tensors.
@@ -31,6 +37,18 @@ pub trait Optimizer: Send {
 
     /// Restore a state captured by [`Optimizer::snapshot`].
     fn restore(&mut self, state: &OptimizerState);
+
+    /// Bytes of optimizer state currently held (0 until sized on first
+    /// use; the figure of merit for low-precision moment storage).
+    fn state_bytes(&self) -> usize {
+        0
+    }
+
+    /// Low-precision health of the last step, when the optimizer tracks
+    /// it ([`super::LowPAdam`] does; f32 optimizers return `None`).
+    fn lowp_stats(&self) -> Option<LowPStats> {
+        None
+    }
 }
 
 /// SGD with momentum: `v ← μ·v + g`, `w ← w − lr·v` — element-for-element
@@ -65,11 +83,15 @@ impl Optimizer for Sgd {
     }
 
     fn snapshot(&self) -> OptimizerState {
-        OptimizerState { step: 0, slots: vec![self.vel.clone()] }
+        OptimizerState { step: 0, slots: vec![self.vel.clone()], byte_slots: Vec::new() }
     }
 
     fn restore(&mut self, state: &OptimizerState) {
         self.vel = state.slots.first().cloned().unwrap_or_default();
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.vel.iter().map(|v| 4 * v.len()).sum()
     }
 }
 
@@ -139,13 +161,22 @@ impl Optimizer for Adam {
     }
 
     fn snapshot(&self) -> OptimizerState {
-        OptimizerState { step: self.t, slots: vec![self.m.clone(), self.v.clone()] }
+        OptimizerState {
+            step: self.t,
+            slots: vec![self.m.clone(), self.v.clone()],
+            byte_slots: Vec::new(),
+        }
     }
 
     fn restore(&mut self, state: &OptimizerState) {
         self.t = state.step;
         self.m = state.slots.first().cloned().unwrap_or_default();
         self.v = state.slots.get(1).cloned().unwrap_or_default();
+    }
+
+    fn state_bytes(&self) -> usize {
+        // Two f32 moments per parameter: 8 bytes/param once sized.
+        self.m.iter().chain(self.v.iter()).map(|v| 4 * v.len()).sum()
     }
 }
 

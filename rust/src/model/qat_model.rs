@@ -43,6 +43,7 @@ use crate::telemetry::probes::e2m1_health;
 use crate::telemetry::{Gauge, Telemetry};
 use crate::tensor::Tensor;
 
+use super::lowp::{self, ProjQuant, ProjQuantMode};
 use super::modules::{
     cross_entropy, rms_norm, rms_norm_bwd_rows, rms_norm_rows, to_head_major, to_token_major,
     Embedding, Linear, Mlp, MlpActs, Module,
@@ -109,6 +110,11 @@ pub struct QatModel {
     head: Linear,
     /// Per-layer attention configs (causal always on).
     attn: Vec<AttnConfig>,
+    /// Projection-quantization policy (off by default — the pre-existing
+    /// f32-projection behaviour). Set with [`QatModel::set_proj_quant`];
+    /// composes freely with the per-layer attention configs. The LM head
+    /// always stays f32.
+    proj: ProjQuant,
 }
 
 /// Per-layer activation caches from [`QatModel::forward_train`].
@@ -128,6 +134,10 @@ struct BlockActs {
     /// Residual stream after the attention sub-block (MLP input).
     h_mid: Vec<f32>,
     mlp: MlpActs,
+    /// The fake-quantized projection weights this layer's forward used
+    /// (`Some` only under [`ProjQuantMode::Ste`]) — backward multiplies
+    /// by exactly these, never a re-quantized copy (matched recompute).
+    qw: Option<lowp::QuantWeights>,
 }
 
 /// Everything [`QatModel::backward`] needs from the training forward.
@@ -174,7 +184,7 @@ impl QatModel {
         }
         let head = Linear::new(gen(d * VOCAB, proj_std), d, VOCAB);
         let attn = vec![cfg.attn.with_causal(true); cfg.layers];
-        QatModel { cfg, emb, blocks, head, attn }
+        QatModel { cfg, emb, blocks, head, attn, proj: ProjQuant::off() }
     }
 
     /// Seeded random init (SimLm-style standard deviations).
@@ -208,6 +218,59 @@ impl QatModel {
         self.attn[layer] = cfg.with_causal(true);
     }
 
+    /// Set the projection-quantization policy for every training step
+    /// from now on (serving and the [`TokenModel`] path are unaffected —
+    /// they read the master weights as before).
+    pub fn set_proj_quant(&mut self, proj: ProjQuant) {
+        self.proj = proj;
+    }
+
+    pub fn proj_quant(&self) -> ProjQuant {
+        self.proj
+    }
+
+    /// The [`ProjQuantMode::Naive`] step: hard-requantize the master
+    /// projection weights (and, per policy, the embedding tables) onto
+    /// the NVFP4 lattice **in place**. No-op in other modes. Called by
+    /// [`LmTrainTask`] at the start of every training step — the
+    /// deliberately wrong baseline whose update erasure `exp fullstack`
+    /// demonstrates.
+    pub fn requant_naive(&mut self) {
+        if self.proj.mode != ProjQuantMode::Naive {
+            return;
+        }
+        let d = self.d_model();
+        let ff = self.cfg.ff;
+        let had = self.proj.hadamard;
+        if self.proj.embeddings {
+            lowp::fake_quant_matrix_inplace(&mut self.emb.tok, d, had);
+            lowp::fake_quant_matrix_inplace(&mut self.emb.pos, d, had);
+        }
+        for b in self.blocks.iter_mut() {
+            lowp::fake_quant_matrix_inplace(&mut b.wq.w, d, had);
+            lowp::fake_quant_matrix_inplace(&mut b.wk.w, d, had);
+            lowp::fake_quant_matrix_inplace(&mut b.wv.w, d, had);
+            lowp::fake_quant_matrix_inplace(&mut b.wo.w, d, had);
+            lowp::fake_quant_matrix_inplace(&mut b.mlp.win.w, ff, had);
+            lowp::fake_quant_matrix_inplace(&mut b.mlp.wout.w, d, had);
+        }
+    }
+
+    /// Largest block-scale spread (max/min nonzero NVFP4 block scale)
+    /// over every projection weight — the `train.lowp.proj_scale_range`
+    /// health probe.
+    pub fn proj_scale_range(&self) -> f32 {
+        let mut r = 1.0f32;
+        for b in &self.blocks {
+            for w in
+                [&b.wq.w, &b.wk.w, &b.wv.w, &b.wo.w, &b.mlp.win.w, &b.mlp.wout.w]
+            {
+                r = r.max(lowp::proj_scale_range(w));
+            }
+        }
+        r
+    }
+
     /// One training engine per layer, built from the per-layer configs —
     /// what [`QatModel::forward_train`] consumes (callers keep them across
     /// steps so engine workspaces are reused).
@@ -236,28 +299,72 @@ impl QatModel {
                 "engine {l} config drifted from layer_attn({l}) — rebuild with QatModel::engines"
             );
         }
+        let ste = self.proj.mode == ProjQuantMode::Ste;
         let mut h = vec![0.0f32; n * d];
         self.emb.forward(tokens, 0, &mut h);
+        if ste && self.proj.embeddings {
+            // Quantize the embedding *output* rows (STE: the f32 tables
+            // keep learning; backward is identity through the quantizer).
+            lowp::fake_quant_matrix_inplace(&mut h, d, self.proj.hadamard);
+        }
         let mut layers = Vec::with_capacity(self.cfg.layers);
         for (block, engine) in self.blocks.iter().zip(engines.iter_mut()) {
             let h_in = h.clone();
             let mut xn1 = vec![0.0f32; n * d];
             rms_norm_rows(&h, d, &mut xn1);
+            if ste && self.proj.activations {
+                // The cached xn1 *is* the quantized rows, so backward
+                // consumes the forward's exact operands for free.
+                lowp::fake_quant_matrix_inplace(&mut xn1, d, self.proj.hadamard);
+            }
+            let qw = ste.then(|| {
+                lowp::QuantWeights::quantize(
+                    &block.wq,
+                    &block.wk,
+                    &block.wv,
+                    &block.wo,
+                    &block.mlp,
+                    self.proj.hadamard,
+                )
+            });
             let mut q = vec![0.0f32; n * d];
             let mut k = vec![0.0f32; n * d];
             let mut v = vec![0.0f32; n * d];
-            block.wq.forward(&xn1, n, &mut q);
-            block.wk.forward(&xn1, n, &mut k);
-            block.wv.forward(&xn1, n, &mut v);
+            match &qw {
+                Some(qw) => {
+                    lowp::linear_forward_w(&qw.wq, &xn1, n, d, d, &mut q);
+                    lowp::linear_forward_w(&qw.wk, &xn1, n, d, d, &mut k);
+                    lowp::linear_forward_w(&qw.wv, &xn1, n, d, d, &mut v);
+                }
+                None => {
+                    block.wq.forward(&xn1, n, &mut q);
+                    block.wk.forward(&xn1, n, &mut k);
+                    block.wv.forward(&xn1, n, &mut v);
+                }
+            }
             let qhm = to_head_major(&q, n, heads, hd);
             let khm = to_head_major(&k, n, heads, hd);
             let vhm = to_head_major(&v, n, heads, hd);
             let train = engine.forward_train(&qhm, &khm, &vhm, heads, n, n, hd);
             let ao = to_token_major(&train.o, n, heads, hd);
-            block.wo.forward_acc(&ao, n, &mut h);
+            match &qw {
+                Some(qw) => lowp::linear_forward_acc_w(&qw.wo, &ao, n, d, d, &mut h),
+                None => block.wo.forward_acc(&ao, n, &mut h),
+            }
             let h_mid = h.clone();
-            let mlp = block.mlp.forward_train(&mut h, n);
-            layers.push(BlockActs { h_in, xn1, qhm, khm, vhm, train, ao, h_mid, mlp });
+            let mlp = match &qw {
+                Some(qw) => lowp::mlp_forward_train_w(
+                    &block.mlp,
+                    &qw.win,
+                    &qw.wout,
+                    self.proj.activations,
+                    self.proj.hadamard,
+                    &mut h,
+                    n,
+                ),
+                None => block.mlp.forward_train(&mut h, n),
+            };
+            layers.push(BlockActs { h_in, xn1, qhm, khm, vhm, train, ao, h_mid, mlp, qw });
         }
         let h_final = h;
         let mut xn_head = vec![0.0f32; n * d];
@@ -285,10 +392,33 @@ impl QatModel {
             let block = &mut self.blocks[l];
             let c = &acts.layers[l];
             // MLP residual: dh (dL/dh_out) becomes dL/dh_mid in place.
-            block.mlp.backward(&c.h_mid, &c.mlp, &mut dh, n);
+            match &c.qw {
+                Some(qw) => lowp::mlp_backward_w(
+                    &mut block.mlp,
+                    &qw.win,
+                    &qw.wout,
+                    &c.h_mid,
+                    &c.mlp,
+                    &mut dh,
+                    n,
+                ),
+                None => block.mlp.backward(&c.h_mid, &c.mlp, &mut dh, n),
+            }
             // Attention output projection.
             let mut dao = vec![0.0f32; n * d];
-            block.wo.backward(&c.ao, &dh, n, Some(&mut dao));
+            match &c.qw {
+                Some(qw) => lowp::linear_backward_w(
+                    &qw.wo,
+                    &mut block.wo.g,
+                    &c.ao,
+                    &dh,
+                    n,
+                    d,
+                    d,
+                    Some(&mut dao),
+                ),
+                None => block.wo.backward(&c.ao, &dh, n, Some(&mut dao)),
+            }
             // Per-head attention backward with this layer's config.
             let dohm = to_head_major(&dao, n, heads, hd);
             let attn_cfg = self.attn[l];
@@ -319,9 +449,21 @@ impl QatModel {
             let dv_tm = to_token_major(&dv, n, heads, hd);
             // Q/K/V projections; all three chains land in dxn1.
             let mut dxn1 = vec![0.0f32; n * d];
-            block.wq.backward(&c.xn1, &dq_tm, n, Some(&mut dxn1));
-            block.wk.backward(&c.xn1, &dk_tm, n, Some(&mut dxn1));
-            block.wv.backward(&c.xn1, &dv_tm, n, Some(&mut dxn1));
+            match &c.qw {
+                Some(qw) => {
+                    let g = &mut block.wq.g;
+                    lowp::linear_backward_w(&qw.wq, g, &c.xn1, &dq_tm, n, d, d, Some(&mut dxn1));
+                    let g = &mut block.wk.g;
+                    lowp::linear_backward_w(&qw.wk, g, &c.xn1, &dk_tm, n, d, d, Some(&mut dxn1));
+                    let g = &mut block.wv.g;
+                    lowp::linear_backward_w(&qw.wv, g, &c.xn1, &dv_tm, n, d, d, Some(&mut dxn1));
+                }
+                None => {
+                    block.wq.backward(&c.xn1, &dq_tm, n, Some(&mut dxn1));
+                    block.wk.backward(&c.xn1, &dk_tm, n, Some(&mut dxn1));
+                    block.wv.backward(&c.xn1, &dv_tm, n, Some(&mut dxn1));
+                }
+            }
             // Norm chain joins the residual stream: dh ← dh_mid + rms′.
             rms_norm_bwd_rows(&c.h_in, &dxn1, d, &mut dh);
         }
@@ -554,6 +696,10 @@ struct LayerProbes {
     k_sat: Vec<Gauge>,
     v_sat: Vec<Gauge>,
     scale_range: Vec<Gauge>,
+    /// `train.lowp.proj_scale_range` — projection-weight block-scale
+    /// spread (only meaningful with projection quantization on, but
+    /// cheap and well-defined for f32 weights too).
+    proj_scale: Gauge,
 }
 
 /// Next-byte language modelling over the synthetic corpus: the
@@ -595,6 +741,7 @@ impl LmTrainTask {
             k_sat: (0..layers).map(|l| g(l, "k_sat_frac")).collect(),
             v_sat: (0..layers).map(|l| g(l, "v_sat_frac")).collect(),
             scale_range: (0..layers).map(|l| g(l, "scale_range")).collect(),
+            proj_scale: reg.gauge("train.lowp.proj_scale_range"),
         });
     }
 
@@ -619,6 +766,7 @@ impl LmTrainTask {
             let range = q.scale_range().max(k.scale_range()).max(v.scale_range());
             p.scale_range[l].set(range as f64);
         }
+        p.proj_scale.set(self.model.proj_scale_range() as f64);
     }
 
     /// Take the finetuned model out (e.g. to export and serve it).
@@ -633,10 +781,23 @@ impl LmTrainTask {
         self.model.set_layer_attn(layer, cfg);
         self.engines[layer] = AttnEngine::new(self.model.layer_attn(layer));
     }
+
+    /// Discard `k` training batches from the corpus stream — aligns a
+    /// freshly-built task's data stream with one that already ran `k`
+    /// steps (checkpoint resume: the v3 file restores weights, counters,
+    /// and moments; this restores the data position).
+    pub fn skip_batches(&mut self, k: usize) {
+        for _ in 0..k {
+            let _ = self.corpus.stream(self.seq + 1);
+        }
+    }
 }
 
 impl TrainableModel for LmTrainTask {
     fn train_step(&mut self) -> f32 {
+        // Naive projection quantization requantizes the master weights in
+        // place before the step (no-op in Off/Ste modes).
+        self.model.requant_naive();
         let bytes = self.corpus.stream(self.seq + 1);
         let inputs = &bytes[..self.seq];
         let targets = &bytes[1..];
@@ -739,6 +900,76 @@ mod tests {
         let doc = t.snapshot();
         assert_eq!(doc.get("config").get("train").get("optimizer").as_str(), Some("adam"));
         assert!(doc.get("metrics").get("train").get("step_ms").get("count").as_f64().is_some());
+    }
+
+    #[test]
+    fn smoothk_layers_run_the_smooth_forward_and_train() {
+        // ROADMAP scenario (c): native smooth-K training forward, wired
+        // through the per-layer configs. Parity pin: the model's cached
+        // layer-0 attention output must equal a fresh smooth-configured
+        // engine run on the same cached Q/K/V (no hidden divergence
+        // between the model plumbing and the engine).
+        let mut cfg = tiny_cfg();
+        cfg.attn = AttnConfig::qat_smoothk();
+        let model = QatModel::new(cfg);
+        assert!(model.layer_attn(0).smooth, "preset must carry smoothing");
+        let tokens = b"smooth-k parity!";
+        let n = tokens.len();
+        let mut engines = model.engines();
+        let acts = model.forward_train(tokens, &mut engines);
+        let (heads, hd) = (model.heads(), model.head_dim());
+        let c = &acts.layers[0];
+        let mut eng = AttnEngine::new(model.layer_attn(0));
+        let want = eng.forward_train(&c.qhm, &c.khm, &c.vhm, heads, n, n, hd);
+        assert_eq!(c.train.o, want.o, "model smooth-K forward must match the engine");
+        // Same seed without smoothing: logits must differ (the smooth
+        // path is actually reached), but only by quantization-noise
+        // amounts (smoothing is softmax-invariant in exact arithmetic).
+        let base = QatModel::new(tiny_cfg());
+        let mut base_engines = base.engines();
+        let base_acts = base.forward_train(tokens, &mut base_engines);
+        assert_ne!(base_acts.logits, acts.logits, "smooth-K must reach the kernel");
+        // And it trains: matched backward through the smoothed forward.
+        let task = LmTrainTask::new(model, 32, 0xfeed);
+        let mut session = TrainSession::new(task, TrainConfig::adam(5e-3));
+        session.run(50, 0, |_| {});
+        assert!(!session.diverged(), "smooth-K finetune must stay finite");
+        assert!(session.tail_loss(10) < session.history[0].loss);
+    }
+
+    #[test]
+    fn ste_proj_quant_trains_and_keeps_masters_off_lattice() {
+        let mut model = QatModel::new(tiny_cfg());
+        model.set_proj_quant(ProjQuant::ste().with_activations(true));
+        let w0 = model.blocks[0].wq.w.clone();
+        let task = LmTrainTask::new(model, 32, 0xfeed);
+        let mut session = TrainSession::new(task, TrainConfig::adam(5e-3));
+        session.run(50, 0, |_| {});
+        assert!(!session.diverged(), "STE projections must stay finite");
+        assert!(session.tail_loss(10) < session.history[0].loss);
+        let m = session.model.into_model();
+        // STE lands dW on the f32 masters: they moved, and they are NOT
+        // hard-quantized (quantizing them still changes them).
+        assert_ne!(m.blocks[0].wq.w, w0, "masters must learn under STE");
+        let d = m.d_model();
+        let q = lowp::fake_quant_matrix(&m.blocks[0].wq.w, d, false);
+        assert_ne!(q, m.blocks[0].wq.w, "masters stay f32, not on the lattice");
+        assert!(m.proj_scale_range() >= 1.0);
+    }
+
+    #[test]
+    fn naive_requant_quantizes_masters_in_place_and_off_is_a_noop() {
+        let mut model = QatModel::new(tiny_cfg());
+        let w_before = model.blocks[0].wq.w.clone();
+        let tok_before = model.emb.tok.clone();
+        model.set_proj_quant(ProjQuant::naive().with_embeddings(true));
+        model.requant_naive();
+        assert_ne!(model.blocks[0].wq.w, w_before, "projections hard-requantized");
+        assert_ne!(model.emb.tok, tok_before, "embedding tables requantized too");
+        let mut off = QatModel::new(tiny_cfg());
+        let w = off.blocks[0].wq.w.clone();
+        off.requant_naive();
+        assert_eq!(off.blocks[0].wq.w, w, "Off mode must not touch weights");
     }
 
     #[test]

@@ -36,10 +36,16 @@
 //! `serve profile`-style self-time tables and flamegraph exports like
 //! any serving trace.
 
-use crate::coordinator::{LrSchedule, StepMetrics};
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::coordinator::{checkpoint, LrSchedule, StepMetrics};
 use crate::json::Json;
 use crate::telemetry::{Counter, Gauge, Histogram, Telemetry};
+use crate::tensor::Tensor;
 
+use super::lowp::LowPAdam;
 use super::optim::{Adam, Optimizer, OptimizerState, Sgd};
 
 /// A model the session can drive: owns its parameters, gradients, and
@@ -61,6 +67,10 @@ pub enum OptimizerKind {
     Sgd { momentum: f32 },
     /// Adam with bias correction.
     Adam { beta1: f32, beta2: f32, eps: f32 },
+    /// Adam with E4M3 moments + stochastic-rounding writeback
+    /// ([`super::LowPAdam`]); `seed` keys the deterministic rounding
+    /// stream.
+    LowPAdam { beta1: f32, beta2: f32, eps: f32, seed: u64 },
 }
 
 impl OptimizerKind {
@@ -69,6 +79,9 @@ impl OptimizerKind {
             OptimizerKind::Sgd { momentum } => Box::new(Sgd::new(momentum)),
             OptimizerKind::Adam { beta1, beta2, eps } => {
                 Box::new(Adam::with_params(beta1, beta2, eps))
+            }
+            OptimizerKind::LowPAdam { beta1, beta2, eps, seed } => {
+                Box::new(LowPAdam::new(beta1, beta2, eps, seed))
             }
         }
     }
@@ -109,6 +122,10 @@ pub struct TrainConfig {
     /// `Some` arms the divergence watchdog (snapshot + rollback + lr
     /// backoff); `None` keeps the record-only behaviour.
     pub watchdog: Option<WatchdogConfig>,
+    /// Sequences accumulated per optimizer step (gradients are averaged
+    /// across the microbatch). `1` reproduces the single-sequence step
+    /// bitwise.
+    pub microbatch: usize,
 }
 
 impl TrainConfig {
@@ -121,6 +138,7 @@ impl TrainConfig {
             grad_clip: None,
             divergence_threshold: 1e6,
             watchdog: None,
+            microbatch: 1,
         }
     }
 
@@ -133,6 +151,16 @@ impl TrainConfig {
             grad_clip: Some(1.0),
             divergence_threshold: 1e6,
             watchdog: None,
+            microbatch: 1,
+        }
+    }
+
+    /// [`TrainConfig::adam`] with E4M3 moment storage + stochastic
+    /// rounding keyed on `seed` (same betas/eps/clip).
+    pub fn lowp_adam(lr: f32, seed: u64) -> TrainConfig {
+        TrainConfig {
+            optimizer: OptimizerKind::LowPAdam { beta1: 0.9, beta2: 0.999, eps: 1e-8, seed },
+            ..TrainConfig::adam(lr)
         }
     }
 
@@ -152,15 +180,24 @@ impl TrainConfig {
         self
     }
 
+    /// Accumulate gradients over `micro` sequences per optimizer step.
+    pub fn with_microbatch(mut self, micro: usize) -> TrainConfig {
+        assert!(micro >= 1, "microbatch must be >= 1");
+        self.microbatch = micro;
+        self
+    }
+
     /// Reflect the run's hyperparameters for the telemetry snapshot's
     /// `config.train` section.
     pub fn to_json(&self) -> Json {
         let optimizer = match self.optimizer {
             OptimizerKind::Sgd { .. } => "sgd",
             OptimizerKind::Adam { .. } => "adam",
+            OptimizerKind::LowPAdam { .. } => "lowp_adam",
         };
         Json::obj(vec![
             ("optimizer", Json::Str(optimizer.to_string())),
+            ("microbatch", Json::Num(self.microbatch as f64)),
             ("schedule", Json::Str(format!("{:?}", self.schedule))),
             (
                 "grad_clip",
@@ -192,6 +229,11 @@ struct SessionProbes {
     grad_norm: Gauge,
     lr: Gauge,
     step_ms: Histogram,
+    /// `train.lowp.*` health gauges, published only when the optimizer
+    /// reports [`crate::model::LowPStats`].
+    lowp_m_sat: Gauge,
+    lowp_v_sat: Gauge,
+    lowp_sr_bias: Gauge,
 }
 
 /// A training run: model + optimizer state + metric history.
@@ -240,6 +282,9 @@ impl<M: TrainableModel> TrainSession<M> {
             grad_norm: reg.gauge("train.grad_norm"),
             lr: reg.gauge("train.lr"),
             step_ms: reg.histogram("train.step_ms"),
+            lowp_m_sat: reg.gauge("train.lowp.m_sat_frac"),
+            lowp_v_sat: reg.gauge("train.lowp.v_sat_frac"),
+            lowp_sr_bias: reg.gauge("train.lowp.sr_bias"),
         });
     }
 
@@ -294,7 +339,24 @@ impl<M: TrainableModel> TrainSession<M> {
             self.snapshot = Some(self.take_snapshot());
         }
         self.model.visit_params(&mut |_, g| g.fill(0.0));
-        let loss = self.model.train_step();
+        let micro = self.cfg.microbatch.max(1);
+        let loss = if micro == 1 {
+            // The single-sequence fast path: bitwise the pre-microbatch
+            // step (no extra grad traversal, no loss rescale).
+            self.model.train_step()
+        } else {
+            let mut total = 0.0f32;
+            for _ in 0..micro {
+                total += self.model.train_step();
+            }
+            let inv = 1.0 / micro as f32;
+            self.model.visit_params(&mut |_, g| {
+                for x in g.iter_mut() {
+                    *x *= inv;
+                }
+            });
+            total * inv
+        };
 
         // Global grad norm: per-tensor f64 sums added in visit order (the
         // exact accumulation the old trainer used), recorded pre-clip.
@@ -365,6 +427,11 @@ impl<M: TrainableModel> TrainSession<M> {
             p.grad_norm.set(grad_norm as f64);
             p.lr.set(lr as f64);
             p.step_ms.record(m.wall_ms);
+            if let Some(st) = self.opt.lowp_stats() {
+                p.lowp_m_sat.set(st.m_sat_frac as f64);
+                p.lowp_v_sat.set(st.v_sat_frac as f64);
+                p.lowp_sr_bias.set(st.sr_bias as f64);
+            }
         }
         self.history.push(m);
         m
@@ -398,6 +465,85 @@ impl<M: TrainableModel> TrainSession<M> {
             .map(|m| m.grad_norm)
             .filter(|g| g.is_finite())
             .fold(0.0f32, f32::max)
+    }
+
+    /// Bytes of optimizer state currently held (0 until the first step
+    /// sizes the buffers) — 8/param for Adam, ~2/param for LowPAdam.
+    pub fn optimizer_state_bytes(&self) -> usize {
+        self.opt.state_bytes()
+    }
+
+    /// Serialize params + session counters + the full optimizer state to
+    /// a v3 checkpoint ([`checkpoint::save_train`]). LowPAdam's E4M3
+    /// moment bytes are stored verbatim, so a resumed finetune replays
+    /// bitwise (pair with `LmTrainTask::skip_batches` to re-align the
+    /// data stream).
+    pub fn save_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let mut tensors: Vec<(String, Tensor)> = Vec::new();
+        let mut err = None;
+        self.model.visit_params(&mut |w, _| {
+            if err.is_some() {
+                return;
+            }
+            let i = tensors.len();
+            match Tensor::new(vec![w.len()], w.to_vec()) {
+                Ok(t) => tensors.push((format!("param{i}"), t)),
+                Err(e) => err = Some(e),
+            }
+        });
+        if let Some(e) = err {
+            return Err(e);
+        }
+        tensors.push((
+            "session_meta".into(),
+            Tensor::new(vec![3], vec![self.step as f32, self.lr_scale, self.rollbacks as f32])?,
+        ));
+        let named: Vec<(String, &Tensor)> = tensors.iter().map(|(n, t)| (n.clone(), t)).collect();
+        checkpoint::save_train(path, &named, Some(&self.opt.snapshot()))
+    }
+
+    /// Load a checkpoint saved by [`TrainSession::save_checkpoint`]:
+    /// params are copied into the model in visit order, the optimizer is
+    /// rebuilt and (when the file carries one — v3) restored verbatim,
+    /// and step counter / lr backoff / rollback count resume. The
+    /// watchdog baseline snapshot is cleared and re-taken on the next
+    /// step.
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let (tensors, opt_state) = checkpoint::load_train(path)?;
+        let mut err: Option<anyhow::Error> = None;
+        let mut idx = 0usize;
+        self.model.visit_params(&mut |w, _| {
+            if err.is_some() {
+                return;
+            }
+            let name = format!("param{idx}");
+            match tensors.iter().find(|(n, _)| *n == name) {
+                Some((_, t)) if t.data.len() == w.len() => w.copy_from_slice(&t.data),
+                Some((_, t)) => {
+                    err = Some(anyhow!("{name}: shape mismatch {:?}", t.shape));
+                }
+                None => err = Some(anyhow!("checkpoint missing tensor '{name}'")),
+            }
+            idx += 1;
+        });
+        if let Some(e) = err {
+            return Err(e);
+        }
+        let meta = tensors
+            .iter()
+            .find(|(n, _)| n == "session_meta")
+            .map(|(_, t)| t.data.clone())
+            .unwrap_or_default();
+        ensure!(meta.len() == 3, "checkpoint missing session_meta");
+        self.step = meta[0] as usize;
+        self.lr_scale = meta[1];
+        self.rollbacks = meta[2] as usize;
+        self.opt = self.cfg.optimizer.build();
+        if let Some(state) = &opt_state {
+            self.opt.restore(state);
+        }
+        self.snapshot = None;
+        Ok(())
     }
 
     /// Mean loss over the last `k` finite steps (NaN if none).
@@ -561,6 +707,46 @@ mod tests {
         // |w| = 2⁶ — divergence stays observable data.
         assert_eq!(s.model.w[0].abs(), 64.0);
         assert!(s.diverged() || s.max_grad_norm() > 50.0);
+    }
+
+    #[test]
+    fn microbatch_averages_to_the_single_sequence_step() {
+        // Toy's gradient is deterministic per call, so accumulating k
+        // identical grads and scaling by 1/k reproduces mb=1 exactly
+        // (binary-exact for k a power of two).
+        let toy = Toy { w: vec![1.0; 4], g: vec![0.0; 4], grad: vec![1.0; 4] };
+        let mut s1 = TrainSession::new(toy, TrainConfig::sgd(0.1, 0.0));
+        s1.run(3, 0, |_| {});
+        let toy = Toy { w: vec![1.0; 4], g: vec![0.0; 4], grad: vec![1.0; 4] };
+        let mut s4 = TrainSession::new(toy, TrainConfig::sgd(0.1, 0.0).with_microbatch(4));
+        s4.run(3, 0, |_| {});
+        assert_eq!(s1.model.w, s4.model.w);
+        assert_eq!(s1.history[0].grad_norm, s4.history[0].grad_norm);
+        assert_eq!(s1.history[2].loss, s4.history[2].loss);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_restores_params_counters_and_moments() {
+        let dir = std::env::temp_dir().join("attn_qat_session_ckpt_test");
+        let path = dir.join("s.ckpt");
+        let toy = Toy { w: vec![1.0; 4], g: vec![0.0; 4], grad: vec![0.5; 4] };
+        let mut a = TrainSession::new(toy, TrainConfig::lowp_adam(0.05, 0xbeef));
+        a.run(3, 0, |_| {});
+        a.save_checkpoint(&path).unwrap();
+        a.run(2, 0, |_| {});
+
+        let toy = Toy { w: vec![9.0; 4], g: vec![0.0; 4], grad: vec![0.5; 4] };
+        let mut b = TrainSession::new(toy, TrainConfig::lowp_adam(0.05, 0xbeef));
+        b.load_checkpoint(&path).unwrap();
+        assert_eq!(b.steps_done(), 3);
+        // Toy's gradient stream is stateless, so a resumed run must
+        // reproduce the original continuation bitwise — params AND the
+        // E4M3 moment bytes came back verbatim.
+        b.run(2, 0, |_| {});
+        assert_eq!(a.model.w, b.model.w);
+        assert_eq!(a.history[4].loss, b.history[1].loss);
+        assert_eq!(a.history[4].grad_norm, b.history[1].grad_norm);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -47,6 +47,26 @@
 //! `#[deprecated]` shim over `model::AttnRegressor::session` (bitwise —
 //! see its migration table), and `model::TrainSession` adds Adam + global
 //! grad-clip (the paper's finetune recipe) behind an optimizer trait.
+//!
+//! ## Where `qat` sits in the full-stack precision map
+//!
+//! This module quantizes exactly one tensor class — the attention
+//! operands Q/K/V/P̃ — and keeps everything it *touches* in f32: incoming
+//! activations, outgoing gradients, master weights. The rest of the
+//! training step goes low-precision in [`crate::model::lowp`], built on
+//! the same two principles proven here:
+//!
+//! * projection/MLP GEMMs: NVFP4 fake-quant weights with STE, **matched
+//!   recompute** (the backward multiplies by the same quantized scratch
+//!   weights the forward used — Fix A, applied one level up) —
+//!   [`crate::model::ProjQuant`];
+//! * optimizer moments: E4M3 bytes with seeded stochastic rounding
+//!   (unbiased where RNE would silently stall Adam-scale updates, the
+//!   same failure mode as the naive drop-in row above) —
+//!   [`crate::model::LowPAdam`];
+//! * the per-component ablation grid lives in
+//!   `experiments::fullstack` (`cargo run -- exp fullstack`), the
+//!   full-stack analogue of the Fig-3 switches table.
 
 pub mod backward;
 pub mod ste;
